@@ -1,0 +1,135 @@
+//! END-TO-END DRIVER: train a ~100M-parameter sigmoid MLP for a few
+//! hundred SSP steps through the FULL three-layer stack:
+//!
+//!   L1/L2  python/compile  →  artifacts/e2e_100m.hlo.txt  (make artifacts)
+//!   runtime               →  PJRT CPU client compiles + executes the HLO
+//!   L3 coordinator        →  real worker threads + shared SSP server
+//!
+//! Python does not run here — only the Rust binary and the AOT artifact.
+//!
+//!     make artifacts && cargo run --release --example e2e_train_100m
+//!
+//! Flags via env: E2E_WORKERS (default 2), E2E_CLOCKS (default 25),
+//! E2E_BPC (batches/clock, default 4). Defaults = 200 total steps.
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use sspdnn::config::{DataConfig, DataKind, ExperimentConfig, ModelConfig, SspConfig, TrainConfig};
+use sspdnn::coordinator::{
+    build_dataset, run_threaded, EngineKind, EtaSchedule, ThreadedOptions,
+};
+use sspdnn::metrics;
+use sspdnn::nn::{Activation, Loss};
+use sspdnn::runtime::{Manifest, PjrtEngine};
+use sspdnn::ssp::Policy;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let workers = env_usize("E2E_WORKERS", 2);
+    let clocks = env_usize("E2E_CLOCKS", 25);
+    let bpc = env_usize("E2E_BPC", 4);
+
+    // the e2e_100m artifact: dims/batch must match aot.py's registry
+    let manifest = Manifest::load("artifacts").unwrap_or_else(|e| {
+        eprintln!("cannot load artifacts/ ({e}); run `make artifacts` first");
+        std::process::exit(1);
+    });
+    let spec = manifest
+        .get("e2e_100m")
+        .expect("e2e_100m artifact missing; run `make artifacts`")
+        .clone();
+    let n_params: usize = spec
+        .layer_dims
+        .windows(2)
+        .map(|w| w[0] * w[1] + w[1])
+        .sum();
+    println!(
+        "e2e: dims {:?} = {:.1}M params | batch {} | {workers} workers x {clocks} clocks x {bpc} batches = {} steps",
+        spec.layer_dims,
+        n_params as f64 / 1e6,
+        spec.batch,
+        workers * clocks * bpc,
+    );
+
+    let cfg = ExperimentConfig {
+        name: "e2e_100m".into(),
+        model: ModelConfig {
+            dims: spec.layer_dims.clone(),
+            activation: Activation::Sigmoid,
+            loss: Loss::Xent,
+        },
+        data: DataConfig {
+            kind: DataKind::TimitLike,
+            n_samples: 4096,
+            n_features: spec.layer_dims[0],
+            n_classes: *spec.layer_dims.last().unwrap(),
+            seed: 21,
+        },
+        ssp: SspConfig {
+            policy: Policy::Ssp { staleness: 2 },
+        },
+        cluster: Default::default(),
+        train: TrainConfig {
+            eta: 0.3,
+            batch: spec.batch,
+            batches_per_clock: bpc,
+            clocks,
+            seed: 5,
+            engine: sspdnn::config::Engine::Pjrt,
+            artifact: Some("e2e_100m".into()),
+        },
+    };
+
+    println!("generating synthetic dataset ({} samples x {} features)...",
+        cfg.data.n_samples, cfg.data.n_features);
+    let t0 = std::time::Instant::now();
+    let dataset = build_dataset(&cfg);
+    println!("  done in {:.1}s", t0.elapsed().as_secs_f64());
+
+    println!("compiling artifact on {workers} PJRT CPU clients...");
+    let t0 = std::time::Instant::now();
+    let spec_for_factory = spec.clone();
+    let result = run_threaded(
+        &cfg,
+        &dataset,
+        ThreadedOptions {
+            machines: workers,
+            engine_factory: Box::new(move |p| {
+                let eng = PjrtEngine::load(&spec_for_factory)
+                    .expect("compile e2e artifact");
+                eprintln!("  worker {p}: artifact compiled");
+                EngineKind::Boxed(Box::new(eng))
+            }),
+            eta: EtaSchedule::Fixed(cfg.train.eta),
+            eval_every: 5,
+            eval_samples: spec.batch * 4,
+        },
+    );
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\nloss curve (clock, wall s, objective):");
+    for (clock, t, obj) in &result.evals {
+        println!("  {clock:>4}  {t:>8.1}s  {obj:.4}");
+    }
+    let objs: Vec<f64> = result.evals.iter().map(|e| e.2).collect();
+    println!("curve: {}", metrics::sparkline(&objs));
+    println!(
+        "\n{} steps in {:.1}s wall = {:.2} steps/s | final objective {:.4}",
+        result.steps,
+        wall,
+        result.steps as f64 / wall,
+        result.final_objective
+    );
+    let first = result.evals.first().map(|e| e.2).unwrap_or(f64::NAN);
+    assert!(
+        result.final_objective < first,
+        "e2e training must descend: {first} -> {}",
+        result.final_objective
+    );
+    println!("e2e OK: objective descended {first:.4} -> {:.4}", result.final_objective);
+}

@@ -1,0 +1,48 @@
+//! Roofline comparison: the PJRT(XLA-CPU) artifact step vs the native
+//! engine (see microbench_hotpath for the native numbers). Used by the
+//! §Perf log in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example pjrt_step_bench
+
+use sspdnn::coordinator::GradEngine;
+use sspdnn::nn::{Labels, ParamSet};
+use sspdnn::runtime::{Manifest, PjrtEngine};
+use sspdnn::tensor::Matrix;
+use sspdnn::util::Pcg64;
+
+fn main() {
+    let man = Manifest::load("artifacts").expect("run `make artifacts`");
+    for name in ["tiny", "timit_scaled", "imagenet_scaled"] {
+        let spec = man.get(name).unwrap();
+        let mut eng = PjrtEngine::load(spec).unwrap();
+        let mut rng = Pcg64::new(0);
+        let p = ParamSet::glorot(&spec.layer_dims, &mut rng);
+        let x = Matrix::randn(spec.batch, spec.layer_dims[0], 1.0, &mut rng);
+        let classes = *spec.layer_dims.last().unwrap();
+        let y = Labels::Class(
+            (0..spec.batch).map(|_| rng.below(classes) as u32).collect(),
+        );
+        let n: usize = spec
+            .layer_dims
+            .windows(2)
+            .map(|w| w[0] * w[1] + w[1])
+            .sum();
+        let flops = 6.0 * n as f64 * spec.batch as f64;
+        for _ in 0..3 {
+            eng.loss_and_grads(&p, &x, &y);
+        }
+        let t = std::time::Instant::now();
+        let iters = 30;
+        for _ in 0..iters {
+            eng.loss_and_grads(&p, &x, &y);
+        }
+        let dt = t.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "{name:16} step (batch {:>4}, {:>9} params): {:>8.2} ms = {:>6.2} GFLOP/s",
+            spec.batch,
+            n,
+            dt * 1e3,
+            flops / dt / 1e9
+        );
+    }
+}

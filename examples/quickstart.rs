@@ -1,0 +1,77 @@
+//! Quickstart: train a small sigmoid MLP under SSP on the simulated
+//! 3-machine cluster, then compare against single-machine training.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Demonstrates the public API surface: config presets, the driver,
+//! metrics, and checkpointing.
+
+use sspdnn::checkpoint;
+use sspdnn::config::ExperimentConfig;
+use sspdnn::coordinator::{build_dataset, run_experiment_on, DriverOptions};
+use sspdnn::metrics;
+use sspdnn::util::timer::fmt_duration;
+
+fn main() {
+    // 1. a config preset (see `sspdnn presets` for the full list)
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.train.clocks = 60;
+    // the SSP regime: step size small relative to the parallel update
+    // accumulation (the tiny preset's 0.5 is tuned for single-machine
+    // unit tests)
+    cfg.train.eta = 0.2;
+    println!(
+        "model: dims {:?} ({} params), policy {}",
+        cfg.model.dims,
+        cfg.model.n_params(),
+        cfg.ssp.policy.name()
+    );
+
+    // 2. synthetic dataset (Table-1-shaped generator, scaled down)
+    let dataset = build_dataset(&cfg);
+    let (name, nf, nc, ns) = dataset.stats();
+    println!("data:  {name}: {nf} features, {nc} classes, {ns} samples\n");
+
+    // 3. distributed SSP run on 3 simulated machines
+    let ssp = run_experiment_on(&cfg, DriverOptions::default(), &dataset);
+    println!(
+        "SSP  (3 machines): {:.4} -> {:.4} in {} virtual | {} steps",
+        ssp.evals[0].objective,
+        ssp.final_objective,
+        fmt_duration(ssp.total_vtime),
+        ssp.steps
+    );
+    let objs: Vec<f64> = ssp.evals.iter().map(|e| e.objective).collect();
+    println!("curve: {}", metrics::sparkline(&objs));
+
+    // 4. the single-machine baseline, same dataset and init
+    let single = run_experiment_on(
+        &cfg,
+        DriverOptions {
+            machines: Some(1),
+            ..DriverOptions::default()
+        },
+        &dataset,
+    );
+    println!(
+        "\nSGD  (1 machine):  {:.4} -> {:.4} in {} virtual",
+        single.evals[0].objective,
+        single.final_objective,
+        fmt_duration(single.total_vtime)
+    );
+    println!(
+        "speedup to single-machine final objective: {:.2}x",
+        metrics::speedups(&[single, ssp.clone()])
+            .last()
+            .map(|(_, s)| *s)
+            .unwrap_or(f64::NAN)
+    );
+
+    // 5. checkpoint the trained parameters
+    let path = std::env::temp_dir().join("sspdnn_quickstart.ckpt");
+    checkpoint::save(&path, &cfg.model.dims, &ssp.final_params).unwrap();
+    let (dims, restored) = checkpoint::load(&path).unwrap();
+    assert_eq!(dims, cfg.model.dims);
+    assert_eq!(restored, ssp.final_params);
+    println!("\ncheckpoint round-trip OK: {}", path.display());
+}

@@ -1,0 +1,62 @@
+//! Staleness ablation: how the bound `s` trades system throughput
+//! against statistical efficiency (the design choice behind the paper's
+//! s = 10 setting). BSP (s=0) stalls on stragglers; large s computes
+//! freely but against staler parameters; Async removes the guarantee.
+//!
+//!     cargo run --release --example staleness_sweep
+
+use sspdnn::config::ExperimentConfig;
+use sspdnn::coordinator::{build_dataset, run_experiment_on, DriverOptions};
+use sspdnn::metrics;
+use sspdnn::ssp::Policy;
+use sspdnn::util::timer::fmt_duration;
+
+fn main() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.cluster.machines = 6;
+    cfg.cluster.straggler_prob = 0.10; // visible straggling
+    cfg.cluster.straggler_factor = 6.0;
+    cfg.train.clocks = 60;
+    let dataset = build_dataset(&cfg);
+
+    let mut rows = Vec::new();
+    let policies: Vec<(String, Policy)> = [0u64, 1, 3, 10, 30]
+        .iter()
+        .map(|&s| (format!("ssp(s={s})"), Policy::Ssp { staleness: s }))
+        .chain(std::iter::once(("async".to_string(), Policy::Async)))
+        .collect();
+
+    for (name, policy) in policies {
+        let mut c = cfg.clone();
+        c.ssp.policy = policy;
+        let run = run_experiment_on(
+            &c,
+            DriverOptions {
+                per_batch_s: Some(0.02),
+                ..DriverOptions::default()
+            },
+            &dataset,
+        );
+        rows.push(vec![
+            name,
+            format!("{:.4}", run.final_objective),
+            fmt_duration(run.total_vtime),
+            fmt_duration(run.barrier_wait_s),
+            format!("{:.3}", run.epsilon_rate),
+            format!("{:.1}", run.steps as f64 / run.total_vtime),
+        ]);
+    }
+
+    println!(
+        "{}",
+        metrics::render_table(
+            &["policy", "final obj", "vtime", "barrier wait", "eps rate", "steps/s"],
+            &rows
+        )
+    );
+    println!(
+        "\nreading: s=0 (BSP) pays the straggler tax in barrier waits;\n\
+         moderate s hides stragglers at slight statistical cost;\n\
+         async maximizes steps/s but offers no visibility guarantee."
+    );
+}

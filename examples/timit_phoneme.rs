@@ -1,0 +1,59 @@
+//! TIMIT phoneme-classification workload (paper §6.1, scaled): the
+//! 6-hidden-layer sigmoid DNN on MFCC-statistics features, trained under
+//! SSP across 1/3/6 simulated machines — a miniature of Figure 2.
+//!
+//!     cargo run --release --example timit_phoneme
+
+use sspdnn::config::ExperimentConfig;
+use sspdnn::coordinator::{build_dataset, run_experiment_on, DriverOptions};
+use sspdnn::metrics;
+use sspdnn::util::timer::fmt_duration;
+
+fn main() {
+    let mut cfg = ExperimentConfig::timit_scaled();
+    // example-sized workload (bench fig2 runs the fuller sweep)
+    cfg.data.n_samples = 6_000;
+    cfg.train.clocks = 16;
+    cfg.train.batch = 50;
+    cfg.train.batches_per_clock = 2;
+
+    println!(
+        "TIMIT-like: {} samples, dims {:?} ({} params), {} | mb {}, eta {}",
+        cfg.data.n_samples,
+        cfg.model.dims,
+        cfg.model.n_params(),
+        cfg.ssp.policy.name(),
+        cfg.train.batch,
+        cfg.train.eta
+    );
+    let dataset = build_dataset(&cfg);
+
+    for &machines in &[1usize, 3, 6] {
+        let t = std::time::Instant::now();
+        let run = run_experiment_on(
+            &cfg,
+            DriverOptions {
+                machines: Some(machines),
+                eval_every: 2,
+                ..DriverOptions::default()
+            },
+            &dataset,
+        );
+        let objs: Vec<f64> = run.evals.iter().map(|e| e.objective).collect();
+        println!(
+            "\n{machines} machine(s): objective {:.4} -> {:.4} in {} virtual ({}s host)",
+            objs.first().unwrap_or(&f64::NAN),
+            run.final_objective,
+            fmt_duration(run.total_vtime),
+            t.elapsed().as_secs()
+        );
+        println!("  {}", metrics::sparkline(&objs));
+        println!(
+            "  barrier wait {} | eps rate {:.3} | {} updates, {:.1} MB shipped",
+            fmt_duration(run.barrier_wait_s),
+            run.epsilon_rate,
+            run.messages,
+            run.bytes as f64 / 1e6
+        );
+    }
+}

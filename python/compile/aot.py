@@ -1,0 +1,182 @@
+"""AOT pipeline: lower the Layer-2 model to HLO *text* artifacts.
+
+Build-time only (``make artifacts``).  Python never runs on the training
+path: the Rust runtime loads ``artifacts/<name>.hlo.txt`` through
+``HloModuleProto::from_text_file`` and executes via PJRT.
+
+HLO **text** is the interchange format, NOT ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is a flat-signature step function
+``(w0, b0, ..., x, y) -> (loss, g_w0, g_b0, ...)`` plus a JSON manifest
+describing shapes/dtypes/argument order for the Rust side.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+        (optionally ``--only tiny,timit_scaled`` / ``--list``)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---------------------------------------------------------------------------
+# Artifact registry.
+#
+# `dims` are layer sizes [input, hidden..., output]; `impl` selects the
+# gradient path: "jnp" = autodiff (production), "pallas" = the paper's
+# layerwise Eq.(6)/(7) backprop through the Layer-1 Pallas kernels.
+#
+# Paper-scale configs (Section 6.1):
+#   TIMIT:       360 -> 2048 x6 -> 2001   (~24M params), minibatch 100
+#   ImageNet-63K 21504 -> 5000,3000,2000 -> 1000 (~132M), minibatch 1000
+# The *_scaled variants keep the architecture shape but shrink widths so
+# the full bench suite runs on one CPU core; `e2e_100m` is the ~100M-param
+# end-to-end training artifact used by examples/e2e_train_100m.rs.
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    # correctness-sized artifacts (integration tests, quickstart)
+    "tiny": dict(dims=[16, 32, 10], batch=8, loss="xent", impl="jnp"),
+    "tiny_pallas": dict(dims=[16, 32, 10], batch=8, loss="xent", impl="pallas"),
+    "tiny_mse": dict(dims=[16, 32, 10], batch=8, loss="mse", impl="jnp"),
+    # scaled workloads driving the paper's figures
+    "timit_scaled": dict(
+        dims=[360, 256, 256, 256, 256, 256, 256, 2001],
+        batch=100,
+        loss="xent",
+        impl="jnp",
+    ),
+    "imagenet_scaled": dict(
+        dims=[2150, 500, 300, 200, 1000], batch=100, loss="xent", impl="jnp"
+    ),
+    # the end-to-end ~100M-parameter driver (examples/e2e_train_100m.rs)
+    "e2e_100m": dict(
+        dims=[4096, 8192, 4096, 4096, 2048, 1024],
+        batch=16,
+        loss="xent",
+        impl="jnp",
+    ),
+}
+
+FORWARD_CONFIGS = {
+    "tiny_fwd": dict(dims=[16, 32, 10], batch=8, loss="xent"),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(spec, name):
+    return {
+        "name": name,
+        "shape": list(spec.shape),
+        "dtype": str(spec.dtype),
+    }
+
+
+def build_one(name, cfg, out_dir):
+    dims, batch, loss = cfg["dims"], cfg["batch"], cfg["loss"]
+    impl = cfg.get("impl")
+    if impl is None:  # forward-only artifact
+        fn = model.make_forward_fn(dims, loss)
+        specs, names = model.arg_specs(dims, batch, loss, with_y=False)
+        outputs = [{"name": "out", "shape": [batch, dims[-1]], "dtype": "float32"}]
+        kind = "forward"
+    else:
+        fn = model.make_step_fn(dims, loss, impl)
+        specs, names = model.arg_specs(dims, batch, loss, with_y=True)
+        outputs = [{"name": "loss", "shape": [], "dtype": "float32"}]
+        for m in range(len(dims) - 1):
+            outputs.append(
+                {"name": f"g_w{m}", "shape": [dims[m], dims[m + 1]], "dtype": "float32"}
+            )
+            outputs.append(
+                {"name": f"g_b{m}", "shape": [dims[m + 1]], "dtype": "float32"}
+            )
+        kind = "step"
+
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    entry = {
+        "file": fname,
+        "kind": kind,
+        "layer_dims": dims,
+        "batch": batch,
+        "loss": loss,
+        "impl": impl or "jnp",
+        "inputs": [_spec_json(s, n) for s, n in zip(specs, names)],
+        "outputs": outputs,
+        "sha256_16": digest,
+    }
+    n_params = sum(dims[m] * dims[m + 1] + dims[m + 1] for m in range(len(dims) - 1))
+    print(f"  {name:18s} {len(text):>10d} chars  {n_params:>12d} params")
+    return entry
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default="", help="comma-separated artifact names")
+    ap.add_argument("--skip-large", action="store_true",
+                    help="skip the e2e_100m artifact (CI-speed builds)")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    all_cfgs = {**CONFIGS, **FORWARD_CONFIGS}
+    if args.list:
+        for k, v in all_cfgs.items():
+            print(k, v)
+        return 0
+
+    names = [n for n in args.only.split(",") if n] or list(all_cfgs)
+    if args.skip_large:
+        names = [n for n in names if n != "e2e_100m"]
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"format": 1, "artifacts": {}}
+    manifest_path = os.path.join(args.out, "manifest.json")
+    # merge with an existing manifest so --only builds are incremental
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+        except Exception:
+            pass
+
+    print(f"lowering {len(names)} artifacts -> {args.out}")
+    for n in names:
+        if n not in all_cfgs:
+            print(f"unknown artifact {n!r}", file=sys.stderr)
+            return 1
+        manifest["artifacts"][n] = build_one(n, all_cfgs[n], args.out)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

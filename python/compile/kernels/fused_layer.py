@@ -1,0 +1,265 @@
+"""Layer-1 Pallas kernels: the fused dense-layer hot path of SSP-DNN.
+
+The paper's per-layer compute (Eq. 6/7) decomposes into three kernels:
+
+* ``dense_sigmoid``   — forward  ``z = h(x W + b)``
+* ``delta_backward``  — backflow ``delta_i = h'(a_i) * (delta W^T)_i``
+* ``grad_w``          — gradient ``dW = z_lower^T delta / B``
+
+Each is a tiled Pallas kernel with an explicit BlockSpec schedule.  The
+tiling is MXU-shaped (multiples of 128x128 blocks, fp32 accumulate) so the
+same kernels lower to Mosaic on a real TPU; in this repo they are lowered
+with ``interpret=True`` so the resulting HLO runs on the CPU PJRT plugin
+(see DESIGN.md §Hardware-Adaptation).
+
+Inputs of arbitrary shape are zero-padded up to block multiples inside the
+wrappers and the result is sliced back, so the kernels are total functions
+over the hypothesis sweep in ``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+# interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+# that the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+INTERPRET = True
+
+
+def _pad2(x, bm, bn):
+    """Zero-pad a 2-D array up to multiples of (bm, bn)."""
+    m, n = x.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def _blocks(dim, blk):
+    return (dim + blk - 1) // blk
+
+
+def _sigmoid(a):
+    return jnp.where(
+        a >= 0, 1.0 / (1.0 + jnp.exp(-a)), jnp.exp(a) / (1.0 + jnp.exp(a))
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward: z = sigmoid(x @ w + b)
+# ---------------------------------------------------------------------------
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """Grid (M/bm, N/bn, K/bk); K is innermost so o_ref accumulates."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        acc = o_ref[...] + b_ref[...]
+        if activation == "sigmoid":
+            o_ref[...] = _sigmoid(acc)
+        else:
+            o_ref[...] = acc
+
+
+def _dense(x, w, b, activation, bm, bn, bk):
+    m, kdim = x.shape
+    _, n = w.shape
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(n, 1))
+    bk = min(bk, max(kdim, 1))
+    xp = _pad2(x, bm, bk)
+    wp = _pad2(w, bk, bn)
+    bp = _pad2(b[None, :], 1, bn)
+    nk = _blocks(kdim, bk)
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, nk=nk, activation=activation),
+        grid=(_blocks(m, bm), _blocks(n, bn), nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (_blocks(m, bm) * bm, _blocks(n, bn) * bn), jnp.float32
+        ),
+        interpret=INTERPRET,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def dense_sigmoid(x, w, b, *, bm=DEFAULT_BLOCK, bn=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
+    """Fused forward layer ``sigmoid(x @ w + b)`` (paper: z_j = h(a_j))."""
+    return _dense(x, w, b, "sigmoid", bm, bn, bk)
+
+
+def dense_linear(x, w, b, *, bm=DEFAULT_BLOCK, bn=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
+    """Fused forward layer without activation (pre-softmax output layer)."""
+    return _dense(x, w, b, "linear", bm, bn, bk)
+
+
+# ---------------------------------------------------------------------------
+# backward error flow: delta_i = h'(a_i) * sum_j delta_j w_{j,i}
+# ---------------------------------------------------------------------------
+
+
+def _delta_kernel(d_ref, w_ref, z_ref, o_ref, *, nk: int):
+    """Grid (B/bm, I/bn, O/bk).  d (bm,bk) @ w(bn,bk)^T, fused h'."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        d_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        z = z_ref[...]
+        o_ref[...] = o_ref[...] * z * (1.0 - z)
+
+
+def delta_backward(
+    delta, w, z_lower, *, bm=DEFAULT_BLOCK, bn=DEFAULT_BLOCK, bk=DEFAULT_BLOCK
+):
+    """Backpropagate errors one layer (paper chain rule, fused with h').
+
+    delta: (B, O); w: (I, O); z_lower: (B, I) -> (B, I).
+    """
+    m, o = delta.shape
+    i, _ = w.shape
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(i, 1))
+    bk = min(bk, max(o, 1))
+    dp = _pad2(delta, bm, bk)
+    wp = _pad2(w, bn, bk)
+    zp = _pad2(z_lower, bm, bn)
+    nk = _blocks(o, bk)
+    out = pl.pallas_call(
+        functools.partial(_delta_kernel, nk=nk),
+        grid=(_blocks(m, bm), _blocks(i, bn), nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda a, b_, k: (a, k)),
+            pl.BlockSpec((bn, bk), lambda a, b_, k: (b_, k)),
+            pl.BlockSpec((bm, bn), lambda a, b_, k: (a, b_)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda a, b_, k: (a, b_)),
+        out_shape=jax.ShapeDtypeStruct(
+            (_blocks(m, bm) * bm, _blocks(i, bn) * bn), jnp.float32
+        ),
+        interpret=INTERPRET,
+    )(dp, wp, zp)
+    return out[:m, :i]
+
+
+# ---------------------------------------------------------------------------
+# weight gradient: dW = z_lower^T @ delta / B
+# ---------------------------------------------------------------------------
+
+
+def _gradw_kernel(z_ref, d_ref, o_ref, *, nk: int, inv_batch: float):
+    """Grid (I/bm, O/bn, B/bk).  z(bk,bm)^T @ d(bk,bn), scaled by 1/B."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        z_ref[...].T, d_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = o_ref[...] * inv_batch
+
+
+def grad_w(delta, z_lower, *, bm=DEFAULT_BLOCK, bn=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
+    """Batch-mean weight gradient ``z_lower^T @ delta / B`` -> (I, O)."""
+    batch, o = delta.shape
+    _, i = z_lower.shape
+    bm = min(bm, max(i, 1))
+    bn = min(bn, max(o, 1))
+    bk = min(bk, max(batch, 1))
+    zp = _pad2(z_lower, bk, bm)
+    dp = _pad2(delta, bk, bn)
+    nk = _blocks(batch, bk)
+    out = pl.pallas_call(
+        functools.partial(_gradw_kernel, nk=nk, inv_batch=1.0 / batch),
+        grid=(_blocks(i, bm), _blocks(o, bn), nk),
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda a, b_, k: (k, a)),
+            pl.BlockSpec((bk, bn), lambda a, b_, k: (k, b_)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda a, b_, k: (a, b_)),
+        out_shape=jax.ShapeDtypeStruct(
+            (_blocks(i, bm) * bm, _blocks(o, bn) * bn), jnp.float32
+        ),
+        interpret=INTERPRET,
+    )(zp, dp)
+    return out[:i, :o]
+
+
+def sgd_apply(w, delta, z_lower, eta, **blocks):
+    """Fused SGD step on one layer: ``w - eta * grad_w`` (paper Eq. 6)."""
+    return w - eta * grad_w(delta, z_lower, **blocks)
+
+
+# ---------------------------------------------------------------------------
+# output-layer error: delta_M = softmax(logits) - onehot(y)   (Eq. 7 top)
+# ---------------------------------------------------------------------------
+
+
+def _softmax_delta_kernel(l_ref, y_ref, o_ref):
+    """One batch-row block, full class width: stable softmax - onehot."""
+    logits = l_ref[...]
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - mx)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    onehot = (cols == y_ref[...][:, None]).astype(jnp.float32)
+    o_ref[...] = p - onehot
+
+
+def softmax_delta(logits, y, *, bm=DEFAULT_BLOCK):
+    """The paper's output-layer error term ``delta_M`` for cross-entropy.
+
+    logits: (B, C) f32; y: (B,) int32 class ids. Returns (B, C).
+    Grid over batch rows only — the row-wise softmax needs the whole class
+    axis resident (class counts here: <= 2001 → <=8 KB/row, VMEM-trivial).
+    """
+    b, c = logits.shape
+    bm = min(bm, max(b, 1))
+    pb = (-b) % bm
+    lp = jnp.pad(logits, ((0, pb), (0, 0)))
+    yp = jnp.pad(y, (0, pb), constant_values=0)
+    out = pl.pallas_call(
+        _softmax_delta_kernel,
+        grid=(_blocks(b, bm),),
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((_blocks(b, bm) * bm, c), jnp.float32),
+        interpret=INTERPRET,
+    )(lp, yp)
+    return out[:b, :]

@@ -1,0 +1,85 @@
+"""Pure-jnp reference oracles for the Layer-1 Pallas kernels.
+
+These are the ground truth the Pallas kernels in ``fused_layer.py`` are
+checked against (``python/tests/test_kernels.py``, hypothesis sweeps over
+shapes/dtypes).  They implement exactly the layerwise quantities of the
+paper's Eq. (6)/(7):
+
+* ``dense_sigmoid``     — forward:  ``z_j = h(a_j)``, ``a_j = sum_i w_ji z_i + b_j``
+* ``delta_backward``    — backflow: ``delta_i = h'(a_i) * sum_j delta_j w_ji``
+* ``sgd_apply``         — update:   ``w_ji <- w_ji - eta * delta_j z_i`` (batched)
+
+Shape conventions (row-major, batch-first):
+  x      : (B, I)   activations entering the layer (``z_i`` in the paper)
+  w      : (I, O)   weight matrix ``w^{(m+1, m)}`` stored input-major
+  b      : (O,)     bias
+  delta  : (B, O)   error terms ``delta_j`` of the upper layer
+  z_lower: (B, I)   activation outputs of the *lower* layer (for h')
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sigmoid(a):
+    """Numerically-stable logistic unit h(a) (paper Assumption 3)."""
+    return jnp.where(
+        a >= 0, 1.0 / (1.0 + jnp.exp(-a)), jnp.exp(a) / (1.0 + jnp.exp(a))
+    )
+
+
+def sigmoid_grad_from_output(z):
+    """h'(a) expressed through the activation output: h'(a) = z (1 - z)."""
+    return z * (1.0 - z)
+
+
+def dense_sigmoid(x, w, b):
+    """Forward fused dense layer: sigmoid(x @ w + b)."""
+    return sigmoid(jnp.dot(x, w, preferred_element_type=jnp.float32) + b)
+
+
+def dense_linear(x, w, b):
+    """Forward dense layer without activation (output layer pre-softmax)."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+
+
+def delta_backward(delta, w, z_lower):
+    """Backpropagate error terms one layer down (paper chain rule).
+
+    delta_i = h'(a_i) * sum_j delta_j w_{j,i}
+    with h'(a_i) = z_i (1 - z_i) for sigmoid units.
+
+    delta: (B, O) errors at the upper layer; w: (I, O); z_lower: (B, I)
+    activations of the lower layer.  Returns (B, I).
+    """
+    back = jnp.dot(delta, w.T, preferred_element_type=jnp.float32)
+    return back * sigmoid_grad_from_output(z_lower)
+
+
+def grad_w(delta, z_lower):
+    """Weight gradient dL/dW = z_lower^T @ delta, averaged over the batch.
+
+    delta: (B, O); z_lower: (B, I) -> (I, O).
+    """
+    batch = delta.shape[0]
+    return jnp.dot(z_lower.T, delta, preferred_element_type=jnp.float32) / batch
+
+
+def sgd_apply(w, delta, z_lower, eta):
+    """Fused SGD step on one layer: w - eta * grad_w(delta, z_lower)."""
+    return w - eta * grad_w(delta, z_lower)
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids (B,)."""
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=-1, keepdims=True))
+    logp = logits - logz
+    picked = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return -jnp.mean(picked)
+
+
+def mse(pred, target):
+    """Mean squared error (paper's l2 loss option), 0.5 ||y - f||^2 mean."""
+    return 0.5 * jnp.mean(jnp.sum((pred - target) ** 2, axis=-1))

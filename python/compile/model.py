@@ -1,0 +1,193 @@
+"""Layer-2: the SSP-DNN model — JAX forward/backward for a sigmoid MLP.
+
+This is the compute graph the paper trains (Section 4): a feed-forward DNN
+with logistic hidden units and either a softmax cross-entropy output
+(classification on TIMIT / ImageNet-63K) or an MSE output (paper's l2
+option).  Two gradient implementations are provided:
+
+* ``loss_and_grads_autodiff`` — plain jnp forward + ``jax.value_and_grad``.
+  This is the production path for large configurations: XLA fuses it and
+  the artifact runs fast on the CPU PJRT plugin.
+
+* ``loss_and_grads_manual``  — the paper's *layerwise* backpropagation,
+  Eq. (6)/(7), written explicitly with the Layer-1 Pallas kernels
+  (``kernels.fused_layer``): forward through ``dense_sigmoid``, the error
+  terms ``delta`` flowing down through ``delta_backward``, and per-layer
+  gradients from ``grad_w``.  pytest asserts it matches autodiff exactly.
+
+Both lower to HLO via ``aot.py``; the Rust coordinator treats them
+identically (same manifest signature).
+
+Parameter convention: ``params = [w0, b0, w1, b1, ...]`` with
+``w_m : (dims[m], dims[m+1])`` — i.e. ``w^{(m+1,m)}`` of the paper stored
+input-major — and ``b_m : (dims[m+1],)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fused_layer as fk
+from compile.kernels import ref
+
+
+def init_params(key, dims):
+    """Glorot-uniform weights, zero biases, for layer dims [d0, ..., dM]."""
+    params = []
+    for m in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        fan_in, fan_out = dims[m], dims[m + 1]
+        limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+        w = jax.random.uniform(
+            sub, (fan_in, fan_out), jnp.float32, -limit, limit
+        )
+        params.append(w)
+        params.append(jnp.zeros((fan_out,), jnp.float32))
+    return params
+
+
+def _split(params):
+    """[w0, b0, w1, b1, ...] -> ([w...], [b...])."""
+    return params[0::2], params[1::2]
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def forward_jnp(params, x, loss: str):
+    """Pure-jnp forward; returns output-layer values (logits or sigmoids)."""
+    ws, bs = _split(params)
+    z = x
+    for m in range(len(ws) - 1):
+        z = ref.dense_sigmoid(z, ws[m], bs[m])
+    out = ref.dense_linear(z, ws[-1], bs[-1])
+    if loss == "mse":
+        out = ref.sigmoid(out)
+    return out
+
+
+def forward_pallas(params, x, loss: str):
+    """Forward through the Layer-1 Pallas kernels; returns (out, activations).
+
+    activations[m] is the input z entering layer m (activations[0] == x),
+    needed by the layerwise backward pass.
+    """
+    ws, bs = _split(params)
+    acts = [x]
+    z = x
+    for m in range(len(ws) - 1):
+        z = fk.dense_sigmoid(z, ws[m], bs[m])
+        acts.append(z)
+    out = fk.dense_linear(z, ws[-1], bs[-1])
+    if loss == "mse":
+        out = ref.sigmoid(out)
+    return out, acts
+
+
+def objective(params, x, y, loss: str):
+    """The paper's Eq. (3) objective E for one minibatch."""
+    out = forward_jnp(params, x, loss)
+    if loss == "xent":
+        return ref.softmax_xent(out, y)
+    return ref.mse(out, y)
+
+
+# ---------------------------------------------------------------------------
+# gradients
+# ---------------------------------------------------------------------------
+
+
+def loss_and_grads_autodiff(params, x, y, loss: str):
+    """(E, [dE/dw0, dE/db0, ...]) via jax.value_and_grad."""
+    val, grads = jax.value_and_grad(lambda p: objective(p, x, y, loss))(params)
+    return val, grads
+
+
+def loss_and_grads_manual(params, x, y, loss: str):
+    """The paper's layerwise backprop (Eq. 6/7) with Pallas kernels.
+
+    delta_M at the output layer, then recursively
+    ``delta_m = h'(a_m) * (delta_{m+1} W^T)`` via ``delta_backward``; each
+    layer's gradient is ``grad_w(delta, z_lower)`` — computed independently
+    per layer, exactly the structure SSP synchronizes independently.
+    """
+    ws, bs = _split(params)
+    out, acts = forward_pallas(params, x, loss)
+
+    if loss == "xent":
+        loss_val = ref.softmax_xent(out, y)
+        # delta_M = softmax(out) - onehot(y), via the L1 kernel (Eq. 7 top)
+        delta = fk.softmax_delta(out, y)
+    else:
+        loss_val = ref.mse(out, y)
+        # out = sigmoid(a); dE/da = (out - y) * out (1 - out)
+        delta = (out - y) * ref.sigmoid_grad_from_output(out)
+
+    grads = [None] * len(params)
+    # top layer M
+    m = len(ws) - 1
+    grads[2 * m] = fk.grad_w(delta, acts[m])
+    grads[2 * m + 1] = jnp.mean(delta, axis=0)
+    # recurse down: delta_i = h'(a_i) sum_j delta_j w_ji
+    for m in range(len(ws) - 2, -1, -1):
+        delta = fk.delta_backward(delta, ws[m + 1], acts[m + 1])
+        grads[2 * m] = fk.grad_w(delta, acts[m])
+        grads[2 * m + 1] = jnp.mean(delta, axis=0)
+    return loss_val, grads
+
+
+def make_step_fn(dims, loss: str, impl: str):
+    """Flat-signature function for AOT lowering.
+
+    fn(w0, b0, ..., wM, bM, x, y) -> (loss, g_w0, g_b0, ..., g_wM, g_bM)
+
+    The flat positional signature is what the Rust runtime marshals
+    (manifest lists the argument order explicitly).
+    """
+    nparams = 2 * (len(dims) - 1)
+    grad_fn = (
+        loss_and_grads_manual if impl == "pallas" else loss_and_grads_autodiff
+    )
+
+    def fn(*args):
+        params = list(args[:nparams])
+        x, y = args[nparams], args[nparams + 1]
+        val, grads = grad_fn(params, x, y, loss)
+        return (val, *grads)
+
+    return fn
+
+
+def make_forward_fn(dims, loss: str):
+    """fn(w0, b0, ..., x) -> (out,) — inference-only artifact."""
+    nparams = 2 * (len(dims) - 1)
+
+    def fn(*args):
+        params = list(args[:nparams])
+        x = args[nparams]
+        return (forward_jnp(params, x, loss),)
+
+    return fn
+
+
+def arg_specs(dims, batch, loss: str, with_y=True):
+    """ShapeDtypeStructs matching make_step_fn's flat signature."""
+    specs = []
+    names = []
+    for m in range(len(dims) - 1):
+        specs.append(jax.ShapeDtypeStruct((dims[m], dims[m + 1]), jnp.float32))
+        names.append(f"w{m}")
+        specs.append(jax.ShapeDtypeStruct((dims[m + 1],), jnp.float32))
+        names.append(f"b{m}")
+    specs.append(jax.ShapeDtypeStruct((batch, dims[0]), jnp.float32))
+    names.append("x")
+    if with_y:
+        if loss == "xent":
+            specs.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+        else:
+            specs.append(jax.ShapeDtypeStruct((batch, dims[-1]), jnp.float32))
+        names.append("y")
+    return specs, names

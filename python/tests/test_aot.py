@@ -1,0 +1,139 @@
+"""AOT pipeline tests: HLO-text artifacts + manifest integrity.
+
+Builds the tiny artifacts into a tmp dir and checks the interchange
+contract the Rust runtime depends on: parseable HLO text (ENTRY present,
+no serialized-proto path), manifest shapes matching model.arg_specs, and
+numeric equivalence of the lowered computation to the eager model.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+PY_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    entries = {}
+    for name in ["tiny", "tiny_pallas", "tiny_mse", "tiny_fwd"]:
+        cfg = {**aot.CONFIGS, **aot.FORWARD_CONFIGS}[name]
+        entries[name] = aot.build_one(name, cfg, str(out))
+    with open(out / "manifest.json", "w") as f:
+        json.dump({"format": 1, "artifacts": entries}, f)
+    return out, entries
+
+
+def test_hlo_text_format(built):
+    out, entries = built
+    for name, e in entries.items():
+        text = (out / e["file"]).read_text()
+        assert "ENTRY" in text, f"{name}: not HLO text"
+        assert "HloModule" in text
+        # return_tuple contract: the root is a tuple the rust side unpacks
+        assert "tuple(" in text or ") tuple" in text
+
+
+def test_manifest_shapes_match_arg_specs(built):
+    _, entries = built
+    e = entries["tiny"]
+    specs, names = model.arg_specs(e["layer_dims"], e["batch"], e["loss"])
+    assert [i["name"] for i in e["inputs"]] == names
+    for i, s in zip(e["inputs"], specs):
+        assert tuple(i["shape"]) == s.shape
+    assert e["outputs"][0]["name"] == "loss"
+    assert len(e["outputs"]) == 1 + 2 * (len(e["layer_dims"]) - 1)
+
+
+def test_manifest_grad_shapes_mirror_params(built):
+    _, entries = built
+    e = entries["tiny"]
+    dims = e["layer_dims"]
+    outs = {o["name"]: o["shape"] for o in e["outputs"]}
+    for m in range(len(dims) - 1):
+        assert outs[f"g_w{m}"] == [dims[m], dims[m + 1]]
+        assert outs[f"g_b{m}"] == [dims[m + 1]]
+
+
+def test_lowered_computation_matches_eager(built):
+    """Execute the lowered tiny step through jax and compare to eager."""
+    e = {**aot.CONFIGS}["tiny"]
+    fn = model.make_step_fn(e["dims"], e["loss"], e["impl"])
+    specs, _ = model.arg_specs(e["dims"], e["batch"], e["loss"])
+    compiled = jax.jit(fn).lower(*specs).compile()
+
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, e["dims"])
+    x = jax.random.normal(key, (e["batch"], e["dims"][0]), jnp.float32)
+    y = jax.random.randint(key, (e["batch"],), 0, e["dims"][-1])
+    got = compiled(*params, x, y)
+    want = fn(*params, x, y)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_and_jnp_artifacts_agree(built):
+    """tiny and tiny_pallas lower different impls of the same math."""
+    cfg = aot.CONFIGS["tiny"]
+    fn_jnp = model.make_step_fn(cfg["dims"], cfg["loss"], "jnp")
+    fn_pl = model.make_step_fn(cfg["dims"], cfg["loss"], "pallas")
+    key = jax.random.PRNGKey(1)
+    params = model.init_params(key, cfg["dims"])
+    x = jax.random.normal(key, (cfg["batch"], cfg["dims"][0]), jnp.float32)
+    y = jax.random.randint(key, (cfg["batch"],), 0, cfg["dims"][-1])
+    a = fn_jnp(*params, x, y)
+    b = fn_pl(*params, x, y)
+    for u, v in zip(a, b):
+        np.testing.assert_allclose(u, v, rtol=1e-4, atol=1e-6)
+
+
+def test_cli_only_and_manifest_merge(tmp_path):
+    """--only builds are incremental: the manifest merges, not replaces."""
+    env = {**os.environ, "PYTHONPATH": PY_DIR}
+    for only in ["tiny", "tiny_fwd"]:
+        r = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", str(tmp_path),
+             "--only", only],
+            cwd=PY_DIR, env=env, capture_output=True, text=True,
+        )
+        assert r.returncode == 0, r.stderr
+    with open(tmp_path / "manifest.json") as f:
+        man = json.load(f)
+    assert set(man["artifacts"]) == {"tiny", "tiny_fwd"}
+    assert man["format"] == 1
+
+
+def test_cli_rejects_unknown_artifact(tmp_path):
+    env = {**os.environ, "PYTHONPATH": PY_DIR}
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(tmp_path),
+         "--only", "nope"],
+        cwd=PY_DIR, env=env, capture_output=True, text=True,
+    )
+    assert r.returncode == 1
+
+
+def test_registry_paper_configs_present():
+    """The registry must cover the paper's two workloads + the e2e driver."""
+    assert "timit_scaled" in aot.CONFIGS
+    assert "imagenet_scaled" in aot.CONFIGS
+    assert "e2e_100m" in aot.CONFIGS
+    t = aot.CONFIGS["timit_scaled"]
+    assert len(t["dims"]) == 8, "TIMIT: 6 hidden layers (paper §6.1)"
+    assert t["dims"][0] == 360 and t["dims"][-1] == 2001
+    i = aot.CONFIGS["imagenet_scaled"]
+    assert len(i["dims"]) == 5, "ImageNet: 3 hidden layers (paper §6.1)"
+    assert i["dims"][-1] == 1000
+    e = aot.CONFIGS["e2e_100m"]
+    n = sum(e["dims"][m] * e["dims"][m + 1] + e["dims"][m + 1]
+            for m in range(len(e["dims"]) - 1))
+    assert 80e6 < n < 120e6, f"e2e artifact must be ~100M params, got {n}"

@@ -1,0 +1,145 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (including non-block-multiple, degenerate dims)
+and block sizes; every kernel must match ref.* to float32 tolerance.
+This is the CORE correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_layer as fk
+from compile.kernels import ref
+
+DIM = st.integers(min_value=1, max_value=70)
+BLK = st.sampled_from([1, 2, 3, 8, 16, 128])
+SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIM, i=DIM, o=DIM, bm=BLK, bn=BLK, bk=BLK, seed=SEED)
+def test_dense_sigmoid_matches_ref(b, i, o, bm, bn, bk, seed):
+    kx, kw, kb = _keys(seed, 3)
+    x, w, bias = _rand(kx, b, i), _rand(kw, i, o), _rand(kb, o)
+    got = fk.dense_sigmoid(x, w, bias, bm=bm, bn=bn, bk=bk)
+    want = ref.dense_sigmoid(x, w, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIM, i=DIM, o=DIM, bm=BLK, bn=BLK, bk=BLK, seed=SEED)
+def test_dense_linear_matches_ref(b, i, o, bm, bn, bk, seed):
+    kx, kw, kb = _keys(seed, 3)
+    x, w, bias = _rand(kx, b, i), _rand(kw, i, o), _rand(kb, o)
+    got = fk.dense_linear(x, w, bias, bm=bm, bn=bn, bk=bk)
+    want = ref.dense_linear(x, w, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIM, i=DIM, o=DIM, bm=BLK, bn=BLK, bk=BLK, seed=SEED)
+def test_delta_backward_matches_ref(b, i, o, bm, bn, bk, seed):
+    kd, kw, kz = _keys(seed, 3)
+    delta, w = _rand(kd, b, o), _rand(kw, i, o)
+    z = jax.nn.sigmoid(_rand(kz, b, i))  # activations live in (0,1)
+    got = fk.delta_backward(delta, w, z, bm=bm, bn=bn, bk=bk)
+    want = ref.delta_backward(delta, w, z)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIM, i=DIM, o=DIM, bm=BLK, bn=BLK, bk=BLK, seed=SEED)
+def test_grad_w_matches_ref(b, i, o, bm, bn, bk, seed):
+    kd, kz = _keys(seed, 2)
+    delta, z = _rand(kd, b, o), _rand(kz, b, i)
+    got = fk.grad_w(delta, z, bm=bm, bn=bn, bk=bk)
+    want = ref.grad_w(delta, z)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=DIM, i=DIM, o=DIM, seed=SEED,
+       eta=st.floats(min_value=1e-4, max_value=2.0))
+def test_sgd_apply_matches_ref(b, i, o, seed, eta):
+    kd, kz, kw = _keys(seed, 3)
+    delta, z, w = _rand(kd, b, o), _rand(kz, b, i), _rand(kw, i, o)
+    got = fk.sgd_apply(w, delta, z, eta)
+    want = ref.sgd_apply(w, delta, z, eta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_blocks_larger_than_dims():
+    """Default 128-blocks on tiny inputs must still be exact."""
+    k = jax.random.PRNGKey(7)
+    x, w, b = _rand(k, 2, 3), _rand(k, 3, 4), _rand(k, 4)
+    np.testing.assert_allclose(
+        fk.dense_sigmoid(x, w, b), ref.dense_sigmoid(x, w, b),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_sigmoid_extreme_preactivations_stable():
+    """Assumption 3 units must not overflow for large |a|."""
+    a = jnp.array([[-120.0, -30.0, 0.0, 30.0, 120.0]], jnp.float32)
+    x = jnp.ones((1, 1), jnp.float32)
+    w = a  # 1x5, so x @ w = a
+    b = jnp.zeros((5,), jnp.float32)
+    z = fk.dense_sigmoid(x, w, b)
+    assert np.all(np.isfinite(np.asarray(z)))
+    np.testing.assert_allclose(
+        np.asarray(z)[0, [0, 2, 4]], [0.0, 0.5, 1.0], atol=1e-6
+    )
+
+
+def test_grad_w_is_batch_mean():
+    """grad_w must divide by the batch size (Eq. 3 is a mean objective)."""
+    b, i, o = 6, 3, 2
+    delta = jnp.ones((b, o), jnp.float32)
+    z = jnp.ones((b, i), jnp.float32)
+    got = fk.grad_w(delta, z)
+    np.testing.assert_allclose(got, np.ones((i, o)), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=DIM, c=st.integers(min_value=2, max_value=50), bm=BLK, seed=SEED)
+def test_softmax_delta_matches_ref(b, c, bm, seed):
+    kl, ky = _keys(seed, 2)
+    logits = _rand(kl, b, c, scale=3.0)
+    y = jax.random.randint(ky, (b,), 0, c)
+    got = fk.softmax_delta(logits, y, bm=bm)
+    want = jax.nn.softmax(logits) - jax.nn.one_hot(y, c, dtype=jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_delta_rows_sum_to_zero_and_stable():
+    logits = jnp.array([[1e4, 0.0, -1e4], [0.0, 0.0, 0.0]], jnp.float32)
+    y = jnp.array([0, 2], jnp.int32)
+    d = np.asarray(fk.softmax_delta(logits, y))
+    assert np.all(np.isfinite(d))
+    np.testing.assert_allclose(d.sum(axis=1), 0.0, atol=1e-6)
+    # saturated row: softmax ≈ onehot(0), true class 0 → delta ≈ 0
+    np.testing.assert_allclose(d[0], 0.0, atol=1e-6)
+
+
+def test_delta_backward_zero_activation_kills_flow():
+    """h'(a)=z(1-z): saturated units (z=0 or 1) must pass no error."""
+    delta = jnp.ones((4, 5), jnp.float32)
+    w = jnp.ones((3, 5), jnp.float32)
+    z = jnp.concatenate(
+        [jnp.zeros((4, 1)), jnp.ones((4, 1)), 0.5 * jnp.ones((4, 1))], axis=1
+    ).astype(jnp.float32)
+    out = np.asarray(fk.delta_backward(delta, w, z))
+    np.testing.assert_allclose(out[:, 0], 0.0, atol=1e-7)
+    np.testing.assert_allclose(out[:, 1], 0.0, atol=1e-7)
+    np.testing.assert_allclose(out[:, 2], 5 * 0.25, rtol=1e-6)

@@ -1,0 +1,157 @@
+"""Layer-2 correctness: the JAX model (model.py).
+
+* manual layerwise backprop (Eq. 6/7, Pallas kernels) == jax autodiff
+* gradients == finite differences on a tiny network
+* SGD on the objective actually descends
+* flat-signature step fn matches the pytree API
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+DIMS = [9, 12, 7, 5]
+BATCH = 6
+
+
+def _problem(seed=0, loss="xent", dims=DIMS, batch=BATCH):
+    key = jax.random.PRNGKey(seed)
+    kp, kx, ky = jax.random.split(key, 3)
+    params = model.init_params(kp, dims)
+    x = jax.random.normal(kx, (batch, dims[0]), jnp.float32)
+    if loss == "xent":
+        y = jax.random.randint(ky, (batch,), 0, dims[-1])
+    else:
+        y = jax.nn.one_hot(
+            jax.random.randint(ky, (batch,), 0, dims[-1]), dims[-1]
+        ).astype(jnp.float32)
+    return params, x, y
+
+
+@pytest.mark.parametrize("loss", ["xent", "mse"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_manual_matches_autodiff(loss, seed):
+    params, x, y = _problem(seed, loss)
+    l_a, g_a = model.loss_and_grads_autodiff(params, x, y, loss)
+    l_m, g_m = model.loss_and_grads_manual(params, x, y, loss)
+    np.testing.assert_allclose(l_a, l_m, rtol=1e-5)
+    assert len(g_a) == len(g_m) == 2 * (len(DIMS) - 1)
+    for a, m in zip(g_a, g_m):
+        np.testing.assert_allclose(a, m, rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("loss", ["xent", "mse"])
+def test_autodiff_matches_finite_differences(loss):
+    dims = [4, 5, 3]
+    params, x, y = _problem(3, loss, dims=dims, batch=4)
+    _, grads = model.loss_and_grads_autodiff(params, x, y, loss)
+    eps = 1e-3
+    # spot-check a handful of coordinates in every parameter tensor
+    for pi, p in enumerate(params):
+        flat = np.asarray(p).ravel()
+        for ci in range(0, flat.size, max(1, flat.size // 3)):
+            bump = np.zeros_like(flat)
+            bump[ci] = eps
+            pp = [q if qi != pi else (q + bump.reshape(q.shape))
+                  for qi, q in enumerate(params)]
+            pm = [q if qi != pi else (q - bump.reshape(q.shape))
+                  for qi, q in enumerate(params)]
+            fd = (model.objective(pp, x, y, loss)
+                  - model.objective(pm, x, y, loss)) / (2 * eps)
+            got = np.asarray(grads[pi]).ravel()[ci]
+            np.testing.assert_allclose(got, fd, rtol=2e-2, atol=2e-4)
+
+
+@pytest.mark.parametrize("loss", ["xent", "mse"])
+def test_sgd_descends(loss):
+    params, x, y = _problem(5, loss)
+    losses = []
+    for _ in range(30):
+        l, g = model.loss_and_grads_autodiff(params, x, y, loss)
+        losses.append(float(l))
+        params = [p - 0.5 * gi for p, gi in zip(params, g)]
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_step_fn_flat_signature():
+    params, x, y = _problem(0, "xent")
+    fn = model.make_step_fn(DIMS, "xent", "jnp")
+    out = fn(*params, x, y)
+    l_ref, g_ref = model.loss_and_grads_autodiff(params, x, y, "xent")
+    assert len(out) == 1 + len(params)
+    np.testing.assert_allclose(out[0], l_ref, rtol=1e-6)
+    for o, g in zip(out[1:], g_ref):
+        np.testing.assert_allclose(o, g, rtol=1e-6)
+
+
+def test_step_fn_pallas_impl():
+    params, x, y = _problem(1, "xent")
+    fn = model.make_step_fn(DIMS, "xent", "pallas")
+    out = fn(*params, x, y)
+    l_ref, g_ref = model.loss_and_grads_autodiff(params, x, y, "xent")
+    np.testing.assert_allclose(out[0], l_ref, rtol=1e-5)
+    for o, g in zip(out[1:], g_ref):
+        np.testing.assert_allclose(o, g, rtol=1e-4, atol=1e-6)
+
+
+def test_forward_fn():
+    params, x, _ = _problem(2, "xent")
+    fn = model.make_forward_fn(DIMS, "xent")
+    (out,) = fn(*params, x)
+    want = model.forward_jnp(params, x, "xent")
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+    assert out.shape == (BATCH, DIMS[-1])
+
+
+def test_arg_specs_order_and_shapes():
+    specs, names = model.arg_specs(DIMS, BATCH, "xent")
+    assert names == ["w0", "b0", "w1", "b1", "w2", "b2", "x", "y"]
+    assert specs[0].shape == (9, 12) and specs[1].shape == (12,)
+    assert specs[-2].shape == (BATCH, 9)
+    assert specs[-1].shape == (BATCH,) and specs[-1].dtype == jnp.int32
+    specs_mse, _ = model.arg_specs(DIMS, BATCH, "mse")
+    assert specs_mse[-1].shape == (BATCH, DIMS[-1])
+
+
+def test_init_params_glorot_scale():
+    params = model.init_params(jax.random.PRNGKey(0), [100, 50, 10])
+    w0 = np.asarray(params[0])
+    limit = np.sqrt(6.0 / 150)
+    assert np.abs(w0).max() <= limit + 1e-6
+    assert w0.std() > 0.3 * limit  # actually spread out, not degenerate
+    assert np.all(np.asarray(params[1]) == 0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    hidden=st.lists(st.integers(2, 12), min_size=1, max_size=4),
+)
+def test_manual_matches_autodiff_random_architectures(seed, hidden):
+    dims = [7] + hidden + [4]
+    params, x, y = _problem(seed, "xent", dims=dims, batch=3)
+    l_a, g_a = model.loss_and_grads_autodiff(params, x, y, "xent")
+    l_m, g_m = model.loss_and_grads_manual(params, x, y, "xent")
+    np.testing.assert_allclose(l_a, l_m, rtol=1e-5)
+    for a, m in zip(g_a, g_m):
+        np.testing.assert_allclose(a, m, rtol=1e-4, atol=1e-6)
+
+
+def test_objective_matches_ref_composition():
+    """Layer-2 objective is exactly ref-kernel composition (Eq. 3)."""
+    params, x, y = _problem(4, "xent")
+    ws, bs = params[0::2], params[1::2]
+    z = x
+    for m in range(len(ws) - 1):
+        z = ref.dense_sigmoid(z, ws[m], bs[m])
+    logits = ref.dense_linear(z, ws[-1], bs[-1])
+    np.testing.assert_allclose(
+        model.objective(params, x, y, "xent"),
+        ref.softmax_xent(logits, y),
+        rtol=1e-6,
+    )

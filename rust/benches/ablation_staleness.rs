@@ -1,0 +1,85 @@
+//! Ablation — the staleness bound s (the paper fixes s=10 in §6.1;
+//! this bench justifies that design choice).
+//!
+//! Sweeps s ∈ {0, 1, 3, 10, 30} plus fully-async on the TIMIT workload
+//! with a visible straggler tail, reporting time-to-target, barrier
+//! waits, ε delivery rate and statistical quality.
+
+mod support;
+
+use sspdnn::coordinator::{build_dataset, run_experiment_on, DriverOptions};
+use sspdnn::metrics;
+use sspdnn::ssp::Policy;
+use sspdnn::util::timer::fmt_duration;
+
+fn main() {
+    let mut cfg = support::timit_bench();
+    cfg.cluster.straggler_prob = 0.08;
+    cfg.cluster.straggler_factor = 6.0;
+    let dataset = build_dataset(&cfg);
+    eprintln!("[ablation_staleness] {} clocks, 6 machines", cfg.train.clocks);
+
+    // the reference target: what BSP reaches (quality yardstick)
+    let mut rows = Vec::new();
+    let mut runs = Vec::new();
+    let policies: Vec<(String, Policy)> = [0u64, 1, 3, 10, 30]
+        .iter()
+        .map(|&s| (format!("ssp(s={s})"), Policy::Ssp { staleness: s }))
+        .chain([("async".to_string(), Policy::Async)])
+        .collect();
+
+    for (name, policy) in &policies {
+        let mut c = cfg.clone();
+        c.ssp.policy = *policy;
+        let run = run_experiment_on(
+            &c,
+            DriverOptions {
+                machines: Some(6),
+                per_batch_s: Some(support::PER_BATCH_S),
+                eval_every: 2,
+                ..DriverOptions::default()
+            },
+            &dataset,
+        );
+        eprintln!("  [bench] {name}: final {:.4}", run.final_objective);
+        rows.push(vec![
+            name.clone(),
+            format!("{:.4}", run.final_objective),
+            fmt_duration(run.total_vtime),
+            fmt_duration(run.barrier_wait_s),
+            format!("{:.3}", run.epsilon_rate),
+            format!("{:.2}", run.steps as f64 / run.total_vtime),
+        ]);
+        runs.push((name.clone(), run));
+    }
+
+    println!("=== Ablation: staleness bound (TIMIT workload, stragglers on) ===\n");
+    println!(
+        "{}",
+        metrics::render_table(
+            &["policy", "final obj", "vtime", "barrier wait", "eps", "steps/s"],
+            &rows
+        )
+    );
+
+    // claims: BSP pays the most barrier wait; throughput (steps/s) grows
+    // with s; moderate staleness costs little statistical quality.
+    let get = |n: &str| runs.iter().find(|(name, _)| name == n).unwrap();
+    let bsp = &get("ssp(s=0)").1;
+    let s10 = &get("ssp(s=10)").1;
+    assert!(
+        bsp.barrier_wait_s > s10.barrier_wait_s,
+        "BSP must wait more than s=10"
+    );
+    let thr_bsp = bsp.steps as f64 / bsp.total_vtime;
+    let thr_s10 = s10.steps as f64 / s10.total_vtime;
+    assert!(
+        thr_s10 > thr_bsp,
+        "s=10 must out-throughput BSP: {thr_s10:.2} vs {thr_bsp:.2}"
+    );
+    assert!(
+        s10.final_objective < bsp.final_objective * 1.25,
+        "moderate staleness must not wreck quality"
+    );
+    println!("\nablation OK: staleness hides stragglers at modest statistical cost");
+}

@@ -1,0 +1,52 @@
+//! Figure 2 — Convergence curves on the TIMIT dataset under different
+//! numbers of machines (objective vs run time).
+//!
+//! Paper setting (§6.1): 6 hidden layers x 2048 units, mb 100, eta 0.05,
+//! staleness 10, 1..6 machines. Bench scale shrinks widths/samples (see
+//! DESIGN.md); SSPDNN_BENCH_SCALE=full widens the sweep.
+//!
+//! Expected shape (paper §6.2): increasing the number of machines
+//! consistently improves convergence speed in wall(-virtual) time.
+
+mod support;
+
+use sspdnn::coordinator::build_dataset;
+
+fn main() {
+    let cfg = support::timit_bench();
+    eprintln!(
+        "[fig2] TIMIT-like: dims {:?} ({} params), {} samples, {}",
+        cfg.model.dims,
+        cfg.model.n_params(),
+        cfg.data.n_samples,
+        cfg.ssp.policy.name()
+    );
+    let dataset = build_dataset(&cfg);
+    let machines: &[usize] = if support::scale() == "quick" {
+        &[1, 3, 6]
+    } else {
+        &[1, 2, 4, 6]
+    };
+    let runs = support::machine_sweep(&cfg, &dataset, machines);
+    support::print_convergence_figure(
+        "Figure 2: convergence curves on TIMIT",
+        &runs,
+    );
+    support::dump_csvs("fig2_timit", &runs);
+
+    // the figure's claim: time to reach the 1-machine final objective
+    // strictly improves with machines
+    let target = runs[0].final_objective;
+    let mut last_t = f64::INFINITY;
+    for r in &runs {
+        let t = sspdnn::metrics::time_to_objective(r, target)
+            .unwrap_or(r.total_vtime);
+        assert!(
+            t <= last_t * 1.05, // small tolerance for eval granularity
+            "convergence speed regressed at {} machines: {t} vs {last_t}",
+            r.machines
+        );
+        last_t = t;
+    }
+    println!("fig2 OK: more machines -> faster convergence (paper §6.2)");
+}

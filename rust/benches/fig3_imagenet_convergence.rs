@@ -1,0 +1,42 @@
+//! Figure 3 — Convergence curves on the ImageNet-63K dataset under
+//! different numbers of machines.
+//!
+//! Paper setting (§6.1): hidden 5000-3000-2000, mb 1000, eta 1,
+//! staleness 10. Bench scale shrinks dims/samples (DESIGN.md).
+
+mod support;
+
+use sspdnn::coordinator::build_dataset;
+
+fn main() {
+    let cfg = support::imagenet_bench();
+    eprintln!(
+        "[fig3] ImageNet-63K-like: dims {:?} ({} params), {} samples",
+        cfg.model.dims,
+        cfg.model.n_params(),
+        cfg.data.n_samples,
+    );
+    let dataset = build_dataset(&cfg);
+    let machines: &[usize] = if support::scale() == "quick" {
+        &[1, 3, 6]
+    } else {
+        &[1, 2, 4, 6]
+    };
+    let runs = support::machine_sweep(&cfg, &dataset, machines);
+    support::print_convergence_figure(
+        "Figure 3: convergence curves on ImageNet-63K",
+        &runs,
+    );
+    support::dump_csvs("fig3_imagenet", &runs);
+
+    let target = runs[0].final_objective;
+    let t1 = sspdnn::metrics::time_to_objective(&runs[0], target)
+        .unwrap_or(runs[0].total_vtime);
+    let tn = sspdnn::metrics::time_to_objective(runs.last().unwrap(), target)
+        .unwrap_or(runs.last().unwrap().total_vtime);
+    assert!(
+        tn < t1,
+        "max machines must reach the single-machine objective sooner"
+    );
+    println!("fig3 OK: more machines -> faster convergence (paper §6.2)");
+}

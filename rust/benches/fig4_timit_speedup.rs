@@ -1,0 +1,52 @@
+//! Figure 4 — Speedup on the TIMIT dataset.
+//!
+//! Paper protocol (§6.2): for each machine count record the time t_n at
+//! which the objective reaches the value p the single machine attains at
+//! the end of training; speedup = t_1 / t_n. Paper reports 3.6x at 6
+//! machines (sublinear: sync overhead + staleness-induced noise).
+
+mod support;
+
+use sspdnn::coordinator::build_dataset;
+
+fn main() {
+    let cfg = support::timit_bench();
+    let dataset = build_dataset(&cfg);
+    let machines: &[usize] = if support::scale() == "quick" {
+        &[1, 3, 6]
+    } else {
+        &[1, 2, 3, 4, 5, 6]
+    };
+    let runs = support::machine_sweep(&cfg, &dataset, machines);
+    support::print_speedup_figure(
+        "Figure 4: speedup on TIMIT (paper: 3.6x at 6 machines)",
+        &runs,
+        3.6,
+    );
+
+    let sp = sspdnn::metrics::speedups(&runs);
+    let last = sp.last().unwrap();
+    assert_eq!(last.0, 6);
+    assert!(
+        last.1 > 1.5,
+        "6 machines must show a clear speedup, got {:.2}",
+        last.1
+    );
+    assert!(
+        last.1 <= 6.05,
+        "speedup cannot exceed linear, got {:.2}",
+        last.1
+    );
+    // monotone non-decreasing within tolerance
+    for w in sp.windows(2) {
+        assert!(
+            w[1].1 >= w[0].1 * 0.85,
+            "speedup should grow with machines: {:?}",
+            sp
+        );
+    }
+    println!(
+        "fig4 OK: sublinear speedup curve, {:.2}x at 6 machines",
+        last.1
+    );
+}

@@ -1,0 +1,37 @@
+//! Figure 5 — Speedup on the ImageNet-63K dataset.
+//!
+//! Same protocol as Figure 4; the paper reports 4.3x at 6 machines
+//! (better than TIMIT: bigger per-clock compute amortizes sync costs).
+
+mod support;
+
+use sspdnn::coordinator::build_dataset;
+
+fn main() {
+    let cfg = support::imagenet_bench();
+    let dataset = build_dataset(&cfg);
+    let machines: &[usize] = if support::scale() == "quick" {
+        &[1, 3, 6]
+    } else {
+        &[1, 2, 3, 4, 5, 6]
+    };
+    let runs = support::machine_sweep(&cfg, &dataset, machines);
+    support::print_speedup_figure(
+        "Figure 5: speedup on ImageNet-63K (paper: 4.3x at 6 machines)",
+        &runs,
+        4.3,
+    );
+
+    let sp = sspdnn::metrics::speedups(&runs);
+    let last = sp.last().unwrap();
+    assert_eq!(last.0, 6);
+    assert!(
+        last.1 > 1.5 && last.1 <= 6.05,
+        "speedup at 6 machines out of range: {:.2}",
+        last.1
+    );
+    println!(
+        "fig5 OK: sublinear speedup curve, {:.2}x at 6 machines",
+        last.1
+    );
+}

@@ -1,0 +1,232 @@
+//! Hot-path microbenchmarks — the §Perf instrument (see EXPERIMENTS.md).
+//!
+//! * GEMM family at model shapes (GFLOP/s): the native engine's floor
+//! * full loss_and_grads step at TIMIT/ImageNet bench shapes (steps/s)
+//! * SSP server ops: commit+arrival application and fetch throughput
+//! * discrete-event queue throughput
+//! * ParamSet axpy (the SSP update application primitive)
+
+use sspdnn::nn::{Activation, Labels, Loss, Mlp, ParamSet, Workspace};
+use sspdnn::sim::EventQueue;
+use sspdnn::ssp::{Policy, Server, UpdateMsg};
+use sspdnn::tensor::{gemm, gemm_nt, gemm_tn, Matrix};
+use sspdnn::util::{Pcg64, Stopwatch};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, flops_per_iter: f64, mut f: F) -> f64 {
+    // warmup
+    f();
+    let sw = Stopwatch::new();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = sw.elapsed_secs() / iters as f64;
+    let gflops = flops_per_iter / dt / 1e9;
+    if flops_per_iter > 0.0 {
+        println!("{name:44} {:>10.3} ms/iter  {gflops:>7.2} GFLOP/s", dt * 1e3);
+    } else {
+        println!("{name:44} {:>10.3} ms/iter  {:>10.0} ops/s", dt * 1e3, 1.0 / dt);
+    }
+    dt
+}
+
+// ---------------------------------------------------------------------------
+// pre-optimization baselines (kept so §Perf before/after is re-measurable)
+// ---------------------------------------------------------------------------
+
+/// gemm as of the §Perf baseline: single saxpy per k step.
+fn gemm_baseline(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut cd[i * n..(i + 1) * n];
+        for p in 0..k {
+            let aip = arow[p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bv;
+            }
+        }
+    }
+}
+
+/// gemm_nt as of the §Perf baseline: 4-accumulator dot product.
+fn gemm_nt_baseline(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.rows();
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+            let chunks = k / 4;
+            for t in 0..chunks {
+                let p = 4 * t;
+                s0 += arow[p] * brow[p];
+                s1 += arow[p + 1] * brow[p + 1];
+                s2 += arow[p + 2] * brow[p + 2];
+                s3 += arow[p + 3] * brow[p + 3];
+            }
+            let mut s = s0 + s1 + s2 + s3;
+            for p in 4 * chunks..k {
+                s += arow[p] * brow[p];
+            }
+            cd[i * n + j] += s;
+        }
+    }
+}
+
+fn main() {
+    let mut rng = Pcg64::new(0);
+    println!("=== hot-path microbench ===\n");
+
+    // ---- §Perf before/after on the two optimized kernels ----
+    {
+        let (m, k, n) = (128usize, 512usize, 512usize);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut c = Matrix::zeros(m, n);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        bench("gemm 512^2 BASELINE (1-saxpy)", 20, flops, || {
+            c.fill(0.0);
+            gemm_baseline(&a, &b, &mut c);
+        });
+        let a2 = Matrix::randn(50, 2001, 1.0, &mut rng);
+        let b2 = Matrix::randn(128, 2001, 1.0, &mut rng);
+        let mut c2 = Matrix::zeros(50, 128);
+        bench(
+            "gemm_nt 50x2001x128 BASELINE (4-acc)",
+            20,
+            2.0 * 50.0 * 2001.0 * 128.0,
+            || {
+                c2.fill(0.0);
+                gemm_nt_baseline(&a2, &b2, &mut c2);
+            },
+        );
+        println!();
+    }
+
+    // ---- GEMM at representative model shapes ----
+    for &(m, k, n, label) in &[
+        (50usize, 360usize, 128usize, "fwd in->h1 (timit bench)"),
+        (50, 128, 128, "fwd h->h (timit bench)"),
+        (50, 128, 2001, "fwd h->out (timit bench)"),
+        (100, 256, 256, "fwd h->h (timit preset)"),
+        (128, 512, 512, "square 512"),
+    ] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut c = Matrix::zeros(m, n);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        bench(&format!("gemm    {m}x{k}x{n} {label}"), 20, flops, || {
+            c.fill(0.0);
+            gemm(&a, &b, &mut c);
+        });
+    }
+    {
+        let (m, k, n) = (50, 2001, 128);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(n, k, 1.0, &mut rng);
+        let mut c = Matrix::zeros(m, n);
+        bench(
+            "gemm_nt 50x2001x128 (delta @ W^T)",
+            20,
+            2.0 * m as f64 * k as f64 * n as f64,
+            || {
+                c.fill(0.0);
+                gemm_nt(&a, &b, &mut c);
+            },
+        );
+        let a = Matrix::randn(k, m, 1.0, &mut rng);
+        let b2 = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut c2 = Matrix::zeros(m, n);
+        bench(
+            "gemm_tn 2001x50x128 (z^T @ delta)",
+            20,
+            2.0 * m as f64 * k as f64 * n as f64,
+            || {
+                c2.fill(0.0);
+                gemm_tn(&a, &b2, &mut c2);
+            },
+        );
+    }
+
+    // ---- full gradient step at bench shapes ----
+    println!();
+    for (dims, batch, label) in [
+        (
+            vec![360, 128, 128, 128, 128, 128, 128, 2001],
+            50usize,
+            "timit bench step",
+        ),
+        (vec![2150, 256, 160, 120, 1000], 50, "imagenet bench step"),
+    ] {
+        let mlp = Mlp::new(dims.clone(), Activation::Sigmoid, Loss::Xent);
+        let p = ParamSet::glorot(&dims, &mut rng);
+        let x = Matrix::randn(batch, dims[0], 1.0, &mut rng);
+        let y = Labels::Class(
+            (0..batch)
+                .map(|_| rng.below(*dims.last().unwrap()) as u32)
+                .collect(),
+        );
+        let mut ws = Workspace::default();
+        let mut g = p.zeros_like();
+        let flops = 6.0 * mlp.n_params() as f64 * batch as f64; // fwd+bwd ≈ 6/param/sample
+        bench(&format!("loss_and_grads {label}"), 10, flops, || {
+            mlp.loss_and_grads_ws(&p, &x, &y, &mut ws, &mut g);
+        });
+    }
+
+    // ---- SSP server ops ----
+    println!();
+    {
+        let dims = vec![360, 128, 128, 2001];
+        let init = ParamSet::glorot(&dims, &mut rng);
+        let delta = init.zeros_like();
+        let mut server = Server::new(init.clone(), 6, Policy::Ssp { staleness: 5 });
+        let mut clock = vec![0u64; 6];
+        let mut worker = 0usize;
+        bench("ssp commit + 3-layer arrival apply", 2000, 0.0, || {
+            server.commit(worker);
+            for (l, lp) in delta.layers.iter().enumerate() {
+                server.apply_arrival(&UpdateMsg::new(worker, clock[worker], l, lp.clone()));
+            }
+            clock[worker] += 1;
+            worker = (worker + 1) % 6;
+        });
+        bench("ssp fetch (snapshot + eps stats)", 500, 0.0, || {
+            let _ = server.fetch(0);
+        });
+    }
+
+    // ---- ParamSet axpy (update application primitive) ----
+    {
+        let dims = vec![360, 256, 256, 2001];
+        let mut a = ParamSet::glorot(&dims, &mut rng);
+        let b = ParamSet::glorot(&dims, &mut rng);
+        let n = a.n_params() as f64;
+        bench("paramset axpy (655k params)", 200, 2.0 * n, || {
+            a.axpy(-0.05, &b);
+        });
+    }
+
+    // ---- event queue ----
+    println!();
+    {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut i = 0u64;
+        bench("event queue push+pop", 100_000, 0.0, || {
+            q.push((i % 997) as f64, i);
+            q.pop();
+            i += 1;
+        });
+    }
+    println!("\nmicrobench done");
+}

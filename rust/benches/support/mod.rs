@@ -1,0 +1,181 @@
+//! Shared bench-harness support: bench-scaled configs, sweep runner,
+//! terminal curves, CSV output under bench_results/.
+#![allow(dead_code)]
+
+use sspdnn::config::ExperimentConfig;
+use sspdnn::coordinator::{run_experiment_on, DriverOptions, RunResult};
+use sspdnn::data::Dataset;
+use sspdnn::metrics;
+
+/// Workload scale: SSPDNN_BENCH_SCALE ∈ {quick, default, full}.
+pub fn scale() -> &'static str {
+    match std::env::var("SSPDNN_BENCH_SCALE").as_deref() {
+        Ok("quick") => "quick",
+        Ok("full") => "full",
+        _ => "default",
+    }
+}
+
+/// TIMIT workload at bench scale (paper §6.1 architecture, 6 hidden
+/// sigmoid layers; width/samples reduced per DESIGN.md substitutions).
+pub fn timit_bench() -> ExperimentConfig {
+    let mut c = ExperimentConfig::timit_scaled();
+    match scale() {
+        "quick" => {
+            c.model.dims = vec![360, 64, 64, 64, 64, 64, 64, 2001];
+            c.data.n_samples = 2_000;
+            c.train.clocks = 8;
+            c.train.batch = 25;
+            c.train.batches_per_clock = 2;
+        }
+        "full" => {
+            c.data.n_samples = 50_000;
+            c.train.clocks = 60;
+        }
+        _ => {
+            c.model.dims = vec![360, 128, 128, 128, 128, 128, 128, 2001];
+            c.data.n_samples = 8_000;
+            c.train.clocks = 50;
+            c.train.batch = 50;
+            c.train.batches_per_clock = 2;
+        }
+    }
+    c
+}
+
+/// ImageNet-63K workload at bench scale.
+pub fn imagenet_bench() -> ExperimentConfig {
+    let mut c = ExperimentConfig::imagenet_scaled();
+    match scale() {
+        "quick" => {
+            c.model.dims = vec![2150, 128, 96, 64, 1000];
+            c.data.n_samples = 1_500;
+            c.train.clocks = 8;
+            c.train.batch = 25;
+            c.train.batches_per_clock = 2;
+        }
+        "full" => {
+            c.data.n_samples = 12_000;
+            c.train.clocks = 50;
+        }
+        _ => {
+            c.model.dims = vec![2150, 256, 160, 120, 1000];
+            c.data.n_samples = 4_000;
+            c.train.clocks = 40;
+            c.train.batch = 50;
+            c.train.batches_per_clock = 2;
+        }
+    }
+    c
+}
+
+/// Per-minibatch virtual compute seconds used across benches so virtual
+/// time axes are comparable (calibrated against the paper's ~seconds-per-
+/// clock regime; absolute scale cancels in speedup ratios).
+pub const PER_BATCH_S: f64 = 0.05;
+
+/// Run a machine sweep on a shared dataset.
+pub fn machine_sweep(
+    cfg: &ExperimentConfig,
+    dataset: &Dataset,
+    machines: &[usize],
+) -> Vec<RunResult> {
+    machines
+        .iter()
+        .map(|&n| {
+            let t = std::time::Instant::now();
+            let r = run_experiment_on(
+                cfg,
+                DriverOptions {
+                    machines: Some(n),
+                    per_batch_s: Some(PER_BATCH_S),
+                    eval_every: 2,
+                    ..DriverOptions::default()
+                },
+                dataset,
+            );
+            eprintln!(
+                "  [bench] n={n}: final {:.4} ({:.0}s virtual, {:.0}s host)",
+                r.final_objective,
+                r.total_vtime,
+                t.elapsed().as_secs_f64()
+            );
+            r
+        })
+        .collect()
+}
+
+/// Print a Fig-2/3-style convergence panel: one series per machine count,
+/// rendered as a combined line chart (objective vs virtual minutes) plus
+/// per-series sparklines.
+pub fn print_convergence_figure(title: &str, runs: &[RunResult]) {
+    println!("=== {title} ===");
+    println!("(objective vs virtual minutes; paper plots wall-clock minutes)\n");
+    let series: Vec<metrics::Series> = runs
+        .iter()
+        .map(|r| {
+            metrics::Series::new(
+                format!("{}m", r.machines),
+                r.evals
+                    .iter()
+                    .map(|e| (e.vtime / 60.0, e.objective))
+                    .collect(),
+            )
+        })
+        .collect();
+    println!(
+        "{}",
+        metrics::line_chart("", "virtual minutes", "objective", &series, 64, 14)
+    );
+    for r in runs {
+        let objs: Vec<f64> = r.evals.iter().map(|e| e.objective).collect();
+        let t_end = r.evals.last().map(|e| e.vtime / 60.0).unwrap_or(0.0);
+        println!(
+            "{:>2} machine(s) [0..{:5.1} min] {}  final {:.4}",
+            r.machines,
+            t_end,
+            metrics::sparkline(&objs),
+            r.final_objective
+        );
+    }
+    println!();
+}
+
+/// Write per-run curve CSVs under bench_results/.
+pub fn dump_csvs(prefix: &str, runs: &[RunResult]) {
+    for r in runs {
+        let path = format!("bench_results/{prefix}_m{}.csv", r.machines);
+        if let Err(e) = metrics::write_file(&path, &metrics::curve_csv(r)) {
+            eprintln!("  [bench] csv write failed: {e}");
+        }
+    }
+    eprintln!("  [bench] wrote bench_results/{prefix}_m*.csv");
+}
+
+/// Fig-4/5-style speedup table against the linear-optimal line.
+pub fn print_speedup_figure(title: &str, runs: &[RunResult], paper_at_6: f64) {
+    println!("=== {title} ===\n");
+    let sp = metrics::speedups(runs);
+    let rows: Vec<Vec<String>> = sp
+        .iter()
+        .map(|(n, s)| {
+            vec![
+                n.to_string(),
+                format!("{s:.2}x"),
+                format!("{n}.00x"),
+                if *n == 6 {
+                    format!("{paper_at_6:.1}x")
+                } else {
+                    "-".into()
+                },
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        metrics::render_table(
+            &["machines", "speedup (ours)", "linear (optimal)", "paper"],
+            &rows
+        )
+    );
+}

@@ -1,0 +1,72 @@
+//! Table 1 — Statistics of Datasets.
+//!
+//! Regenerates the paper's Table 1 from the synthetic generators. Shapes
+//! (features/classes) always match the paper exactly; sample counts are
+//! generated at bench scale by default and reported against the paper's
+//! full-scale numbers (set SSPDNN_PAPER_SCALE=1 to generate full size —
+//! memory-heavy for ImageNet: 63K x 21504 floats ≈ 5.4 GB).
+
+use sspdnn::data::{imagenet_like, timit_like, SynthSpec};
+use sspdnn::metrics::render_table;
+use sspdnn::util::Pcg64;
+
+fn main() {
+    let paper_scale = std::env::var("SSPDNN_PAPER_SCALE").is_ok();
+
+    let timit_spec = if paper_scale {
+        SynthSpec::timit_default()
+    } else {
+        SynthSpec::timit_scaled(50_000)
+    };
+    let imagenet_spec = if paper_scale {
+        SynthSpec::imagenet_default()
+    } else {
+        SynthSpec {
+            n_samples: 5_000,
+            ..SynthSpec::imagenet_default()
+        }
+    };
+
+    println!("=== Table 1: Statistics of Datasets ===\n");
+    let t0 = std::time::Instant::now();
+    let timit = timit_like(&timit_spec).generate(&mut Pcg64::new(11));
+    let t_timit = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let imagenet = imagenet_like(&imagenet_spec).generate(&mut Pcg64::new(13));
+    let t_imagenet = t0.elapsed().as_secs_f64();
+
+    let mut rows = Vec::new();
+    for (ds, paper_n, gen_s) in [
+        (&timit, 1_100_000usize, t_timit),
+        (&imagenet, 63_000, t_imagenet),
+    ] {
+        let (name, nf, nc, ns) = ds.stats();
+        rows.push(vec![
+            name,
+            nf.to_string(),
+            nc.to_string(),
+            ns.to_string(),
+            paper_n.to_string(),
+            format!("{gen_s:.2}s"),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["Dataset", "#Features", "#Classes", "#Samples(gen)", "#Samples(paper)", "gen time"],
+            &rows
+        )
+    );
+
+    // invariants the paper's table pins down
+    assert_eq!(timit.n_features(), 360);
+    assert_eq!(timit.n_classes, 2001);
+    assert_eq!(imagenet.n_features(), 21_504);
+    assert_eq!(imagenet.n_classes, 1000);
+    let nz = imagenet.x.data().iter().filter(|&&v| v != 0.0).count();
+    println!(
+        "ImageNet LLC density: {:.2}% non-zero (sparse codes)",
+        100.0 * nz as f64 / imagenet.x.data().len() as f64
+    );
+    println!("\ntable1 OK: generator statistics match the paper's Table 1 shapes");
+}

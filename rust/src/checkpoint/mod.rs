@@ -1,0 +1,130 @@
+//! Binary parameter checkpoints: deterministic round-trip of a ParamSet.
+//!
+//! Format (little-endian):
+//!   magic "SSPD" | u32 version | u32 n_dims | u64 dims... |
+//!   f32 data in `ParamSet::flatten` order | u64 fnv1a checksum
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::nn::ParamSet;
+
+const MAGIC: &[u8; 4] = b"SSPD";
+const VERSION: u32 = 1;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CheckpointError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic / not a checkpoint")]
+    BadMagic,
+    #[error("unsupported version {0}")]
+    BadVersion(u32),
+    #[error("checksum mismatch (corrupt checkpoint)")]
+    Corrupt,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Save parameters (and the dims chain needed to restore them).
+pub fn save(path: impl AsRef<Path>, dims: &[usize], params: &ParamSet) -> Result<(), CheckpointError> {
+    let flat = params.flatten();
+    let mut buf = Vec::with_capacity(flat.len() * 4 + 64);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+    for &d in dims {
+        buf.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    for v in &flat {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    let sum = fnv1a(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Load a checkpoint; returns (dims, params).
+pub fn load(path: impl AsRef<Path>) -> Result<(Vec<usize>, ParamSet), CheckpointError> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut buf)?;
+    if buf.len() < 24 || &buf[..4] != MAGIC {
+        return Err(CheckpointError::BadMagic);
+    }
+    let body_len = buf.len() - 8;
+    let stored = u64::from_le_bytes(buf[body_len..].try_into().unwrap());
+    if fnv1a(&buf[..body_len]) != stored {
+        return Err(CheckpointError::Corrupt);
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(CheckpointError::BadVersion(version));
+    }
+    let n_dims = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    let mut off = 12;
+    let mut dims = Vec::with_capacity(n_dims);
+    for _ in 0..n_dims {
+        dims.push(u64::from_le_bytes(buf[off..off + 8].try_into().unwrap()) as usize);
+        off += 8;
+    }
+    let n_params: usize = dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+    let mut flat = Vec::with_capacity(n_params);
+    for _ in 0..n_params {
+        flat.push(f32::from_le_bytes(buf[off..off + 4].try_into().unwrap()));
+        off += 4;
+    }
+    Ok((dims.clone(), ParamSet::unflatten(&dims, &flat)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip() {
+        let dims = vec![7, 5, 3];
+        let mut rng = Pcg64::new(1);
+        let p = ParamSet::glorot(&dims, &mut rng);
+        let path = std::env::temp_dir().join("sspdnn_ckpt_test.bin");
+        save(&path, &dims, &p).unwrap();
+        let (d2, p2) = load(&path).unwrap();
+        assert_eq!(d2, dims);
+        assert_eq!(p2, p);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dims = vec![3, 2];
+        let p = ParamSet::zeros(&dims);
+        let path = std::env::temp_dir().join("sspdnn_ckpt_corrupt.bin");
+        save(&path, &dims, &p).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::Corrupt)));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let path = std::env::temp_dir().join("sspdnn_ckpt_magic.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::BadMagic)));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,146 @@
+//! Dependency-free CLI argument parsing: `sspdnn <command> [--key value]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for flag --{0}")]
+    MissingValue(String),
+    #[error("flag --{0} given twice")]
+    Duplicate(String),
+    #[error("invalid value for --{flag}: {value:?} ({expect})")]
+    Invalid {
+        flag: String,
+        value: String,
+        expect: &'static str,
+    },
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first bare token is the command, `--key value`
+    /// and `--key=value` become flags, remaining bare tokens positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                let (key, val) = match flag.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => {
+                        let key = flag.to_string();
+                        match iter.peek() {
+                            Some(v) if !v.starts_with("--") => {
+                                (key, iter.next().unwrap())
+                            }
+                            // bare flag = boolean true
+                            _ => (key, "true".to_string()),
+                        }
+                    }
+                };
+                if args.flags.insert(key.clone(), val).is_some() {
+                    return Err(CliError::Duplicate(key));
+                }
+            } else if args.command.is_empty() {
+                args.command = tok;
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, CliError> {
+        self.parse_flag(key, "integer")
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, CliError> {
+        self.parse_flag(key, "integer")
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, CliError> {
+        self.parse_flag(key, "number")
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    fn parse_flag<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        expect: &'static str,
+    ) -> Result<Option<T>, CliError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| CliError::Invalid {
+                flag: key.to_string(),
+                value: v.to_string(),
+                expect,
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_flags_positional() {
+        let a = parse("train --preset timit --machines 4 extra");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("preset"), Some("timit"));
+        assert_eq!(a.get_usize("machines").unwrap(), Some(4));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form_and_bool() {
+        let a = parse("bench --name=fig4 --paper-scale --eta 0.05");
+        assert_eq!(a.get("name"), Some("fig4"));
+        assert!(a.get_bool("paper-scale"));
+        assert_eq!(a.get_f64("eta").unwrap(), Some(0.05));
+    }
+
+    #[test]
+    fn trailing_bare_flag_is_boolean() {
+        let a = parse("run --verbose");
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn duplicate_flag_rejected() {
+        let e = Args::parse(
+            ["x", "--a", "1", "--a", "2"].iter().map(|s| s.to_string()),
+        );
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn invalid_number_rejected() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn missing_flag_is_none() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("n").unwrap(), None);
+        assert!(!a.get_bool("v"));
+    }
+}

@@ -1,0 +1,464 @@
+//! Typed experiment configuration + a TOML-subset loader.
+//!
+//! Everything an experiment needs is one `ExperimentConfig`: model
+//! architecture, dataset generator, SSP policy, simulated cluster, and
+//! training hyperparameters. Presets reproduce the paper's §6.1 settings;
+//! config files (TOML subset: `[section]`, `key = value`, int/float/bool/
+//! string/int-array values, `#` comments) override presets; CLI flags
+//! override files.
+
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use crate::nn::{Activation, Loss};
+use crate::ssp::Policy;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Layer widths [input, hidden..., output].
+    pub dims: Vec<usize>,
+    pub activation: Activation,
+    pub loss: Loss,
+}
+
+impl ModelConfig {
+    pub fn n_params(&self) -> usize {
+        self.dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataKind {
+    TimitLike,
+    ImagenetLike,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataConfig {
+    pub kind: DataKind,
+    pub n_samples: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SspConfig {
+    pub policy: Policy,
+}
+
+/// Simulated cluster (paper testbed: 6 machines × 16 cores, 10 GbE).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    pub machines: usize,
+    pub cores_per_machine: usize,
+    /// Mean one-way message latency, seconds.
+    pub latency_s: f64,
+    /// Link bandwidth, bytes/second (10 GbE ≈ 1.25e9 B/s).
+    pub bandwidth_bps: f64,
+    /// Probability an in-window (best-effort) update misses its read —
+    /// the paper's ε_{q,p} = 0 event (congestion / drop).
+    pub drop_prob: f64,
+    /// Straggler model: multiplicative lognormal sigma on compute time.
+    pub straggler_sigma: f64,
+    /// Probability of a severe straggler event per clock.
+    pub straggler_prob: f64,
+    /// Severe straggler slowdown factor.
+    pub straggler_factor: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            machines: 6,
+            cores_per_machine: 16,
+            latency_s: 100e-6,
+            bandwidth_bps: 1.25e9,
+            drop_prob: 0.05,
+            straggler_sigma: 0.1,
+            straggler_prob: 0.02,
+            straggler_factor: 4.0,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Native Rust backprop (`nn`).
+    Native,
+    /// PJRT-compiled artifact (`runtime`).
+    Pjrt,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub eta: f32,
+    pub batch: usize,
+    /// Minibatches per SSP clock tick.
+    pub batches_per_clock: usize,
+    /// Total clocks each worker runs.
+    pub clocks: usize,
+    pub seed: u64,
+    pub engine: Engine,
+    /// Artifact name in artifacts/manifest.json (Pjrt engine).
+    pub artifact: Option<String>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub model: ModelConfig,
+    pub data: DataConfig,
+    pub ssp: SspConfig,
+    pub cluster: ClusterConfig,
+    pub train: TrainConfig,
+}
+
+impl ExperimentConfig {
+    /// Paper §6.1 TIMIT setting, scaled for a single host by default:
+    /// 6×2048 hidden at paper scale; the scaled preset keeps 6 hidden
+    /// layers (depth drives the layerwise dynamics) at width 256.
+    pub fn timit_scaled() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "timit_scaled".into(),
+            model: ModelConfig {
+                dims: vec![360, 256, 256, 256, 256, 256, 256, 2001],
+                activation: Activation::Sigmoid,
+                loss: Loss::Xent,
+            },
+            data: DataConfig {
+                kind: DataKind::TimitLike,
+                n_samples: 20_000,
+                n_features: 360,
+                n_classes: 2001,
+                seed: 11,
+            },
+            ssp: SspConfig {
+                policy: Policy::Ssp { staleness: 10 },
+            },
+            cluster: ClusterConfig::default(),
+            train: TrainConfig {
+                eta: 0.05,
+                batch: 100,
+                batches_per_clock: 4,
+                clocks: 120,
+                seed: 7,
+                engine: Engine::Native,
+                artifact: Some("timit_scaled".into()),
+            },
+        }
+    }
+
+    /// Paper §6.1 TIMIT at full scale (24M params, minibatch 100, η=0.05,
+    /// staleness 10). Heavy: used with `--paper-scale`.
+    pub fn timit_paper() -> ExperimentConfig {
+        let mut c = ExperimentConfig::timit_scaled();
+        c.name = "timit_paper".into();
+        c.model.dims = vec![360, 2048, 2048, 2048, 2048, 2048, 2048, 2001];
+        c.data.n_samples = 1_100_000;
+        c.train.artifact = None;
+        c
+    }
+
+    /// Paper §6.1 ImageNet-63K setting, scaled (features 21504→2150).
+    pub fn imagenet_scaled() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "imagenet_scaled".into(),
+            model: ModelConfig {
+                dims: vec![2150, 500, 300, 200, 1000],
+                activation: Activation::Sigmoid,
+                loss: Loss::Xent,
+            },
+            data: DataConfig {
+                kind: DataKind::ImagenetLike,
+                n_samples: 6_300,
+                n_features: 2150,
+                n_classes: 1000,
+                seed: 13,
+            },
+            ssp: SspConfig {
+                policy: Policy::Ssp { staleness: 10 },
+            },
+            cluster: ClusterConfig::default(),
+            train: TrainConfig {
+                eta: 1.0,
+                batch: 100,
+                batches_per_clock: 2,
+                clocks: 100,
+                seed: 17,
+                engine: Engine::Native,
+                artifact: Some("imagenet_scaled".into()),
+            },
+        }
+    }
+
+    /// Paper §6.1 ImageNet-63K at full scale (132M params, mb 1000, η=1).
+    pub fn imagenet_paper() -> ExperimentConfig {
+        let mut c = ExperimentConfig::imagenet_scaled();
+        c.name = "imagenet_paper".into();
+        c.model.dims = vec![21_504, 5000, 3000, 2000, 1000];
+        c.data.n_samples = 63_000;
+        c.data.n_features = 21_504;
+        c.train.batch = 1000;
+        c.train.artifact = None;
+        c
+    }
+
+    /// Small config for tests/quickstart (matches the `tiny` artifact).
+    pub fn tiny() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "tiny".into(),
+            model: ModelConfig {
+                dims: vec![16, 32, 10],
+                activation: Activation::Sigmoid,
+                loss: Loss::Xent,
+            },
+            data: DataConfig {
+                kind: DataKind::TimitLike,
+                n_samples: 512,
+                n_features: 16,
+                n_classes: 10,
+                seed: 1,
+            },
+            ssp: SspConfig {
+                policy: Policy::Ssp { staleness: 2 },
+            },
+            cluster: ClusterConfig {
+                machines: 3,
+                ..ClusterConfig::default()
+            },
+            train: TrainConfig {
+                eta: 0.5,
+                batch: 8,
+                batches_per_clock: 4,
+                clocks: 40,
+                seed: 3,
+                engine: Engine::Native,
+                artifact: Some("tiny".into()),
+            },
+        }
+    }
+
+    pub fn preset(name: &str) -> Option<ExperimentConfig> {
+        match name {
+            "tiny" => Some(ExperimentConfig::tiny()),
+            "timit_scaled" | "timit" => Some(ExperimentConfig::timit_scaled()),
+            "timit_paper" => Some(ExperimentConfig::timit_paper()),
+            "imagenet_scaled" | "imagenet" => {
+                Some(ExperimentConfig::imagenet_scaled())
+            }
+            "imagenet_paper" => Some(ExperimentConfig::imagenet_paper()),
+            _ => None,
+        }
+    }
+
+    /// Apply a parsed TOML-subset document on top of this config.
+    pub fn apply_toml(&mut self, doc: &toml::TomlDoc) -> Result<(), String> {
+        use TomlValue::*;
+        for (section, key, value) in doc.entries() {
+            match (section.as_str(), key.as_str(), value) {
+                ("", "name", Str(s)) => self.name = s.clone(),
+                ("model", "dims", IntArray(v)) => {
+                    self.model.dims = v.iter().map(|&x| x as usize).collect()
+                }
+                ("model", "activation", Str(s)) => {
+                    self.model.activation = Activation::parse(s)
+                        .ok_or_else(|| format!("bad activation {s}"))?
+                }
+                ("model", "loss", Str(s)) => {
+                    self.model.loss =
+                        Loss::parse(s).ok_or_else(|| format!("bad loss {s}"))?
+                }
+                ("data", "kind", Str(s)) => {
+                    self.data.kind = match s.as_str() {
+                        "timit" => DataKind::TimitLike,
+                        "imagenet" => DataKind::ImagenetLike,
+                        _ => return Err(format!("bad data kind {s}")),
+                    }
+                }
+                ("data", "n_samples", Int(n)) => self.data.n_samples = *n as usize,
+                ("data", "n_features", Int(n)) => self.data.n_features = *n as usize,
+                ("data", "n_classes", Int(n)) => self.data.n_classes = *n as usize,
+                ("data", "seed", Int(n)) => self.data.seed = *n as u64,
+                ("ssp", "staleness", Int(n)) => {
+                    self.ssp.policy = Policy::Ssp {
+                        staleness: *n as u64,
+                    }
+                }
+                ("ssp", "policy", Str(s)) => {
+                    self.ssp.policy = match s.as_str() {
+                        "bsp" => Policy::Bsp,
+                        "async" => Policy::Async,
+                        "ssp" => self.ssp.policy, // staleness key sets s
+                        _ => return Err(format!("bad policy {s}")),
+                    }
+                }
+                ("cluster", "machines", Int(n)) => {
+                    self.cluster.machines = *n as usize
+                }
+                ("cluster", "cores_per_machine", Int(n)) => {
+                    self.cluster.cores_per_machine = *n as usize
+                }
+                ("cluster", "latency_us", v) => {
+                    self.cluster.latency_s = v.as_f64().ok_or("latency_us")? * 1e-6
+                }
+                ("cluster", "bandwidth_gbps", v) => {
+                    self.cluster.bandwidth_bps =
+                        v.as_f64().ok_or("bandwidth_gbps")? * 1.25e8
+                }
+                ("cluster", "drop_prob", v) => {
+                    self.cluster.drop_prob = v.as_f64().ok_or("drop_prob")?
+                }
+                ("cluster", "straggler_sigma", v) => {
+                    self.cluster.straggler_sigma =
+                        v.as_f64().ok_or("straggler_sigma")?
+                }
+                ("cluster", "straggler_prob", v) => {
+                    self.cluster.straggler_prob =
+                        v.as_f64().ok_or("straggler_prob")?
+                }
+                ("cluster", "straggler_factor", v) => {
+                    self.cluster.straggler_factor =
+                        v.as_f64().ok_or("straggler_factor")?
+                }
+                ("train", "eta", v) => {
+                    self.train.eta = v.as_f64().ok_or("eta")? as f32
+                }
+                ("train", "batch", Int(n)) => self.train.batch = *n as usize,
+                ("train", "batches_per_clock", Int(n)) => {
+                    self.train.batches_per_clock = *n as usize
+                }
+                ("train", "clocks", Int(n)) => self.train.clocks = *n as usize,
+                ("train", "seed", Int(n)) => self.train.seed = *n as u64,
+                ("train", "engine", Str(s)) => {
+                    self.train.engine = match s.as_str() {
+                        "native" => Engine::Native,
+                        "pjrt" => Engine::Pjrt,
+                        _ => return Err(format!("bad engine {s}")),
+                    }
+                }
+                ("train", "artifact", Str(s)) => {
+                    self.train.artifact = Some(s.clone())
+                }
+                (sec, k, _) => {
+                    return Err(format!("unknown config key [{sec}] {k}"))
+                }
+            }
+        }
+        self.validate()
+    }
+
+    pub fn load_file(path: &str, base: Option<&str>) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        let doc = parse_toml(&text)?;
+        let mut cfg = match base {
+            Some(b) => ExperimentConfig::preset(b)
+                .ok_or_else(|| format!("unknown preset {b}"))?,
+            None => ExperimentConfig::tiny(),
+        };
+        cfg.apply_toml(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.model.dims.len() < 2 {
+            return Err("model.dims needs >= 2 entries".into());
+        }
+        if self.model.dims[0] != self.data.n_features {
+            return Err(format!(
+                "model input {} != data features {}",
+                self.model.dims[0], self.data.n_features
+            ));
+        }
+        if *self.model.dims.last().unwrap() != self.data.n_classes
+            && self.model.loss == Loss::Xent
+        {
+            return Err(format!(
+                "model output {} != n_classes {}",
+                self.model.dims.last().unwrap(),
+                self.data.n_classes
+            ));
+        }
+        if self.train.batch == 0 || self.train.clocks == 0 {
+            return Err("batch/clocks must be positive".into());
+        }
+        if self.cluster.machines == 0 {
+            return Err("need >= 1 machine".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for name in [
+            "tiny",
+            "timit_scaled",
+            "timit_paper",
+            "imagenet_scaled",
+            "imagenet_paper",
+        ] {
+            let c = ExperimentConfig::preset(name).unwrap();
+            c.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(ExperimentConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn paper_scale_param_counts() {
+        // §6.1: TIMIT ~24M params, ImageNet ~132M params.
+        let t = ExperimentConfig::timit_paper().model.n_params();
+        assert!((23_000_000..27_000_000).contains(&t), "timit {t}");
+        let i = ExperimentConfig::imagenet_paper().model.n_params();
+        assert!((130_000_000..136_000_000).contains(&i), "imagenet {i}");
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let mut c = ExperimentConfig::tiny();
+        let doc = parse_toml(
+            r#"
+            name = "custom"
+            [model]
+            dims = [8, 4, 2]
+            activation = "tanh"
+            [data]
+            n_features = 8
+            n_classes = 2
+            n_samples = 64
+            [ssp]
+            staleness = 5
+            [train]
+            eta = 0.25
+            batch = 4
+            "#,
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.name, "custom");
+        assert_eq!(c.model.dims, vec![8, 4, 2]);
+        assert_eq!(c.model.activation, Activation::Tanh);
+        assert_eq!(c.ssp.policy, Policy::Ssp { staleness: 5 });
+        assert_eq!(c.train.eta, 0.25);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = ExperimentConfig::tiny();
+        let doc = parse_toml("[train]\nbogus = 1\n").unwrap();
+        assert!(c.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn validation_catches_mismatch() {
+        let mut c = ExperimentConfig::tiny();
+        c.model.dims = vec![5, 4, 10]; // input 5 != features 16
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! TOML-subset parser: `[section]` headers, `key = value` pairs, `#`
+//! comments. Values: integers, floats, booleans, quoted strings, and
+//! arrays of integers. That is the entire grammar the config system uses.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    IntArray(Vec<i64>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: ordered (section, key, value) triples; the root
+/// section is "".
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, TomlValue)>,
+}
+
+impl TomlDoc {
+    pub fn entries(&self) -> &[(String, String, TomlValue)] {
+        &self.entries
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries
+            .iter()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+pub fn parse_toml(text: &str) -> Result<TomlDoc, String> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: bad section header", ln + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+        let key = key.trim().to_string();
+        let value = parse_value(value.trim())
+            .map_err(|e| format!("line {}: {e}", ln + 1))?;
+        doc.entries.push((section.clone(), key, value));
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(
+                part.parse::<i64>()
+                    .map_err(|_| format!("bad array item {part:?}"))?,
+            );
+        }
+        return Ok(TomlValue::IntArray(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse_toml(
+            r#"
+            # experiment
+            name = "fig2"   # trailing comment
+            [ssp]
+            staleness = 10
+            [train]
+            eta = 0.05
+            paper_scale = false
+            [model]
+            dims = [360, 2048, 2001]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name"), Some(&TomlValue::Str("fig2".into())));
+        assert_eq!(doc.get("ssp", "staleness"), Some(&TomlValue::Int(10)));
+        assert_eq!(doc.get("train", "eta"), Some(&TomlValue::Float(0.05)));
+        assert_eq!(
+            doc.get("train", "paper_scale"),
+            Some(&TomlValue::Bool(false))
+        );
+        assert_eq!(
+            doc.get("model", "dims"),
+            Some(&TomlValue::IntArray(vec![360, 2048, 2001]))
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse_toml(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "tag"), Some(&TomlValue::Str("a#b".into())));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_toml("[broken").is_err());
+        assert!(parse_toml("novalue").is_err());
+        assert!(parse_toml("x = ").is_err());
+        assert!(parse_toml("x = [1, two]").is_err());
+        assert!(parse_toml(r#"x = "unterminated"#).is_err());
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let doc = parse_toml("a = -3\nb = 1e-4\nc = -0.5").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Int(-3)));
+        assert_eq!(doc.get("", "b").unwrap().as_f64(), Some(1e-4));
+        assert_eq!(doc.get("", "c").unwrap().as_f64(), Some(-0.5));
+    }
+}

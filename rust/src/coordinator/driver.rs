@@ -1,0 +1,671 @@
+//! The discrete-event SSP training driver.
+//!
+//! Executes the paper's Algorithm 1 / Eq. (7) faithfully: P workers, each
+//! with a stale cached view θ̃_{p,c}, computing real minibatch gradients
+//! against it, committing per-layer additive updates at clock boundaries,
+//! with the bounded-staleness barrier, guaranteed-visibility reads,
+//! read-my-writes, and best-effort in-window delivery (ε via the network
+//! model). Compute and communication take *virtual* time (see DESIGN.md
+//! "real statistics, virtual time"); the statistical path is exact.
+
+use std::collections::VecDeque;
+
+use crate::config::{DataKind, ExperimentConfig};
+use crate::data::{imagenet_like, timit_like, Dataset, MinibatchIter, SynthSpec};
+use crate::net::NetModel;
+use crate::nn::{GradSet, Labels, Mlp, OptimState, Optimizer, ParamSet};
+use crate::sim::{ComputeModel, EventQueue};
+use crate::ssp::{ReadStats, Server, UpdateMsg, WorkerCache};
+use crate::tensor::Matrix;
+use crate::util::Pcg64;
+
+use super::engine::{EngineKind, GradEngine, NativeEngine};
+use super::trace::{Trace, TraceEvent};
+use super::tracker::{EvalPoint, Tracker};
+use super::EtaSchedule;
+
+/// Extra knobs on top of `ExperimentConfig` (bench sweeps override these).
+pub struct DriverOptions {
+    /// Number of worker machines for this run (overrides cluster config).
+    pub machines: Option<usize>,
+    /// Evaluate the master objective every this many global min-clocks.
+    pub eval_every: u64,
+    /// Evaluation subset size (fixed random subset of the dataset).
+    pub eval_samples: usize,
+    /// Learning-rate schedule override (default: fixed at train.eta).
+    pub eta: Option<EtaSchedule>,
+    /// Virtual seconds one minibatch gradient takes on a paper machine;
+    /// `None` = calibrate from a real measured step on this host.
+    pub per_batch_s: Option<f64>,
+    /// Stop early once the master objective reaches this value.
+    pub target_objective: Option<f64>,
+    /// Record per-clock parameter snapshots distance (theory runs).
+    pub track_master_trajectory: bool,
+    /// Gradient engine factory output; `None` = native.
+    pub engine: Option<EngineKind>,
+    /// Worker-local optimizer (paper: plain SGD).
+    pub optimizer: Optimizer,
+    /// L2 weight decay coefficient.
+    pub weight_decay: f32,
+    /// Collect a structured protocol trace (RunResult::trace).
+    pub trace: bool,
+}
+
+impl Default for DriverOptions {
+    fn default() -> Self {
+        DriverOptions {
+            machines: None,
+            eval_every: 2,
+            eval_samples: 512,
+            eta: None,
+            per_batch_s: None,
+            target_objective: None,
+            track_master_trajectory: false,
+            engine: None,
+            optimizer: Optimizer::Sgd,
+            weight_decay: 0.0,
+            trace: false,
+        }
+    }
+}
+
+/// Outcome of one driver run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub name: String,
+    pub policy: String,
+    pub machines: usize,
+    /// (virtual seconds, min clock, master objective, param msd, per-layer msd)
+    pub evals: Vec<EvalPoint>,
+    pub final_objective: f64,
+    pub total_vtime: f64,
+    /// Virtual seconds workers spent blocked on the staleness barrier.
+    pub barrier_wait_s: f64,
+    /// Virtual seconds workers spent waiting for guaranteed arrivals.
+    pub read_wait_s: f64,
+    /// Virtual seconds of pure compute.
+    pub compute_s: f64,
+    pub messages: u64,
+    pub bytes: u64,
+    pub congestion_events: u64,
+    /// Aggregated ε statistics over all reads.
+    pub epsilon_rate: f64,
+    pub reads: u64,
+    /// Total minibatch steps executed across workers.
+    pub steps: u64,
+    /// Mean training loss per clock index (averaged over workers).
+    pub clock_loss: Vec<f64>,
+    /// Master parameter trajectory (only if track_master_trajectory).
+    pub master_trajectory: Vec<ParamSet>,
+    /// Final master parameters.
+    pub final_params: ParamSet,
+    /// Structured protocol trace (only if DriverOptions::trace).
+    pub trace: Option<Trace>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum WorkerStatus {
+    Ready,
+    Blocked,
+    Done,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Payload {
+    StartClock { worker: usize },
+    ComputeDone { worker: usize },
+    Arrival { idx: usize },
+}
+
+struct WorkerState {
+    cache: WorkerCache,
+    optim: OptimState,
+    batches: MinibatchIter,
+    /// Own committed-but-possibly-unapplied updates: (clock, per-layer).
+    own_pending: VecDeque<(u64, GradSet)>,
+    status: WorkerStatus,
+    blocked_on_barrier: bool,
+    clocks_done: u64,
+    /// Losses of the minibatches in the most recent clocks.
+    losses: Vec<f64>,
+}
+
+/// Build the dataset described by the config.
+pub fn build_dataset(cfg: &ExperimentConfig) -> Dataset {
+    let mut rng = Pcg64::new(cfg.data.seed);
+    let spec = SynthSpec {
+        n_samples: cfg.data.n_samples,
+        n_features: cfg.data.n_features,
+        n_classes: cfg.data.n_classes,
+        ..match cfg.data.kind {
+            DataKind::TimitLike => SynthSpec::timit_default(),
+            DataKind::ImagenetLike => SynthSpec::imagenet_default(),
+        }
+    };
+    match cfg.data.kind {
+        DataKind::TimitLike => timit_like(&spec).generate(&mut rng),
+        DataKind::ImagenetLike => imagenet_like(&spec).generate(&mut rng),
+    }
+}
+
+/// Measure one real gradient step to calibrate the compute model.
+fn measure_per_batch(
+    engine: &mut EngineKind,
+    params: &ParamSet,
+    x: &Matrix,
+    y: &Labels,
+    cores: usize,
+) -> f64 {
+    // warmup + 3 measurements, take the min (steady-state)
+    engine.loss_and_grads(params, x, y);
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = std::time::Instant::now();
+        engine.loss_and_grads(params, x, y);
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    ComputeModel::calibrated_per_batch(best, cores)
+}
+
+/// Run one full SSP training experiment under the given config.
+pub fn run_experiment(cfg: &ExperimentConfig, opts: DriverOptions) -> RunResult {
+    let dataset = build_dataset(cfg);
+    run_experiment_on(cfg, opts, &dataset)
+}
+
+/// Same, with a pre-built dataset (benches reuse one dataset across the
+/// machine sweep so curves are comparable).
+pub fn run_experiment_on(
+    cfg: &ExperimentConfig,
+    mut opts: DriverOptions,
+    dataset: &Dataset,
+) -> RunResult {
+    let machines = opts.machines.unwrap_or(cfg.cluster.machines);
+    assert!(machines >= 1);
+    let policy = cfg.ssp.policy;
+    let mut root_rng = Pcg64::new(cfg.train.seed);
+
+    let mlp = Mlp::new(
+        cfg.model.dims.clone(),
+        cfg.model.activation,
+        cfg.model.loss,
+    );
+    let mut engine = opts
+        .engine
+        .take()
+        .unwrap_or_else(|| EngineKind::Native(NativeEngine::new(mlp.clone())));
+
+    // init params — same seed across machine counts so trajectories match
+    let mut init_rng = Pcg64::new(cfg.train.seed ^ 0xD11);
+    let init = ParamSet::glorot(&cfg.model.dims, &mut init_rng);
+    let model_bytes = init.n_params() * 4;
+
+    // evaluation subset (fixed)
+    let mut eval_rng = Pcg64::new(cfg.train.seed ^ 0xE7A1);
+    let eval_idx: Vec<usize> = (0..opts.eval_samples.min(dataset.n_samples()))
+        .map(|_| eval_rng.below(dataset.n_samples()))
+        .collect();
+    let (eval_x, eval_y) = dataset.gather(&eval_idx);
+
+    // shards & workers
+    let shards = dataset.shard(machines, &mut root_rng.split(1));
+    let mut workers: Vec<WorkerState> = shards
+        .iter()
+        .map(|sh| WorkerState {
+            cache: WorkerCache::new(sh.worker(), init.clone()),
+            optim: OptimState::new(opts.optimizer, opts.weight_decay),
+            batches: sh.minibatches(cfg.train.batch, root_rng.split(100 + sh.worker() as u64)),
+            own_pending: VecDeque::new(),
+            status: WorkerStatus::Ready,
+            blocked_on_barrier: false,
+            clocks_done: 0,
+            losses: Vec::new(),
+        })
+        .collect();
+
+    let mut server = Server::new(init.clone(), machines, policy);
+    let mut net = NetModel::new(&cfg.cluster, machines, root_rng.split(2));
+
+    // calibrate compute model
+    let per_batch_s = opts.per_batch_s.unwrap_or_else(|| {
+        let idx = workers[0].batches.next_batch();
+        let (x, y) = dataset.gather(&idx);
+        measure_per_batch(&mut engine, &init, &x, &y, cfg.cluster.cores_per_machine)
+    });
+    let mut compute =
+        ComputeModel::new(&cfg.cluster, per_batch_s, machines, root_rng.split(3));
+
+    let eta = opts.eta.unwrap_or(EtaSchedule::Fixed(cfg.train.eta));
+
+    let mut queue: EventQueue<Payload> = EventQueue::new();
+    let mut arrivals: Vec<(UpdateMsg, f64)> = Vec::new(); // (msg, send time)
+    let mut trace = opts.trace.then(Trace::default);
+
+    let mut tracker = Tracker::new();
+    let mut barrier_wait = vec![0.0f64; machines];
+    let mut read_wait = vec![0.0f64; machines];
+    let mut block_start = vec![0.0f64; machines];
+    let mut compute_s = 0.0f64;
+    let mut steps: u64 = 0;
+    let mut eps_acc = ReadStats::default();
+    let mut clock_loss_sum: Vec<f64> = Vec::new();
+    let mut clock_loss_cnt: Vec<u64> = Vec::new();
+    let mut last_eval_clock: i64 = -1;
+    let mut master_trajectory = Vec::new();
+    let mut reached_target = false;
+
+    for p in 0..machines {
+        queue.push(0.0, Payload::StartClock { worker: p });
+    }
+
+    // ---- the event loop ----
+    while let Some(ev) = queue.pop() {
+        let now = ev.time;
+        match ev.payload {
+            Payload::StartClock { worker } => {
+                try_start_clock(
+                    worker,
+                    now,
+                    cfg,
+                    &mut workers[worker],
+                    &mut server,
+                    &mut engine,
+                    dataset,
+                    &eta,
+                    &mut compute,
+                    &mut net,
+                    model_bytes,
+                    &mut queue,
+                    &mut block_start,
+                    &mut eps_acc,
+                    &mut steps,
+                    &mut compute_s,
+                    &mut clock_loss_sum,
+                    &mut clock_loss_cnt,
+                    trace.as_mut(),
+                );
+            }
+            Payload::ComputeDone { worker } => {
+                let w = &mut workers[worker];
+                // commit: drain pending into per-layer messages
+                let msgs = w.cache.commit_clock();
+                let mut own = init.zeros_like();
+                for m in &msgs {
+                    own.layers[m.layer] = m.delta.clone();
+                }
+                w.own_pending.push_back((w.clocks_done, own));
+                w.clocks_done += 1;
+                server.commit(worker);
+                if let Some(tr) = trace.as_mut() {
+                    tr.push(
+                        now,
+                        TraceEvent::Commit {
+                            worker,
+                            clock: w.clocks_done - 1,
+                        },
+                    );
+                }
+                for m in msgs {
+                    let t = net.arrival_time(worker, now, m.bytes);
+                    arrivals.push((m, now));
+                    queue.push(
+                        t,
+                        Payload::Arrival {
+                            idx: arrivals.len() - 1,
+                        },
+                    );
+                }
+                if w.clocks_done >= cfg.train.clocks as u64 || reached_target {
+                    w.status = WorkerStatus::Done;
+                } else {
+                    w.status = WorkerStatus::Ready;
+                    queue.push(now, Payload::StartClock { worker });
+                }
+                // a commit can unblock barrier waiters
+                wake_blocked(&mut workers, &server, now, &mut queue, &mut barrier_wait, &mut read_wait, &mut block_start, trace.as_mut());
+
+                // evaluation at min-clock boundaries
+                let min_clock = (0..machines)
+                    .map(|p| workers[p].clocks_done)
+                    .min()
+                    .unwrap();
+                if min_clock as i64 > last_eval_clock
+                    && min_clock % opts.eval_every == 0
+                {
+                    last_eval_clock = min_clock as i64;
+                    let snap = server.table().snapshot();
+                    let obj = engine.objective(&snap, &eval_x, &eval_y);
+                    if let Some(tr) = trace.as_mut() {
+                        tr.push(
+                            now,
+                            TraceEvent::Eval {
+                                clock: min_clock,
+                                objective: obj,
+                            },
+                        );
+                    }
+                    tracker.record(now, min_clock, obj, &snap);
+                    if opts.track_master_trajectory {
+                        master_trajectory.push(snap);
+                    }
+                    if let Some(t) = opts.target_objective {
+                        if obj <= t {
+                            reached_target = true;
+                        }
+                    }
+                }
+            }
+            Payload::Arrival { idx } => {
+                let (msg, sent) = &arrivals[idx];
+                server.apply_arrival(msg);
+                if let Some(tr) = trace.as_mut() {
+                    tr.push(
+                        now,
+                        TraceEvent::Arrival {
+                            worker: msg.from,
+                            clock: msg.clock,
+                            layer: msg.layer,
+                            delay_s: now - sent,
+                        },
+                    );
+                }
+                wake_blocked(&mut workers, &server, now, &mut queue, &mut barrier_wait, &mut read_wait, &mut block_start, trace.as_mut());
+            }
+        }
+    }
+
+    let total_vtime = queue.now();
+    let final_params = server.table().snapshot();
+    let final_objective = engine.objective(&final_params, &eval_x, &eval_y);
+
+    let clock_loss: Vec<f64> = clock_loss_sum
+        .iter()
+        .zip(&clock_loss_cnt)
+        .map(|(s, c)| if *c > 0 { s / *c as f64 } else { f64::NAN })
+        .collect();
+
+    RunResult {
+        name: cfg.name.clone(),
+        policy: policy.name(),
+        machines,
+        evals: tracker.into_points(),
+        final_objective,
+        total_vtime,
+        barrier_wait_s: barrier_wait.iter().sum(),
+        read_wait_s: read_wait.iter().sum(),
+        compute_s,
+        messages: net.messages(),
+        bytes: net.bytes(),
+        congestion_events: net.congestion_events(),
+        epsilon_rate: eps_acc.epsilon_rate(),
+        reads: server.reads(),
+        steps,
+        clock_loss,
+        master_trajectory,
+        final_params,
+        trace,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn try_start_clock(
+    worker: usize,
+    now: f64,
+    cfg: &ExperimentConfig,
+    w: &mut WorkerState,
+    server: &mut Server,
+    engine: &mut EngineKind,
+    dataset: &Dataset,
+    eta: &EtaSchedule,
+    compute: &mut ComputeModel,
+    net: &mut NetModel,
+    model_bytes: usize,
+    queue: &mut EventQueue<Payload>,
+    block_start: &mut [f64],
+    eps_acc: &mut ReadStats,
+    steps: &mut u64,
+    compute_s: &mut f64,
+    clock_loss_sum: &mut Vec<f64>,
+    clock_loss_cnt: &mut Vec<u64>,
+    mut trace: Option<&mut Trace>,
+) {
+    if w.status == WorkerStatus::Done {
+        return;
+    }
+    if server.must_wait(worker) || !server.read_ready(worker) {
+        if w.status != WorkerStatus::Blocked {
+            w.status = WorkerStatus::Blocked;
+            w.blocked_on_barrier = server.must_wait(worker);
+            block_start[worker] = now;
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(
+                    now,
+                    TraceEvent::BlockStart {
+                        worker,
+                        on_barrier: w.blocked_on_barrier,
+                    },
+                );
+            }
+        }
+        return;
+    }
+    w.status = WorkerStatus::Ready;
+    if let Some(tr) = trace.as_deref_mut() {
+        let observed = server.clocks().max() - server.clocks().clock(worker);
+        tr.push(
+            now,
+            TraceEvent::ClockStart {
+                worker,
+                clock: server.clocks().clock(worker),
+                observed_staleness: observed,
+            },
+        );
+    }
+
+    // ---- fetch (read with staleness semantics) ----
+    let (snapshot, own_applied, stats) = server.fetch(worker);
+    eps_acc.guaranteed += stats.guaranteed;
+    eps_acc.window_included += stats.window_included;
+    eps_acc.window_missed += stats.window_missed;
+
+    // reconstruct own not-yet-applied updates, layerwise
+    let mut own_missing = snapshot.zeros_like();
+    for (clk, upd) in &w.own_pending {
+        for (l, layer) in upd.layers.iter().enumerate() {
+            if *clk >= own_applied[l] {
+                own_missing.axpy_layer(l, 1.0, layer);
+            }
+        }
+    }
+    // prune fully-applied entries
+    let min_applied = own_applied.iter().copied().min().unwrap_or(0);
+    while let Some((clk, _)) = w.own_pending.front() {
+        if *clk < min_applied {
+            w.own_pending.pop_front();
+        } else {
+            break;
+        }
+    }
+    w.cache.install_snapshot(snapshot, &own_missing);
+
+    // ---- compute the clock's minibatches (real gradients) ----
+    let clock = w.cache.clock();
+    let mut loss_sum = 0.0;
+    for _ in 0..cfg.train.batches_per_clock {
+        let idx = w.batches.next_batch();
+        let (x, y) = dataset.gather(&idx);
+        let (loss, grads) = engine.loss_and_grads(w.cache.view(), &x, &y);
+        let step_eta = eta.at(*steps);
+        let dir = w.optim.direction(w.cache.view(), &grads).clone();
+        w.cache.add_scaled_local_update(-step_eta, &dir);
+        loss_sum += loss;
+        *steps += 1;
+    }
+    let mean_loss = loss_sum / cfg.train.batches_per_clock as f64;
+    w.losses.push(mean_loss);
+    let ci = clock as usize;
+    if clock_loss_sum.len() <= ci {
+        clock_loss_sum.resize(ci + 1, 0.0);
+        clock_loss_cnt.resize(ci + 1, 0);
+    }
+    clock_loss_sum[ci] += mean_loss;
+    clock_loss_cnt[ci] += 1;
+
+    // ---- virtual durations ----
+    let fetch_cost = net.fetch_duration(model_bytes);
+    let dur = compute.clock_duration(worker, cfg.train.batches_per_clock);
+    *compute_s += dur;
+    queue.push(now + fetch_cost + dur, Payload::ComputeDone { worker });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn wake_blocked(
+    workers: &mut [WorkerState],
+    server: &Server,
+    now: f64,
+    queue: &mut EventQueue<Payload>,
+    barrier_wait: &mut [f64],
+    read_wait: &mut [f64],
+    block_start: &mut [f64],
+    mut trace: Option<&mut Trace>,
+) {
+    for p in 0..workers.len() {
+        if workers[p].status == WorkerStatus::Blocked {
+            let barrier = server.must_wait(p);
+            let read = !server.read_ready(p);
+            if !barrier && !read {
+                let waited = now - block_start[p];
+                if workers[p].blocked_on_barrier {
+                    barrier_wait[p] += waited;
+                } else {
+                    read_wait[p] += waited;
+                }
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.push(now, TraceEvent::BlockEnd { worker: p, waited_s: waited });
+                }
+                workers[p].status = WorkerStatus::Ready;
+                queue.push(now, Payload::StartClock { worker: p });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssp::Policy;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::tiny();
+        c.train.clocks = 12;
+        c.train.batches_per_clock = 2;
+        c
+    }
+
+    fn fast_opts() -> DriverOptions {
+        DriverOptions {
+            per_batch_s: Some(0.01),
+            eval_samples: 128,
+            ..DriverOptions::default()
+        }
+    }
+
+    #[test]
+    fn run_completes_and_descends() {
+        let cfg = tiny_cfg();
+        let r = run_experiment(&cfg, fast_opts());
+        assert_eq!(r.machines, 3);
+        assert!(r.total_vtime > 0.0);
+        assert!(!r.evals.is_empty());
+        let first = r.evals.first().unwrap().objective;
+        assert!(
+            r.final_objective < first,
+            "objective must descend: {first} -> {}",
+            r.final_objective
+        );
+        assert_eq!(r.steps, 12 * 2 * 3);
+    }
+
+    #[test]
+    fn more_machines_more_steps_per_vtime() {
+        let cfg = tiny_cfg();
+        let r1 = run_experiment(
+            &cfg,
+            DriverOptions {
+                machines: Some(1),
+                ..fast_opts()
+            },
+        );
+        let r3 = run_experiment(
+            &cfg,
+            DriverOptions {
+                machines: Some(3),
+                ..fast_opts()
+            },
+        );
+        let rate1 = r1.steps as f64 / r1.total_vtime;
+        let rate3 = r3.steps as f64 / r3.total_vtime;
+        assert!(
+            rate3 > 1.8 * rate1,
+            "3 machines should process >1.8x steps/s: {rate1} vs {rate3}"
+        );
+    }
+
+    #[test]
+    fn bsp_waits_more_than_ssp() {
+        let mut cfg = tiny_cfg();
+        cfg.cluster.straggler_prob = 0.3;
+        cfg.cluster.straggler_factor = 5.0;
+        cfg.ssp.policy = Policy::Bsp;
+        let bsp = run_experiment(&cfg, fast_opts());
+        cfg.ssp.policy = Policy::Ssp { staleness: 8 };
+        let ssp = run_experiment(&cfg, fast_opts());
+        assert!(
+            bsp.barrier_wait_s > ssp.barrier_wait_s,
+            "bsp {} vs ssp {}",
+            bsp.barrier_wait_s,
+            ssp.barrier_wait_s
+        );
+    }
+
+    #[test]
+    fn single_machine_matches_sequential_sgd() {
+        // with 1 machine, SSP degenerates to plain SGD: the master after
+        // each clock equals a local SGD trajectory on the same batches.
+        let mut cfg = tiny_cfg();
+        cfg.ssp.policy = Policy::Ssp { staleness: 0 };
+        let r = run_experiment(
+            &cfg,
+            DriverOptions {
+                machines: Some(1),
+                ..fast_opts()
+            },
+        );
+        assert!(r.final_objective.is_finite());
+        assert_eq!(r.epsilon_rate, 1.0); // no other workers, no window
+    }
+
+    #[test]
+    fn deterministic_given_config() {
+        let cfg = tiny_cfg();
+        let a = run_experiment(&cfg, fast_opts());
+        let b = run_experiment(&cfg, fast_opts());
+        assert_eq!(a.final_objective, b.final_objective);
+        assert_eq!(a.total_vtime, b.total_vtime);
+        assert_eq!(a.steps, b.steps);
+    }
+
+    #[test]
+    fn target_objective_stops_early() {
+        let cfg = tiny_cfg();
+        let full = run_experiment(&cfg, fast_opts());
+        let early = run_experiment(
+            &cfg,
+            DriverOptions {
+                target_objective: Some(full.evals[0].objective),
+                ..fast_opts()
+            },
+        );
+        assert!(early.total_vtime <= full.total_vtime);
+    }
+}

@@ -1,0 +1,134 @@
+//! Gradient engines: where (loss, grads) come from.
+//!
+//! `NativeEngine` runs the built-in Rust backprop (`nn`). The PJRT engine
+//! (`runtime::PjrtEngine`) runs the AOT-compiled JAX artifact; both are
+//! interchangeable behind `GradEngine`, and the integration tests assert
+//! they agree numerically.
+
+use crate::nn::{GradSet, Labels, Mlp, ParamSet, Workspace};
+use crate::tensor::Matrix;
+
+/// Anything that can turn (params, minibatch) into (loss, gradients).
+/// `Send` so engines can move into worker threads (`run_threaded`).
+pub trait GradEngine: Send {
+    /// Batch-mean loss and gradients at `params`.
+    fn loss_and_grads(
+        &mut self,
+        params: &ParamSet,
+        x: &Matrix,
+        y: &Labels,
+    ) -> (f64, GradSet);
+
+    /// Objective only (used by evaluation instrumentation).
+    fn objective(&mut self, params: &ParamSet, x: &Matrix, y: &Labels) -> f64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Which engine a run uses (mirrors `config::Engine` but carries state).
+pub enum EngineKind {
+    Native(NativeEngine),
+    Boxed(Box<dyn GradEngine>),
+}
+
+impl GradEngine for EngineKind {
+    fn loss_and_grads(
+        &mut self,
+        params: &ParamSet,
+        x: &Matrix,
+        y: &Labels,
+    ) -> (f64, GradSet) {
+        match self {
+            EngineKind::Native(e) => e.loss_and_grads(params, x, y),
+            EngineKind::Boxed(e) => e.loss_and_grads(params, x, y),
+        }
+    }
+
+    fn objective(&mut self, params: &ParamSet, x: &Matrix, y: &Labels) -> f64 {
+        match self {
+            EngineKind::Native(e) => e.objective(params, x, y),
+            EngineKind::Boxed(e) => e.objective(params, x, y),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native(e) => e.name(),
+            EngineKind::Boxed(e) => e.name(),
+        }
+    }
+}
+
+/// The native Rust backprop engine with a reusable workspace + gradient
+/// buffer (allocation-free per step after warmup).
+pub struct NativeEngine {
+    mlp: Mlp,
+    ws: Workspace,
+    grads: Option<GradSet>,
+}
+
+impl NativeEngine {
+    pub fn new(mlp: Mlp) -> NativeEngine {
+        NativeEngine {
+            mlp,
+            ws: Workspace::default(),
+            grads: None,
+        }
+    }
+
+    pub fn mlp(&self) -> &Mlp {
+        &self.mlp
+    }
+}
+
+impl GradEngine for NativeEngine {
+    fn loss_and_grads(
+        &mut self,
+        params: &ParamSet,
+        x: &Matrix,
+        y: &Labels,
+    ) -> (f64, GradSet) {
+        let grads = self
+            .grads
+            .get_or_insert_with(|| params.zeros_like());
+        let loss = self
+            .mlp
+            .loss_and_grads_ws(params, x, y, &mut self.ws, grads);
+        (loss, grads.clone())
+    }
+
+    fn objective(&mut self, params: &ParamSet, x: &Matrix, y: &Labels) -> f64 {
+        let out = self.mlp.forward_ws(params, x, &mut self.ws);
+        crate::nn::loss_value(self.mlp.loss, &out, y)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Activation, Loss};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn native_engine_matches_direct_mlp() {
+        let mlp = Mlp::new(vec![6, 5, 3], Activation::Sigmoid, Loss::Xent);
+        let mut rng = Pcg64::new(4);
+        let p = ParamSet::glorot(&mlp.dims, &mut rng);
+        let x = Matrix::randn(4, 6, 1.0, &mut rng);
+        let y = Labels::Class(vec![0, 1, 2, 0]);
+        let (l_direct, g_direct) = mlp.loss_and_grads(&p, &x, &y);
+        let mut eng = NativeEngine::new(mlp.clone());
+        let (l_eng, g_eng) = eng.loss_and_grads(&p, &x, &y);
+        assert_eq!(l_direct, l_eng);
+        for (a, b) in g_direct.layers.iter().zip(&g_eng.layers) {
+            assert_eq!(a.w, b.w);
+        }
+        let obj = eng.objective(&p, &x, &y);
+        assert!((obj - l_direct).abs() < 1e-12);
+        assert_eq!(eng.name(), "native");
+    }
+}

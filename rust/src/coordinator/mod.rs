@@ -1,0 +1,61 @@
+//! Layer-3 coordination: the SSP training driver.
+//!
+//! * `engine`   — `GradEngine` abstraction (native backprop or a PJRT
+//!   artifact) so the driver is agnostic to where gradients come from.
+//! * `driver`   — the discrete-event SSP training run: real gradients &
+//!   parameter versions, virtual time (see DESIGN.md).
+//! * `threaded` — a real-thread SSP runner (shared-memory parameter
+//!   server) used by the end-to-end example.
+//! * `tracker`  — objective / parameter-convergence instrumentation
+//!   (Figures 2, 3, 6).
+
+mod driver;
+mod engine;
+mod threaded;
+mod trace;
+mod tracker;
+
+pub use driver::{
+    build_dataset, run_experiment, run_experiment_on, DriverOptions, RunResult,
+};
+pub use engine::{EngineKind, GradEngine, NativeEngine};
+pub use trace::{Trace, TraceEvent, TraceSummary, WorkerSummary};
+pub use threaded::{native_factory, run_threaded, ThreadedOptions, ThreadedResult};
+pub use tracker::{EvalPoint, Tracker};
+
+/// Learning-rate schedule. The paper's experiments use a fixed rate
+/// (§6.1); the theory (Assumption 1) requires η_t = O(t^−d), provided for
+/// the theorem-validation experiments.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EtaSchedule {
+    Fixed(f32),
+    /// η_t = eta0 · (1 + t)^−d
+    Poly { eta0: f32, d: f32 },
+}
+
+impl EtaSchedule {
+    pub fn at(&self, t: u64) -> f32 {
+        match self {
+            EtaSchedule::Fixed(e) => *e,
+            EtaSchedule::Poly { eta0, d } => {
+                eta0 * ((1.0 + t as f32).powf(-d))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eta_schedules() {
+        let f = EtaSchedule::Fixed(0.05);
+        assert_eq!(f.at(0), 0.05);
+        assert_eq!(f.at(1000), 0.05);
+        let p = EtaSchedule::Poly { eta0: 1.0, d: 0.5 };
+        assert_eq!(p.at(0), 1.0);
+        assert!((p.at(3) - 0.5).abs() < 1e-6);
+        assert!(p.at(100) < p.at(10));
+    }
+}

@@ -1,0 +1,235 @@
+//! Real-thread SSP runner: OS threads + a shared-memory parameter server
+//! (Mutex + Condvar), the in-process analogue of Petuum's single-node
+//! mode. Used by the end-to-end example to prove the coordinator works
+//! under true concurrency (the discrete-event driver is the instrument
+//! for the paper's figures; this is the deployment-shaped path).
+//!
+//! In shared memory every committed update is immediately visible
+//! (ε ≡ 1); the staleness barrier still governs how far apart workers may
+//! drift, so SSP vs BSP behaviour is real.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use crate::config::ExperimentConfig;
+use crate::data::Dataset;
+use crate::nn::ParamSet;
+use crate::ssp::Server;
+use crate::util::Pcg64;
+
+use super::engine::{EngineKind, GradEngine};
+use super::EtaSchedule;
+
+pub struct ThreadedOptions {
+    pub machines: usize,
+    /// Build one engine per worker thread (engines are not Sync).
+    pub engine_factory: Box<dyn Fn(usize) -> EngineKind + Send + Sync>,
+    pub eta: EtaSchedule,
+    /// Log the master objective every this many clocks (on worker 0).
+    pub eval_every: u64,
+    pub eval_samples: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ThreadedResult {
+    pub wall_seconds: f64,
+    pub steps: u64,
+    /// (clock, wall seconds, objective) evaluation curve.
+    pub evals: Vec<(u64, f64, f64)>,
+    pub final_objective: f64,
+    pub final_params: ParamSet,
+}
+
+struct Shared {
+    server: Mutex<Server>,
+    cv: Condvar,
+}
+
+/// Run SSP training on real threads. Returns the measured wall-clock
+/// curve; the statistical path is identical to the simulated driver's
+/// (same update rule, same staleness semantics, ε ≡ 1).
+pub fn run_threaded(
+    cfg: &ExperimentConfig,
+    dataset: &Dataset,
+    opts: ThreadedOptions,
+) -> ThreadedResult {
+    let machines = opts.machines;
+    let policy = cfg.ssp.policy;
+    let mut root_rng = Pcg64::new(cfg.train.seed);
+    let mut init_rng = Pcg64::new(cfg.train.seed ^ 0xD11);
+    let init = ParamSet::glorot(&cfg.model.dims, &mut init_rng);
+
+    // fixed eval subset
+    let mut eval_rng = Pcg64::new(cfg.train.seed ^ 0xE7A1);
+    let eval_idx: Vec<usize> = (0..opts.eval_samples.min(dataset.n_samples()))
+        .map(|_| eval_rng.below(dataset.n_samples()))
+        .collect();
+    let (eval_x, eval_y) = dataset.gather(&eval_idx);
+
+    let shards = dataset.shard(machines, &mut root_rng.split(1));
+    let shared = Arc::new(Shared {
+        server: Mutex::new(Server::new(init.clone(), machines, policy)),
+        cv: Condvar::new(),
+    });
+
+    let start = std::time::Instant::now();
+    let evals = Arc::new(Mutex::new(Vec::new()));
+
+    thread::scope(|scope| {
+        for shard in shards {
+            let p = shard.worker();
+            let shared = Arc::clone(&shared);
+            let mut engine = (opts.engine_factory)(p);
+            let mut batches =
+                shard.minibatches(cfg.train.batch, root_rng.split(100 + p as u64));
+            let init = init.clone();
+            let eta = opts.eta;
+            let evals = Arc::clone(&evals);
+            let (eval_x, eval_y) = (eval_x.clone(), eval_y.clone());
+            let dataset = &*dataset;
+            let cfg = &*cfg;
+            scope.spawn(move || {
+                let mut cache = crate::ssp::WorkerCache::new(p, init);
+                let mut steps: u64 = 0;
+                for clock in 0..cfg.train.clocks as u64 {
+                    // barrier + fetch under the lock
+                    {
+                        let mut srv = shared.server.lock().unwrap();
+                        while srv.must_wait(p) {
+                            srv = shared.cv.wait(srv).unwrap();
+                        }
+                        debug_assert!(srv.read_ready(p));
+                        let (snap, _own, _stats) = srv.fetch(p);
+                        // shared memory: snapshot already contains all our
+                        // own commits (applied at commit time) → nothing
+                        // missing.
+                        let missing = snap.zeros_like();
+                        cache.install_snapshot(snap, &missing);
+                    }
+                    // compute outside the lock
+                    for _ in 0..cfg.train.batches_per_clock {
+                        let idx = batches.next_batch();
+                        let (x, y) = dataset.gather(&idx);
+                        let (_, grads) =
+                            engine.loss_and_grads(cache.view(), &x, &y);
+                        cache.add_scaled_local_update(-eta.at(steps), &grads);
+                        steps += 1;
+                    }
+                    crate::debug!(
+                        "worker {p}: clock {clock} computed ({} steps)",
+                        steps
+                    );
+                    // commit under the lock: apply updates instantly
+                    {
+                        let mut srv = shared.server.lock().unwrap();
+                        let msgs = cache.commit_clock();
+                        srv.commit(p);
+                        for m in msgs {
+                            srv.apply_arrival(&m);
+                        }
+                        shared.cv.notify_all();
+                        if p == 0 && (clock + 1) % opts.eval_every == 0 {
+                            let snap = srv.table().snapshot();
+                            drop(srv);
+                            let obj = engine.objective(&snap, &eval_x, &eval_y);
+                            evals.lock().unwrap().push((
+                                clock + 1,
+                                start.elapsed().as_secs_f64(),
+                                obj,
+                            ));
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let wall_seconds = start.elapsed().as_secs_f64();
+    let srv = shared.server.lock().unwrap();
+    let final_params = srv.table().snapshot();
+    drop(srv);
+    let mut engine = (opts.engine_factory)(0);
+    let final_objective = engine.objective(&final_params, &eval_x, &eval_y);
+    let steps =
+        (machines * cfg.train.clocks * cfg.train.batches_per_clock) as u64;
+
+    ThreadedResult {
+        wall_seconds,
+        steps,
+        evals: Arc::try_unwrap(evals).unwrap().into_inner().unwrap(),
+        final_objective,
+        final_params,
+    }
+}
+
+/// Convenience: threaded run with native engines.
+pub fn native_factory(
+    cfg: &ExperimentConfig,
+) -> Box<dyn Fn(usize) -> EngineKind + Send + Sync> {
+    let mlp = crate::nn::Mlp::new(
+        cfg.model.dims.clone(),
+        cfg.model.activation,
+        cfg.model.loss,
+    );
+    Box::new(move |_p| {
+        EngineKind::Native(super::engine::NativeEngine::new(mlp.clone()))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::driver::build_dataset;
+    use crate::ssp::Policy;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::tiny();
+        c.train.clocks = 10;
+        c.train.batches_per_clock = 2;
+        c
+    }
+
+    #[test]
+    fn threaded_run_descends() {
+        let cfg = tiny_cfg();
+        let ds = build_dataset(&cfg);
+        let r = run_threaded(
+            &cfg,
+            &ds,
+            ThreadedOptions {
+                machines: 3,
+                engine_factory: native_factory(&cfg),
+                eta: EtaSchedule::Fixed(cfg.train.eta),
+                eval_every: 2,
+                eval_samples: 128,
+            },
+        );
+        assert_eq!(r.steps, 3 * 10 * 2);
+        assert!(!r.evals.is_empty());
+        let first = r.evals.first().unwrap().2;
+        assert!(
+            r.final_objective < first,
+            "{first} -> {}",
+            r.final_objective
+        );
+    }
+
+    #[test]
+    fn threaded_bsp_also_works() {
+        let mut cfg = tiny_cfg();
+        cfg.ssp.policy = Policy::Bsp;
+        let ds = build_dataset(&cfg);
+        let r = run_threaded(
+            &cfg,
+            &ds,
+            ThreadedOptions {
+                machines: 2,
+                engine_factory: native_factory(&cfg),
+                eta: EtaSchedule::Fixed(cfg.train.eta),
+                eval_every: 5,
+                eval_samples: 64,
+            },
+        );
+        assert!(r.final_objective.is_finite());
+    }
+}

@@ -1,0 +1,286 @@
+//! Structured event tracing of a distributed run — the debugging
+//! instrument for SSP behaviour (who blocked when, how stale each read
+//! was, where the virtual time went).
+
+use std::fmt::Write as _;
+
+/// One traced protocol event, stamped with virtual time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    ClockStart {
+        worker: usize,
+        clock: u64,
+        /// How many clocks behind the global max this worker's view was
+        /// at the read (observed staleness, ≤ s by construction).
+        observed_staleness: u64,
+    },
+    Commit {
+        worker: usize,
+        clock: u64,
+    },
+    Arrival {
+        worker: usize,
+        clock: u64,
+        layer: usize,
+        delay_s: f64,
+    },
+    BlockStart {
+        worker: usize,
+        on_barrier: bool,
+    },
+    BlockEnd {
+        worker: usize,
+        waited_s: f64,
+    },
+    Eval {
+        clock: u64,
+        objective: f64,
+    },
+}
+
+/// Trace collector: ring-bounded so long runs cannot blow memory.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    events: Vec<(f64, TraceEvent)>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace::with_capacity(100_000)
+    }
+}
+
+impl Trace {
+    pub fn with_capacity(cap: usize) -> Trace {
+        Trace {
+            events: Vec::new(),
+            cap,
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, vtime: f64, ev: TraceEvent) {
+        if self.events.len() >= self.cap {
+            self.dropped += 1;
+            return;
+        }
+        self.events.push((vtime, ev));
+    }
+
+    pub fn events(&self) -> &[(f64, TraceEvent)] {
+        &self.events
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Aggregate summary per worker: clocks, blocked spells, mean
+    /// observed staleness, mean arrival delay.
+    pub fn summary(&self, workers: usize) -> TraceSummary {
+        let mut s = TraceSummary {
+            per_worker: vec![WorkerSummary::default(); workers],
+            events: self.events.len() as u64,
+            dropped: self.dropped,
+        };
+        for (_, ev) in &self.events {
+            match ev {
+                TraceEvent::ClockStart {
+                    worker,
+                    observed_staleness,
+                    ..
+                } => {
+                    let w = &mut s.per_worker[*worker];
+                    w.clocks += 1;
+                    w.staleness_sum += *observed_staleness as f64;
+                }
+                TraceEvent::BlockEnd { worker, waited_s } => {
+                    let w = &mut s.per_worker[*worker];
+                    w.blocks += 1;
+                    w.blocked_s += waited_s;
+                }
+                TraceEvent::Arrival {
+                    worker, delay_s, ..
+                } => {
+                    let w = &mut s.per_worker[*worker];
+                    w.arrivals += 1;
+                    w.delay_sum += delay_s;
+                }
+                _ => {}
+            }
+        }
+        s
+    }
+
+    /// CSV export (`vtime,event,worker,clock,layer,value`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("vtime,event,worker,clock,layer,value\n");
+        for (t, ev) in &self.events {
+            match ev {
+                TraceEvent::ClockStart {
+                    worker,
+                    clock,
+                    observed_staleness,
+                } => {
+                    let _ = writeln!(
+                        out,
+                        "{t:.6},clock_start,{worker},{clock},,{observed_staleness}"
+                    );
+                }
+                TraceEvent::Commit { worker, clock } => {
+                    let _ = writeln!(out, "{t:.6},commit,{worker},{clock},,");
+                }
+                TraceEvent::Arrival {
+                    worker,
+                    clock,
+                    layer,
+                    delay_s,
+                } => {
+                    let _ = writeln!(
+                        out,
+                        "{t:.6},arrival,{worker},{clock},{layer},{delay_s:.6}"
+                    );
+                }
+                TraceEvent::BlockStart { worker, on_barrier } => {
+                    let _ = writeln!(
+                        out,
+                        "{t:.6},block_start,{worker},,,{}",
+                        if *on_barrier { "barrier" } else { "read" }
+                    );
+                }
+                TraceEvent::BlockEnd { worker, waited_s } => {
+                    let _ =
+                        writeln!(out, "{t:.6},block_end,{worker},,,{waited_s:.6}");
+                }
+                TraceEvent::Eval { clock, objective } => {
+                    let _ = writeln!(out, "{t:.6},eval,,{clock},,{objective:.6}");
+                }
+            }
+        }
+        out
+    }
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerSummary {
+    pub clocks: u64,
+    pub blocks: u64,
+    pub blocked_s: f64,
+    pub arrivals: u64,
+    pub delay_sum: f64,
+    pub staleness_sum: f64,
+}
+
+impl WorkerSummary {
+    pub fn mean_staleness(&self) -> f64 {
+        if self.clocks == 0 {
+            0.0
+        } else {
+            self.staleness_sum / self.clocks as f64
+        }
+    }
+
+    pub fn mean_delay(&self) -> f64 {
+        if self.arrivals == 0 {
+            0.0
+        } else {
+            self.delay_sum / self.arrivals as f64
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceSummary {
+    pub per_worker: Vec<WorkerSummary>,
+    pub events: u64,
+    pub dropped: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let mut t = Trace::default();
+        t.push(
+            0.0,
+            TraceEvent::ClockStart {
+                worker: 0,
+                clock: 0,
+                observed_staleness: 0,
+            },
+        );
+        t.push(1.0, TraceEvent::Commit { worker: 0, clock: 0 });
+        t.push(
+            1.2,
+            TraceEvent::Arrival {
+                worker: 0,
+                clock: 0,
+                layer: 1,
+                delay_s: 0.2,
+            },
+        );
+        t.push(
+            1.5,
+            TraceEvent::BlockStart {
+                worker: 1,
+                on_barrier: true,
+            },
+        );
+        t.push(
+            2.5,
+            TraceEvent::BlockEnd {
+                worker: 1,
+                waited_s: 1.0,
+            },
+        );
+        t.push(
+            3.0,
+            TraceEvent::ClockStart {
+                worker: 0,
+                clock: 1,
+                observed_staleness: 2,
+            },
+        );
+        t.push(
+            3.0,
+            TraceEvent::Eval {
+                clock: 1,
+                objective: 2.5,
+            },
+        );
+        t
+    }
+
+    #[test]
+    fn summary_aggregates_per_worker() {
+        let s = sample().summary(2);
+        assert_eq!(s.per_worker[0].clocks, 2);
+        assert_eq!(s.per_worker[0].arrivals, 1);
+        assert!((s.per_worker[0].mean_delay() - 0.2).abs() < 1e-12);
+        assert!((s.per_worker[0].mean_staleness() - 1.0).abs() < 1e-12);
+        assert_eq!(s.per_worker[1].blocks, 1);
+        assert!((s.per_worker[1].blocked_s - 1.0).abs() < 1e-12);
+        assert_eq!(s.events, 7);
+    }
+
+    #[test]
+    fn csv_has_one_row_per_event() {
+        let csv = sample().to_csv();
+        assert_eq!(csv.lines().count(), 8); // header + 7 events
+        assert!(csv.contains("block_start,1,,,barrier"));
+        assert!(csv.contains("eval,,1,,2.5"));
+    }
+
+    #[test]
+    fn capacity_bound_drops_not_grows() {
+        let mut t = Trace::with_capacity(3);
+        for i in 0..10 {
+            t.push(i as f64, TraceEvent::Commit { worker: 0, clock: i });
+        }
+        assert_eq!(t.events().len(), 3);
+        assert_eq!(t.dropped(), 7);
+    }
+}

@@ -1,0 +1,110 @@
+//! Run instrumentation: objective curves (Figs 2–3) and parameter
+//! convergence (Fig 6 — mean squared difference of consecutive parameter
+//! snapshots, total and per layer for the Thm 2 layerwise view).
+
+use crate::nn::ParamSet;
+
+/// One evaluation point on a run's trajectory.
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    /// Virtual seconds since run start.
+    pub vtime: f64,
+    /// Global min clock at evaluation.
+    pub clock: u64,
+    /// Master objective on the fixed evaluation subset.
+    pub objective: f64,
+    /// Mean squared diff of master params vs the previous eval point
+    /// (Fig 6's quantity); 0 at the first point.
+    pub param_msd: f64,
+    /// Per-layer mean squared diff (layerwise convergence, Thm 2).
+    pub layer_msd: Vec<f64>,
+}
+
+#[derive(Debug, Default)]
+pub struct Tracker {
+    points: Vec<EvalPoint>,
+    prev: Option<ParamSet>,
+}
+
+impl Tracker {
+    pub fn new() -> Tracker {
+        Tracker::default()
+    }
+
+    pub fn record(&mut self, vtime: f64, clock: u64, objective: f64, params: &ParamSet) {
+        let (param_msd, layer_msd) = match &self.prev {
+            None => (0.0, vec![0.0; params.n_layers()]),
+            Some(prev) => {
+                let per = prev.layer_dist_sq(params);
+                let sizes: Vec<usize> = params
+                    .layers
+                    .iter()
+                    .map(|l| l.w.len() + l.b.len())
+                    .collect();
+                let msd = per.iter().sum::<f64>() / params.n_params() as f64;
+                let layer_msd = per
+                    .iter()
+                    .zip(&sizes)
+                    .map(|(d, &n)| d / n as f64)
+                    .collect();
+                (msd, layer_msd)
+            }
+        };
+        self.prev = Some(params.clone());
+        self.points.push(EvalPoint {
+            vtime,
+            clock,
+            objective,
+            param_msd,
+            layer_msd,
+        });
+    }
+
+    pub fn points(&self) -> &[EvalPoint] {
+        &self.points
+    }
+
+    pub fn into_points(self) -> Vec<EvalPoint> {
+        self.points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn msd_tracks_consecutive_diffs() {
+        let dims = [3, 4, 2];
+        let mut rng = Pcg64::new(0);
+        let a = ParamSet::glorot(&dims, &mut rng);
+        let mut b = a.clone();
+        b.layers[0].w.fill(0.0); // change layer 0 only
+
+        let mut t = Tracker::new();
+        t.record(0.0, 0, 1.0, &a);
+        t.record(1.0, 2, 0.9, &b);
+        t.record(2.0, 4, 0.8, &b); // unchanged
+
+        let pts = t.points();
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].param_msd, 0.0);
+        assert!(pts[1].param_msd > 0.0);
+        assert_eq!(pts[2].param_msd, 0.0, "no change between evals");
+        // only layer 0 moved
+        assert!(pts[1].layer_msd[0] > 0.0);
+        assert_eq!(pts[1].layer_msd[1], 0.0);
+    }
+
+    #[test]
+    fn objective_and_clock_passthrough() {
+        let dims = [2, 2];
+        let p = ParamSet::zeros(&dims);
+        let mut t = Tracker::new();
+        t.record(0.5, 3, 42.0, &p);
+        assert_eq!(t.points()[0].clock, 3);
+        assert_eq!(t.points()[0].objective, 42.0);
+        assert_eq!(t.points()[0].vtime, 0.5);
+    }
+}

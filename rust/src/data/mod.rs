@@ -1,0 +1,129 @@
+//! Datasets: synthetic stand-ins for the paper's TIMIT and ImageNet-63K
+//! workloads, plus deterministic sharding and minibatch iteration.
+//!
+//! Substitution (see DESIGN.md): the real corpora are license/download
+//! gated; the generators reproduce the *statistics that matter for the
+//! optimization dynamics* — feature dimensionality, class cardinality,
+//! class-conditional cluster structure (TIMIT MFCC mixtures) and sparse
+//! non-negative bursty codes (ImageNet LLC features).
+
+mod shard;
+mod synth;
+
+pub use shard::{MinibatchIter, Shard};
+pub use synth::{imagenet_like, timit_like, SynthSpec};
+
+use crate::nn::Labels;
+use crate::tensor::Matrix;
+
+/// An in-memory labeled dataset (features row-major, one row per sample).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Matrix,
+    pub y: Vec<u32>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn n_samples(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Table-1 row: (name, #features, #classes, #samples).
+    pub fn stats(&self) -> (String, usize, usize, usize) {
+        (
+            self.name.clone(),
+            self.n_features(),
+            self.n_classes,
+            self.n_samples(),
+        )
+    }
+
+    /// Gather a minibatch by sample indices.
+    pub fn gather(&self, idx: &[usize]) -> (Matrix, Labels) {
+        let mut x = Matrix::zeros(idx.len(), self.n_features());
+        let mut y = Vec::with_capacity(idx.len());
+        for (r, &i) in idx.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(self.x.row(i));
+            y.push(self.y[i]);
+        }
+        (x, Labels::Class(y))
+    }
+
+    /// Split into `p` worker shards (paper: "we randomly partition the
+    /// data across workers"). Deterministic in the rng seed; every sample
+    /// lands in exactly one shard; shard sizes differ by at most 1.
+    pub fn shard(&self, p: usize, rng: &mut crate::util::Pcg64) -> Vec<Shard> {
+        let perm = rng.permutation(self.n_samples());
+        let mut shards: Vec<Vec<usize>> = vec![Vec::new(); p];
+        for (i, &s) in perm.iter().enumerate() {
+            shards[i % p].push(s);
+        }
+        shards
+            .into_iter()
+            .enumerate()
+            .map(|(w, idx)| Shard::new(w, idx))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn tiny_ds() -> Dataset {
+        let mut rng = Pcg64::new(0);
+        timit_like(&SynthSpec {
+            n_samples: 103,
+            n_features: 12,
+            n_classes: 5,
+            ..SynthSpec::timit_default()
+        })
+        .generate(&mut rng)
+    }
+
+    #[test]
+    fn gather_matches_rows() {
+        let ds = tiny_ds();
+        let (x, y) = ds.gather(&[3, 50, 7]);
+        assert_eq!(x.rows(), 3);
+        assert_eq!(x.row(0), ds.x.row(3));
+        assert_eq!(x.row(2), ds.x.row(7));
+        match y {
+            Labels::Class(c) => assert_eq!(c, vec![ds.y[3], ds.y[50], ds.y[7]]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn shards_partition_everything() {
+        let ds = tiny_ds();
+        let mut rng = Pcg64::new(9);
+        let shards = ds.shard(4, &mut rng);
+        assert_eq!(shards.len(), 4);
+        let mut all: Vec<usize> = shards
+            .iter()
+            .flat_map(|s| s.indices().to_vec())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn sharding_is_seed_deterministic() {
+        let ds = tiny_ds();
+        let a = ds.shard(3, &mut Pcg64::new(5));
+        let b = ds.shard(3, &mut Pcg64::new(5));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices(), y.indices());
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Worker data shards and minibatch iteration.
+//!
+//! SSP distributes over data only (paper §4.1, "Big model vs big data"):
+//! each worker owns a fixed shard and sweeps it in reshuffled epochs.
+
+use crate::util::Pcg64;
+
+/// The sample indices owned by one worker.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    worker: usize,
+    indices: Vec<usize>,
+}
+
+impl Shard {
+    pub fn new(worker: usize, indices: Vec<usize>) -> Shard {
+        Shard { worker, indices }
+    }
+
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    /// An endless minibatch iterator over this shard: each epoch is a
+    /// fresh permutation (stochastic backprop, Eq. 2 "takes one random
+    /// datapoint at a time", here generalized to minibatches §6.1).
+    pub fn minibatches(&self, batch: usize, rng: Pcg64) -> MinibatchIter {
+        assert!(batch > 0);
+        MinibatchIter {
+            indices: self.indices.clone(),
+            order: Vec::new(),
+            cursor: 0,
+            batch,
+            rng,
+            epoch: 0,
+        }
+    }
+}
+
+/// Endless minibatch index stream; reshuffles at each epoch boundary.
+/// The last partial minibatch of an epoch is dropped (standard SGD
+/// practice; keeps artifact batch shapes static).
+#[derive(Debug)]
+pub struct MinibatchIter {
+    indices: Vec<usize>,
+    order: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Pcg64,
+    epoch: usize,
+}
+
+impl MinibatchIter {
+    /// Completed epochs so far.
+    pub fn epoch(&self) -> usize {
+        self.epoch.saturating_sub(1)
+    }
+
+    /// Next minibatch of sample indices (always exactly `batch` long,
+    /// unless the shard itself is smaller than one batch, in which case
+    /// the whole shard is returned with wraparound sampling).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        if self.indices.len() < self.batch {
+            // degenerate shard: sample with replacement
+            return (0..self.batch)
+                .map(|_| self.indices[self.rng.below(self.indices.len())])
+                .collect();
+        }
+        if self.cursor + self.batch > self.order.len() {
+            self.order = self.indices.clone();
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let out = self.order[self.cursor..self.cursor + self.batch].to_vec();
+        self.cursor += self.batch;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_cover_epoch_without_repeats() {
+        let shard = Shard::new(0, (100..160).collect());
+        let mut it = shard.minibatches(10, Pcg64::new(1));
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            seen.extend(it.next_batch());
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (100..160).collect::<Vec<_>>());
+        assert_eq!(it.epoch(), 0);
+        it.next_batch();
+        assert_eq!(it.epoch(), 1);
+    }
+
+    #[test]
+    fn partial_tail_dropped() {
+        let shard = Shard::new(0, (0..25).collect());
+        let mut it = shard.minibatches(10, Pcg64::new(2));
+        // epoch yields exactly 2 full batches, then reshuffles
+        let b1 = it.next_batch();
+        let b2 = it.next_batch();
+        let b3 = it.next_batch(); // new epoch
+        assert_eq!(b1.len(), 10);
+        assert_eq!(b2.len(), 10);
+        assert_eq!(b3.len(), 10);
+        let mut first: Vec<usize> = b1.iter().chain(&b2).copied().collect();
+        first.sort_unstable();
+        first.dedup();
+        assert_eq!(first.len(), 20, "no repeats within an epoch");
+    }
+
+    #[test]
+    fn tiny_shard_samples_with_replacement() {
+        let shard = Shard::new(0, vec![3, 4]);
+        let mut it = shard.minibatches(8, Pcg64::new(3));
+        let b = it.next_batch();
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|&i| i == 3 || i == 4));
+    }
+
+    #[test]
+    fn deterministic_given_rng() {
+        let shard = Shard::new(0, (0..50).collect());
+        let mut a = shard.minibatches(5, Pcg64::new(7));
+        let mut b = shard.minibatches(5, Pcg64::new(7));
+        for _ in 0..20 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+}

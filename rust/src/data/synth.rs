@@ -1,0 +1,296 @@
+//! Synthetic dataset generators matching the paper's Table 1 statistics.
+//!
+//! * `timit_like` — MFCC-with-context-windows statistics: each class is a
+//!   Gaussian mixture in feature space (phoneme states are GMM components
+//!   in the HMM-GMM alignment pipeline the paper uses for labels).
+//! * `imagenet_like` — LLC (locality-constrained linear coding) feature
+//!   statistics: sparse, non-negative, bursty codes from max-pooling over
+//!   a visual codebook; only a small fraction of the 21504 dims are
+//!   active per image, with class-dependent support.
+
+use crate::tensor::Matrix;
+use crate::util::Pcg64;
+
+use super::Dataset;
+
+/// Generator parameters. Defaults reproduce Table 1 shapes; benches use
+/// scaled-down `n_samples`/`n_features` so the suite runs on one core.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub name: String,
+    pub n_samples: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    /// GMM components per class (TIMIT) / active-support size (ImageNet).
+    pub components: usize,
+    /// Class separation in units of within-class std.
+    pub separation: f32,
+    /// Fraction of active features per sample (ImageNet sparsity).
+    pub density: f32,
+}
+
+impl SynthSpec {
+    /// Paper Table 1: TIMIT — 360 features, 2001 classes, 1.1M samples.
+    pub fn timit_default() -> SynthSpec {
+        SynthSpec {
+            name: "TIMIT".into(),
+            n_samples: 1_100_000,
+            n_features: 360,
+            n_classes: 2001,
+            components: 3,
+            separation: 2.0,
+            density: 1.0,
+        }
+    }
+
+    /// Paper Table 1: ImageNet-63K — 21504 LLC features, 1000 classes, 63K.
+    pub fn imagenet_default() -> SynthSpec {
+        SynthSpec {
+            name: "ImageNet-63K".into(),
+            n_samples: 63_000,
+            n_features: 21_504,
+            n_classes: 1000,
+            components: 8,
+            separation: 1.5,
+            density: 0.03,
+        }
+    }
+
+    /// Bench-scale variants: same class structure, smaller footprint.
+    pub fn timit_scaled(n_samples: usize) -> SynthSpec {
+        SynthSpec {
+            n_samples,
+            ..SynthSpec::timit_default()
+        }
+    }
+
+    pub fn imagenet_scaled(n_samples: usize, n_features: usize) -> SynthSpec {
+        SynthSpec {
+            n_samples,
+            n_features,
+            ..SynthSpec::imagenet_default()
+        }
+    }
+}
+
+pub struct Generator {
+    spec: SynthSpec,
+    kind: Kind,
+}
+
+enum Kind {
+    Timit,
+    Imagenet,
+}
+
+/// MFCC-statistics generator (dense class-conditional Gaussian mixtures).
+pub fn timit_like(spec: &SynthSpec) -> Generator {
+    Generator {
+        spec: spec.clone(),
+        kind: Kind::Timit,
+    }
+}
+
+/// LLC-statistics generator (sparse non-negative class-dependent codes).
+pub fn imagenet_like(spec: &SynthSpec) -> Generator {
+    Generator {
+        spec: spec.clone(),
+        kind: Kind::Imagenet,
+    }
+}
+
+impl Generator {
+    pub fn spec(&self) -> &SynthSpec {
+        &self.spec
+    }
+
+    pub fn generate(&self, rng: &mut Pcg64) -> Dataset {
+        match self.kind {
+            Kind::Timit => self.gen_timit(rng),
+            Kind::Imagenet => self.gen_imagenet(rng),
+        }
+    }
+
+    fn gen_timit(&self, rng: &mut Pcg64) -> Dataset {
+        let s = &self.spec;
+        // Class-conditional mixture means live on a low-dimensional
+        // manifold (phoneme similarity): mean = U * code_c + noise, which
+        // keeps generation O(n·d) even for 2001 classes.
+        let latent = 16usize.min(s.n_features);
+        let mut u = Matrix::zeros(latent, s.n_features);
+        for v in u.data_mut() {
+            *v = rng.normal_f32(0.0, 1.0) / (latent as f32).sqrt();
+        }
+        // per (class, component) latent codes
+        let mut codes = vec![0.0f32; s.n_classes * s.components * latent];
+        for v in &mut codes {
+            *v = rng.normal_f32(0.0, s.separation);
+        }
+
+        let mut x = Matrix::zeros(s.n_samples, s.n_features);
+        let mut y = Vec::with_capacity(s.n_samples);
+        let mut mean = vec![0.0f32; s.n_features];
+        for r in 0..s.n_samples {
+            let c = rng.below(s.n_classes);
+            let k = rng.below(s.components);
+            let code =
+                &codes[(c * s.components + k) * latent..(c * s.components + k + 1) * latent];
+            mean.fill(0.0);
+            for (l, &cv) in code.iter().enumerate() {
+                let urow = u.row(l);
+                for (mv, uv) in mean.iter_mut().zip(urow) {
+                    *mv += cv * uv;
+                }
+            }
+            let row = x.row_mut(r);
+            for (xv, mv) in row.iter_mut().zip(&mean) {
+                *xv = mv + rng.normal_f32(0.0, 1.0);
+            }
+            y.push(c as u32);
+        }
+        Dataset {
+            name: s.name.clone(),
+            x,
+            y,
+            n_classes: s.n_classes,
+        }
+    }
+
+    fn gen_imagenet(&self, rng: &mut Pcg64) -> Dataset {
+        let s = &self.spec;
+        let active = ((s.n_features as f32 * s.density) as usize).max(1);
+        // Each class has `components` preferred codebook regions; a sample
+        // activates `active` coordinates drawn mostly from those regions,
+        // with non-negative lognormal magnitudes (max-pooled LLC codes).
+        let region = (s.n_features / (s.components.max(1))).max(1);
+        let mut x = Matrix::zeros(s.n_samples, s.n_features);
+        let mut y = Vec::with_capacity(s.n_samples);
+        for r in 0..s.n_samples {
+            let c = rng.below(s.n_classes);
+            // class-specific region offsets, deterministic per class
+            let mut class_rng = Pcg64::with_stream(c as u64, 0xC1A55);
+            let offsets: Vec<usize> = (0..s.components)
+                .map(|_| class_rng.below(s.n_features))
+                .collect();
+            let row = x.row_mut(r);
+            for _ in 0..active {
+                let j = if rng.coin(0.8) {
+                    // within a class region
+                    let o = offsets[rng.below(offsets.len())];
+                    (o + rng.below(region)) % s.n_features
+                } else {
+                    rng.below(s.n_features) // background activation
+                };
+                let mag = rng.lognormal(0.0, 0.5) as f32 * s.separation;
+                row[j] = row[j].max(mag); // max-pooling semantics
+            }
+            y.push(c as u32);
+        }
+        Dataset {
+            name: s.name.clone(),
+            x,
+            y,
+            n_classes: s.n_classes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_timit() -> SynthSpec {
+        SynthSpec {
+            n_samples: 400,
+            n_features: 20,
+            n_classes: 4,
+            ..SynthSpec::timit_default()
+        }
+    }
+
+    fn small_imagenet() -> SynthSpec {
+        SynthSpec {
+            n_samples: 300,
+            n_features: 200,
+            n_classes: 5,
+            ..SynthSpec::imagenet_default()
+        }
+    }
+
+    #[test]
+    fn table1_defaults_match_paper() {
+        let t = SynthSpec::timit_default();
+        assert_eq!((t.n_features, t.n_classes, t.n_samples), (360, 2001, 1_100_000));
+        let i = SynthSpec::imagenet_default();
+        assert_eq!((i.n_features, i.n_classes, i.n_samples), (21_504, 1000, 63_000));
+    }
+
+    #[test]
+    fn timit_shapes_and_labels() {
+        let mut rng = Pcg64::new(0);
+        let ds = timit_like(&small_timit()).generate(&mut rng);
+        assert_eq!(ds.n_samples(), 400);
+        assert_eq!(ds.n_features(), 20);
+        assert!(ds.y.iter().all(|&c| (c as usize) < 4));
+        // all classes appear
+        let mut seen = [false; 4];
+        for &c in &ds.y {
+            seen[c as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn timit_classes_are_separable_ish() {
+        // class-conditional means should differ: between-class distance
+        // exceeds within-class spread on average.
+        let mut rng = Pcg64::new(1);
+        let spec = SynthSpec {
+            separation: 3.0,
+            ..small_timit()
+        };
+        let ds = timit_like(&spec).generate(&mut rng);
+        let d = ds.n_features();
+        let mut means = vec![vec![0.0f64; d]; 4];
+        let mut counts = [0usize; 4];
+        for r in 0..ds.n_samples() {
+            let c = ds.y[r] as usize;
+            counts[c] += 1;
+            for (m, &v) in means[c].iter_mut().zip(ds.x.row(r)) {
+                *m += v as f64;
+            }
+        }
+        for (m, &n) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= n as f64;
+            }
+        }
+        let dist: f64 = means[0]
+            .iter()
+            .zip(&means[1])
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(dist > 1.0, "between-class mean distance {dist}");
+    }
+
+    #[test]
+    fn imagenet_is_sparse_and_nonnegative() {
+        let mut rng = Pcg64::new(2);
+        let ds = imagenet_like(&small_imagenet()).generate(&mut rng);
+        let nz = ds.x.data().iter().filter(|&&v| v != 0.0).count();
+        let frac = nz as f64 / ds.x.data().len() as f64;
+        assert!(frac < 0.15, "density {frac}");
+        assert!(frac > 0.001, "density {frac}");
+        assert!(ds.x.data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = small_timit();
+        let a = timit_like(&spec).generate(&mut Pcg64::new(3));
+        let b = timit_like(&spec).generate(&mut Pcg64::new(3));
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+}

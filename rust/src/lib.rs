@@ -1,0 +1,33 @@
+//! # sspdnn — Distributed Training of DNNs under the Stale Synchronous Parallel setting
+//!
+//! A production-quality reproduction of *"Distributed Training of Deep Neural
+//! Networks with Theoretical Analysis: Under SSP Setting"* (Kumar, Xie, Yin,
+//! Xing; CMU, 2015).
+//!
+//! The system is a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the SSP parameter server, worker coordination,
+//!   data sharding, the discrete-event cluster simulator, metrics and the CLI.
+//! * **Layer 2 (`python/compile/model.py`)** — the DNN forward/backward pass in
+//!   JAX, AOT-lowered to HLO text at build time (`make artifacts`).
+//! * **Layer 1 (`python/compile/kernels/`)** — the fused dense-layer Pallas
+//!   kernels called from the Layer-2 graph.
+//!
+//! Python never runs on the training path: the Rust binary loads the compiled
+//! HLO artifacts through PJRT (`runtime`), or falls back to the built-in
+//! native engine (`nn`) for configurations without pre-built artifacts.
+
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod net;
+pub mod nn;
+pub mod runtime;
+pub mod sim;
+pub mod ssp;
+pub mod tensor;
+pub mod theory;
+pub mod util;

@@ -1,0 +1,401 @@
+//! sspdnn — the SSP-DNN leader binary.
+//!
+//! Subcommands:
+//!   train     run one SSP training experiment (simulated cluster)
+//!   speedup   machine sweep + Fig 4/5-style speedup table
+//!   theory    Theorem 1/2/3 empirical validation
+//!   data      generate a synthetic dataset, print Table-1 stats
+//!   artifact  inspect / smoke-run an AOT artifact through PJRT
+//!   presets   list config presets
+//!
+//! Common flags: --preset <name>, --config <file.toml>, --machines N,
+//! --staleness S, --policy bsp|ssp|async, --clocks N, --eta F,
+//! --out <dir> (write CSV/JSON results).
+
+use sspdnn::cli::Args;
+use sspdnn::config::ExperimentConfig;
+use sspdnn::coordinator::{
+    build_dataset, run_experiment_on, DriverOptions, EtaSchedule,
+};
+use sspdnn::metrics;
+use sspdnn::runtime::{Manifest, PjrtEngine};
+use sspdnn::ssp::Policy;
+use sspdnn::theory;
+use sspdnn::util::timer::fmt_duration;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "simulate" => cmd_simulate(&args),
+        "speedup" => cmd_speedup(&args),
+        "theory" => cmd_theory(&args),
+        "data" => cmd_data(&args),
+        "artifact" => cmd_artifact(&args),
+        "presets" => cmd_presets(),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}; see `sspdnn help`")),
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+sspdnn — Distributed Training of DNNs under the SSP Setting (Kumar et al. 2015)
+
+USAGE: sspdnn <command> [flags]
+
+COMMANDS:
+  train      run one SSP training experiment on the simulated cluster
+  simulate   traced protocol run: per-worker staleness/blocking/delay stats
+  speedup    sweep 1..N machines, print the paper's speedup table (Fig 4/5)
+  theory     empirical validation of Theorems 1-3
+  data       generate a synthetic dataset and print Table-1 statistics
+  artifact   inspect and smoke-run an AOT artifact via PJRT
+  presets    list built-in experiment presets
+
+FLAGS (train/speedup/theory):
+  --preset <tiny|timit|timit_paper|imagenet|imagenet_paper>
+  --config <file.toml>        overrides on top of the preset
+  --machines N                number of worker machines
+  --staleness S               SSP staleness bound
+  --policy <ssp|bsp|async>
+  --clocks N  --eta F  --batch N  --samples N
+  --engine <native|pjrt>      gradient engine (pjrt needs artifacts/)
+  --out <dir>                 write curve CSV + run JSON
+";
+
+fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
+    let preset = args.get("preset").unwrap_or("tiny");
+    let mut cfg = ExperimentConfig::preset(preset)
+        .ok_or_else(|| format!("unknown preset {preset:?}"))?;
+    if let Some(path) = args.get("config") {
+        let doc = sspdnn::config::parse_toml(
+            &std::fs::read_to_string(path).map_err(|e| e.to_string())?,
+        )?;
+        cfg.apply_toml(&doc)?;
+    }
+    if let Some(m) = args.get_usize("machines").map_err(|e| e.to_string())? {
+        cfg.cluster.machines = m;
+    }
+    if let Some(s) = args.get_u64("staleness").map_err(|e| e.to_string())? {
+        cfg.ssp.policy = Policy::Ssp { staleness: s };
+    }
+    match args.get("policy") {
+        Some("bsp") => cfg.ssp.policy = Policy::Bsp,
+        Some("async") => cfg.ssp.policy = Policy::Async,
+        Some("ssp") | None => {}
+        Some(p) => return Err(format!("unknown policy {p:?}")),
+    }
+    if let Some(c) = args.get_usize("clocks").map_err(|e| e.to_string())? {
+        cfg.train.clocks = c;
+    }
+    if let Some(e) = args.get_f64("eta").map_err(|e| e.to_string())? {
+        cfg.train.eta = e as f32;
+    }
+    if let Some(b) = args.get_usize("batch").map_err(|e| e.to_string())? {
+        cfg.train.batch = b;
+    }
+    if let Some(n) = args.get_usize("samples").map_err(|e| e.to_string())? {
+        cfg.data.n_samples = n;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn driver_opts(args: &Args, cfg: &ExperimentConfig) -> Result<DriverOptions, String> {
+    let mut opts = DriverOptions::default();
+    if args.get("engine") == Some("pjrt") {
+        let name = cfg
+            .train
+            .artifact
+            .clone()
+            .ok_or("config has no artifact name for the pjrt engine")?;
+        let manifest =
+            Manifest::load(args.get("artifacts").unwrap_or("artifacts"))?;
+        let spec = manifest
+            .get(&name)
+            .ok_or_else(|| format!("artifact {name:?} not in manifest"))?;
+        let engine = PjrtEngine::load(spec).map_err(|e| e.to_string())?;
+        opts.engine = Some(sspdnn::coordinator::EngineKind::Boxed(Box::new(engine)));
+    }
+    Ok(opts)
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let opts = driver_opts(args, &cfg)?;
+    println!(
+        "train: {} | {} machines | {} | {} params | engine {}",
+        cfg.name,
+        cfg.cluster.machines,
+        cfg.ssp.policy.name(),
+        cfg.model.n_params(),
+        if args.get("engine") == Some("pjrt") { "pjrt" } else { "native" },
+    );
+    let dataset = build_dataset(&cfg);
+    let run = run_experiment_on(&cfg, opts, &dataset);
+    println!(
+        "objective: {:.4} -> {:.4} over {} (virtual) | {} steps | eps {:.3}",
+        run.evals.first().map(|e| e.objective).unwrap_or(f64::NAN),
+        run.final_objective,
+        fmt_duration(run.total_vtime),
+        run.steps,
+        run.epsilon_rate,
+    );
+    println!(
+        "waits: barrier {} | read {} | compute {}",
+        fmt_duration(run.barrier_wait_s),
+        fmt_duration(run.read_wait_s),
+        fmt_duration(run.compute_s),
+    );
+    let objs: Vec<f64> = run.evals.iter().map(|e| e.objective).collect();
+    println!("objective curve: {}", metrics::sparkline(&objs));
+    if let Some(dir) = args.get("out") {
+        metrics::write_file(
+            &format!("{dir}/{}_curve.csv", cfg.name),
+            &metrics::curve_csv(&run),
+        )
+        .map_err(|e| e.to_string())?;
+        metrics::write_file(
+            &format!("{dir}/{}_run.json", cfg.name),
+            &metrics::run_json(&run).to_string(),
+        )
+        .map_err(|e| e.to_string())?;
+        println!("wrote {dir}/{}_curve.csv and _run.json", cfg.name);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let dataset = build_dataset(&cfg);
+    let run = run_experiment_on(
+        &cfg,
+        DriverOptions {
+            trace: true,
+            ..DriverOptions::default()
+        },
+        &dataset,
+    );
+    let trace = run.trace.as_ref().expect("trace requested");
+    let summary = trace.summary(run.machines);
+    println!(
+        "protocol trace: {} events ({} dropped) over {} virtual",
+        summary.events,
+        summary.dropped,
+        fmt_duration(run.total_vtime)
+    );
+    let rows: Vec<Vec<String>> = summary
+        .per_worker
+        .iter()
+        .enumerate()
+        .map(|(p, w)| {
+            vec![
+                p.to_string(),
+                w.clocks.to_string(),
+                format!("{:.2}", w.mean_staleness()),
+                w.blocks.to_string(),
+                fmt_duration(w.blocked_s),
+                format!("{:.2}ms", w.mean_delay() * 1e3),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        metrics::render_table(
+            &["worker", "clocks", "mean staleness", "blocks", "blocked", "mean delay"],
+            &rows
+        )
+    );
+    println!(
+        "eps rate {:.3} | congestion events {} | {:.1} MB shipped",
+        run.epsilon_rate,
+        run.congestion_events,
+        run.bytes as f64 / 1e6
+    );
+    if let Some(dir) = args.get("out") {
+        let path = format!("{dir}/{}_trace.csv", cfg.name);
+        metrics::write_file(&path, &trace.to_csv()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_speedup(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let max = args
+        .get_usize("max-machines")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(cfg.cluster.machines);
+    let dataset = build_dataset(&cfg);
+    println!("speedup sweep on {} (1..{} machines)", cfg.name, max);
+    let mut runs = Vec::new();
+    for n in 1..=max {
+        let run = run_experiment_on(
+            &cfg,
+            DriverOptions {
+                machines: Some(n),
+                ..DriverOptions::default()
+            },
+            &dataset,
+        );
+        println!(
+            "  n={n}: final {:.4} in {}",
+            run.final_objective,
+            fmt_duration(run.total_vtime)
+        );
+        runs.push(run);
+    }
+    let sp = metrics::speedups(&runs);
+    let rows: Vec<Vec<String>> = sp
+        .iter()
+        .map(|(n, s)| {
+            vec![n.to_string(), format!("{s:.2}"), format!("{:.2}", *n as f64)]
+        })
+        .collect();
+    println!(
+        "{}",
+        metrics::render_table(&["machines", "speedup", "linear"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_theory(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let dataset = build_dataset(&cfg);
+    let eta = EtaSchedule::Poly {
+        eta0: cfg.train.eta,
+        d: args
+            .get_f64("decay")
+            .map_err(|e| e.to_string())?
+            .unwrap_or(0.6) as f32,
+    };
+    let s = cfg.ssp.policy.staleness().unwrap_or(10);
+    println!("Theorem 1/3: ||theta_ssp - theta_seq|| (relative), staleness {s}");
+    let r1 = theory::theorem1_experiment(&cfg, &dataset, s, eta);
+    let rows: Vec<Vec<String>> = r1
+        .points
+        .iter()
+        .map(|p| {
+            vec![
+                p.updates.to_string(),
+                format!("{:.3e}", p.rel_dist),
+                p.layer_rel_dist
+                    .iter()
+                    .map(|d| format!("{d:.2e}"))
+                    .collect::<Vec<_>>()
+                    .join(" "),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        metrics::render_table(&["updates", "rel_dist", "per-layer"], &rows)
+    );
+    println!("log-log slope: {:.3} (negative = contraction)\n", r1.log_slope);
+
+    println!("Theorem 2: layerwise movement contraction (undistributed)");
+    let r2 = theory::theorem2_experiment(&cfg, &dataset, eta);
+    for (m, slope) in r2.layer_slopes.iter().enumerate() {
+        println!("  layer {m}: log-slope {slope:.3}");
+    }
+    println!(
+        "  final ||w|| = {:.3} | diverged: {}",
+        r2.final_norm, r2.diverged
+    );
+    Ok(())
+}
+
+fn cmd_data(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let ds = build_dataset(&cfg);
+    let (name, nf, nc, ns) = ds.stats();
+    println!(
+        "{}",
+        metrics::render_table(
+            &["Dataset", "#Features", "#Classes", "#Samples"],
+            &[vec![name, nf.to_string(), nc.to_string(), ns.to_string()]],
+        )
+    );
+    Ok(())
+}
+
+fn cmd_artifact(args: &Args) -> Result<(), String> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let manifest = Manifest::load(dir)?;
+    match args.get("name") {
+        None => {
+            for name in manifest.names() {
+                let a = manifest.get(name).unwrap();
+                println!(
+                    "{name}: dims {:?} batch {} loss {} impl {} ({})",
+                    a.layer_dims,
+                    a.batch,
+                    a.loss,
+                    a.impl_,
+                    a.file.display()
+                );
+            }
+        }
+        Some(name) => {
+            let spec = manifest
+                .get(name)
+                .ok_or_else(|| format!("no artifact {name:?}"))?;
+            spec.validate()?;
+            println!("compiling {name} via PJRT ...");
+            let engine = PjrtEngine::load(spec).map_err(|e| e.to_string())?;
+            // smoke run with random inputs
+            use sspdnn::nn::{Labels, ParamSet};
+            use sspdnn::tensor::Matrix;
+            use sspdnn::util::Pcg64;
+            let mut rng = Pcg64::new(0);
+            let params = ParamSet::glorot(&spec.layer_dims, &mut rng);
+            let x = Matrix::randn(spec.batch, spec.layer_dims[0], 1.0, &mut rng);
+            let y = Labels::Class(
+                (0..spec.batch)
+                    .map(|_| rng.below(*spec.layer_dims.last().unwrap()) as u32)
+                    .collect(),
+            );
+            let (loss, grads) =
+                engine.step(&params, &x, &y).map_err(|e| e.to_string())?;
+            println!(
+                "smoke run OK: loss {loss:.4}, grad norm {:.4}",
+                grads.norm()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_presets() -> Result<(), String> {
+    for name in [
+        "tiny",
+        "timit_scaled",
+        "timit_paper",
+        "imagenet_scaled",
+        "imagenet_paper",
+    ] {
+        let c = ExperimentConfig::preset(name).unwrap();
+        println!(
+            "{name:16} dims {:?} params {} | {} | mb {} eta {}",
+            c.model.dims,
+            c.model.n_params(),
+            c.ssp.policy.name(),
+            c.train.batch,
+            c.train.eta
+        );
+    }
+    Ok(())
+}

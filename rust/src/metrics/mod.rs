@@ -1,0 +1,250 @@
+//! Experiment metrics: speedup computation (Figs 4–5 protocol), curve
+//! emission (CSV/JSON), terminal tables and line charts for the bench
+//! harness.
+
+pub mod plot;
+
+pub use plot::{line_chart, Series};
+
+use std::io::Write;
+
+use crate::coordinator::RunResult;
+use crate::util::json::Json;
+
+/// The paper's speedup protocol (§6.2): record the run time `t_n` by
+/// which the objective decreases to `p`, where `p` is the objective the
+/// *single-machine* run reaches at the end of training; speedup of n
+/// machines is `t_1 / t_n`.
+pub fn time_to_objective(run: &RunResult, target: f64) -> Option<f64> {
+    run.evals
+        .iter()
+        .find(|e| e.objective <= target)
+        .map(|e| e.vtime)
+}
+
+/// Speedup factors for a sweep of runs (index 0 must be the 1-machine
+/// run). Returns (machines, speedup) pairs for runs that reached target.
+pub fn speedups(runs: &[RunResult]) -> Vec<(usize, f64)> {
+    assert!(!runs.is_empty());
+    assert_eq!(runs[0].machines, 1, "first run must be single-machine");
+    // target = the objective the single machine reaches by the end of
+    // training — use its last *curve* point so the target is a value the
+    // reference run demonstrably crossed.
+    let target = runs[0]
+        .evals
+        .last()
+        .map(|e| e.objective)
+        .unwrap_or(runs[0].final_objective)
+        .max(runs[0].final_objective);
+    let t1 = match time_to_objective(&runs[0], target) {
+        Some(t) => t,
+        None => runs[0].total_vtime,
+    };
+    runs.iter()
+        .filter_map(|r| {
+            time_to_objective(r, target).map(|tn| (r.machines, t1 / tn))
+        })
+        .collect()
+}
+
+/// CSV of a run's evaluation curve.
+pub fn curve_csv(run: &RunResult) -> String {
+    let mut out = String::from("vtime_s,clock,objective,param_msd\n");
+    for e in &run.evals {
+        out.push_str(&format!(
+            "{:.6},{},{:.6},{:.6e}\n",
+            e.vtime, e.clock, e.objective, e.param_msd
+        ));
+    }
+    out
+}
+
+/// JSON record of a run (for EXPERIMENTS.md provenance + plotting).
+pub fn run_json(run: &RunResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(run.name.clone())),
+        ("policy", Json::str(run.policy.clone())),
+        ("machines", Json::num(run.machines as f64)),
+        ("final_objective", Json::num(run.final_objective)),
+        ("total_vtime_s", Json::num(run.total_vtime)),
+        ("barrier_wait_s", Json::num(run.barrier_wait_s)),
+        ("read_wait_s", Json::num(run.read_wait_s)),
+        ("compute_s", Json::num(run.compute_s)),
+        ("messages", Json::num(run.messages as f64)),
+        ("bytes", Json::num(run.bytes as f64)),
+        ("congestion_events", Json::num(run.congestion_events as f64)),
+        ("epsilon_rate", Json::num(run.epsilon_rate)),
+        ("steps", Json::num(run.steps as f64)),
+        (
+            "evals",
+            Json::Arr(
+                run.evals
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("vtime", Json::num(e.vtime)),
+                            ("clock", Json::num(e.clock as f64)),
+                            ("objective", Json::num(e.objective)),
+                            ("param_msd", Json::num(e.param_msd)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write a string to a file, creating parent dirs.
+pub fn write_file(path: &str, content: &str) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(content.as_bytes())
+}
+
+/// Render an aligned terminal table (the bench harness's paper-style rows).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        out.push('\n');
+    };
+    line(
+        &mut out,
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+    );
+    line(
+        &mut out,
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+    );
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// ASCII sparkline of a series (terminal "figures").
+pub fn sparkline(values: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() {
+        return String::new();
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in values {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    let span = (hi - lo).max(1e-300);
+    values
+        .iter()
+        .map(|&v| {
+            if !v.is_finite() {
+                return ' ';
+            }
+            let t = ((v - lo) / span * 7.0).round() as usize;
+            BARS[t.min(7)]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EvalPoint;
+    use crate::nn::ParamSet;
+
+    fn fake_run(machines: usize, times: &[f64], objs: &[f64]) -> RunResult {
+        RunResult {
+            name: "t".into(),
+            policy: "ssp(s=1)".into(),
+            machines,
+            evals: times
+                .iter()
+                .zip(objs)
+                .map(|(&vtime, &objective)| EvalPoint {
+                    vtime,
+                    clock: 0,
+                    objective,
+                    param_msd: 0.0,
+                    layer_msd: vec![],
+                })
+                .collect(),
+            final_objective: *objs.last().unwrap(),
+            total_vtime: *times.last().unwrap(),
+            barrier_wait_s: 0.0,
+            read_wait_s: 0.0,
+            compute_s: 0.0,
+            messages: 0,
+            bytes: 0,
+            congestion_events: 0,
+            epsilon_rate: 1.0,
+            reads: 0,
+            steps: 0,
+            clock_loss: vec![],
+            master_trajectory: vec![],
+            final_params: ParamSet::zeros(&[1, 1]),
+            trace: None,
+        }
+    }
+
+    #[test]
+    fn time_to_objective_finds_first_crossing() {
+        let r = fake_run(1, &[1.0, 2.0, 3.0], &[5.0, 3.0, 1.0]);
+        assert_eq!(time_to_objective(&r, 3.5), Some(2.0));
+        assert_eq!(time_to_objective(&r, 0.5), None);
+    }
+
+    #[test]
+    fn speedups_follow_paper_protocol() {
+        // 1 machine reaches 1.0 at t=10; 2 machines reach it at t=4
+        let r1 = fake_run(1, &[5.0, 10.0], &[2.0, 1.0]);
+        let r2 = fake_run(2, &[2.0, 4.0], &[1.5, 0.9]);
+        let sp = speedups(&[r1, r2]);
+        assert_eq!(sp[0], (1, 1.0));
+        assert_eq!(sp[1].0, 2);
+        assert!((sp[1].1 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_and_json_shapes() {
+        let r = fake_run(1, &[1.0], &[2.0]);
+        let csv = curve_csv(&r);
+        assert!(csv.starts_with("vtime_s,clock"));
+        assert_eq!(csv.lines().count(), 2);
+        let j = run_json(&r);
+        assert_eq!(j.get("machines").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("evals").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let t = render_table(
+            &["a", "bb"],
+            &[vec!["xxx".into(), "y".into()], vec!["1".into(), "22".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("a    bb"));
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+        assert_eq!(s.chars().next(), Some('▁'));
+        assert_eq!(s.chars().last(), Some('█'));
+    }
+}

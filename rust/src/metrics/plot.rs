@@ -1,0 +1,158 @@
+//! Terminal line charts: multi-series ASCII plots with axes, used by the
+//! bench harness to render Figure 2/3/6-style panels (one glyph per
+//! series, nearest-cell rasterization).
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Series {
+        Series {
+            name: name.into(),
+            points,
+        }
+    }
+}
+
+const GLYPHS: &[char] = &['1', '2', '4', '6', 'o', 'x', '+', '*'];
+
+/// Render series into a `width`x`height` character grid with axes and a
+/// legend. Returns a printable multi-line string.
+pub fn line_chart(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+) -> String {
+    assert!(width >= 16 && height >= 4);
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y) in &pts {
+        x0 = x0.min(*x);
+        x1 = x1.max(*x);
+        y0 = y0.min(*y);
+        y1 = y1.max(*y);
+    }
+    if x1 == x0 {
+        x1 = x0 + 1.0;
+    }
+    if y1 == y0 {
+        y1 = y0 + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = g;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    let ytop = format!("{y1:.3}");
+    let ybot = format!("{y0:.3}");
+    let margin = ytop.len().max(ybot.len()).max(ylabel.len());
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            ytop.clone()
+        } else if r == height - 1 {
+            ybot.clone()
+        } else if r == height / 2 {
+            ylabel.to_string()
+        } else {
+            String::new()
+        };
+        out.push_str(&format!("{label:>margin$} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>margin$} +{}\n",
+        "",
+        "-".repeat(width),
+    ));
+    out.push_str(&format!(
+        "{:>margin$}  {:<w2$}{}\n",
+        "",
+        format!("{x0:.2}"),
+        format!("{x1:.2} {xlabel}"),
+        w2 = width.saturating_sub(8),
+    ));
+    out.push_str(&format!(
+        "{:>margin$}  legend: {}\n",
+        "",
+        series
+            .iter()
+            .enumerate()
+            .map(|(i, s)| format!("{}={}", GLYPHS[i % GLYPHS.len()], s.name))
+            .collect::<Vec<_>>()
+            .join("  "),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_axes_and_legend() {
+        let s = vec![
+            Series::new("one", vec![(0.0, 0.0), (1.0, 1.0), (2.0, 2.0)]),
+            Series::new("two", vec![(0.0, 2.0), (2.0, 0.0)]),
+        ];
+        let chart = line_chart("test", "t", "obj", &s, 40, 10);
+        assert!(chart.contains("test"));
+        assert!(chart.contains("legend: 1=one  2=two"));
+        assert!(chart.contains('1'));
+        assert!(chart.contains('2'));
+        assert!(chart.contains("2.000")); // y max label
+        // corners: increasing series hits bottom-left and top-right
+        let rows: Vec<&str> = chart.lines().collect();
+        assert!(rows.len() > 10);
+    }
+
+    #[test]
+    fn empty_series_no_panic() {
+        let chart = line_chart("empty", "x", "y", &[Series::new("a", vec![])], 30, 6);
+        assert!(chart.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_no_division_by_zero() {
+        let s = vec![Series::new("c", vec![(0.0, 5.0), (1.0, 5.0)])];
+        let chart = line_chart("const", "x", "y", &s, 30, 6);
+        assert!(chart.contains('1'));
+    }
+
+    #[test]
+    fn non_finite_points_skipped() {
+        let s = vec![Series::new(
+            "nan",
+            vec![(0.0, 1.0), (f64::NAN, 2.0), (1.0, f64::INFINITY), (2.0, 3.0)],
+        )];
+        let chart = line_chart("t", "x", "y", &s, 30, 6);
+        assert!(chart.contains('1'));
+    }
+}

@@ -1,0 +1,157 @@
+//! Simulated cluster fabric (paper testbed: 10 GbE, 6 machines).
+//!
+//! Produces *virtual* transfer durations for update/fetch messages:
+//! lognormal per-message latency around a configured mean, serialization
+//! at link bandwidth, occasional congestion events (retransmit penalty).
+//! Congestion is what physically realizes the paper's ε_{q,p} = 0: a
+//! delayed in-window update simply misses the reader's fetch.
+//!
+//! Links are FIFO per source worker (TCP semantics): arrivals from one
+//! worker never reorder.
+
+use crate::config::ClusterConfig;
+use crate::util::Pcg64;
+
+#[derive(Debug)]
+pub struct NetModel {
+    latency_s: f64,
+    bandwidth_bps: f64,
+    drop_prob: f64,
+    /// Multiplier applied to latency on a congestion event.
+    congestion_penalty: f64,
+    /// Lognormal sigma of per-message latency jitter.
+    jitter_sigma: f64,
+    /// Last arrival time per source link, for FIFO enforcement.
+    last_arrival: Vec<f64>,
+    rng: Pcg64,
+    /// Totals for metrics.
+    messages: u64,
+    bytes: u64,
+    congestion_events: u64,
+}
+
+impl NetModel {
+    pub fn new(cfg: &ClusterConfig, workers: usize, rng: Pcg64) -> NetModel {
+        NetModel {
+            latency_s: cfg.latency_s,
+            bandwidth_bps: cfg.bandwidth_bps,
+            drop_prob: cfg.drop_prob,
+            congestion_penalty: 20.0,
+            jitter_sigma: 0.25,
+            last_arrival: vec![0.0; workers],
+            rng,
+            messages: 0,
+            bytes: 0,
+            congestion_events: 0,
+        }
+    }
+
+    /// Virtual arrival time at the server of `bytes` sent by `src` at
+    /// `send_time`.
+    pub fn arrival_time(&mut self, src: usize, send_time: f64, bytes: usize) -> f64 {
+        self.messages += 1;
+        self.bytes += bytes as u64;
+        let base_latency =
+            self.latency_s * self.rng.lognormal(0.0, self.jitter_sigma);
+        let wire = bytes as f64 / self.bandwidth_bps;
+        let mut delay = base_latency + wire;
+        if self.rng.coin(self.drop_prob) {
+            // lost/queued packet: retransmission-scale penalty
+            self.congestion_events += 1;
+            delay += self.latency_s * self.congestion_penalty
+                + self.rng.exponential(1.0 / (self.latency_s * 10.0));
+        }
+        let t = send_time + delay;
+        let fifo = &mut self.last_arrival[src];
+        let arrival = t.max(*fifo + 1e-9);
+        *fifo = arrival;
+        arrival
+    }
+
+    /// Duration of a parameter fetch of `bytes` (server → worker): one
+    /// RTT plus wire time. Fetches hit the local cache when the snapshot
+    /// is fresh; the coordinator decides when to pay this.
+    pub fn fetch_duration(&mut self, bytes: usize) -> f64 {
+        2.0 * self.latency_s * self.rng.lognormal(0.0, self.jitter_sigma)
+            + bytes as f64 / self.bandwidth_bps
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.messages
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn congestion_events(&self) -> u64 {
+        self.congestion_events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(drop: f64) -> NetModel {
+        let cfg = ClusterConfig {
+            latency_s: 100e-6,
+            bandwidth_bps: 1.25e9,
+            drop_prob: drop,
+            ..ClusterConfig::default()
+        };
+        NetModel::new(&cfg, 4, Pcg64::new(1))
+    }
+
+    #[test]
+    fn arrival_after_send_and_scales_with_bytes() {
+        let mut n = model(0.0);
+        let a = n.arrival_time(0, 1.0, 1_000);
+        assert!(a > 1.0);
+        let b = n.arrival_time(1, 1.0, 1_250_000_000); // 1s of wire time
+        assert!(b - 1.0 > 1.0, "wire time dominates: {}", b - 1.0);
+    }
+
+    #[test]
+    fn fifo_per_source() {
+        let mut n = model(0.5); // heavy congestion → reordering pressure
+        let mut last = 0.0;
+        for i in 0..50 {
+            let a = n.arrival_time(2, i as f64 * 1e-6, 100);
+            assert!(a > last, "FIFO violated at {i}");
+            last = a;
+        }
+    }
+
+    #[test]
+    fn different_sources_may_interleave() {
+        let mut n = model(0.0);
+        let a = n.arrival_time(0, 0.0, 1_000_000_000); // huge message
+        let b = n.arrival_time(1, 0.0, 100); // tiny message
+        assert!(b < a, "tiny message from another link arrives first");
+    }
+
+    #[test]
+    fn congestion_events_counted_and_slow() {
+        let mut clean = model(0.0);
+        let mut lossy = model(0.9);
+        let mut clean_sum = 0.0;
+        let mut lossy_sum = 0.0;
+        for _ in 0..200 {
+            clean_sum += clean.arrival_time(0, 0.0, 100);
+            lossy_sum += lossy.arrival_time(1, 0.0, 100);
+        }
+        assert_eq!(clean.congestion_events(), 0);
+        assert!(lossy.congestion_events() > 100);
+        assert!(lossy_sum > 2.0 * clean_sum);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut n = model(0.0);
+        n.arrival_time(0, 0.0, 500);
+        n.arrival_time(0, 0.0, 700);
+        assert_eq!(n.messages(), 2);
+        assert_eq!(n.bytes(), 1200);
+    }
+}

@@ -1,0 +1,107 @@
+//! Activation units. The paper's Assumption 3 restricts analysis to
+//! logistic units; tanh/relu are provided for the ablation benches.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Sigmoid,
+    Tanh,
+    Relu,
+}
+
+impl Activation {
+    /// h(a), numerically stable.
+    #[inline]
+    pub fn apply(self, a: f32) -> f32 {
+        match self {
+            Activation::Sigmoid => {
+                if a >= 0.0 {
+                    1.0 / (1.0 + (-a).exp())
+                } else {
+                    let e = a.exp();
+                    e / (1.0 + e)
+                }
+            }
+            Activation::Tanh => a.tanh(),
+            Activation::Relu => a.max(0.0),
+        }
+    }
+
+    /// h'(a) expressed through the *output* z = h(a); this is what the
+    /// backward pass has in hand (paper: h'(a_i) = z_i (1 - z_i)).
+    #[inline]
+    pub fn grad_from_output(self, z: f32) -> f32 {
+        match self {
+            Activation::Sigmoid => z * (1.0 - z),
+            Activation::Tanh => 1.0 - z * z,
+            Activation::Relu => {
+                if z > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Activation> {
+        match s {
+            "sigmoid" => Some(Activation::Sigmoid),
+            "tanh" => Some(Activation::Tanh),
+            "relu" => Some(Activation::Relu),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Sigmoid => "sigmoid",
+            Activation::Tanh => "tanh",
+            Activation::Relu => "relu",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_values() {
+        let s = Activation::Sigmoid;
+        assert!((s.apply(0.0) - 0.5).abs() < 1e-7);
+        assert!(s.apply(100.0) > 0.9999);
+        assert!(s.apply(-100.0) < 1e-4);
+        assert!(s.apply(-1000.0).is_finite());
+        assert!(s.apply(1000.0).is_finite());
+    }
+
+    #[test]
+    fn sigmoid_grad_matches_finite_diff() {
+        let s = Activation::Sigmoid;
+        for &a in &[-3.0f32, -0.7, 0.0, 0.4, 2.5] {
+            let eps = 1e-3;
+            let fd = (s.apply(a + eps) - s.apply(a - eps)) / (2.0 * eps);
+            let z = s.apply(a);
+            assert!((s.grad_from_output(z) - fd).abs() < 1e-4, "a={a}");
+        }
+    }
+
+    #[test]
+    fn tanh_and_relu_grads() {
+        let t = Activation::Tanh;
+        let z = t.apply(0.3);
+        assert!((t.grad_from_output(z) - (1.0 - z * z)).abs() < 1e-7);
+        let r = Activation::Relu;
+        assert_eq!(r.apply(-2.0), 0.0);
+        assert_eq!(r.grad_from_output(0.0), 0.0);
+        assert_eq!(r.grad_from_output(1.5), 1.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in [Activation::Sigmoid, Activation::Tanh, Activation::Relu] {
+            assert_eq!(Activation::parse(a.name()), Some(a));
+        }
+        assert_eq!(Activation::parse("gelu"), None);
+    }
+}

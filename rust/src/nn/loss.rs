@@ -1,0 +1,189 @@
+//! Loss functions (paper Eq. 3: L is l2 or entropy loss).
+
+use crate::tensor::Matrix;
+
+use super::Labels;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// Softmax cross-entropy on a linear output layer (classification).
+    Xent,
+    /// 0.5 * mean_b ||y - f||² on a sigmoid output layer (paper's l2).
+    Mse,
+}
+
+impl Loss {
+    pub fn parse(s: &str) -> Option<Loss> {
+        match s {
+            "xent" => Some(Loss::Xent),
+            "mse" => Some(Loss::Mse),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Loss::Xent => "xent",
+            Loss::Mse => "mse",
+        }
+    }
+}
+
+/// Row-wise softmax in place (stable: shifted by row max).
+pub fn softmax_rows(m: &mut Matrix) {
+    let cols = m.cols();
+    for r in 0..m.rows() {
+        let row = m.row_mut(r);
+        let mut mx = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            mx = mx.max(v);
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+        debug_assert_eq!(row.len(), cols);
+    }
+}
+
+/// Mean loss value given the output-layer values (logits for Xent,
+/// sigmoid outputs for Mse).
+pub fn loss_value(loss: Loss, out: &Matrix, y: &Labels) -> f64 {
+    let batch = out.rows();
+    match (loss, y) {
+        (Loss::Xent, Labels::Class(cls)) => {
+            assert_eq!(cls.len(), batch);
+            let mut total = 0.0f64;
+            for r in 0..batch {
+                let row = out.row(r);
+                let mut mx = f32::NEG_INFINITY;
+                for &v in row {
+                    mx = mx.max(v);
+                }
+                let logz: f64 = row
+                    .iter()
+                    .map(|&v| ((v - mx) as f64).exp())
+                    .sum::<f64>()
+                    .ln()
+                    + mx as f64;
+                total += logz - row[cls[r] as usize] as f64;
+            }
+            total / batch as f64
+        }
+        (Loss::Mse, Labels::Dense(t)) => {
+            assert_eq!(t.rows(), batch);
+            let mut total = 0.0f64;
+            for (a, b) in out.data().iter().zip(t.data()) {
+                let d = (a - b) as f64;
+                total += d * d;
+            }
+            0.5 * total / batch as f64
+        }
+        _ => panic!("loss/label kind mismatch: {loss:?} vs labels"),
+    }
+}
+
+/// delta_M — the output-layer error term dE/da (already including the
+/// output nonlinearity), *not* divided by batch; grad accumulation divides.
+pub fn output_delta(loss: Loss, out: &Matrix, y: &Labels) -> Matrix {
+    let batch = out.rows();
+    match (loss, y) {
+        (Loss::Xent, Labels::Class(cls)) => {
+            // softmax(out) - onehot(y)
+            let mut d = out.clone();
+            softmax_rows(&mut d);
+            for r in 0..batch {
+                *d.at_mut(r, cls[r] as usize) -= 1.0;
+            }
+            d
+        }
+        (Loss::Mse, Labels::Dense(t)) => {
+            // out = sigmoid(a): dE/da = (out - y) * out (1 - out)
+            let mut d = Matrix::zeros(out.rows(), out.cols());
+            for i in 0..out.data().len() {
+                let o = out.data()[i];
+                d.data_mut()[i] = (o - t.data()[i]) * o * (1.0 - o);
+            }
+            d
+        }
+        _ => panic!("loss/label kind mismatch"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut m = Matrix::from_vec(2, 3, vec![1., 2., 3., -50., 0., 50.]);
+        softmax_rows(&mut m);
+        for r in 0..2 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(m.at(1, 2) > 0.999); // dominated row
+        assert!(m.at(1, 0) >= 0.0);
+    }
+
+    #[test]
+    fn xent_of_perfect_prediction_is_small() {
+        let out = Matrix::from_vec(1, 3, vec![50.0, 0.0, 0.0]);
+        let y = Labels::Class(vec![0]);
+        assert!(loss_value(Loss::Xent, &out, &y) < 1e-6);
+        let worst = Labels::Class(vec![1]);
+        assert!(loss_value(Loss::Xent, &out, &worst) > 10.0);
+    }
+
+    #[test]
+    fn xent_uniform_is_log_k() {
+        let out = Matrix::zeros(4, 5);
+        let y = Labels::Class(vec![0, 1, 2, 3]);
+        let l = loss_value(Loss::Xent, &out, &y);
+        assert!((l - (5.0f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mse_value() {
+        let out = Matrix::from_vec(2, 2, vec![1., 0., 0.5, 0.5]);
+        let t = Matrix::from_vec(2, 2, vec![0., 0., 0.5, 0.5]);
+        let l = loss_value(Loss::Mse, &out, &Labels::Dense(t));
+        assert!((l - 0.25).abs() < 1e-7); // 0.5 * (1) / 2
+    }
+
+    #[test]
+    fn xent_delta_rows_sum_to_zero() {
+        let out = Matrix::from_vec(2, 3, vec![0.3, -1.0, 2.0, 0.0, 0.0, 0.0]);
+        let d = output_delta(Loss::Xent, &out, &Labels::Class(vec![2, 0]));
+        for r in 0..2 {
+            let s: f32 = d.row(r).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        // true-class entry is negative
+        assert!(d.at(0, 2) < 0.0);
+    }
+
+    #[test]
+    fn delta_matches_finite_diff_of_loss() {
+        // d loss*batch / d out[r][c] == delta (Xent case)
+        let out = Matrix::from_vec(1, 3, vec![0.2, -0.4, 0.9]);
+        let y = Labels::Class(vec![1]);
+        let d = output_delta(Loss::Xent, &out, &y);
+        let eps = 1e-3;
+        for c in 0..3 {
+            let mut p = out.clone();
+            *p.at_mut(0, c) += eps;
+            let mut m = out.clone();
+            *m.at_mut(0, c) -= eps;
+            let fd = (loss_value(Loss::Xent, &p, &y)
+                - loss_value(Loss::Xent, &m, &y))
+                / (2.0 * eps as f64);
+            assert!((fd - d.at(0, c) as f64).abs() < 1e-4, "c={c}");
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! The MLP engine: forward pass and the paper's layerwise backpropagation
+//! (Eq. 6), allocation-free per step after warmup via `Workspace`.
+
+use crate::tensor::{gemm, gemm_nt, gemm_tn, Matrix};
+
+use super::loss::{loss_value, output_delta};
+use super::{Activation, GradSet, Labels, Loss, ParamSet};
+
+/// Model definition: layer dims, hidden activation, loss.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub dims: Vec<usize>,
+    pub activation: Activation,
+    pub loss: Loss,
+}
+
+/// Reusable per-batch buffers: activations z_0..z_M and two delta buffers.
+/// Reused across minibatches so the hot training loop does not allocate.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    acts: Vec<Matrix>,
+    deltas: Vec<Matrix>,
+    batch: usize,
+}
+
+impl Mlp {
+    pub fn new(dims: Vec<usize>, activation: Activation, loss: Loss) -> Mlp {
+        assert!(dims.len() >= 2);
+        Mlp {
+            dims,
+            activation,
+            loss,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.dims
+            .windows(2)
+            .map(|w| w[0] * w[1] + w[1])
+            .sum()
+    }
+
+    fn ensure_ws(&self, ws: &mut Workspace, batch: usize) {
+        if ws.batch == batch && ws.acts.len() == self.dims.len() {
+            return;
+        }
+        ws.acts = self
+            .dims
+            .iter()
+            .map(|&d| Matrix::zeros(batch, d))
+            .collect();
+        // delta buffers: one per layer width (excluding input)
+        ws.deltas = self.dims[1..]
+            .iter()
+            .map(|&d| Matrix::zeros(batch, d))
+            .collect();
+        ws.batch = batch;
+    }
+
+    /// Forward pass; returns the output-layer values (logits for Xent,
+    /// sigmoid outputs for Mse). Activations are left in `ws.acts`.
+    pub fn forward_ws(&self, p: &ParamSet, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        assert_eq!(x.cols(), self.dims[0], "input width");
+        assert_eq!(p.layers.len(), self.n_layers());
+        let batch = x.rows();
+        self.ensure_ws(ws, batch);
+        ws.acts[0] = x.clone();
+        let m_top = self.n_layers() - 1;
+        for m in 0..=m_top {
+            let lp = &p.layers[m];
+            // a = z_prev @ w + b
+            let (prev, rest) = ws.acts.split_at_mut(m + 1);
+            let z_prev = &prev[m];
+            let a = &mut rest[0];
+            a.fill(0.0);
+            gemm(z_prev, &lp.w, a);
+            for r in 0..batch {
+                let row = a.row_mut(r);
+                for (v, b) in row.iter_mut().zip(&lp.b) {
+                    *v += b;
+                }
+            }
+            let is_output = m == m_top;
+            if !is_output {
+                let act = self.activation;
+                a.map_inplace(|v| act.apply(v));
+            } else if self.loss == Loss::Mse {
+                a.map_inplace(|v| Activation::Sigmoid.apply(v));
+            }
+        }
+        ws.acts[m_top + 1].clone()
+    }
+
+    /// Convenience forward without an external workspace.
+    pub fn forward(&self, p: &ParamSet, x: &Matrix) -> Matrix {
+        let mut ws = Workspace::default();
+        self.forward_ws(p, x, &mut ws)
+    }
+
+    /// Objective value E (Eq. 3) on a minibatch.
+    pub fn objective(&self, p: &ParamSet, x: &Matrix, y: &Labels) -> f64 {
+        let out = self.forward(p, x);
+        loss_value(self.loss, &out, y)
+    }
+
+    /// The paper's layerwise backprop (Eq. 6): returns (loss, grads).
+    /// Gradients are batch-mean: dE/dw for E = mean over the minibatch.
+    pub fn loss_and_grads_ws(
+        &self,
+        p: &ParamSet,
+        x: &Matrix,
+        y: &Labels,
+        ws: &mut Workspace,
+        grads: &mut GradSet,
+    ) -> f64 {
+        let batch = x.rows();
+        assert_eq!(y.len(), batch, "labels/batch mismatch");
+        let out = self.forward_ws(p, x, ws);
+        let loss = loss_value(self.loss, &out, y);
+
+        let m_top = self.n_layers() - 1;
+        let inv_b = 1.0 / batch as f32;
+
+        // delta_M at the output layer
+        ws.deltas[m_top] = output_delta(self.loss, &out, y);
+
+        // walk down: grads for layer m need delta_{m+1-indexed} and z_m
+        for m in (0..=m_top).rev() {
+            // grads: dW = z_m^T @ delta / B ; db = mean_b delta
+            let gl = &mut grads.layers[m];
+            gl.w.fill(0.0);
+            gemm_tn(&ws.acts[m], &ws.deltas[m], &mut gl.w);
+            gl.w.scale(inv_b);
+            gl.b.fill(0.0);
+            for r in 0..batch {
+                for (bv, dv) in gl.b.iter_mut().zip(ws.deltas[m].row(r)) {
+                    *bv += dv;
+                }
+            }
+            for bv in &mut gl.b {
+                *bv *= inv_b;
+            }
+            if m > 0 {
+                // delta_{m-1} = h'(a_{m-1}) * (delta_m @ w_m^T)
+                let (lower, upper) = ws.deltas.split_at_mut(m);
+                let dst = &mut lower[m - 1];
+                dst.fill(0.0);
+                gemm_nt(&upper[0], &p.layers[m].w, dst);
+                let act = self.activation;
+                let z = &ws.acts[m];
+                for (dv, zv) in dst.data_mut().iter_mut().zip(z.data()) {
+                    *dv *= act.grad_from_output(*zv);
+                }
+            }
+        }
+        loss
+    }
+
+    /// Allocating convenience wrapper.
+    pub fn loss_and_grads(&self, p: &ParamSet, x: &Matrix, y: &Labels) -> (f64, GradSet) {
+        let mut ws = Workspace::default();
+        let mut grads = p.zeros_like();
+        let loss = self.loss_and_grads_ws(p, x, y, &mut ws, &mut grads);
+        (loss, grads)
+    }
+
+    /// Plain SGD step: p -= eta * grads (Eq. 6's undistributed update).
+    pub fn sgd_step(&self, p: &mut ParamSet, grads: &GradSet, eta: f32) {
+        p.axpy(-eta, grads);
+    }
+
+    /// Classification accuracy (Xent models only).
+    pub fn accuracy(&self, p: &ParamSet, x: &Matrix, y: &Labels) -> f64 {
+        let out = self.forward(p, x);
+        let Labels::Class(cls) = y else {
+            panic!("accuracy requires class labels")
+        };
+        let mut hits = 0usize;
+        for r in 0..out.rows() {
+            let row = out.row(r);
+            let mut best = 0usize;
+            for c in 1..row.len() {
+                if row[c] > row[best] {
+                    best = c;
+                }
+            }
+            if best == cls[r] as usize {
+                hits += 1;
+            }
+        }
+        hits as f64 / out.rows() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn tiny() -> (Mlp, ParamSet, Matrix, Labels) {
+        let mlp = Mlp::new(vec![5, 8, 4, 3], Activation::Sigmoid, Loss::Xent);
+        let mut rng = Pcg64::new(42);
+        let p = ParamSet::glorot(&mlp.dims, &mut rng);
+        let x = Matrix::randn(6, 5, 1.0, &mut rng);
+        let y = Labels::Class((0..6).map(|i| (i % 3) as u32).collect());
+        (mlp, p, x, y)
+    }
+
+    #[test]
+    fn grads_match_finite_differences() {
+        let (mlp, p, x, y) = tiny();
+        let (_, grads) = mlp.loss_and_grads(&p, &x, &y);
+        let eps = 1e-3f32;
+        for m in 0..mlp.n_layers() {
+            // check a few weight coords + one bias coord per layer
+            for &(r, c) in &[(0usize, 0usize), (1, 2)] {
+                let mut pp = p.clone();
+                *pp.layers[m].w.at_mut(r, c) += eps;
+                let mut pm = p.clone();
+                *pm.layers[m].w.at_mut(r, c) -= eps;
+                let fd = (mlp.objective(&pp, &x, &y) - mlp.objective(&pm, &x, &y))
+                    / (2.0 * eps as f64);
+                let got = grads.layers[m].w.at(r, c) as f64;
+                assert!(
+                    (fd - got).abs() < 2e-3,
+                    "layer {m} w[{r}{c}]: fd={fd} got={got}"
+                );
+            }
+            let mut pp = p.clone();
+            pp.layers[m].b[0] += eps;
+            let mut pm = p.clone();
+            pm.layers[m].b[0] -= eps;
+            let fd = (mlp.objective(&pp, &x, &y) - mlp.objective(&pm, &x, &y))
+                / (2.0 * eps as f64);
+            let got = grads.layers[m].b[0] as f64;
+            assert!((fd - got).abs() < 2e-3, "layer {m} b[0]");
+        }
+    }
+
+    #[test]
+    fn grads_match_finite_differences_mse() {
+        let mlp = Mlp::new(vec![4, 6, 2], Activation::Sigmoid, Loss::Mse);
+        let mut rng = Pcg64::new(7);
+        let p = ParamSet::glorot(&mlp.dims, &mut rng);
+        let x = Matrix::randn(5, 4, 1.0, &mut rng);
+        let t = Matrix::from_fn(5, 2, |r, c| ((r + c) % 2) as f32);
+        let y = Labels::Dense(t);
+        let (_, grads) = mlp.loss_and_grads(&p, &x, &y);
+        let eps = 1e-3f32;
+        let mut pp = p.clone();
+        *pp.layers[0].w.at_mut(1, 1) += eps;
+        let mut pm = p.clone();
+        *pm.layers[0].w.at_mut(1, 1) -= eps;
+        let fd = (mlp.objective(&pp, &x, &y) - mlp.objective(&pm, &x, &y))
+            / (2.0 * eps as f64);
+        assert!((fd - grads.layers[0].w.at(1, 1) as f64).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let (mlp, mut p, x, y) = tiny();
+        let first = mlp.objective(&p, &x, &y);
+        let mut ws = Workspace::default();
+        let mut g = p.zeros_like();
+        for _ in 0..200 {
+            mlp.loss_and_grads_ws(&p, &x, &y, &mut ws, &mut g);
+            mlp.sgd_step(&mut p, &g, 0.5);
+        }
+        let last = mlp.objective(&p, &x, &y);
+        assert!(last < 0.5 * first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh() {
+        let (mlp, p, x, y) = tiny();
+        let (l1, g1) = mlp.loss_and_grads(&p, &x, &y);
+        let mut ws = Workspace::default();
+        let mut g2 = p.zeros_like();
+        // run twice through the same workspace; second result must match
+        mlp.loss_and_grads_ws(&p, &x, &y, &mut ws, &mut g2);
+        let l2 = mlp.loss_and_grads_ws(&p, &x, &y, &mut ws, &mut g2);
+        assert_eq!(l1, l2);
+        for (a, b) in g1.layers.iter().zip(&g2.layers) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.b, b.b);
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_accuracy_range() {
+        let (mlp, p, x, y) = tiny();
+        let out = mlp.forward(&p, &x);
+        assert_eq!((out.rows(), out.cols()), (6, 3));
+        let acc = mlp.accuracy(&p, &x, &y);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn batch_size_change_reallocates_workspace() {
+        let (mlp, p, x, y) = tiny();
+        let mut ws = Workspace::default();
+        let mut g = p.zeros_like();
+        mlp.loss_and_grads_ws(&p, &x, &y, &mut ws, &mut g);
+        let x2 = Matrix::zeros(2, 5);
+        let y2 = Labels::Class(vec![0, 1]);
+        let l = mlp.loss_and_grads_ws(&p, &x2, &y2, &mut ws, &mut g);
+        assert!(l.is_finite());
+    }
+}

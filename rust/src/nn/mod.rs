@@ -1,0 +1,39 @@
+//! Native DNN engine: the paper's sigmoid MLP with exact layerwise
+//! backpropagation (Eq. 6).
+//!
+//! This is (a) the PJRT-free fallback for model shapes without a pre-built
+//! artifact, (b) the correctness oracle the PJRT path is integration-tested
+//! against, and (c) the compute engine the cluster simulator drives when
+//! sweeping architectures in benches.
+
+mod activation;
+mod loss;
+mod mlp;
+mod optim;
+mod params;
+
+pub use activation::Activation;
+pub use loss::{loss_value, softmax_rows, Loss};
+pub use mlp::{Mlp, Workspace};
+pub use optim::{OptimState, Optimizer};
+pub use params::{layer_shapes, GradSet, LayerParams, LayerShape, ParamSet};
+
+/// Class labels (cross-entropy) or dense targets (MSE), batch-first.
+#[derive(Clone, Debug)]
+pub enum Labels {
+    Class(Vec<u32>),
+    Dense(crate::tensor::Matrix),
+}
+
+impl Labels {
+    pub fn len(&self) -> usize {
+        match self {
+            Labels::Class(v) => v.len(),
+            Labels::Dense(m) => m.rows(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

@@ -1,0 +1,182 @@
+//! Local optimizers applied by each worker before committing updates.
+//!
+//! The paper trains with plain SGD (Eq. 6). Momentum and weight decay are
+//! provided as the natural extensions a deployment wants — and because
+//! *momentum interacts with staleness* (stale heavy-ball updates compound
+//! drift), which `benches/ablation_momentum.rs` quantifies.
+//!
+//! An optimizer turns a raw gradient into the additive update the worker
+//! commits: `u = -eta * step(grad)`. State (velocity) is per-worker local,
+//! mirroring how momentum is deployed on parameter servers (workers keep
+//! velocity, the server stays a dumb adder — updates remain associative).
+
+use super::{GradSet, ParamSet};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Optimizer {
+    /// Plain SGD (the paper's Eq. 6).
+    Sgd,
+    /// Heavy-ball: v ← m·v + g; update uses v.
+    Momentum { m: f32 },
+    /// Nesterov accelerated gradient (lookahead form).
+    Nesterov { m: f32 },
+}
+
+impl Optimizer {
+    pub fn parse(s: &str) -> Option<Optimizer> {
+        match s {
+            "sgd" => Some(Optimizer::Sgd),
+            "momentum" => Some(Optimizer::Momentum { m: 0.9 }),
+            "nesterov" => Some(Optimizer::Nesterov { m: 0.9 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Optimizer::Sgd => "sgd".into(),
+            Optimizer::Momentum { m } => format!("momentum({m})"),
+            Optimizer::Nesterov { m } => format!("nesterov({m})"),
+        }
+    }
+}
+
+/// Per-worker optimizer state.
+#[derive(Debug)]
+pub struct OptimState {
+    opt: Optimizer,
+    /// L2 weight-decay coefficient (0 = off); applied as g + wd·w.
+    weight_decay: f32,
+    velocity: Option<GradSet>,
+    /// Scratch for the effective step (avoids allocating per minibatch).
+    step: Option<GradSet>,
+}
+
+impl OptimState {
+    pub fn new(opt: Optimizer, weight_decay: f32) -> OptimState {
+        OptimState {
+            opt,
+            weight_decay,
+            velocity: None,
+            step: None,
+        }
+    }
+
+    pub fn optimizer(&self) -> Optimizer {
+        self.opt
+    }
+
+    /// Compute the effective descent direction for `grads` at `params`
+    /// (weight decay needs params). Returns a reference into internal
+    /// scratch — copy via axpy into the worker's pending update.
+    pub fn direction(&mut self, params: &ParamSet, grads: &GradSet) -> &GradSet {
+        let step = self
+            .step
+            .get_or_insert_with(|| grads.zeros_like());
+        // step = grads (+ wd * params)
+        step.fill_zero();
+        step.axpy(1.0, grads);
+        if self.weight_decay != 0.0 {
+            step.axpy(self.weight_decay, params);
+        }
+        match self.opt {
+            Optimizer::Sgd => {}
+            Optimizer::Momentum { m } => {
+                let v = self
+                    .velocity
+                    .get_or_insert_with(|| grads.zeros_like());
+                // v = m v + step ; step = v
+                v.scale(m);
+                v.axpy(1.0, step);
+                step.fill_zero();
+                step.axpy(1.0, v);
+            }
+            Optimizer::Nesterov { m } => {
+                let v = self
+                    .velocity
+                    .get_or_insert_with(|| grads.zeros_like());
+                // v = m v + step ; step = step + m v   (lookahead)
+                v.scale(m);
+                v.axpy(1.0, step);
+                step.axpy(m, v);
+            }
+        }
+        self.step.as_ref().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ParamSet;
+    use crate::util::Pcg64;
+
+    fn grad_of(p: &ParamSet) -> GradSet {
+        // quadratic bowl: dE/dw = w
+        p.clone()
+    }
+
+    fn run(opt: Optimizer, eta: f32, steps: usize) -> f64 {
+        let mut rng = Pcg64::new(0);
+        let mut p = ParamSet::glorot(&[4, 4], &mut rng);
+        let mut st = OptimState::new(opt, 0.0);
+        for _ in 0..steps {
+            let g = grad_of(&p);
+            let dir = st.direction(&p, &g).clone();
+            p.axpy(-eta, &dir);
+        }
+        p.norm()
+    }
+
+    #[test]
+    fn sgd_contracts_quadratic() {
+        let n = run(Optimizer::Sgd, 0.1, 50);
+        assert!(n < 1e-2, "norm {n}");
+    }
+
+    #[test]
+    fn momentum_beats_sgd_on_small_eta() {
+        let sgd = run(Optimizer::Sgd, 0.02, 60);
+        let mom = run(Optimizer::Momentum { m: 0.9 }, 0.02, 60);
+        assert!(mom < sgd, "momentum {mom} vs sgd {sgd}");
+    }
+
+    #[test]
+    fn nesterov_contracts() {
+        let n = run(Optimizer::Nesterov { m: 0.9 }, 0.02, 80);
+        assert!(n < 1e-2, "norm {n}");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights_under_zero_grad() {
+        let mut rng = Pcg64::new(1);
+        let p = ParamSet::glorot(&[3, 3], &mut rng);
+        let zeros = p.zeros_like();
+        let mut st = OptimState::new(Optimizer::Sgd, 0.5);
+        let dir = st.direction(&p, &zeros);
+        // direction = 0.5 * p
+        let mut want = p.clone();
+        want.scale(0.5);
+        assert!(dir.dist_sq(&want) < 1e-10);
+    }
+
+    #[test]
+    fn sgd_direction_is_identity_on_grads() {
+        let mut rng = Pcg64::new(2);
+        let p = ParamSet::glorot(&[3, 2], &mut rng);
+        let g = ParamSet::glorot(&[3, 2], &mut rng);
+        let mut st = OptimState::new(Optimizer::Sgd, 0.0);
+        assert!(st.direction(&p, &g).dist_sq(&g) < 1e-12);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Optimizer::parse("sgd"), Some(Optimizer::Sgd));
+        assert_eq!(
+            Optimizer::parse("momentum"),
+            Some(Optimizer::Momentum { m: 0.9 })
+        );
+        assert!(Optimizer::parse("adamw").is_none());
+        assert_eq!(Optimizer::Momentum { m: 0.9 }.name(), "momentum(0.9)");
+    }
+}

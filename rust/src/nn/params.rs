@@ -1,0 +1,309 @@
+//! Parameter and gradient containers, kept *layerwise* — the unit of
+//! synchronization in the SSP scheme (paper: "layerwise independent
+//! updates").
+
+use crate::tensor::Matrix;
+use crate::util::Pcg64;
+
+/// Shape of one layer's parameters: w is `(fan_in, fan_out)` (the paper's
+/// w^{(m+1,m)} stored input-major), b is `(fan_out,)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerShape {
+    pub fan_in: usize,
+    pub fan_out: usize,
+}
+
+impl LayerShape {
+    pub fn n_params(&self) -> usize {
+        self.fan_in * self.fan_out + self.fan_out
+    }
+}
+
+/// All layer shapes for a dims chain `[d0, d1, ..., dM]`.
+pub fn layer_shapes(dims: &[usize]) -> Vec<LayerShape> {
+    assert!(dims.len() >= 2, "need at least input+output dims");
+    dims.windows(2)
+        .map(|w| LayerShape {
+            fan_in: w[0],
+            fan_out: w[1],
+        })
+        .collect()
+}
+
+/// One layer's parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerParams {
+    pub w: Matrix,
+    pub b: Vec<f32>,
+}
+
+/// Full parameter state of the DNN — `layers[m]` is w^{(m+1,m)}, b^{(m+1)}.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    pub layers: Vec<LayerParams>,
+}
+
+/// Gradients (or additive updates), same layerwise structure as ParamSet.
+pub type GradSet = ParamSet;
+
+impl ParamSet {
+    /// Glorot-uniform init matching `python/compile/model.init_params`.
+    pub fn glorot(dims: &[usize], rng: &mut Pcg64) -> ParamSet {
+        let layers = layer_shapes(dims)
+            .iter()
+            .map(|s| LayerParams {
+                w: Matrix::glorot(s.fan_in, s.fan_out, rng),
+                b: vec![0.0; s.fan_out],
+            })
+            .collect();
+        ParamSet { layers }
+    }
+
+    pub fn zeros_like(&self) -> ParamSet {
+        ParamSet {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerParams {
+                    w: Matrix::zeros(l.w.rows(), l.w.cols()),
+                    b: vec![0.0; l.b.len()],
+                })
+                .collect(),
+        }
+    }
+
+    pub fn zeros(dims: &[usize]) -> ParamSet {
+        ParamSet {
+            layers: layer_shapes(dims)
+                .iter()
+                .map(|s| LayerParams {
+                    w: Matrix::zeros(s.fan_in, s.fan_out),
+                    b: vec![0.0; s.fan_out],
+                })
+                .collect(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.w.len() + l.b.len())
+            .sum()
+    }
+
+    pub fn shapes(&self) -> Vec<LayerShape> {
+        self.layers
+            .iter()
+            .map(|l| LayerShape {
+                fan_in: l.w.rows(),
+                fan_out: l.w.cols(),
+            })
+            .collect()
+    }
+
+    /// self += alpha * other, layerwise (the SSP additive update).
+    pub fn axpy(&mut self, alpha: f32, other: &ParamSet) {
+        assert_eq!(self.layers.len(), other.layers.len());
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            a.w.axpy(alpha, &b.w);
+            for (x, y) in a.b.iter_mut().zip(&b.b) {
+                *x += alpha * y;
+            }
+        }
+    }
+
+    /// self += alpha * other, one layer only (layerwise independent apply).
+    pub fn axpy_layer(&mut self, layer: usize, alpha: f32, other: &LayerParams) {
+        let l = &mut self.layers[layer];
+        l.w.axpy(alpha, &other.w);
+        for (x, y) in l.b.iter_mut().zip(&other.b) {
+            *x += alpha * y;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for l in &mut self.layers {
+            l.w.scale(alpha);
+            for b in &mut l.b {
+                *b *= alpha;
+            }
+        }
+    }
+
+    pub fn fill_zero(&mut self) {
+        for l in &mut self.layers {
+            l.w.fill(0.0);
+            l.b.fill(0.0);
+        }
+    }
+
+    /// Squared l2 norm over all parameters.
+    pub fn norm_sq(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.w.norm_sq()
+                    + l.b.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+            })
+            .sum()
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    /// Per-layer squared l2 norms (theory: layerwise contraction, Thm 2).
+    pub fn layer_norms_sq(&self) -> Vec<f64> {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.w.norm_sq()
+                    + l.b.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+            })
+            .collect()
+    }
+
+    /// ||self - other||², total and per-layer (Thm 1/3 distance).
+    pub fn dist_sq(&self, other: &ParamSet) -> f64 {
+        self.layer_dist_sq(other).iter().sum()
+    }
+
+    pub fn layer_dist_sq(&self, other: &ParamSet) -> Vec<f64> {
+        assert_eq!(self.layers.len(), other.layers.len());
+        self.layers
+            .iter()
+            .zip(&other.layers)
+            .map(|(a, b)| {
+                let mut s = 0.0f64;
+                for (x, y) in a.w.data().iter().zip(b.w.data()) {
+                    let d = (x - y) as f64;
+                    s += d * d;
+                }
+                for (x, y) in a.b.iter().zip(&b.b) {
+                    let d = (x - y) as f64;
+                    s += d * d;
+                }
+                s
+            })
+            .collect()
+    }
+
+    /// Mean squared elementwise diff over all parameters — Fig. 6's metric.
+    pub fn mean_sq_diff(&self, other: &ParamSet) -> f64 {
+        let n = self.n_params();
+        if n == 0 {
+            0.0
+        } else {
+            self.dist_sq(other) / n as f64
+        }
+    }
+
+    /// Flatten to `[w0 (row-major), b0, w1, b1, ...]` — the artifact
+    /// argument order (`model.arg_specs` on the python side).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n_params());
+        for l in &self.layers {
+            out.extend_from_slice(l.w.data());
+            out.extend_from_slice(&l.b);
+        }
+        out
+    }
+
+    /// Inverse of `flatten` given the dims chain.
+    pub fn unflatten(dims: &[usize], flat: &[f32]) -> ParamSet {
+        let mut layers = Vec::new();
+        let mut off = 0;
+        for s in layer_shapes(dims) {
+            let wlen = s.fan_in * s.fan_out;
+            let w = Matrix::from_vec(
+                s.fan_in,
+                s.fan_out,
+                flat[off..off + wlen].to_vec(),
+            );
+            off += wlen;
+            let b = flat[off..off + s.fan_out].to_vec();
+            off += s.fan_out;
+            layers.push(LayerParams { w, b });
+        }
+        assert_eq!(off, flat.len(), "flat length mismatch");
+        ParamSet { layers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> Vec<usize> {
+        vec![4, 6, 3]
+    }
+
+    #[test]
+    fn shapes_and_counts() {
+        let shapes = layer_shapes(&dims());
+        assert_eq!(shapes.len(), 2);
+        assert_eq!(shapes[0].n_params(), 4 * 6 + 6);
+        let p = ParamSet::zeros(&dims());
+        assert_eq!(p.n_params(), 4 * 6 + 6 + 6 * 3 + 3);
+        assert_eq!(p.n_layers(), 2);
+    }
+
+    #[test]
+    fn axpy_layerwise_matches_full() {
+        let mut rng = Pcg64::new(0);
+        let a = ParamSet::glorot(&dims(), &mut rng);
+        let g = ParamSet::glorot(&dims(), &mut rng);
+        let mut full = a.clone();
+        full.axpy(-0.5, &g);
+        let mut by_layer = a.clone();
+        for (m, l) in g.layers.iter().enumerate() {
+            by_layer.axpy_layer(m, -0.5, l);
+        }
+        assert_eq!(full, by_layer);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let p = ParamSet::glorot(&dims(), &mut rng);
+        let flat = p.flatten();
+        assert_eq!(flat.len(), p.n_params());
+        let q = ParamSet::unflatten(&dims(), &flat);
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn distances() {
+        let a = ParamSet::zeros(&dims());
+        let mut b = ParamSet::zeros(&dims());
+        *b.layers[0].w.at_mut(0, 0) = 3.0;
+        b.layers[1].b[2] = 4.0;
+        assert!((a.dist_sq(&b) - 25.0).abs() < 1e-9);
+        let per = a.layer_dist_sq(&b);
+        assert!((per[0] - 9.0).abs() < 1e-9);
+        assert!((per[1] - 16.0).abs() < 1e-9);
+        assert!((a.mean_sq_diff(&b) - 25.0 / a.n_params() as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norms() {
+        let mut p = ParamSet::zeros(&dims());
+        p.layers[0].w.fill(2.0);
+        let expect = (4 * 6) as f64 * 4.0;
+        assert!((p.norm_sq() - expect).abs() < 1e-9);
+        p.scale(0.5);
+        assert!((p.norm_sq() - expect / 4.0).abs() < 1e-9);
+        p.fill_zero();
+        assert_eq!(p.norm_sq(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unflatten_length_mismatch_panics() {
+        ParamSet::unflatten(&dims(), &[0.0; 10]);
+    }
+}

@@ -1,0 +1,243 @@
+//! artifacts/manifest.json — the contract between `python/compile/aot.py`
+//! and the Rust runtime: per-artifact shapes, dtypes and argument order.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    /// "step" (loss+grads) or "forward".
+    pub kind: String,
+    pub layer_dims: Vec<usize>,
+    pub batch: usize,
+    pub loss: String,
+    /// "jnp" (autodiff) or "pallas" (layerwise manual backprop).
+    pub impl_: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>, String> {
+    j.as_arr()
+        .ok_or("specs not an array")?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or("spec.name")?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or("spec.shape")?,
+                dtype: t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or("spec.dtype")?
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`; artifact file paths resolve within dir.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let format = j.get("format").and_then(Json::as_usize).ok_or("format")?;
+        if format != 1 {
+            return Err(format!("unsupported manifest format {format}"));
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or("artifacts")?;
+        let mut manifest = Manifest::default();
+        for (name, a) in arts {
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(a.get("file").and_then(Json::as_str).ok_or("file")?),
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("step")
+                    .to_string(),
+                layer_dims: a
+                    .get("layer_dims")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or("layer_dims")?,
+                batch: a.get("batch").and_then(Json::as_usize).ok_or("batch")?,
+                loss: a
+                    .get("loss")
+                    .and_then(Json::as_str)
+                    .unwrap_or("xent")
+                    .to_string(),
+                impl_: a
+                    .get("impl")
+                    .and_then(Json::as_str)
+                    .unwrap_or("jnp")
+                    .to_string(),
+                inputs: tensor_specs(a.get("inputs").ok_or("inputs")?)?,
+                outputs: tensor_specs(a.get("outputs").ok_or("outputs")?)?,
+            };
+            manifest.artifacts.insert(name.clone(), spec);
+        }
+        Ok(manifest)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+impl ArtifactSpec {
+    /// Sanity-check the manifest entry against its own dims chain: the
+    /// flat input order must be [w0, b0, ..., x(, y)] and a step
+    /// artifact's outputs [loss, g_w0, g_b0, ...].
+    pub fn validate(&self) -> Result<(), String> {
+        let dims = &self.layer_dims;
+        let n_layers = dims.len() - 1;
+        let want_inputs = 2 * n_layers + if self.kind == "step" { 2 } else { 1 };
+        if self.inputs.len() != want_inputs {
+            return Err(format!(
+                "{}: {} inputs, expected {want_inputs}",
+                self.name,
+                self.inputs.len()
+            ));
+        }
+        for m in 0..n_layers {
+            let w = &self.inputs[2 * m];
+            if w.shape != [dims[m], dims[m + 1]] {
+                return Err(format!("{}: bad w{m} shape {:?}", self.name, w.shape));
+            }
+            let b = &self.inputs[2 * m + 1];
+            if b.shape != [dims[m + 1]] {
+                return Err(format!("{}: bad b{m} shape {:?}", self.name, b.shape));
+            }
+        }
+        let x = &self.inputs[2 * n_layers];
+        if x.shape != [self.batch, dims[0]] {
+            return Err(format!("{}: bad x shape {:?}", self.name, x.shape));
+        }
+        if self.kind == "step" {
+            if self.outputs.len() != 1 + 2 * n_layers {
+                return Err(format!("{}: bad output count", self.name));
+            }
+            if !self.outputs[0].shape.is_empty() {
+                return Err(format!("{}: loss must be scalar", self.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "artifacts": {
+        "tiny": {
+          "file": "tiny.hlo.txt",
+          "kind": "step",
+          "layer_dims": [4, 3, 2],
+          "batch": 5,
+          "loss": "xent",
+          "impl": "jnp",
+          "inputs": [
+            {"name": "w0", "shape": [4, 3], "dtype": "float32"},
+            {"name": "b0", "shape": [3], "dtype": "float32"},
+            {"name": "w1", "shape": [3, 2], "dtype": "float32"},
+            {"name": "b1", "shape": [2], "dtype": "float32"},
+            {"name": "x", "shape": [5, 4], "dtype": "float32"},
+            {"name": "y", "shape": [5], "dtype": "int32"}
+          ],
+          "outputs": [
+            {"name": "loss", "shape": [], "dtype": "float32"},
+            {"name": "g_w0", "shape": [4, 3], "dtype": "float32"},
+            {"name": "g_b0", "shape": [3], "dtype": "float32"},
+            {"name": "g_w1", "shape": [3, 2], "dtype": "float32"},
+            {"name": "g_b1", "shape": [2], "dtype": "float32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_and_validate() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let a = m.get("tiny").unwrap();
+        assert_eq!(a.file, PathBuf::from("/tmp/a/tiny.hlo.txt"));
+        assert_eq!(a.batch, 5);
+        assert_eq!(a.inputs.len(), 6);
+        assert_eq!(a.inputs[5].dtype, "int32");
+        a.validate().unwrap();
+        assert_eq!(m.names(), vec!["tiny"]);
+    }
+
+    #[test]
+    fn validate_catches_shape_errors() {
+        let mut m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let a = m.artifacts.get_mut("tiny").unwrap();
+        a.inputs[0].shape = vec![9, 9];
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": 2, "artifacts": {}}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse("not json", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration: if `make artifacts` has run, the real manifest must
+        // parse and validate.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("tiny").is_some());
+            for (_, a) in &m.artifacts {
+                a.validate().unwrap();
+                assert!(a.file.exists(), "{} missing", a.file.display());
+            }
+        }
+    }
+}

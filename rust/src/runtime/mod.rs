@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and run them on the
+//! training path — Python never executes at run time.
+//!
+//! Flow (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! (HLO *text*, the interchange format that survives the jax≥0.5 /
+//! xla_extension 0.5.1 proto-id mismatch) → `XlaComputation::from_proto`
+//! → `PjRtClient::compile` → `execute`.
+
+mod manifest;
+mod pjrt;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use pjrt::PjrtEngine;

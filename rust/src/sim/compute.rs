@@ -1,0 +1,133 @@
+//! Per-worker compute-time model.
+//!
+//! Each worker is one machine of the paper's testbed (16 cores). The
+//! virtual duration of one clock is
+//!
+//!   batches_per_clock × per_batch_s × straggler_multiplier
+//!
+//! `per_batch_s` is either calibrated from a real measured gradient step
+//! on this host (scaled by the machine-parallelism factor) or set
+//! explicitly. Stragglers follow the standard two-part model: lognormal
+//! jitter on every clock plus rare severe slowdowns (GC pauses, page
+//! faults, co-tenants) — exactly the variance SSP is designed to absorb.
+
+use crate::config::ClusterConfig;
+use crate::util::Pcg64;
+
+#[derive(Debug)]
+pub struct ComputeModel {
+    per_batch_s: f64,
+    straggler_sigma: f64,
+    straggler_prob: f64,
+    straggler_factor: f64,
+    rng: Pcg64,
+    /// Per-worker persistent speed factor (hardware heterogeneity).
+    worker_speed: Vec<f64>,
+}
+
+impl ComputeModel {
+    pub fn new(cfg: &ClusterConfig, per_batch_s: f64, workers: usize, mut rng: Pcg64) -> Self {
+        // mild persistent heterogeneity: ±5% per machine
+        let worker_speed = (0..workers)
+            .map(|_| 1.0 + 0.05 * rng.normal())
+            .map(|v: f64| v.clamp(0.8, 1.2))
+            .collect();
+        ComputeModel {
+            per_batch_s,
+            straggler_sigma: cfg.straggler_sigma,
+            straggler_prob: cfg.straggler_prob,
+            straggler_factor: cfg.straggler_factor,
+            rng,
+            worker_speed,
+        }
+    }
+
+    /// Calibrate from a measured host per-batch gradient time: a paper
+    /// machine runs `cores` cores at ~70% parallel efficiency on the
+    /// minibatch (the intra-machine parallelism the paper exploits).
+    pub fn calibrated_per_batch(host_seconds: f64, cores: usize) -> f64 {
+        host_seconds / (cores as f64 * 0.7).max(1.0)
+    }
+
+    pub fn per_batch_s(&self) -> f64 {
+        self.per_batch_s
+    }
+
+    /// Virtual duration of one clock on `worker`.
+    pub fn clock_duration(&mut self, worker: usize, batches_per_clock: usize) -> f64 {
+        let jitter = self.rng.lognormal(0.0, self.straggler_sigma);
+        let severe = if self.rng.coin(self.straggler_prob) {
+            self.straggler_factor
+        } else {
+            1.0
+        };
+        batches_per_clock as f64
+            * self.per_batch_s
+            * self.worker_speed[worker]
+            * jitter
+            * severe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ClusterConfig {
+        ClusterConfig {
+            straggler_sigma: 0.1,
+            straggler_prob: 0.0,
+            straggler_factor: 4.0,
+            ..ClusterConfig::default()
+        }
+    }
+
+    #[test]
+    fn durations_positive_and_near_nominal() {
+        let mut m = ComputeModel::new(&cfg(), 0.01, 4, Pcg64::new(1));
+        let mut sum = 0.0;
+        for _ in 0..500 {
+            let d = m.clock_duration(0, 10);
+            assert!(d > 0.0);
+            sum += d;
+        }
+        let mean = sum / 500.0;
+        // nominal 0.1s/clock, jitter and speed within ±30%
+        assert!((0.07..0.13).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn severe_stragglers_inflate_tail() {
+        let mut base = ComputeModel::new(&cfg(), 0.01, 2, Pcg64::new(2));
+        let slow_cfg = ClusterConfig {
+            straggler_prob: 0.5,
+            straggler_factor: 10.0,
+            ..cfg()
+        };
+        let mut slow = ComputeModel::new(&slow_cfg, 0.01, 2, Pcg64::new(2));
+        let b: f64 = (0..200).map(|_| base.clock_duration(0, 1)).sum();
+        let s: f64 = (0..200).map(|_| slow.clock_duration(0, 1)).sum();
+        assert!(s > 3.0 * b, "stragglers must dominate: {s} vs {b}");
+    }
+
+    #[test]
+    fn calibration_scales_by_cores() {
+        let pb = ComputeModel::calibrated_per_batch(1.12, 16);
+        assert!((pb - 1.12 / 11.2).abs() < 1e-9);
+        // single-core machine: no speedup
+        assert_eq!(ComputeModel::calibrated_per_batch(2.0, 1), 2.0);
+    }
+
+    #[test]
+    fn worker_speeds_persistent_but_heterogeneous() {
+        let mut m = ComputeModel::new(&cfg(), 1.0, 6, Pcg64::new(3));
+        // same worker, repeated draws share the persistent factor: the
+        // *ratio* of means across workers reflects heterogeneity
+        let mean_of = |m: &mut ComputeModel, w: usize| -> f64 {
+            (0..300).map(|_| m.clock_duration(w, 1)).sum::<f64>() / 300.0
+        };
+        let a = mean_of(&mut m, 0);
+        let b = mean_of(&mut m, 1);
+        assert!((a / b - 1.0).abs() < 0.5);
+    }
+}

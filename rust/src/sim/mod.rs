@@ -1,0 +1,13 @@
+//! Discrete-event machinery: virtual-time event queue and the per-worker
+//! compute-time model.
+//!
+//! The simulator executes the SSP protocol *for real* (real gradients,
+//! real parameter versions, real staleness) and assigns virtual
+//! durations to compute and communication. See DESIGN.md: "real
+//! statistics, virtual time".
+
+mod compute;
+mod queue;
+
+pub use compute::ComputeModel;
+pub use queue::{Event, EventQueue};

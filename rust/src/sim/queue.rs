@@ -1,0 +1,143 @@
+//! Min-heap event queue over virtual seconds with stable FIFO tie-breaks.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A scheduled event at a virtual time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event<T> {
+    pub time: f64,
+    pub seq: u64,
+    pub payload: T,
+}
+
+impl<T: PartialEq> Eq for Event<T> {}
+
+impl<T: PartialEq> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T: PartialEq> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Event queue: push events at arbitrary times, pop in time order.
+#[derive(Debug)]
+pub struct EventQueue<T: PartialEq> {
+    heap: BinaryHeap<Event<T>>,
+    seq: u64,
+    now: f64,
+}
+
+impl<T: PartialEq> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: PartialEq> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+        }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn push(&mut self, time: f64, payload: T) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { time, seq, payload });
+    }
+
+    /// Pop the earliest event, advancing virtual time. Time never runs
+    /// backwards: events scheduled in the past fire "now".
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        let mut e = self.heap.pop()?;
+        if e.time < self.now {
+            e.time = self.now;
+        }
+        self.now = e.time;
+        Some(e)
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.pop().unwrap().payload, "a");
+        assert_eq!(q.pop().unwrap().payload, "b");
+        assert_eq!(q.pop().unwrap().payload, "c");
+        assert!(q.pop().is_none());
+        assert_eq!(q.now(), 3.0);
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "first");
+        q.push(1.0, "second");
+        q.push(1.0, "third");
+        assert_eq!(q.pop().unwrap().payload, "first");
+        assert_eq!(q.pop().unwrap().payload, "second");
+        assert_eq!(q.pop().unwrap().payload, "third");
+    }
+
+    #[test]
+    fn time_monotone_even_with_past_events() {
+        let mut q = EventQueue::new();
+        q.push(5.0, "later");
+        assert_eq!(q.pop().unwrap().time, 5.0);
+        q.push(1.0, "stale"); // scheduled in the past
+        let e = q.pop().unwrap();
+        assert_eq!(e.time, 5.0, "clamped to now");
+        assert_eq!(q.now(), 5.0);
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 1);
+        assert_eq!(q.pop().unwrap().payload, 1);
+        q.push(2.0, 2);
+        q.push(1.5, 3);
+        assert_eq!(q.pop().unwrap().payload, 3);
+        q.push(1.7, 4); // in the past relative to nothing; now = 1.5
+        assert_eq!(q.pop().unwrap().payload, 4);
+        assert_eq!(q.pop().unwrap().payload, 2);
+    }
+}

@@ -1,0 +1,194 @@
+//! Worker-side cache: the stale snapshot θ̃_{p,c} plus read-my-writes.
+//!
+//! Between fetches, a worker computes against its cached snapshot with its
+//! own pending updates folded in (SSP condition 4). At a clock boundary it
+//! drains the accumulated per-layer deltas into `UpdateMsg`s for the
+//! server and (on fetch) replaces the snapshot.
+
+use crate::nn::{GradSet, ParamSet};
+
+use super::UpdateMsg;
+
+#[derive(Clone, Debug)]
+pub struct WorkerCache {
+    worker: usize,
+    /// Server snapshot as of the last fetch (θ without own recent writes).
+    snapshot: ParamSet,
+    /// Own updates accumulated since the snapshot was taken, *already
+    /// folded into `view`* (read-my-writes) but not yet part of any
+    /// server state this cache has seen.
+    own_since_snapshot: GradSet,
+    /// snapshot + own_since_snapshot — what the worker computes against.
+    view: ParamSet,
+    /// Updates accumulated in the current (uncommitted) clock.
+    pending: GradSet,
+    pending_dirty: bool,
+    /// Clock this worker is currently computing (timestamps of pending).
+    clock: u64,
+}
+
+impl WorkerCache {
+    pub fn new(worker: usize, init: ParamSet) -> WorkerCache {
+        let zeros = init.zeros_like();
+        WorkerCache {
+            worker,
+            snapshot: init.clone(),
+            own_since_snapshot: zeros.clone(),
+            view: init,
+            pending: zeros,
+            pending_dirty: false,
+            clock: 0,
+        }
+    }
+
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// θ̃_{p,c}: the parameters this worker computes gradients against.
+    pub fn view(&self) -> &ParamSet {
+        &self.view
+    }
+
+    /// Accumulate a local additive update (−η·grad, Eq. 7's Δw^p term) and
+    /// fold it into the view immediately (read-my-writes).
+    pub fn add_local_update(&mut self, update: &GradSet) {
+        self.pending.axpy(1.0, update);
+        self.own_since_snapshot.axpy(1.0, update);
+        self.view.axpy(1.0, update);
+        self.pending_dirty = true;
+    }
+
+    /// Scaled variant: add `alpha * g` (e.g. `alpha = -eta`).
+    pub fn add_scaled_local_update(&mut self, alpha: f32, g: &GradSet) {
+        self.pending.axpy(alpha, g);
+        self.own_since_snapshot.axpy(alpha, g);
+        self.view.axpy(alpha, g);
+        self.pending_dirty = true;
+    }
+
+    /// End the current clock: drain pending updates into per-layer
+    /// messages timestamped with the finished clock, advance local clock.
+    pub fn commit_clock(&mut self) -> Vec<UpdateMsg> {
+        let mut msgs = Vec::with_capacity(self.pending.n_layers());
+        for (layer, lp) in self.pending.layers.iter().enumerate() {
+            msgs.push(UpdateMsg::new(self.worker, self.clock, layer, lp.clone()));
+        }
+        self.pending.fill_zero();
+        self.pending_dirty = false;
+        self.clock += 1;
+        msgs
+    }
+
+    /// Install a fresh server snapshot. The server state may or may not
+    /// include this worker's own recent commits; `own_applied_clocks[l]`
+    /// says how many of our clocks the server had applied *for layer l*
+    /// when the snapshot was taken — our own not-yet-applied updates are
+    /// re-folded on top so read-my-writes is never violated.
+    ///
+    /// For simplicity of bookkeeping the cache tracks own updates since
+    /// the last snapshot as a single accumulated delta; callers fetch at
+    /// clock boundaries right after committing, so "own updates the
+    /// snapshot may miss" == own_since_snapshot minus what arrived. The
+    /// server tells us which of our commits it contains via
+    /// `own_missing`: the portion of our accumulated delta NOT yet in the
+    /// snapshot (computed server-side from arrival bookkeeping).
+    pub fn install_snapshot(&mut self, snapshot: ParamSet, own_missing: &GradSet) {
+        assert!(
+            !self.pending_dirty,
+            "fetch mid-clock would lose read-my-writes accounting"
+        );
+        self.view = snapshot.clone();
+        self.view.axpy(1.0, own_missing);
+        self.snapshot = snapshot;
+        self.own_since_snapshot = own_missing.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn dims() -> Vec<usize> {
+        vec![3, 4, 2]
+    }
+
+    fn unit_update(dims: &[usize], v: f32) -> GradSet {
+        let mut g = ParamSet::zeros(dims);
+        for l in &mut g.layers {
+            l.w.fill(v);
+        }
+        g
+    }
+
+    #[test]
+    fn read_my_writes_immediately_visible() {
+        let mut rng = Pcg64::new(0);
+        let init = ParamSet::glorot(&dims(), &mut rng);
+        let mut c = WorkerCache::new(0, init.clone());
+        let u = unit_update(&dims(), 0.1);
+        c.add_local_update(&u);
+        let got = c.view().layers[0].w.at(0, 0);
+        let want = init.layers[0].w.at(0, 0) + 0.1;
+        assert!((got - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn commit_produces_one_msg_per_layer_and_advances_clock() {
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(3, init);
+        c.add_local_update(&unit_update(&dims(), 0.5));
+        assert_eq!(c.clock(), 0);
+        let msgs = c.commit_clock();
+        assert_eq!(c.clock(), 1);
+        assert_eq!(msgs.len(), 2);
+        assert!(msgs.iter().all(|m| m.from == 3 && m.clock == 0));
+        assert_eq!(msgs[0].layer, 0);
+        assert_eq!(msgs[1].layer, 1);
+        assert!((msgs[0].delta.w.at(0, 0) - 0.5).abs() < 1e-6);
+        // pending cleared: next commit sends zeros
+        let msgs2 = c.commit_clock();
+        assert_eq!(msgs2[0].delta.w.norm_sq(), 0.0);
+    }
+
+    #[test]
+    fn scaled_update_is_minus_eta_grad() {
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(0, init);
+        let g = unit_update(&dims(), 1.0);
+        c.add_scaled_local_update(-0.05, &g);
+        assert!((c.view().layers[0].w.at(0, 0) + 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn install_snapshot_refolds_missing_own_updates() {
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(0, init.clone());
+        c.add_local_update(&unit_update(&dims(), 0.2));
+        c.commit_clock();
+        // server snapshot that does NOT yet include our 0.2 update
+        let server_snap = ParamSet::zeros(&dims());
+        let missing = unit_update(&dims(), 0.2);
+        c.install_snapshot(server_snap, &missing);
+        assert!((c.view().layers[0].w.at(0, 0) - 0.2).abs() < 1e-7);
+        // server snapshot that DOES include it
+        let mut server_snap2 = ParamSet::zeros(&dims());
+        server_snap2.axpy(1.0, &unit_update(&dims(), 0.2));
+        c.install_snapshot(server_snap2, &init.zeros_like());
+        assert!((c.view().layers[0].w.at(0, 0) - 0.2).abs() < 1e-7);
+    }
+
+    #[test]
+    #[should_panic(expected = "mid-clock")]
+    fn snapshot_mid_clock_panics() {
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(0, init.clone());
+        c.add_local_update(&unit_update(&dims(), 0.2));
+        c.install_snapshot(init.clone(), &init.zeros_like());
+    }
+}

@@ -1,0 +1,126 @@
+//! Worker clock bookkeeping and the bounded-staleness barrier.
+
+use super::Policy;
+
+/// Per-worker committed-clock table. `clocks[p] = c` means worker `p` has
+/// committed updates for clocks `0..c` (i.e. completed `c` clocks).
+#[derive(Clone, Debug)]
+pub struct ClockTable {
+    clocks: Vec<u64>,
+}
+
+impl ClockTable {
+    pub fn new(workers: usize) -> ClockTable {
+        assert!(workers > 0);
+        ClockTable {
+            clocks: vec![0; workers],
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.clocks.len()
+    }
+
+    pub fn clock(&self, p: usize) -> u64 {
+        self.clocks[p]
+    }
+
+    /// Worker `p` finished a clock and committed its updates.
+    pub fn advance(&mut self, p: usize) -> u64 {
+        self.clocks[p] += 1;
+        self.clocks[p]
+    }
+
+    pub fn min(&self) -> u64 {
+        *self.clocks.iter().min().unwrap()
+    }
+
+    pub fn max(&self) -> u64 {
+        *self.clocks.iter().max().unwrap()
+    }
+
+    /// SSP condition 1: may worker `p` (having committed `clocks[p]`
+    /// clocks) *start computing* its next clock under `policy`?
+    ///
+    /// The next clock's updates will be timestamped `clocks[p]`; reads in
+    /// it must see all timestamps ≤ `clocks[p] − s − 1`, i.e. every worker
+    /// must have committed at least `clocks[p] − s` clocks. Equivalently
+    /// the fastest/slowest gap stays ≤ s.
+    pub fn must_wait(&self, p: usize, policy: Policy) -> bool {
+        match policy.staleness() {
+            None => false,
+            Some(s) => self.clocks[p] > self.min() + s,
+        }
+    }
+
+    /// The highest timestamp whose updates are *guaranteed* visible to a
+    /// read at clock `c` with staleness `s` (paper: `c − s − 1`), or None
+    /// if nothing is guaranteed yet.
+    pub fn guaranteed_ts(c: u64, s: u64) -> Option<u64> {
+        (c).checked_sub(s + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_and_bounds() {
+        let mut t = ClockTable::new(3);
+        assert_eq!(t.min(), 0);
+        t.advance(0);
+        t.advance(0);
+        t.advance(1);
+        assert_eq!(t.clock(0), 2);
+        assert_eq!(t.min(), 0);
+        assert_eq!(t.max(), 2);
+    }
+
+    #[test]
+    fn ssp_barrier_blocks_fast_worker() {
+        let mut t = ClockTable::new(2);
+        let p = Policy::Ssp { staleness: 2 };
+        // worker 0 races ahead
+        for _ in 0..2 {
+            assert!(!t.must_wait(0, p));
+            t.advance(0);
+        }
+        assert!(!t.must_wait(0, p)); // gap 2 == s: still allowed
+        t.advance(0);
+        assert!(t.must_wait(0, p)); // gap 3 > s: blocked
+        t.advance(1);
+        assert!(!t.must_wait(0, p)); // slowest caught up one clock
+    }
+
+    #[test]
+    fn bsp_is_full_barrier() {
+        let mut t = ClockTable::new(3);
+        let p = Policy::Bsp;
+        t.advance(0);
+        assert!(t.must_wait(0, p));
+        t.advance(1);
+        assert!(t.must_wait(0, p)); // worker 2 still at 0
+        t.advance(2);
+        assert!(!t.must_wait(0, p));
+    }
+
+    #[test]
+    fn async_never_waits() {
+        let mut t = ClockTable::new(2);
+        for _ in 0..100 {
+            t.advance(0);
+        }
+        assert!(!t.must_wait(0, Policy::Async));
+    }
+
+    #[test]
+    fn guaranteed_ts_matches_paper() {
+        // reading at clock c sees all u with timestamp <= c - s - 1
+        assert_eq!(ClockTable::guaranteed_ts(10, 3), Some(6));
+        assert_eq!(ClockTable::guaranteed_ts(3, 3), None);
+        assert_eq!(ClockTable::guaranteed_ts(4, 3), Some(0));
+        // s = 0: "guaranteed" range becomes [0, c-1] (paper §3.1)
+        assert_eq!(ClockTable::guaranteed_ts(5, 0), Some(4));
+    }
+}

@@ -1,0 +1,114 @@
+//! The Stale Synchronous Parallel (SSP) parameter server — the paper's
+//! coordination substrate (Section 3.1, Eq. 5; Ho et al. 2013).
+//!
+//! Protocol summary, as quoted by the paper:
+//!
+//! 1. workers commit additive updates `θ ← θ + u` at the end of each
+//!    *clock*; the update from worker `q` at clock `t` is timestamped `t`;
+//! 2. the slowest and fastest workers must be ≤ `s` clocks apart — the
+//!    fastest blocks otherwise (`ClockTable::must_wait`);
+//! 3. a worker reading at clock `c` is guaranteed to see every update with
+//!    timestamp ≤ `c − s − 1`;
+//! 4. read-my-writes: a worker always sees its own updates;
+//! 5. best-effort: it *may* see in-window updates from other workers
+//!    (timestamp in `[c − s, c + s − 1]`) — the `ε_{q,p}` indicator of
+//!    Eq. (7). Here ε is realized physically: an in-window update is seen
+//!    iff its (simulated) network arrival precedes the read.
+//!
+//! Updates are applied **per layer** (`UpdateMsg` carries one layer's
+//! delta): layers synchronize independently of each other, the property
+//! Theorem 3's layerwise analysis requires.
+
+mod client;
+mod clock;
+mod server;
+mod table;
+
+pub use client::WorkerCache;
+pub use clock::ClockTable;
+pub use server::{ReadStats, Server};
+pub use table::{ParamTable, VersionVector};
+
+use crate::nn::LayerParams;
+
+/// Consistency policy. `Bsp` ≡ `Ssp{staleness: 0}` with a full barrier;
+/// `Async` removes the barrier entirely (no staleness bound — included as
+/// the divergence-prone baseline the paper contrasts against, cf. Dean et
+/// al. 2012).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    Bsp,
+    Ssp { staleness: u64 },
+    Async,
+}
+
+impl Policy {
+    /// The staleness bound, `None` meaning unbounded.
+    pub fn staleness(&self) -> Option<u64> {
+        match self {
+            Policy::Bsp => Some(0),
+            Policy::Ssp { staleness } => Some(*staleness),
+            Policy::Async => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Bsp => "bsp".into(),
+            Policy::Ssp { staleness } => format!("ssp(s={staleness})"),
+            Policy::Async => "async".into(),
+        }
+    }
+}
+
+/// One layer's additive update from worker `from` committed at `clock`.
+#[derive(Clone, Debug)]
+pub struct UpdateMsg {
+    pub from: usize,
+    pub clock: u64,
+    pub layer: usize,
+    pub delta: LayerParams,
+    /// Serialized size in bytes (for the network model).
+    pub bytes: usize,
+}
+
+impl UpdateMsg {
+    pub fn new(from: usize, clock: u64, layer: usize, delta: LayerParams) -> Self {
+        let bytes = (delta.w.len() + delta.b.len()) * 4 + 32;
+        UpdateMsg {
+            from,
+            clock,
+            layer,
+            delta,
+            bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_staleness() {
+        assert_eq!(Policy::Bsp.staleness(), Some(0));
+        assert_eq!(Policy::Ssp { staleness: 10 }.staleness(), Some(10));
+        assert_eq!(Policy::Async.staleness(), None);
+        assert_eq!(Policy::Ssp { staleness: 3 }.name(), "ssp(s=3)");
+    }
+
+    #[test]
+    fn update_msg_sizes() {
+        use crate::tensor::Matrix;
+        let m = UpdateMsg::new(
+            1,
+            4,
+            0,
+            LayerParams {
+                w: Matrix::zeros(10, 5),
+                b: vec![0.0; 5],
+            },
+        );
+        assert_eq!(m.bytes, 55 * 4 + 32);
+    }
+}

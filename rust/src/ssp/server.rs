@@ -1,0 +1,277 @@
+//! The SSP parameter server: master table + clock barrier + read protocol.
+//!
+//! Transport is external (the discrete-event simulator or the threaded
+//! coordinator decides *when* `apply_arrival` happens); the server owns
+//! the consistency logic: what a read must include, when a worker must
+//! block, and the ε_{q,p} accounting of best-effort in-window updates.
+
+use crate::nn::ParamSet;
+
+use super::{ClockTable, ParamTable, Policy, UpdateMsg};
+
+/// Statistics for one fetch (read) — quantifies Eq. (5)'s three terms.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReadStats {
+    /// Updates required by the guarantee (timestamp ≤ c−s−1) per the
+    /// (layer, worker) grid, all of which were included.
+    pub guaranteed: u64,
+    /// In-window updates from other workers that were included (ε = 1).
+    pub window_included: u64,
+    /// In-window updates committed but *not* yet arrived (ε = 0).
+    pub window_missed: u64,
+}
+
+impl ReadStats {
+    /// Fraction of best-effort updates actually delivered.
+    pub fn epsilon_rate(&self) -> f64 {
+        let total = self.window_included + self.window_missed;
+        if total == 0 {
+            1.0
+        } else {
+            self.window_included as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Server {
+    table: ParamTable,
+    clocks: ClockTable,
+    policy: Policy,
+    bytes_received: u64,
+    reads: u64,
+}
+
+impl Server {
+    pub fn new(init: ParamSet, workers: usize, policy: Policy) -> Server {
+        Server {
+            table: ParamTable::new(init, workers),
+            clocks: ClockTable::new(workers),
+            policy,
+            bytes_received: 0,
+            reads: 0,
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn clocks(&self) -> &ClockTable {
+        &self.clocks
+    }
+
+    pub fn table(&self) -> &ParamTable {
+        &self.table
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.table.master().n_layers()
+    }
+
+    /// Worker `p` finished a clock (its update messages are now in
+    /// flight). Advances the clock table — the barrier works on *commit*
+    /// counts, arrivals lag behind.
+    pub fn commit(&mut self, worker: usize) -> u64 {
+        self.clocks.advance(worker)
+    }
+
+    /// A (delayed) update message reaches the server.
+    pub fn apply_arrival(&mut self, msg: &UpdateMsg) {
+        self.bytes_received += msg.bytes as u64;
+        self.table.apply(msg);
+    }
+
+    /// Must worker `p` block before *starting* its next clock?
+    pub fn must_wait(&self, worker: usize) -> bool {
+        self.clocks.must_wait(worker, self.policy)
+    }
+
+    /// Is the master state sufficient for worker `p` (about to compute
+    /// clock `c = clocks[p]`) to read? Guarantee: every update with
+    /// timestamp ≤ c−s−1 must have been applied — i.e. applied counts
+    /// ≥ c−s for every (layer, worker). Async has no guarantee.
+    pub fn read_ready(&self, worker: usize) -> bool {
+        let c = self.clocks.clock(worker);
+        match self.policy.staleness() {
+            None => true,
+            Some(s) => {
+                let through = c.saturating_sub(s);
+                self.table.versions().all_applied_through(through)
+            }
+        }
+    }
+
+    /// Serve a read for worker `p`: snapshot + per-layer applied counts of
+    /// `p`'s own updates (for client-side read-my-writes reconstruction)
+    /// + ε statistics.
+    pub fn fetch(&mut self, worker: usize) -> (ParamSet, Vec<u64>, ReadStats) {
+        debug_assert!(self.read_ready(worker), "fetch before guarantee met");
+        self.reads += 1;
+        let c = self.clocks.clock(worker);
+        let s = self.policy.staleness().unwrap_or(u64::MAX);
+        let through = c.saturating_sub(s.saturating_add(0)); // c - s
+        let mut stats = ReadStats::default();
+        let layers = self.n_layers();
+        for l in 0..layers {
+            for q in 0..self.clocks.workers() {
+                if q == worker {
+                    continue;
+                }
+                let applied = self.table.versions().applied(l, q);
+                let committed = self.clocks.clock(q);
+                let guaranteed = through.min(committed);
+                stats.guaranteed += guaranteed;
+                let extra_applied = applied.saturating_sub(guaranteed);
+                let extra_committed = committed.saturating_sub(guaranteed);
+                stats.window_included += extra_applied;
+                stats.window_missed += extra_committed - extra_applied;
+            }
+        }
+        let own: Vec<u64> = (0..layers)
+            .map(|l| self.table.versions().applied(l, worker))
+            .collect();
+        (self.table.snapshot(), own, stats)
+    }
+
+    pub fn bytes_received(&self) -> u64 {
+        self.bytes_received
+    }
+
+    pub fn reads(&self) -> u64 {
+        self.reads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LayerParams;
+    use crate::tensor::Matrix;
+
+    fn dims() -> Vec<usize> {
+        vec![2, 3, 2]
+    }
+
+    fn msg(from: usize, clock: u64, layer: usize) -> UpdateMsg {
+        let d = dims();
+        UpdateMsg::new(
+            from,
+            clock,
+            layer,
+            LayerParams {
+                w: Matrix::from_fn(d[layer], d[layer + 1], |_, _| 0.1),
+                b: vec![0.1; d[layer + 1]],
+            },
+        )
+    }
+
+    fn commit_and_arrive(srv: &mut Server, worker: usize) {
+        let clock = srv.clocks().clock(worker);
+        srv.commit(worker);
+        for l in 0..srv.n_layers() {
+            srv.apply_arrival(&msg(worker, clock, l));
+        }
+    }
+
+    #[test]
+    fn ssp_read_guarantee() {
+        let mut srv = Server::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Ssp { staleness: 1 },
+        );
+        // both workers commit clock 0 and updates arrive
+        commit_and_arrive(&mut srv, 0);
+        commit_and_arrive(&mut srv, 1);
+        // worker 0 commits clock 1, but its arrival is delayed
+        srv.commit(0);
+        // worker 0 now at clock 2, s=1 → needs ts ≤ 0 applied: satisfied
+        assert!(srv.read_ready(0));
+        // worker 1 at clock 1 needs ts ≤ -1: trivially ready
+        assert!(srv.read_ready(1));
+    }
+
+    #[test]
+    fn read_not_ready_when_guaranteed_update_missing() {
+        let mut srv = Server::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Ssp { staleness: 0 },
+        );
+        // worker 1 commits clock 0 but the update has NOT arrived
+        srv.commit(1);
+        srv.commit(0);
+        // worker 0 at clock 1, s=0 → needs all ts ≤ 0 applied; worker 1's
+        // clock-0 update is still in flight
+        assert!(!srv.read_ready(0));
+        for l in 0..srv.n_layers() {
+            srv.apply_arrival(&msg(1, 0, l));
+        }
+        // still missing worker 0's own clock-0 arrival
+        assert!(!srv.read_ready(0));
+        for l in 0..srv.n_layers() {
+            srv.apply_arrival(&msg(0, 0, l));
+        }
+        assert!(srv.read_ready(0));
+    }
+
+    #[test]
+    fn epsilon_stats_count_window_inclusion() {
+        let mut srv = Server::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Ssp { staleness: 2 },
+        );
+        // worker 1 commits clocks 0,1: clock-0 arrives, clock-1 in flight
+        let m0 = msg(1, 0, 0);
+        let m0b = msg(1, 0, 1);
+        srv.commit(1);
+        srv.apply_arrival(&m0);
+        srv.apply_arrival(&m0b);
+        srv.commit(1);
+        // worker 0 at clock 0: everything from worker 1 is in-window
+        let (_, own, stats) = srv.fetch(0);
+        assert_eq!(own, vec![0, 0]);
+        assert_eq!(stats.guaranteed, 0);
+        assert_eq!(stats.window_included, 2); // clock-0 arrived (2 layers)
+        assert_eq!(stats.window_missed, 2); // clock-1 in flight (2 layers)
+        assert!((stats.epsilon_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_delegates_to_clock_table() {
+        let mut srv = Server::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Ssp { staleness: 0 },
+        );
+        srv.commit(0);
+        assert!(srv.must_wait(0));
+        srv.commit(1);
+        assert!(!srv.must_wait(0));
+    }
+
+    #[test]
+    fn own_applied_counts_reported() {
+        let mut srv = Server::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Ssp { staleness: 5 },
+        );
+        srv.commit(0);
+        srv.apply_arrival(&msg(0, 0, 0)); // layer 0 arrived, layer 1 not
+        let (_, own, _) = srv.fetch(0);
+        assert_eq!(own, vec![1, 0]);
+    }
+
+    #[test]
+    fn async_always_ready() {
+        let mut srv = Server::new(ParamSet::zeros(&dims()), 3, Policy::Async);
+        for _ in 0..5 {
+            srv.commit(0);
+        }
+        assert!(srv.read_ready(0));
+        assert!(!srv.must_wait(0));
+    }
+}

@@ -1,0 +1,174 @@
+//! The server-side parameter table: master state + per-layer version
+//! vector tracking which (worker, clock) updates have been applied.
+//!
+//! Layers are independent rows (the paper's layerwise independent
+//! updates): an update message carries exactly one layer's delta and the
+//! version vector is tracked per (layer, worker).
+
+use crate::nn::ParamSet;
+
+use super::UpdateMsg;
+
+/// `versions[layer][worker]` = number of clocks of that worker's updates
+/// applied to the master for that layer (updates arrive FIFO per link).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VersionVector {
+    versions: Vec<Vec<u64>>,
+}
+
+impl VersionVector {
+    pub fn new(layers: usize, workers: usize) -> VersionVector {
+        VersionVector {
+            versions: vec![vec![0; workers]; layers],
+        }
+    }
+
+    pub fn applied(&self, layer: usize, worker: usize) -> u64 {
+        self.versions[layer][worker]
+    }
+
+    pub fn record(&mut self, layer: usize, worker: usize, clock: u64) {
+        let v = &mut self.versions[layer][worker];
+        assert_eq!(
+            *v, clock,
+            "out-of-order update: layer {layer} worker {worker} \
+             expected clock {v}, got {clock}"
+        );
+        *v += 1;
+    }
+
+    /// Oldest applied clock count across workers for a layer.
+    pub fn layer_min(&self, layer: usize) -> u64 {
+        *self.versions[layer].iter().min().unwrap()
+    }
+
+    /// True iff every worker's updates with timestamp < `through` have
+    /// been applied for every layer (the guaranteed-visibility check for
+    /// a read needing timestamps ≤ through − 1).
+    pub fn all_applied_through(&self, through: u64) -> bool {
+        self.versions
+            .iter()
+            .all(|layer| layer.iter().all(|&v| v >= through))
+    }
+}
+
+/// Master parameter state + version bookkeeping.
+#[derive(Clone, Debug)]
+pub struct ParamTable {
+    master: ParamSet,
+    versions: VersionVector,
+    workers: usize,
+    /// total updates applied (for metrics)
+    applied_count: u64,
+}
+
+impl ParamTable {
+    pub fn new(init: ParamSet, workers: usize) -> ParamTable {
+        let layers = init.n_layers();
+        ParamTable {
+            master: init,
+            versions: VersionVector::new(layers, workers),
+            workers,
+            applied_count: 0,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn master(&self) -> &ParamSet {
+        &self.master
+    }
+
+    pub fn versions(&self) -> &VersionVector {
+        &self.versions
+    }
+
+    pub fn applied_count(&self) -> u64 {
+        self.applied_count
+    }
+
+    /// Apply one layer-update (θ ← θ + u, associative & commutative).
+    pub fn apply(&mut self, msg: &UpdateMsg) {
+        self.versions.record(msg.layer, msg.from, msg.clock);
+        self.master.axpy_layer(msg.layer, 1.0, &msg.delta);
+        self.applied_count += 1;
+    }
+
+    /// Snapshot of the current master state (a worker fetch).
+    pub fn snapshot(&self) -> ParamSet {
+        self.master.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LayerParams;
+    use crate::tensor::Matrix;
+    use crate::util::Pcg64;
+
+    fn delta(dims: &[usize], layer: usize, v: f32) -> LayerParams {
+        let mut w = Matrix::zeros(dims[layer], dims[layer + 1]);
+        w.fill(v);
+        LayerParams {
+            w,
+            b: vec![v; dims[layer + 1]],
+        }
+    }
+
+    #[test]
+    fn apply_accumulates_additively() {
+        let dims = [3, 4, 2];
+        let mut rng = Pcg64::new(0);
+        let init = ParamSet::glorot(&dims, &mut rng);
+        let mut t = ParamTable::new(init.clone(), 2);
+        t.apply(&UpdateMsg::new(0, 0, 0, delta(&dims, 0, 0.5)));
+        t.apply(&UpdateMsg::new(1, 0, 0, delta(&dims, 0, 0.25)));
+        let snap = t.snapshot();
+        let diff = snap.layers[0].w.at(0, 0) - init.layers[0].w.at(0, 0);
+        assert!((diff - 0.75).abs() < 1e-6);
+        // untouched layer unchanged
+        assert_eq!(snap.layers[1].w, init.layers[1].w);
+        assert_eq!(t.applied_count(), 2);
+    }
+
+    #[test]
+    fn versions_track_per_layer_per_worker() {
+        let dims = [3, 4, 2];
+        let init = ParamSet::zeros(&dims);
+        let mut t = ParamTable::new(init, 2);
+        t.apply(&UpdateMsg::new(0, 0, 0, delta(&dims, 0, 1.0)));
+        t.apply(&UpdateMsg::new(0, 0, 1, delta(&dims, 1, 1.0)));
+        t.apply(&UpdateMsg::new(0, 1, 0, delta(&dims, 0, 1.0)));
+        assert_eq!(t.versions().applied(0, 0), 2);
+        assert_eq!(t.versions().applied(1, 0), 1);
+        assert_eq!(t.versions().applied(0, 1), 0);
+        assert!(!t.versions().all_applied_through(1));
+        t.apply(&UpdateMsg::new(1, 0, 0, delta(&dims, 0, 1.0)));
+        t.apply(&UpdateMsg::new(1, 0, 1, delta(&dims, 1, 1.0)));
+        t.apply(&UpdateMsg::new(0, 1, 1, delta(&dims, 1, 1.0)));
+        assert!(t.versions().all_applied_through(1));
+        assert!(!t.versions().all_applied_through(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-order")]
+    fn out_of_order_update_rejected() {
+        let dims = [3, 4, 2];
+        let mut t = ParamTable::new(ParamSet::zeros(&dims), 2);
+        t.apply(&UpdateMsg::new(0, 1, 0, delta(&dims, 0, 1.0))); // skips clock 0
+    }
+
+    #[test]
+    fn layer_min_tracks_slowest_writer() {
+        let dims = [2, 2, 2];
+        let mut t = ParamTable::new(ParamSet::zeros(&dims), 3);
+        t.apply(&UpdateMsg::new(0, 0, 0, delta(&dims, 0, 0.0)));
+        t.apply(&UpdateMsg::new(1, 0, 0, delta(&dims, 0, 0.0)));
+        assert_eq!(t.versions().layer_min(0), 0); // worker 2 yet to write
+        t.apply(&UpdateMsg::new(2, 0, 0, delta(&dims, 0, 0.0)));
+        assert_eq!(t.versions().layer_min(0), 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dense f32 matrix type and the BLAS-like kernels the native engine runs on.
+//!
+//! Row-major storage. The GEMM family is the native hot path (profiled and
+//! tuned in the §Perf pass): register-blocked micro-kernels with
+//! autovectorizable inner loops, plus transposed variants used by backprop
+//! (`gemm_nt` for `delta @ W^T`, `gemm_tn` for `z^T @ delta`).
+
+mod matrix;
+mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{gemm, gemm_nt, gemm_tn};

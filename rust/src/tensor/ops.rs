@@ -1,0 +1,260 @@
+//! GEMM kernels — the native engine's hot path.
+//!
+//! Three variants cover everything backprop needs (Eq. 6/7):
+//!
+//! * `gemm`    — `C += A · B`          (forward:   x @ W)
+//! * `gemm_nt` — `C += A · Bᵀ`         (backflow:  delta @ Wᵀ)
+//! * `gemm_tn` — `C += Aᵀ · B`         (gradient:  zᵀ @ delta)
+//!
+//! All use a cache-blocked loop order with a k-innermost accumulation over
+//! row slices so LLVM autovectorizes the inner loop (verified in the §Perf
+//! pass; see EXPERIMENTS.md). Block sizes chosen for ~32 KiB L1 tiles.
+
+use super::Matrix;
+
+const MC: usize = 64; // rows of A per block
+const KC: usize = 256; // shared dim per block
+const NC: usize = 256; // cols of B per block
+
+/// C += A(m×k) · B(k×n). Panics on shape mismatch.
+pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "gemm inner dims {k} vs {k2}");
+    assert_eq!(c.rows(), m, "gemm out rows");
+    assert_eq!(c.cols(), n, "gemm out cols");
+
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for p0 in (0..k).step_by(KC) {
+            let p1 = (p0 + KC).min(k);
+            for j0 in (0..n).step_by(NC) {
+                let j1 = (j0 + NC).min(n);
+                for i in i0..i1 {
+                    let arow = &ad[i * k..(i + 1) * k];
+                    let crow = &mut cd[i * n + j0..i * n + j1];
+                    let w = j1 - j0;
+                    // 4 fused saxpies per pass: 4x fewer loads/stores of
+                    // the C row (§Perf iteration 2).
+                    let mut p = p0;
+                    while p + 4 <= p1 {
+                        let a0 = arow[p];
+                        let a1 = arow[p + 1];
+                        let a2 = arow[p + 2];
+                        let a3 = arow[p + 3];
+                        if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                            let b0 = &bd[p * n + j0..p * n + j0 + w];
+                            let b1 = &bd[(p + 1) * n + j0..(p + 1) * n + j0 + w];
+                            let b2 = &bd[(p + 2) * n + j0..(p + 2) * n + j0 + w];
+                            let b3 = &bd[(p + 3) * n + j0..(p + 3) * n + j0 + w];
+                            for t in 0..w {
+                                crow[t] += a0 * b0[t]
+                                    + a1 * b1[t]
+                                    + a2 * b2[t]
+                                    + a3 * b3[t];
+                            }
+                        }
+                        p += 4;
+                    }
+                    for p in p..p1 {
+                        let aip = arow[p];
+                        if aip == 0.0 {
+                            continue; // sparse LLC features: skip zeros
+                        }
+                        let brow = &bd[p * n + j0..p * n + j1];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += aip * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C += A(m×k) · B(n×k)ᵀ  →  C is m×n.   (`delta @ Wᵀ`)
+pub fn gemm_nt(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "gemm_nt inner dims");
+    assert_eq!(c.rows(), m);
+    assert_eq!(c.cols(), n);
+
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+
+    // rows of A dot rows of B: both contiguous → dot-product kernel.
+    // 16 independent accumulators let LLVM vectorize the reduction
+    // without fast-math reassociation (§Perf: 2.1 → measured after).
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = [0.0f32; 16];
+            let chunks = k / 16;
+            for t in 0..chunks {
+                let p = 16 * t;
+                let a16 = &arow[p..p + 16];
+                let b16 = &brow[p..p + 16];
+                for l in 0..16 {
+                    acc[l] += a16[l] * b16[l];
+                }
+            }
+            let mut s = acc.iter().sum::<f32>();
+            for p in 16 * chunks..k {
+                s += arow[p] * brow[p];
+            }
+            cd[i * n + j] += s;
+        }
+    }
+}
+
+/// C += A(k×m)ᵀ · B(k×n)  →  C is m×n.   (`zᵀ @ delta`)
+pub fn gemm_tn(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "gemm_tn inner dims");
+    assert_eq!(c.rows(), m);
+    assert_eq!(c.cols(), n);
+
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+
+    // For each sample p (row of both A and B), rank-1 update C += aᵀ b.
+    // 4 samples fused per pass: 4x fewer loads/stores of each C row
+    // (§Perf iteration 3).
+    let mut p = 0;
+    while p + 4 <= k {
+        let a0 = &ad[p * m..(p + 1) * m];
+        let a1 = &ad[(p + 1) * m..(p + 2) * m];
+        let a2 = &ad[(p + 2) * m..(p + 3) * m];
+        let a3 = &ad[(p + 3) * m..(p + 4) * m];
+        let b0 = &bd[p * n..(p + 1) * n];
+        let b1 = &bd[(p + 1) * n..(p + 2) * n];
+        let b2 = &bd[(p + 2) * n..(p + 3) * n];
+        let b3 = &bd[(p + 3) * n..(p + 4) * n];
+        for i in 0..m {
+            let (v0, v1, v2, v3) = (a0[i], a1[i], a2[i], a3[i]);
+            if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for t in 0..n {
+                crow[t] += v0 * b0[t] + v1 * b1[t] + v2 * b2[t] + v3 * b3[t];
+            }
+        }
+        p += 4;
+    }
+    for p in p..k {
+        let arow = &ad[p * m..(p + 1) * m];
+        let brow = &bd[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for p in 0..a.cols() {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!(a.rows(), b.rows());
+        assert_eq!(a.cols(), b.cols());
+        let d = a.max_abs_diff(b);
+        assert!(d <= tol, "max diff {d} > {tol}");
+    }
+
+    #[test]
+    fn gemm_matches_naive_over_shapes() {
+        let mut rng = Pcg64::new(0);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (17, 33, 9),
+            (64, 64, 64),
+            (70, 300, 130),
+            (2, 513, 3),
+        ] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut c = Matrix::zeros(m, n);
+            gemm(&a, &b, &mut c);
+            assert_close(&c, &naive(&a, &b), 1e-3);
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates() {
+        let mut rng = Pcg64::new(1);
+        let a = Matrix::randn(4, 6, 1.0, &mut rng);
+        let b = Matrix::randn(6, 5, 1.0, &mut rng);
+        let mut c = Matrix::zeros(4, 5);
+        c.fill(1.0);
+        gemm(&a, &b, &mut c);
+        let mut want = naive(&a, &b);
+        want.map_inplace(|x| x + 1.0);
+        assert_close(&c, &want, 1e-4);
+    }
+
+    #[test]
+    fn gemm_nt_matches_transpose() {
+        let mut rng = Pcg64::new(2);
+        for &(m, k, n) in &[(3, 4, 5), (19, 65, 7), (1, 129, 1)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(n, k, 1.0, &mut rng);
+            let mut c = Matrix::zeros(m, n);
+            gemm_nt(&a, &b, &mut c);
+            assert_close(&c, &naive(&a, &b.transpose()), 1e-3);
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_transpose() {
+        let mut rng = Pcg64::new(3);
+        for &(m, k, n) in &[(3, 4, 5), (31, 9, 65), (1, 257, 2)] {
+            let a = Matrix::randn(k, m, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut c = Matrix::zeros(m, n);
+            gemm_tn(&a, &b, &mut c);
+            assert_close(&c, &naive(&a.transpose(), &b), 1e-3);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "gemm inner dims")]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        let mut c = Matrix::zeros(2, 2);
+        gemm(&a, &b, &mut c);
+    }
+}

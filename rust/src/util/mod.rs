@@ -1,0 +1,16 @@
+//! Dependency-free utilities: RNG, statistics, JSON, logging, timing.
+//!
+//! The build environment is offline (only the `xla` crate and its
+//! dependency closure are vendored), so the usual ecosystem crates
+//! (`rand`, `serde`, `log`) are reimplemented here at the scale this
+//! project needs.
+
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use stats::OnlineStats;
+pub use timer::Stopwatch;

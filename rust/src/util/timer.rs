@@ -1,0 +1,82 @@
+//! Wall-clock stopwatch + human formatting, used by the bench harness.
+
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+}
+
+/// "1.23s", "45.6ms", "789us" — compact duration formatting.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 60.0 {
+        format!("{:.1}m", secs / 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.1}ms", secs * 1e3)
+    } else {
+        format!("{:.0}us", secs * 1e6)
+    }
+}
+
+/// Time a closure `n` times, returning per-iteration seconds (min/mean).
+pub fn time_n<F: FnMut()>(n: usize, mut f: F) -> (f64, f64) {
+    let mut best = f64::INFINITY;
+    let mut total = 0.0;
+    for _ in 0..n {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        best = best.min(dt);
+        total += dt;
+    }
+    (best, total / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_duration(120.0), "2.0m");
+        assert_eq!(fmt_duration(1.5), "1.50s");
+        assert_eq!(fmt_duration(0.0456), "45.6ms");
+        assert_eq!(fmt_duration(1e-5), "10us");
+    }
+
+    #[test]
+    fn time_n_counts() {
+        let mut calls = 0;
+        let (best, mean) = time_n(5, || calls += 1);
+        assert_eq!(calls, 5);
+        assert!(best >= 0.0 && mean >= best);
+    }
+}

@@ -1,0 +1,114 @@
+//! Integration: config files drive experiments; checkpoints round-trip
+//! trained state; the CLI argument surface parses realistic invocations.
+
+use sspdnn::checkpoint;
+use sspdnn::cli::Args;
+use sspdnn::config::ExperimentConfig;
+use sspdnn::coordinator::{build_dataset, run_experiment_on, DriverOptions};
+use sspdnn::nn::{Activation, Labels, Loss, Mlp};
+use sspdnn::ssp::Policy;
+
+#[test]
+fn config_file_roundtrip_drives_experiment() {
+    let toml = r#"
+        name = "from_file"
+        [model]
+        dims = [16, 24, 10]
+        [ssp]
+        staleness = 4
+        [cluster]
+        machines = 2
+        straggler_prob = 0.0
+        [train]
+        clocks = 10
+        batch = 8
+        eta = 0.4
+    "#;
+    let path = std::env::temp_dir().join("sspdnn_itest_cfg.toml");
+    std::fs::write(&path, toml).unwrap();
+    let cfg =
+        ExperimentConfig::load_file(path.to_str().unwrap(), Some("tiny")).unwrap();
+    assert_eq!(cfg.name, "from_file");
+    assert_eq!(cfg.model.dims, vec![16, 24, 10]);
+    assert_eq!(cfg.ssp.policy, Policy::Ssp { staleness: 4 });
+    assert_eq!(cfg.cluster.machines, 2);
+
+    let ds = build_dataset(&cfg);
+    let run = run_experiment_on(
+        &cfg,
+        DriverOptions {
+            per_batch_s: Some(0.02),
+            ..DriverOptions::default()
+        },
+        &ds,
+    );
+    assert!(run.final_objective < run.evals[0].objective);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn trained_checkpoint_restores_objective() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.train.clocks = 15;
+    let ds = build_dataset(&cfg);
+    let run = run_experiment_on(
+        &cfg,
+        DriverOptions {
+            per_batch_s: Some(0.02),
+            ..DriverOptions::default()
+        },
+        &ds,
+    );
+
+    let path = std::env::temp_dir().join("sspdnn_itest.ckpt");
+    checkpoint::save(&path, &cfg.model.dims, &run.final_params).unwrap();
+    let (dims, restored) = checkpoint::load(&path).unwrap();
+    assert_eq!(dims, cfg.model.dims);
+
+    // restored params produce the same objective on the same data
+    let mlp = Mlp::new(dims, Activation::Sigmoid, Loss::Xent);
+    let idx: Vec<usize> = (0..128).collect();
+    let (x, y) = ds.gather(&idx);
+    let before = mlp.objective(&run.final_params, &x, &y);
+    let after = mlp.objective(&restored, &x, &y);
+    assert_eq!(before, after);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn cli_surface_parses_realistic_invocations() {
+    let a = Args::parse(
+        "train --preset timit --machines 6 --staleness 10 --clocks 120 \
+         --eta 0.05 --out results"
+            .split_whitespace()
+            .map(String::from),
+    )
+    .unwrap();
+    assert_eq!(a.command, "train");
+    assert_eq!(a.get("preset"), Some("timit"));
+    assert_eq!(a.get_usize("machines").unwrap(), Some(6));
+    assert_eq!(a.get_u64("staleness").unwrap(), Some(10));
+    assert_eq!(a.get_f64("eta").unwrap(), Some(0.05));
+    assert_eq!(a.get("out"), Some("results"));
+
+    let b = Args::parse(
+        "speedup --preset imagenet --max-machines 6 --policy bsp"
+            .split_whitespace()
+            .map(String::from),
+    )
+    .unwrap();
+    assert_eq!(b.get("policy"), Some("bsp"));
+}
+
+#[test]
+fn labels_and_dataset_agree_on_class_range() {
+    let cfg = ExperimentConfig::tiny();
+    let ds = build_dataset(&cfg);
+    assert_eq!(ds.n_classes, 10);
+    let idx: Vec<usize> = (0..64).collect();
+    let (_, y) = ds.gather(&idx);
+    match y {
+        Labels::Class(c) => assert!(c.iter().all(|&v| v < 10)),
+        _ => panic!("xent dataset must yield class labels"),
+    }
+}

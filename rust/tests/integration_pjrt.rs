@@ -1,0 +1,160 @@
+//! Integration tests across the AOT boundary: the PJRT engine running
+//! JAX-lowered HLO artifacts must agree with the native Rust engine.
+//!
+//! These run only when `make artifacts` has produced artifacts/; they are
+//! skipped (with a notice) otherwise so `cargo test` works pre-build.
+
+use sspdnn::config::ExperimentConfig;
+use sspdnn::coordinator::{
+    build_dataset, run_experiment_on, DriverOptions, EngineKind, GradEngine,
+    NativeEngine,
+};
+use sspdnn::nn::{Activation, Labels, Loss, Mlp, ParamSet};
+use sspdnn::runtime::{Manifest, PjrtEngine};
+use sspdnn::tensor::Matrix;
+use sspdnn::util::Pcg64;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir).expect("manifest parses"))
+    } else {
+        eprintln!("artifacts/ missing; run `make artifacts` — skipping");
+        None
+    }
+}
+
+fn problem(dims: &[usize], batch: usize, seed: u64) -> (ParamSet, Matrix, Labels) {
+    let mut rng = Pcg64::new(seed);
+    let p = ParamSet::glorot(dims, &mut rng);
+    let x = Matrix::randn(batch, dims[0], 1.0, &mut rng);
+    let y = Labels::Class(
+        (0..batch)
+            .map(|_| rng.below(*dims.last().unwrap()) as u32)
+            .collect(),
+    );
+    (p, x, y)
+}
+
+#[test]
+fn pjrt_tiny_matches_native_engine() {
+    let Some(man) = manifest() else { return };
+    let spec = man.get("tiny").expect("tiny artifact");
+    let mut pjrt = PjrtEngine::load(spec).expect("compile tiny");
+    let mlp = Mlp::new(spec.layer_dims.clone(), Activation::Sigmoid, Loss::Xent);
+    let mut native = NativeEngine::new(mlp);
+
+    for seed in 0..3 {
+        let (p, x, y) = problem(&spec.layer_dims, spec.batch, seed);
+        let (l_p, g_p) = pjrt.loss_and_grads(&p, &x, &y);
+        let (l_n, g_n) = native.loss_and_grads(&p, &x, &y);
+        assert!(
+            (l_p - l_n).abs() < 1e-4 * (1.0 + l_n.abs()),
+            "loss mismatch: pjrt {l_p} native {l_n}"
+        );
+        for (m, (a, b)) in g_p.layers.iter().zip(&g_n.layers).enumerate() {
+            let d = a.w.max_abs_diff(&b.w);
+            assert!(d < 1e-4, "layer {m} grad diff {d}");
+            for (x1, x2) in a.b.iter().zip(&b.b) {
+                assert!((x1 - x2).abs() < 1e-4, "layer {m} bias grads");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_pallas_artifact_matches_jnp_artifact() {
+    // the layerwise manual-backprop (pallas) artifact and the autodiff
+    // (jnp) artifact must be numerically interchangeable — the Layer-1
+    // kernels really implement Eq. (6)/(7)
+    let Some(man) = manifest() else { return };
+    let jnp = man.get("tiny").expect("tiny");
+    let pallas = man.get("tiny_pallas").expect("tiny_pallas");
+    assert_eq!(jnp.layer_dims, pallas.layer_dims);
+    let mut e_jnp = PjrtEngine::load(jnp).unwrap();
+    let mut e_pal = PjrtEngine::load(pallas).unwrap();
+    let (p, x, y) = problem(&jnp.layer_dims, jnp.batch, 7);
+    let (l1, g1) = e_jnp.loss_and_grads(&p, &x, &y);
+    let (l2, g2) = e_pal.loss_and_grads(&p, &x, &y);
+    assert!((l1 - l2).abs() < 1e-4, "{l1} vs {l2}");
+    for (a, b) in g1.layers.iter().zip(&g2.layers) {
+        assert!(a.w.max_abs_diff(&b.w) < 1e-4);
+    }
+}
+
+#[test]
+fn pjrt_mse_artifact_runs() {
+    let Some(man) = manifest() else { return };
+    let spec = man.get("tiny_mse").expect("tiny_mse");
+    let mut engine = PjrtEngine::load(spec).unwrap();
+    let mut rng = Pcg64::new(9);
+    let p = ParamSet::glorot(&spec.layer_dims, &mut rng);
+    let x = Matrix::randn(spec.batch, spec.layer_dims[0], 1.0, &mut rng);
+    let out_dim = *spec.layer_dims.last().unwrap();
+    let t = Matrix::from_fn(spec.batch, out_dim, |r, c| {
+        if c == r % out_dim {
+            1.0
+        } else {
+            0.0
+        }
+    });
+    let y = Labels::Dense(t);
+    let (loss, grads) = engine.loss_and_grads(&p, &x, &y);
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!(grads.norm() > 0.0);
+
+    // cross-check vs native MSE engine
+    let mlp = Mlp::new(spec.layer_dims.clone(), Activation::Sigmoid, Loss::Mse);
+    let mut native = NativeEngine::new(mlp);
+    let (l_n, g_n) = native.loss_and_grads(&p, &x, &y);
+    assert!((loss - l_n).abs() < 1e-4, "pjrt {loss} vs native {l_n}");
+    for (a, b) in grads.layers.iter().zip(&g_n.layers) {
+        assert!(a.w.max_abs_diff(&b.w) < 1e-4);
+    }
+}
+
+#[test]
+fn full_ssp_run_with_pjrt_engine_matches_native_run() {
+    // determinism end-to-end: the same experiment driven by the PJRT
+    // engine and the native engine must produce near-identical
+    // trajectories (both compute the same math in f32).
+    let Some(man) = manifest() else { return };
+    let spec = man.get("tiny").unwrap();
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.train.clocks = 8;
+    cfg.train.batches_per_clock = 2;
+    assert_eq!(cfg.model.dims, spec.layer_dims);
+    assert_eq!(cfg.train.batch, spec.batch);
+    let ds = build_dataset(&cfg);
+
+    let native = run_experiment_on(
+        &cfg,
+        DriverOptions {
+            per_batch_s: Some(0.02),
+            ..DriverOptions::default()
+        },
+        &ds,
+    );
+    let pjrt_engine = PjrtEngine::load(spec).unwrap();
+    let pjrt = run_experiment_on(
+        &cfg,
+        DriverOptions {
+            per_batch_s: Some(0.02),
+            engine: Some(EngineKind::Boxed(Box::new(pjrt_engine))),
+            ..DriverOptions::default()
+        },
+        &ds,
+    );
+    assert_eq!(native.steps, pjrt.steps);
+    let rel = (native.final_objective - pjrt.final_objective).abs()
+        / native.final_objective.max(1e-9);
+    assert!(
+        rel < 5e-3,
+        "final objectives diverged: native {} pjrt {}",
+        native.final_objective,
+        pjrt.final_objective
+    );
+    let d = native.final_params.dist_sq(&pjrt.final_params).sqrt()
+        / native.final_params.norm();
+    assert!(d < 5e-3, "final params diverged: rel dist {d}");
+}

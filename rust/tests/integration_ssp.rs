@@ -1,0 +1,173 @@
+//! Integration tests: the full SSP training stack (data → engine → ssp →
+//! sim → coordinator → metrics) exercised end to end on small workloads.
+
+use sspdnn::config::{DataKind, ExperimentConfig};
+use sspdnn::coordinator::{
+    build_dataset, run_experiment_on, DriverOptions, EtaSchedule,
+};
+use sspdnn::metrics;
+use sspdnn::ssp::Policy;
+
+fn tiny_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::tiny();
+    c.train.clocks = 20;
+    c.train.batches_per_clock = 2;
+    c
+}
+
+fn opts() -> DriverOptions {
+    DriverOptions {
+        per_batch_s: Some(0.02),
+        eval_samples: 128,
+        ..DriverOptions::default()
+    }
+}
+
+#[test]
+fn all_policies_converge_on_tiny() {
+    let cfg = tiny_cfg();
+    let ds = build_dataset(&cfg);
+    for policy in [
+        Policy::Bsp,
+        Policy::Ssp { staleness: 3 },
+        Policy::Ssp { staleness: 10 },
+        Policy::Async,
+    ] {
+        let mut c = cfg.clone();
+        c.ssp.policy = policy;
+        let run = run_experiment_on(&c, opts(), &ds);
+        let first = run.evals.first().unwrap().objective;
+        assert!(
+            run.final_objective < first,
+            "{}: {first} -> {}",
+            policy.name(),
+            run.final_objective
+        );
+        assert!(run.final_objective.is_finite());
+    }
+}
+
+#[test]
+fn speedup_curve_is_sane_on_machine_sweep() {
+    let mut cfg = tiny_cfg();
+    // the paper's regime: step size small relative to the parallel update
+    // accumulation (TIMIT uses eta=0.05); large eta at high machine
+    // counts trades statistical efficiency for none of the time win.
+    cfg.train.eta = 0.15;
+    cfg.train.clocks = 40;
+    let ds = build_dataset(&cfg);
+    let runs: Vec<_> = [1usize, 2, 4, 6]
+        .iter()
+        .map(|&n| {
+            run_experiment_on(
+                &cfg,
+                DriverOptions {
+                    machines: Some(n),
+                    ..opts()
+                },
+                &ds,
+            )
+        })
+        .collect();
+    let sp = metrics::speedups(&runs);
+    assert_eq!(sp[0], (1, 1.0));
+    let last = sp.last().unwrap();
+    assert!(last.1 > 1.0, "6 machines faster than 1: {sp:?}");
+    assert!(last.1 <= 6.1, "not super-linear: {sp:?}");
+}
+
+#[test]
+fn imagenet_kind_dataset_trains() {
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.data.kind = DataKind::ImagenetLike;
+    cfg.train.clocks = 12;
+    let ds = build_dataset(&cfg);
+    assert!(ds.x.data().iter().all(|&v| v >= 0.0), "LLC codes nonneg");
+    let run = run_experiment_on(&cfg, opts(), &ds);
+    assert!(run.final_objective < run.evals[0].objective);
+}
+
+#[test]
+fn epsilon_rate_degrades_with_lossy_network() {
+    let mut cfg = tiny_cfg();
+    cfg.cluster.drop_prob = 0.0;
+    let ds = build_dataset(&cfg);
+    let clean = run_experiment_on(&cfg, opts(), &ds);
+    cfg.cluster.drop_prob = 0.6;
+    cfg.cluster.latency_s = 5e-3; // slow, congested network
+    let lossy = run_experiment_on(&cfg, opts(), &ds);
+    assert!(
+        lossy.epsilon_rate <= clean.epsilon_rate,
+        "lossy eps {} should not exceed clean {}",
+        lossy.epsilon_rate,
+        clean.epsilon_rate
+    );
+    assert!(lossy.congestion_events > 0);
+    // SSP guarantee still holds: training still converges
+    assert!(lossy.final_objective < lossy.evals[0].objective);
+}
+
+#[test]
+fn decaying_eta_still_converges() {
+    let cfg = tiny_cfg();
+    let ds = build_dataset(&cfg);
+    let run = run_experiment_on(
+        &cfg,
+        DriverOptions {
+            eta: Some(EtaSchedule::Poly { eta0: 0.8, d: 0.3 }),
+            ..opts()
+        },
+        &ds,
+    );
+    assert!(run.final_objective < run.evals[0].objective);
+}
+
+#[test]
+fn run_metrics_are_consistent() {
+    let cfg = tiny_cfg();
+    let ds = build_dataset(&cfg);
+    let run = run_experiment_on(&cfg, opts(), &ds);
+    // every committed clock ships one message per layer
+    let layers = (cfg.model.dims.len() - 1) as u64;
+    let clocks = cfg.train.clocks as u64 * cfg.cluster.machines as u64;
+    assert_eq!(run.messages, clocks * layers);
+    assert!(run.bytes > 0);
+    assert_eq!(run.steps, clocks * cfg.train.batches_per_clock as u64);
+    // evals are time-ordered with non-decreasing clocks
+    for w in run.evals.windows(2) {
+        assert!(w[1].vtime >= w[0].vtime);
+        assert!(w[1].clock >= w[0].clock);
+    }
+    // objective curve CSV shape
+    let csv = metrics::curve_csv(&run);
+    assert_eq!(csv.lines().count(), run.evals.len() + 1);
+}
+
+#[test]
+fn barrier_bounds_clock_spread() {
+    // with heavy stragglers and s=1 the run must still finish (no
+    // deadlock) and the barrier must have been exercised
+    let mut cfg = tiny_cfg();
+    cfg.cluster.straggler_prob = 0.4;
+    cfg.cluster.straggler_factor = 10.0;
+    cfg.ssp.policy = Policy::Ssp { staleness: 1 };
+    let ds = build_dataset(&cfg);
+    let run = run_experiment_on(&cfg, opts(), &ds);
+    assert!(run.barrier_wait_s > 0.0, "stragglers must trigger waits");
+    assert_eq!(run.steps, 20 * 2 * 3);
+}
+
+#[test]
+fn clock_loss_curve_has_entries_for_every_clock() {
+    let cfg = tiny_cfg();
+    let ds = build_dataset(&cfg);
+    let run = run_experiment_on(&cfg, opts(), &ds);
+    assert_eq!(run.clock_loss.len(), cfg.train.clocks);
+    assert!(run.clock_loss.iter().all(|l| l.is_finite()));
+    // training loss should also descend on average
+    let n = run.clock_loss.len();
+    let early: f64 = run.clock_loss[..n / 3].iter().sum::<f64>() / (n / 3) as f64;
+    let late: f64 =
+        run.clock_loss[2 * n / 3..].iter().sum::<f64>() / (n - 2 * n / 3) as f64;
+    assert!(late < early, "{early} -> {late}");
+}

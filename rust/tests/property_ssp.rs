@@ -1,0 +1,221 @@
+//! Property-based tests of the SSP protocol invariants (hand-rolled
+//! randomized harness over `Pcg64` — the offline vendor set has no
+//! proptest; each property runs hundreds of randomized trials and shrinks
+//! nothing but reports the failing seed).
+//!
+//! Invariants (paper §3.1 / Ho et al. 2013):
+//!  P1  bounded staleness: fastest − slowest ≤ s at every instant
+//!  P2  conservation: master = init + Σ all applied updates (additivity,
+//!      order-independence)
+//!  P3  guaranteed visibility: at a read in clock c every (q, t≤c−s−1)
+//!      update is included
+//!  P4  read-my-writes: a worker's own committed updates are always in
+//!      its view
+//!  P5  ε accounting: included + missed = committed − guaranteed, rate ∈ [0,1]
+
+use sspdnn::nn::{LayerParams, ParamSet};
+use sspdnn::ssp::{ClockTable, Policy, Server, UpdateMsg, WorkerCache};
+use sspdnn::tensor::Matrix;
+use sspdnn::util::Pcg64;
+
+fn dims() -> Vec<usize> {
+    vec![3, 4, 2]
+}
+
+fn rand_delta(dims: &[usize], layer: usize, rng: &mut Pcg64) -> LayerParams {
+    LayerParams {
+        w: Matrix::randn(dims[layer], dims[layer + 1], 0.1, rng),
+        b: (0..dims[layer + 1])
+            .map(|_| rng.normal_f32(0.0, 0.1))
+            .collect(),
+    }
+}
+
+/// Drive a random but protocol-legal schedule against the server:
+/// each step, a random non-blocked worker commits a clock; its per-layer
+/// updates arrive after a random backlog of earlier arrivals drains.
+fn random_schedule(seed: u64, workers: usize, staleness: u64, steps: usize) {
+    let mut rng = Pcg64::new(seed);
+    let d = dims();
+    let init = ParamSet::glorot(&d, &mut rng);
+    let policy = Policy::Ssp { staleness };
+    let mut server = Server::new(init.clone(), workers, policy);
+    let mut expected = init.clone(); // P2 accumulator
+    let mut pending: Vec<UpdateMsg> = Vec::new(); // in-flight messages
+    let mut committed = vec![0u64; workers];
+
+    for _ in 0..steps {
+        // pick a worker allowed to proceed
+        let candidates: Vec<usize> =
+            (0..workers).filter(|&p| !server.must_wait(p)).collect();
+        assert!(
+            !candidates.is_empty(),
+            "P1 deadlock: every worker blocked (seed {seed})"
+        );
+        let p = candidates[rng.below(candidates.len())];
+
+        // deliver a random prefix of pending arrivals (FIFO per worker)
+        let deliver = rng.below(pending.len() + 1);
+        for msg in pending.drain(..deliver) {
+            server.apply_arrival(&msg);
+        }
+
+        // worker p commits its next clock
+        let c = committed[p];
+        for l in 0..d.len() - 1 {
+            let delta = rand_delta(&d, l, &mut rng);
+            // track expected master state (P2)
+            expected.axpy_layer(l, 1.0, &delta);
+            pending.push(UpdateMsg::new(p, c, l, delta));
+        }
+        committed[p] += 1;
+        server.commit(p);
+
+        // P1: staleness bound holds after every commit
+        let min = (0..workers).map(|q| server.clocks().clock(q)).min().unwrap();
+        let max = (0..workers).map(|q| server.clocks().clock(q)).max().unwrap();
+        assert!(
+            max - min <= staleness + 1,
+            "P1 violated: spread {} > s+1={} (seed {seed})",
+            max - min,
+            staleness + 1
+        );
+
+        // P5 on a random reader that is read-ready
+        let reader = rng.below(workers);
+        if server.read_ready(reader) {
+            let (_, _, stats) = server.fetch(reader);
+            let rate = stats.epsilon_rate();
+            assert!((0.0..=1.0).contains(&rate), "P5 rate {rate} (seed {seed})");
+        }
+    }
+
+    // drain everything → P2 conservation
+    for msg in pending.drain(..) {
+        server.apply_arrival(&msg);
+    }
+    let master = server.table().snapshot();
+    let dist = master.dist_sq(&expected).sqrt();
+    assert!(
+        dist < 1e-3,
+        "P2 violated: master != init + sum(updates), dist {dist} (seed {seed})"
+    );
+}
+
+#[test]
+fn p1_p2_p5_hold_over_random_schedules() {
+    for seed in 0..60 {
+        let workers = 2 + (seed as usize % 5);
+        let staleness = seed % 7;
+        random_schedule(seed, workers, staleness, 120);
+    }
+}
+
+#[test]
+fn p3_guaranteed_visibility_enforced_by_read_ready() {
+    // read_ready(p) must be false exactly while some guaranteed update is
+    // missing; fetch after read_ready includes all of them.
+    for seed in 0..40u64 {
+        let mut rng = Pcg64::new(seed ^ 0xBEEF);
+        let d = dims();
+        let workers = 3;
+        let s = 1u64;
+        let mut server =
+            Server::new(ParamSet::zeros(&d), workers, Policy::Ssp { staleness: s });
+        // all workers commit 2 clocks, arrivals randomly delayed
+        let mut pending = Vec::new();
+        for c in 0..2u64 {
+            for p in 0..workers {
+                for l in 0..d.len() - 1 {
+                    pending.push(UpdateMsg::new(p, c, l, rand_delta(&d, l, &mut rng)));
+                }
+                server.commit(p);
+            }
+        }
+        rng.shuffle(&mut pending);
+        // stable-sort by (worker, clock) to respect FIFO per worker
+        pending.sort_by_key(|m| (m.from, m.clock));
+
+        // worker 0 is at clock 2; needs all ts ≤ 0 applied (s=1)
+        let mut applied = 0;
+        while !server.read_ready(0) {
+            assert!(
+                applied < pending.len(),
+                "read never became ready (seed {seed})"
+            );
+            server.apply_arrival(&pending[applied]);
+            applied += 1;
+        }
+        // every clock-0 update must now be applied, for every layer
+        for l in 0..d.len() - 1 {
+            for q in 0..workers {
+                assert!(
+                    server.table().versions().applied(l, q) >= 1,
+                    "P3: missing guaranteed update layer {l} worker {q} (seed {seed})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn p4_read_my_writes_through_cache() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg64::new(seed ^ 0xCAFE);
+        let d = dims();
+        let init = ParamSet::glorot(&d, &mut rng);
+        let mut cache = WorkerCache::new(0, init.clone());
+        let mut own_total = init.zeros_like();
+        // several clocks of local updates, never fetched
+        for _ in 0..5 {
+            let mut upd = init.zeros_like();
+            for l in 0..d.len() - 1 {
+                let delta = rand_delta(&d, l, &mut rng);
+                upd.layers[l] = delta;
+            }
+            cache.add_local_update(&upd);
+            own_total.axpy(1.0, &upd);
+            cache.commit_clock();
+        }
+        // view == init + all own updates (P4), regardless of server state
+        let mut want = init.clone();
+        want.axpy(1.0, &own_total);
+        let dist = cache.view().dist_sq(&want).sqrt();
+        assert!(dist < 1e-3, "P4 violated: dist {dist} (seed {seed})");
+    }
+}
+
+#[test]
+fn clock_table_randomized_gap_bound() {
+    // pure clock-table property: following must_wait never violates the
+    // bound, for random policies and worker counts
+    for seed in 0..80u64 {
+        let mut rng = Pcg64::new(seed);
+        let workers = 2 + rng.below(6);
+        let s = rng.below(5) as u64;
+        let policy = Policy::Ssp { staleness: s };
+        let mut t = ClockTable::new(workers);
+        for _ in 0..200 {
+            let ok: Vec<usize> =
+                (0..workers).filter(|&p| !t.must_wait(p, policy)).collect();
+            assert!(!ok.is_empty(), "deadlock (seed {seed})");
+            t.advance(ok[rng.below(ok.len())]);
+            assert!(t.max() - t.min() <= s + 1, "gap bound (seed {seed})");
+        }
+    }
+}
+
+#[test]
+fn bsp_is_lockstep_under_random_scheduling() {
+    for seed in 0..30u64 {
+        let mut rng = Pcg64::new(seed);
+        let workers = 2 + rng.below(4);
+        let mut t = ClockTable::new(workers);
+        for _ in 0..150 {
+            let ok: Vec<usize> =
+                (0..workers).filter(|&p| !t.must_wait(p, Policy::Bsp)).collect();
+            t.advance(ok[rng.below(ok.len())]);
+            assert!(t.max() - t.min() <= 1, "BSP lockstep (seed {seed})");
+        }
+    }
+}
