@@ -1,0 +1,196 @@
+//! Sharded vs single-lock parameter server throughput — the bench behind
+//! the sharding refactor's headline claim.
+//!
+//! Two measurements at 8 workers:
+//!
+//! 1. **Raw protocol throughput**: worker threads drive the pure SSP
+//!    protocol loop (barrier → fetch → commit → per-layer arrivals) with
+//!    zero compute in between. The single-lock `Server` serializes every
+//!    fetch *including the full-model snapshot copy* inside its mutex;
+//!    the `ShardedServer` runs the same ops per-layer under read locks.
+//!    Expectation: ≥ 1.5× at 8 workers (in practice far more, since the
+//!    global lock turns the whole loop into a serial program).
+//! 2. **End-to-end threaded training**: `run_threaded` (sharded) vs
+//!    `run_threaded_global` on the same tiny workload — gradient compute
+//!    dominates here, so this shows the *residual* server overhead in a
+//!    realistic run.
+
+mod support;
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use sspdnn::config::ExperimentConfig;
+use sspdnn::coordinator::{
+    build_dataset, native_factory, run_threaded, run_threaded_global,
+    EtaSchedule, ThreadedOptions,
+};
+use sspdnn::metrics;
+use sspdnn::nn::ParamSet;
+use sspdnn::ssp::{Policy, Server, ShardedServer, UpdateMsg};
+use sspdnn::util::{Pcg64, Stopwatch};
+
+const WORKERS: usize = 8;
+
+fn protocol_dims() -> Vec<usize> {
+    // mid-sized model: the fetch snapshot is a real memcpy, not a toy
+    vec![360, 128, 128, 2001]
+}
+
+fn zero_msgs(init: &ParamSet, worker: usize, clock: u64) -> Vec<UpdateMsg> {
+    init.layers
+        .iter()
+        .enumerate()
+        .map(|(l, lp)| {
+            let mut delta = lp.clone();
+            delta.w.fill(0.0);
+            delta.b.fill(0.0);
+            UpdateMsg::new(worker, clock, l, delta)
+        })
+        .collect()
+}
+
+/// Pure protocol loop on the sharded server: no locks shared with other
+/// layers, no global critical section.
+fn sharded_protocol(init: &ParamSet, policy: Policy, clocks: u64) -> f64 {
+    let server = ShardedServer::new(init.clone(), WORKERS, policy);
+    let sw = Stopwatch::new();
+    std::thread::scope(|scope| {
+        for p in 0..WORKERS {
+            let server = &server;
+            scope.spawn(move || {
+                for clock in 0..clocks {
+                    server.wait_until_ready(p);
+                    let _ = server.fetch(p);
+                    let msgs = zero_msgs(init, p, clock);
+                    server.commit(p);
+                    server.apply_arrivals(&msgs);
+                }
+            });
+        }
+    });
+    sw.elapsed_secs()
+}
+
+/// The same loop on the single-lock reference server.
+fn global_protocol(init: &ParamSet, policy: Policy, clocks: u64) -> f64 {
+    struct Shared {
+        server: Mutex<Server>,
+        cv: Condvar,
+    }
+    let shared = Arc::new(Shared {
+        server: Mutex::new(Server::new(init.clone(), WORKERS, policy)),
+        cv: Condvar::new(),
+    });
+    let sw = Stopwatch::new();
+    std::thread::scope(|scope| {
+        for p in 0..WORKERS {
+            let shared = Arc::clone(&shared);
+            scope.spawn(move || {
+                for clock in 0..clocks {
+                    {
+                        let mut srv = shared.server.lock().unwrap();
+                        while srv.must_wait(p) {
+                            srv = shared.cv.wait(srv).unwrap();
+                        }
+                        let _ = srv.fetch(p);
+                    }
+                    let msgs = zero_msgs(init, p, clock);
+                    {
+                        let mut srv = shared.server.lock().unwrap();
+                        srv.commit(p);
+                        for m in &msgs {
+                            srv.apply_arrival(m);
+                        }
+                        shared.cv.notify_all();
+                    }
+                }
+            });
+        }
+    });
+    sw.elapsed_secs()
+}
+
+fn main() {
+    let quick = support::scale() == "quick";
+    let clocks: u64 = if quick { 60 } else { 200 };
+    let mut rng = Pcg64::new(7);
+    let init = ParamSet::glorot(&protocol_dims(), &mut rng);
+    let policy = Policy::Ssp { staleness: 3 };
+    let ops = WORKERS as u64 * clocks;
+
+    println!("=== sharded vs global-lock SSP server, {WORKERS} workers ===\n");
+
+    // ---- raw protocol loop ----
+    // warmup both paths once
+    sharded_protocol(&init, policy, 8);
+    global_protocol(&init, policy, 8);
+
+    let t_global = global_protocol(&init, policy, clocks);
+    let t_sharded = sharded_protocol(&init, policy, clocks);
+    let thr_global = metrics::throughput(ops, t_global);
+    let thr_sharded = metrics::throughput(ops, t_sharded);
+    let speedup = thr_sharded / thr_global.max(1e-12);
+    println!(
+        "{}",
+        metrics::render_table(
+            &["server", "clocks/s (8 workers)", "wall s", "speedup"],
+            &[
+                vec![
+                    "global-lock Server".into(),
+                    format!("{thr_global:.0}"),
+                    format!("{t_global:.3}"),
+                    "1.00x".into(),
+                ],
+                vec![
+                    "sharded per-layer".into(),
+                    format!("{thr_sharded:.0}"),
+                    format!("{t_sharded:.3}"),
+                    format!("{speedup:.2}x"),
+                ],
+            ],
+        )
+    );
+    assert!(
+        speedup > 1.0,
+        "sharded protocol loop must beat the global lock: {speedup:.2}x"
+    );
+    if speedup < 1.5 {
+        eprintln!(
+            "  [warn] speedup {speedup:.2}x below the 1.5x target \
+             (host may be core-starved)"
+        );
+    }
+
+    // ---- end-to-end threaded training ----
+    let mut cfg = ExperimentConfig::tiny();
+    cfg.cluster.machines = WORKERS;
+    cfg.ssp.policy = policy;
+    cfg.train.clocks = if quick { 6 } else { 20 };
+    cfg.train.batches_per_clock = 2;
+    let dataset = build_dataset(&cfg);
+    let opts = |cfg: &ExperimentConfig| ThreadedOptions {
+        machines: WORKERS,
+        engine_factory: native_factory(cfg),
+        eta: EtaSchedule::Fixed(cfg.train.eta),
+        eval_every: u64::MAX, // keep eval out of both hot loops
+        eval_samples: 64,
+    };
+    let g = run_threaded_global(&cfg, &dataset, opts(&cfg));
+    let s = run_threaded(&cfg, &dataset, opts(&cfg));
+    let e2e = metrics::throughput(s.steps, s.wall_seconds)
+        / metrics::throughput(g.steps, g.wall_seconds).max(1e-12);
+    println!(
+        "\nend-to-end training ({} clocks x {} workers): \
+         global {:.2}s, sharded {:.2}s ({e2e:.2}x steps/s)",
+        cfg.train.clocks, WORKERS, g.wall_seconds, s.wall_seconds
+    );
+    println!(
+        "final objectives: global {:.4}, sharded {:.4}",
+        g.final_objective, s.final_objective
+    );
+    assert!(
+        s.final_objective.is_finite() && g.final_objective.is_finite(),
+        "both paths must train"
+    );
+    println!("\nsharded_server bench done");
+}

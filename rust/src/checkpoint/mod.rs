@@ -12,16 +12,44 @@ use crate::nn::ParamSet;
 const MAGIC: &[u8; 4] = b"SSPD";
 const VERSION: u32 = 1;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CheckpointError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad magic / not a checkpoint")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("unsupported version {0}")]
     BadVersion(u32),
-    #[error("checksum mismatch (corrupt checkpoint)")]
     Corrupt,
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "io: {e}"),
+            CheckpointError::BadMagic => {
+                write!(f, "bad magic / not a checkpoint")
+            }
+            CheckpointError::BadVersion(v) => {
+                write!(f, "unsupported version {v}")
+            }
+            CheckpointError::Corrupt => {
+                write!(f, "checksum mismatch (corrupt checkpoint)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
 }
 
 fn fnv1a(bytes: &[u8]) -> u64 {

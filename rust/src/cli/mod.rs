@@ -9,19 +9,34 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing value for flag --{0}")]
     MissingValue(String),
-    #[error("flag --{0} given twice")]
     Duplicate(String),
-    #[error("invalid value for --{flag}: {value:?} ({expect})")]
     Invalid {
         flag: String,
         value: String,
         expect: &'static str,
     },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(flag) => {
+                write!(f, "missing value for flag --{flag}")
+            }
+            CliError::Duplicate(flag) => write!(f, "flag --{flag} given twice"),
+            CliError::Invalid {
+                flag,
+                value,
+                expect,
+            } => write!(f, "invalid value for --{flag}: {value:?} ({expect})"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse `argv[1..]`: first bare token is the command, `--key value`

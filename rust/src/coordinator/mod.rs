@@ -4,8 +4,9 @@
 //!   artifact) so the driver is agnostic to where gradients come from.
 //! * `driver`   — the discrete-event SSP training run: real gradients &
 //!   parameter versions, virtual time (see DESIGN.md).
-//! * `threaded` — a real-thread SSP runner (shared-memory parameter
-//!   server) used by the end-to-end example.
+//! * `threaded` — real-thread SSP runners: `run_threaded` on the sharded
+//!   per-layer server (the deployment path), `run_threaded_global` on
+//!   the single-lock reference server (bench baseline / oracle).
 //! * `tracker`  — objective / parameter-convergence instrumentation
 //!   (Figures 2, 3, 6).
 
@@ -20,7 +21,10 @@ pub use driver::{
 };
 pub use engine::{EngineKind, GradEngine, NativeEngine};
 pub use trace::{Trace, TraceEvent, TraceSummary, WorkerSummary};
-pub use threaded::{native_factory, run_threaded, ThreadedOptions, ThreadedResult};
+pub use threaded::{
+    native_factory, run_threaded, run_threaded_global, ThreadedOptions,
+    ThreadedResult,
+};
 pub use tracker::{EvalPoint, Tracker};
 
 /// Learning-rate schedule. The paper's experiments use a fixed rate

@@ -1,12 +1,31 @@
-//! Real-thread SSP runner: OS threads + a shared-memory parameter server
-//! (Mutex + Condvar), the in-process analogue of Petuum's single-node
-//! mode. Used by the end-to-end example to prove the coordinator works
-//! under true concurrency (the discrete-event driver is the instrument
-//! for the paper's figures; this is the deployment-shaped path).
+//! Real-thread SSP runner: OS threads + a shared-memory parameter
+//! server, the in-process analogue of Petuum's single-node mode. Used by
+//! the end-to-end example to prove the coordinator works under true
+//! concurrency (the discrete-event driver is the instrument for the
+//! paper's figures; this is the deployment-shaped path).
 //!
-//! In shared memory every committed update is immediately visible
-//! (ε ≡ 1); the staleness barrier still governs how far apart workers may
-//! drift, so SSP vs BSP behaviour is real.
+//! Two interchangeable server backends:
+//!
+//! * `run_threaded` — the **sharded per-layer server**
+//!   (`ssp::ShardedServer`): commits advance an atomic clock table,
+//!   updates lock only their own layer's shard, blocked workers park on
+//!   the server's condvar, and evaluation snapshots assemble layer by
+//!   layer so the hot path never stalls behind an eval. This is the
+//!   deployment path: server throughput scales with workers instead of
+//!   serializing on one mutex.
+//! * `run_threaded_global` — the original single-lock reference
+//!   (`Mutex<Server>` + condvar), kept as the baseline the
+//!   `sharded_server` bench compares against and as the oracle for the
+//!   equivalence tests (for 1 machine the two paths are bitwise
+//!   identical).
+//!
+//! In shared memory a worker applies its own committed update before its
+//! next fetch, so read-my-writes always holds and `own_missing` is zero.
+//! Under the global lock every committed update is immediately visible
+//! (ε ≡ 1); under the sharded server a reader can overlap another
+//! worker's in-flight commit and miss part of its in-window update
+//! (ε ≤ 1) — exactly the best-effort semantics of Eq. 5 condition 5.
+//! The staleness barrier governs how far workers drift in both.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -14,7 +33,7 @@ use std::thread;
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::nn::ParamSet;
-use crate::ssp::Server;
+use crate::ssp::{Server, ShardedServer};
 use crate::util::Pcg64;
 
 use super::engine::{EngineKind, GradEngine};
@@ -40,21 +59,17 @@ pub struct ThreadedResult {
     pub final_params: ParamSet,
 }
 
-struct Shared {
-    server: Mutex<Server>,
-    cv: Condvar,
+/// Deterministic run setup shared by both backends — identical seeds
+/// produce identical init/eval/shard/batch streams, which is what makes
+/// the two paths comparable run-for-run.
+struct Setup {
+    init: ParamSet,
+    eval_x: crate::tensor::Matrix,
+    eval_y: crate::nn::Labels,
+    shards: Vec<crate::data::Shard>,
 }
 
-/// Run SSP training on real threads. Returns the measured wall-clock
-/// curve; the statistical path is identical to the simulated driver's
-/// (same update rule, same staleness semantics, ε ≡ 1).
-pub fn run_threaded(
-    cfg: &ExperimentConfig,
-    dataset: &Dataset,
-    opts: ThreadedOptions,
-) -> ThreadedResult {
-    let machines = opts.machines;
-    let policy = cfg.ssp.policy;
+fn setup(cfg: &ExperimentConfig, dataset: &Dataset, opts: &ThreadedOptions) -> (Setup, Pcg64) {
     let mut root_rng = Pcg64::new(cfg.train.seed);
     let mut init_rng = Pcg64::new(cfg.train.seed ^ 0xD11);
     let init = ParamSet::glorot(&cfg.model.dims, &mut init_rng);
@@ -66,47 +81,65 @@ pub fn run_threaded(
         .collect();
     let (eval_x, eval_y) = dataset.gather(&eval_idx);
 
-    let shards = dataset.shard(machines, &mut root_rng.split(1));
-    let shared = Arc::new(Shared {
-        server: Mutex::new(Server::new(init.clone(), machines, policy)),
-        cv: Condvar::new(),
-    });
+    let shards = dataset.shard(opts.machines, &mut root_rng.split(1));
+    (
+        Setup {
+            init,
+            eval_x,
+            eval_y,
+            shards,
+        },
+        root_rng,
+    )
+}
 
+/// Run SSP training on real threads against the **sharded per-layer
+/// server**. The statistical path matches the simulated driver's (same
+/// update rule, same staleness semantics); no global lock anywhere on
+/// the hot path.
+pub fn run_threaded(
+    cfg: &ExperimentConfig,
+    dataset: &Dataset,
+    opts: ThreadedOptions,
+) -> ThreadedResult {
+    let machines = opts.machines;
+    let policy = cfg.ssp.policy;
+    let (su, mut root_rng) = setup(cfg, dataset, &opts);
+
+    let server = ShardedServer::new(su.init.clone(), machines, policy);
     let start = std::time::Instant::now();
     let evals = Arc::new(Mutex::new(Vec::new()));
 
     thread::scope(|scope| {
-        for shard in shards {
+        for shard in &su.shards {
             let p = shard.worker();
-            let shared = Arc::clone(&shared);
+            let server = &server;
             let mut engine = (opts.engine_factory)(p);
             let mut batches =
                 shard.minibatches(cfg.train.batch, root_rng.split(100 + p as u64));
-            let init = init.clone();
+            let init = su.init.clone();
             let eta = opts.eta;
             let evals = Arc::clone(&evals);
-            let (eval_x, eval_y) = (eval_x.clone(), eval_y.clone());
+            // only worker 0 evaluates; scoped threads can borrow the
+            // eval set instead of cloning it per worker
+            let (eval_x, eval_y) = (&su.eval_x, &su.eval_y);
             let dataset = &*dataset;
             let cfg = &*cfg;
+            let opts = &opts;
             scope.spawn(move || {
                 let mut cache = crate::ssp::WorkerCache::new(p, init);
                 let mut steps: u64 = 0;
                 for clock in 0..cfg.train.clocks as u64 {
-                    // barrier + fetch under the lock
-                    {
-                        let mut srv = shared.server.lock().unwrap();
-                        while srv.must_wait(p) {
-                            srv = shared.cv.wait(srv).unwrap();
-                        }
-                        debug_assert!(srv.read_ready(p));
-                        let (snap, _own, _stats) = srv.fetch(p);
-                        // shared memory: snapshot already contains all our
-                        // own commits (applied at commit time) → nothing
-                        // missing.
-                        let missing = snap.zeros_like();
-                        cache.install_snapshot(snap, &missing);
-                    }
-                    // compute outside the lock
+                    // barrier + read guarantee: park on the server's
+                    // condvar; no parameter state is locked while waiting
+                    server.wait_until_ready(p);
+                    let (snap, _own, _stats) = server.fetch(p);
+                    // shared memory: our own commits were applied by us
+                    // before this fetch → nothing missing.
+                    let missing = snap.zeros_like();
+                    cache.install_snapshot(snap, &missing);
+
+                    // compute without holding anything
                     for _ in 0..cfg.train.batches_per_clock {
                         let idx = batches.next_batch();
                         let (x, y) = dataset.gather(&idx);
@@ -119,6 +152,109 @@ pub fn run_threaded(
                         "worker {p}: clock {clock} computed ({} steps)",
                         steps
                     );
+                    // per-shard commit: clock advance is atomic, each
+                    // layer's delta locks only its own shard, waiters
+                    // get one condvar pulse for the whole batch
+                    let msgs = cache.commit_clock();
+                    server.commit(p);
+                    server.apply_arrivals(&msgs);
+
+                    if p == 0 && (clock + 1) % opts.eval_every == 0 {
+                        // eval off the hot path: the snapshot takes each
+                        // shard's read lock briefly; the objective runs
+                        // on this thread while the others keep training
+                        let snap = server.snapshot();
+                        let obj = engine.objective(&snap, eval_x, eval_y);
+                        evals.lock().unwrap().push((
+                            clock + 1,
+                            start.elapsed().as_secs_f64(),
+                            obj,
+                        ));
+                    }
+                }
+            });
+        }
+    });
+
+    let wall_seconds = start.elapsed().as_secs_f64();
+    let final_params = server.snapshot();
+    let mut engine = (opts.engine_factory)(0);
+    let final_objective = engine.objective(&final_params, &su.eval_x, &su.eval_y);
+    let steps =
+        (machines * cfg.train.clocks * cfg.train.batches_per_clock) as u64;
+
+    ThreadedResult {
+        wall_seconds,
+        steps,
+        evals: Arc::try_unwrap(evals).unwrap().into_inner().unwrap(),
+        final_objective,
+        final_params,
+    }
+}
+
+struct GlobalShared {
+    server: Mutex<Server>,
+    cv: Condvar,
+}
+
+/// The single-lock reference runner: every fetch, commit and eval
+/// serializes on one `Mutex<Server>`. Kept as the baseline for the
+/// `sharded_server` bench and the equivalence tests.
+pub fn run_threaded_global(
+    cfg: &ExperimentConfig,
+    dataset: &Dataset,
+    opts: ThreadedOptions,
+) -> ThreadedResult {
+    let machines = opts.machines;
+    let policy = cfg.ssp.policy;
+    let (su, mut root_rng) = setup(cfg, dataset, &opts);
+
+    let shared = Arc::new(GlobalShared {
+        server: Mutex::new(Server::new(su.init.clone(), machines, policy)),
+        cv: Condvar::new(),
+    });
+
+    let start = std::time::Instant::now();
+    let evals = Arc::new(Mutex::new(Vec::new()));
+
+    thread::scope(|scope| {
+        for shard in &su.shards {
+            let p = shard.worker();
+            let shared = Arc::clone(&shared);
+            let mut engine = (opts.engine_factory)(p);
+            let mut batches =
+                shard.minibatches(cfg.train.batch, root_rng.split(100 + p as u64));
+            let init = su.init.clone();
+            let eta = opts.eta;
+            let evals = Arc::clone(&evals);
+            let (eval_x, eval_y) = (&su.eval_x, &su.eval_y);
+            let dataset = &*dataset;
+            let cfg = &*cfg;
+            let opts = &opts;
+            scope.spawn(move || {
+                let mut cache = crate::ssp::WorkerCache::new(p, init);
+                let mut steps: u64 = 0;
+                for clock in 0..cfg.train.clocks as u64 {
+                    // barrier + fetch under the lock
+                    {
+                        let mut srv = shared.server.lock().unwrap();
+                        while srv.must_wait(p) {
+                            srv = shared.cv.wait(srv).unwrap();
+                        }
+                        debug_assert!(srv.read_ready(p));
+                        let (snap, _own, _stats) = srv.fetch(p);
+                        let missing = snap.zeros_like();
+                        cache.install_snapshot(snap, &missing);
+                    }
+                    // compute outside the lock
+                    for _ in 0..cfg.train.batches_per_clock {
+                        let idx = batches.next_batch();
+                        let (x, y) = dataset.gather(&idx);
+                        let (_, grads) =
+                            engine.loss_and_grads(cache.view(), &x, &y);
+                        cache.add_scaled_local_update(-eta.at(steps), &grads);
+                        steps += 1;
+                    }
                     // commit under the lock: apply updates instantly
                     {
                         let mut srv = shared.server.lock().unwrap();
@@ -131,7 +267,7 @@ pub fn run_threaded(
                         if p == 0 && (clock + 1) % opts.eval_every == 0 {
                             let snap = srv.table().snapshot();
                             drop(srv);
-                            let obj = engine.objective(&snap, &eval_x, &eval_y);
+                            let obj = engine.objective(&snap, eval_x, eval_y);
                             evals.lock().unwrap().push((
                                 clock + 1,
                                 start.elapsed().as_secs_f64(),
@@ -149,7 +285,7 @@ pub fn run_threaded(
     let final_params = srv.table().snapshot();
     drop(srv);
     let mut engine = (opts.engine_factory)(0);
-    let final_objective = engine.objective(&final_params, &eval_x, &eval_y);
+    let final_objective = engine.objective(&final_params, &su.eval_x, &su.eval_y);
     let steps =
         (machines * cfg.train.clocks * cfg.train.batches_per_clock) as u64;
 
@@ -189,21 +325,21 @@ mod tests {
         c
     }
 
+    fn opts(cfg: &ExperimentConfig, machines: usize) -> ThreadedOptions {
+        ThreadedOptions {
+            machines,
+            engine_factory: native_factory(cfg),
+            eta: EtaSchedule::Fixed(cfg.train.eta),
+            eval_every: 2,
+            eval_samples: 128,
+        }
+    }
+
     #[test]
     fn threaded_run_descends() {
         let cfg = tiny_cfg();
         let ds = build_dataset(&cfg);
-        let r = run_threaded(
-            &cfg,
-            &ds,
-            ThreadedOptions {
-                machines: 3,
-                engine_factory: native_factory(&cfg),
-                eta: EtaSchedule::Fixed(cfg.train.eta),
-                eval_every: 2,
-                eval_samples: 128,
-            },
-        );
+        let r = run_threaded(&cfg, &ds, opts(&cfg, 3));
         assert_eq!(r.steps, 3 * 10 * 2);
         assert!(!r.evals.is_empty());
         let first = r.evals.first().unwrap().2;
@@ -219,17 +355,34 @@ mod tests {
         let mut cfg = tiny_cfg();
         cfg.ssp.policy = Policy::Bsp;
         let ds = build_dataset(&cfg);
-        let r = run_threaded(
-            &cfg,
-            &ds,
-            ThreadedOptions {
-                machines: 2,
-                engine_factory: native_factory(&cfg),
-                eta: EtaSchedule::Fixed(cfg.train.eta),
-                eval_every: 5,
-                eval_samples: 64,
-            },
-        );
+        let r = run_threaded(&cfg, &ds, opts(&cfg, 2));
         assert!(r.final_objective.is_finite());
+    }
+
+    #[test]
+    fn global_lock_reference_still_descends() {
+        let cfg = tiny_cfg();
+        let ds = build_dataset(&cfg);
+        let r = run_threaded_global(&cfg, &ds, opts(&cfg, 3));
+        assert_eq!(r.steps, 3 * 10 * 2);
+        let first = r.evals.first().unwrap().2;
+        assert!(r.final_objective < first);
+    }
+
+    #[test]
+    fn sharded_matches_global_bitwise_on_one_machine() {
+        // with a single worker both paths run the exact same sequence of
+        // f32 operations: the sharded refactor must be bit-identical
+        let cfg = tiny_cfg();
+        let ds = build_dataset(&cfg);
+        let a = run_threaded(&cfg, &ds, opts(&cfg, 1));
+        let b = run_threaded_global(&cfg, &ds, opts(&cfg, 1));
+        assert_eq!(a.final_params, b.final_params);
+        assert_eq!(a.final_objective, b.final_objective);
+        let a_curve: Vec<(u64, f64)> =
+            a.evals.iter().map(|e| (e.0, e.2)).collect();
+        let b_curve: Vec<(u64, f64)> =
+            b.evals.iter().map(|e| (e.0, e.2)).collect();
+        assert_eq!(a_curve, b_curve);
     }
 }

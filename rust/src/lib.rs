@@ -14,8 +14,32 @@
 //!   kernels called from the Layer-2 graph.
 //!
 //! Python never runs on the training path: the Rust binary loads the compiled
-//! HLO artifacts through PJRT (`runtime`), or falls back to the built-in
-//! native engine (`nn`) for configurations without pre-built artifacts.
+//! HLO artifacts through PJRT (`runtime`, behind the `xla` feature), or falls
+//! back to the built-in native engine (`nn`) for configurations without
+//! pre-built artifacts.
+//!
+//! ## The parameter server is sharded per layer
+//!
+//! The paper's structural result (Theorem 3, §3.1) is that SSP consistency
+//! is *layerwise*: every update message carries exactly one layer's delta,
+//! timestamps are tracked per (layer, worker), and the read guarantee of
+//! Eq. 5 is enforced shard by shard. The `ssp` module therefore provides
+//! two implementations of the same `ssp::ParamServer` protocol surface:
+//!
+//! * `ssp::Server` — the single-lock reference implementation. It is the
+//!   oracle: simple enough to audit, used by the discrete-event driver
+//!   (`coordinator::driver`, which needs `&mut` determinism anyway), by the
+//!   `run_threaded_global` baseline, and by the equivalence tests.
+//! * `ssp::ShardedServer` — the deployment-shaped implementation behind
+//!   `coordinator::run_threaded`. Each layer's parameters live in their own
+//!   shard behind their own `RwLock`; the clock table and per-(layer,
+//!   worker) version vector are atomics, so the barrier predicates
+//!   (`must_wait`, `read_ready`) never take a lock; `fetch` assembles its
+//!   snapshot layer by layer with no global critical section; blocked
+//!   workers park on a condvar that commits pulse. Given the same operation
+//!   sequence the two implementations are bitwise identical (asserted by
+//!   `tests/property_ssp.rs`), and the shard boundary is the intended
+//!   message boundary for a future multi-process network transport.
 
 pub mod checkpoint;
 pub mod cli;

@@ -47,6 +47,16 @@ pub fn speedups(runs: &[RunResult]) -> Vec<(usize, f64)> {
         .collect()
 }
 
+/// Operations (or steps) per second over a measured interval; 0 for a
+/// degenerate interval. Used by the server-throughput benches.
+pub fn throughput(ops: u64, seconds: f64) -> f64 {
+    if seconds > 0.0 {
+        ops as f64 / seconds
+    } else {
+        0.0
+    }
+}
+
 /// CSV of a run's evaluation curve.
 pub fn curve_csv(run: &RunResult) -> String {
     let mut out = String::from("vtime_s,clock,objective,param_msd\n");
@@ -198,6 +208,13 @@ mod tests {
             final_params: ParamSet::zeros(&[1, 1]),
             trace: None,
         }
+    }
+
+    #[test]
+    fn throughput_basics() {
+        assert_eq!(throughput(100, 2.0), 50.0);
+        assert_eq!(throughput(100, 0.0), 0.0);
+        assert_eq!(throughput(0, 1.0), 0.0);
     }
 
     #[test]

@@ -7,7 +7,13 @@
 //! → `PjRtClient::compile` → `execute`.
 
 mod manifest;
+#[cfg(feature = "xla")]
 mod pjrt;
+#[cfg(not(feature = "xla"))]
+mod pjrt_stub;
 
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+#[cfg(feature = "xla")]
 pub use pjrt::PjrtEngine;
+#[cfg(not(feature = "xla"))]
+pub use pjrt_stub::PjrtEngine;

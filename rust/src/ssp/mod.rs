@@ -22,14 +22,50 @@
 mod client;
 mod clock;
 mod server;
+mod sharded;
 mod table;
 
 pub use client::WorkerCache;
 pub use clock::ClockTable;
 pub use server::{ReadStats, Server};
+pub use sharded::{AtomicClockTable, ShardedServer};
 pub use table::{ParamTable, VersionVector};
 
-use crate::nn::LayerParams;
+use crate::nn::{LayerParams, ParamSet};
+
+/// The SSP parameter-server protocol surface, implemented by both the
+/// single-lock reference `Server` and the scalable `ShardedServer`.
+///
+/// The trait exists so protocol invariants (P1–P5 in
+/// `tests/property_ssp.rs`) and the discrete-event machinery can be
+/// checked against *every* implementation, with the reference `Server`
+/// acting as the bitwise oracle for equivalence tests. Methods take
+/// `&mut self` to accommodate the single-threaded reference
+/// implementation; `ShardedServer` additionally offers the same surface
+/// on `&self` for lock-free concurrent use.
+pub trait ParamServer {
+    fn policy(&self) -> Policy;
+    fn workers(&self) -> usize;
+    fn n_layers(&self) -> usize;
+    /// Committed clock count of `worker`.
+    fn clock(&self, worker: usize) -> u64;
+    /// Worker finished a clock; its updates are now in flight.
+    fn commit(&mut self, worker: usize) -> u64;
+    /// One layer-update reaches the server.
+    fn apply_arrival(&mut self, msg: &UpdateMsg);
+    /// SSP condition 1: must the worker block before its next clock?
+    fn must_wait(&self, worker: usize) -> bool;
+    /// Eq. 5's guarantee: is the master sufficient for a read?
+    fn read_ready(&self, worker: usize) -> bool;
+    /// Serve a read: snapshot + own applied counts + ε statistics.
+    fn fetch(&mut self, worker: usize) -> (ParamSet, Vec<u64>, ReadStats);
+    /// Current master state (evaluation / checkpoint path).
+    fn snapshot(&self) -> ParamSet;
+    /// Applied clocks of `(layer, worker)` — the version vector.
+    fn applied(&self, layer: usize, worker: usize) -> u64;
+    /// Total reads served.
+    fn reads(&self) -> u64;
+}
 
 /// Consistency policy. `Bsp` ≡ `Ssp{staleness: 0}` with a full barrier;
 /// `Async` removes the barrier entirely (no staleness bound — included as

@@ -7,7 +7,7 @@
 
 use crate::nn::ParamSet;
 
-use super::{ClockTable, ParamTable, Policy, UpdateMsg};
+use super::{ClockTable, ParamServer, ParamTable, Policy, UpdateMsg};
 
 /// Statistics for one fetch (read) — quantifies Eq. (5)'s three terms.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -110,7 +110,7 @@ impl Server {
         self.reads += 1;
         let c = self.clocks.clock(worker);
         let s = self.policy.staleness().unwrap_or(u64::MAX);
-        let through = c.saturating_sub(s.saturating_add(0)); // c - s
+        let through = c.saturating_sub(s); // c − s (Async: s = u64::MAX ⇒ 0)
         let mut stats = ReadStats::default();
         let layers = self.n_layers();
         for l in 0..layers {
@@ -140,6 +140,56 @@ impl Server {
 
     pub fn reads(&self) -> u64 {
         self.reads
+    }
+}
+
+impl ParamServer for Server {
+    fn policy(&self) -> Policy {
+        Server::policy(self)
+    }
+
+    fn workers(&self) -> usize {
+        self.clocks.workers()
+    }
+
+    fn n_layers(&self) -> usize {
+        Server::n_layers(self)
+    }
+
+    fn clock(&self, worker: usize) -> u64 {
+        self.clocks.clock(worker)
+    }
+
+    fn commit(&mut self, worker: usize) -> u64 {
+        Server::commit(self, worker)
+    }
+
+    fn apply_arrival(&mut self, msg: &UpdateMsg) {
+        Server::apply_arrival(self, msg)
+    }
+
+    fn must_wait(&self, worker: usize) -> bool {
+        Server::must_wait(self, worker)
+    }
+
+    fn read_ready(&self, worker: usize) -> bool {
+        Server::read_ready(self, worker)
+    }
+
+    fn fetch(&mut self, worker: usize) -> (ParamSet, Vec<u64>, ReadStats) {
+        Server::fetch(self, worker)
+    }
+
+    fn snapshot(&self) -> ParamSet {
+        self.table.snapshot()
+    }
+
+    fn applied(&self, layer: usize, worker: usize) -> u64 {
+        self.table.versions().applied(layer, worker)
+    }
+
+    fn reads(&self) -> u64 {
+        Server::reads(self)
     }
 }
 
@@ -263,6 +313,39 @@ mod tests {
         srv.apply_arrival(&msg(0, 0, 0)); // layer 0 arrived, layer 1 not
         let (_, own, _) = srv.fetch(0);
         assert_eq!(own, vec![1, 0]);
+    }
+
+    #[test]
+    fn async_window_accounting_counts_every_commit_as_best_effort() {
+        // Regression for the staleness window under Policy::Async
+        // (s = u64::MAX): nothing is guaranteed, every committed update
+        // is best-effort, and included/missed split by arrival.
+        let mut srv = Server::new(ParamSet::zeros(&dims()), 2, Policy::Async);
+        // worker 1 commits 3 clocks; clocks 0 and 1 arrive (both layers),
+        // clock 2 stays in flight
+        for clock in 0..3u64 {
+            srv.commit(1);
+            if clock < 2 {
+                for l in 0..srv.n_layers() {
+                    srv.apply_arrival(&msg(1, clock, l));
+                }
+            }
+        }
+        let (_, own, stats) = srv.fetch(0);
+        assert_eq!(own, vec![0, 0]);
+        assert_eq!(stats.guaranteed, 0, "async guarantees nothing");
+        assert_eq!(stats.window_included, 2 * 2); // 2 clocks × 2 layers
+        assert_eq!(stats.window_missed, 2); // 1 clock × 2 layers
+        assert!((stats.epsilon_rate() - 4.0 / 6.0).abs() < 1e-12);
+
+        // ... and the fetching worker's own committed clock does not
+        // overflow the window arithmetic even at clock 0 or clock 1000
+        for _ in 0..1000 {
+            srv.commit(0);
+        }
+        let (_, _, stats) = srv.fetch(0);
+        assert_eq!(stats.guaranteed, 0);
+        assert_eq!(stats.window_missed, 2);
     }
 
     #[test]

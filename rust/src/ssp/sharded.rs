@@ -1,0 +1,601 @@
+//! The sharded, per-layer SSP parameter server — the scalable sibling of
+//! the single-lock `Server`.
+//!
+//! The paper's structural insight (Theorem 3, §3.1) is that SSP
+//! synchronization is *layerwise*: each layer's updates commit and
+//! propagate independently of every other layer's. The single-lock
+//! `Server` ignores that structure — every fetch, commit and eval
+//! serializes on one `Mutex` and snapshots the whole `ParamSet` inside
+//! the critical section, which is exactly the central-server bottleneck
+//! that limits parallel scalability (Keuper & Pfreundt 2016).
+//!
+//! `ShardedServer` exploits the layerwise structure instead:
+//!
+//! * each layer's parameters live in their own **shard** behind their own
+//!   `RwLock` — concurrent fetches share read locks, and an update to
+//!   layer `l` only ever contends with traffic on layer `l`;
+//! * the clock table and the per-(layer, worker) version vector are
+//!   **atomics**, so the two hot predicates `must_wait` / `read_ready`
+//!   never take any lock at all;
+//! * `fetch` assembles its snapshot **layer by layer** with no global
+//!   critical section. Snapshots are therefore atomic per layer but may
+//!   tear *across* layers — precisely the consistency the protocol
+//!   already grants (updates are per-layer messages; Eq. 5's guarantee
+//!   is enforced per (layer, worker) timestamp, which `read_ready`
+//!   still checks in full);
+//! * blocked workers park on a single condvar that `commit` /
+//!   `apply_arrival` pulse after releasing all shard locks, so wakeups
+//!   never hold parameter state hostage.
+//!
+//! All methods take `&self`: the threaded coordinator shares one
+//! `ShardedServer` across workers without any outer mutex. Given the
+//! same operation sequence, the sharded server is *bitwise identical* to
+//! the reference `Server` (same f32 additions in the same order) — the
+//! property tests drive both through identical random schedules and
+//! assert exactly that. The shard boundary is also the natural message
+//! boundary for a future multi-process transport: one shard maps to one
+//! independently-consistent network endpoint.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, RwLock};
+
+use crate::nn::ParamSet;
+
+use super::{ParamServer, Policy, ReadStats, UpdateMsg};
+
+/// Lock-free committed-clock table: `clocks[p] = c` means worker `p` has
+/// committed `c` clocks (same contract as `ClockTable`, atomically).
+#[derive(Debug)]
+pub struct AtomicClockTable {
+    clocks: Vec<AtomicU64>,
+}
+
+impl AtomicClockTable {
+    fn new(workers: usize) -> AtomicClockTable {
+        assert!(workers > 0);
+        AtomicClockTable {
+            clocks: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.clocks.len()
+    }
+
+    pub fn clock(&self, p: usize) -> u64 {
+        self.clocks[p].load(Ordering::Acquire)
+    }
+
+    /// Worker `p` finished a clock; returns the new committed count.
+    fn advance(&self, p: usize) -> u64 {
+        self.clocks[p].fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    pub fn min(&self) -> u64 {
+        self.clocks
+            .iter()
+            .map(|c| c.load(Ordering::Acquire))
+            .min()
+            .unwrap()
+    }
+
+    pub fn max(&self) -> u64 {
+        self.clocks
+            .iter()
+            .map(|c| c.load(Ordering::Acquire))
+            .max()
+            .unwrap()
+    }
+
+    /// SSP condition 1, lock-free (see `ClockTable::must_wait`).
+    pub fn must_wait(&self, p: usize, policy: Policy) -> bool {
+        match policy.staleness() {
+            None => false,
+            Some(s) => self.clock(p) > self.min() + s,
+        }
+    }
+}
+
+/// One layer's parameter state. The `RwLock` guards the parameters; the
+/// version counters are written only while the write lock is held (so
+/// they order with the parameter values) but are *read* lock-free by
+/// `read_ready`.
+#[derive(Debug)]
+struct LayerShard {
+    params: RwLock<crate::nn::LayerParams>,
+    /// `versions[q]` = clocks of worker `q`'s updates applied to this
+    /// layer (updates arrive FIFO per (layer, worker) link).
+    versions: Vec<AtomicU64>,
+}
+
+/// Condvar the barrier parks on. The mutex guards no data — waiters
+/// re-check their readiness predicate while holding it, which is what
+/// rules out missed wakeups — so notifiers pulse it after releasing
+/// every shard lock.
+#[derive(Debug, Default)]
+struct Notifier {
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+#[derive(Debug)]
+pub struct ShardedServer {
+    shards: Vec<LayerShard>,
+    clocks: AtomicClockTable,
+    policy: Policy,
+    workers: usize,
+    bytes_received: AtomicU64,
+    reads: AtomicU64,
+    applied: AtomicU64,
+    notify: Notifier,
+}
+
+impl ShardedServer {
+    pub fn new(init: ParamSet, workers: usize, policy: Policy) -> ShardedServer {
+        assert!(workers > 0);
+        let shards = init
+            .layers
+            .into_iter()
+            .map(|lp| LayerShard {
+                params: RwLock::new(lp),
+                versions: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            })
+            .collect();
+        ShardedServer {
+            shards,
+            clocks: AtomicClockTable::new(workers),
+            policy,
+            workers,
+            bytes_received: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+            applied: AtomicU64::new(0),
+            notify: Notifier::default(),
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn clocks(&self) -> &AtomicClockTable {
+        &self.clocks
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Worker `p` finished a clock (its update messages are now in
+    /// flight). Advances the clock table and wakes barrier waiters.
+    pub fn commit(&self, worker: usize) -> u64 {
+        let c = self.clocks.advance(worker);
+        self.bump();
+        c
+    }
+
+    /// A (possibly delayed) update message reaches its layer's shard.
+    /// Locks only that shard for writing.
+    pub fn apply_arrival(&self, msg: &UpdateMsg) {
+        self.apply_no_wake(msg);
+        self.bump();
+    }
+
+    /// Batched arrival application: one condvar pulse for the whole
+    /// batch (the per-clock commit path of the threaded coordinator).
+    pub fn apply_arrivals(&self, msgs: &[UpdateMsg]) {
+        for msg in msgs {
+            self.apply_no_wake(msg);
+        }
+        self.bump();
+    }
+
+    fn apply_no_wake(&self, msg: &UpdateMsg) {
+        self.bytes_received
+            .fetch_add(msg.bytes as u64, Ordering::Relaxed);
+        let shard = &self.shards[msg.layer];
+        let mut params = shard.params.write().unwrap();
+        // FIFO check per (layer, worker), as VersionVector::record.
+        let v = shard.versions[msg.from].load(Ordering::Relaxed);
+        assert_eq!(
+            v, msg.clock,
+            "out-of-order update: layer {} worker {} expected clock {v}, got {}",
+            msg.layer, msg.from, msg.clock
+        );
+        // θ ← θ + u, exactly as ParamTable::apply (bitwise-equal path).
+        params.w.axpy(1.0, &msg.delta.w);
+        for (x, y) in params.b.iter_mut().zip(&msg.delta.b) {
+            *x += *y;
+        }
+        shard.versions[msg.from].store(v + 1, Ordering::Release);
+        drop(params);
+        self.applied.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Must worker `p` block before starting its next clock? Lock-free.
+    pub fn must_wait(&self, worker: usize) -> bool {
+        self.clocks.must_wait(worker, self.policy)
+    }
+
+    /// Guaranteed-visibility check (Eq. 5): every update with timestamp
+    /// ≤ c−s−1 applied, per (layer, worker). Lock-free.
+    pub fn read_ready(&self, worker: usize) -> bool {
+        let c = self.clocks.clock(worker);
+        match self.policy.staleness() {
+            None => true,
+            Some(s) => {
+                let through = c.saturating_sub(s);
+                self.shards.iter().all(|shard| {
+                    shard
+                        .versions
+                        .iter()
+                        .all(|v| v.load(Ordering::Acquire) >= through)
+                })
+            }
+        }
+    }
+
+    /// Block until worker `p` may start its next clock (barrier cleared
+    /// *and* the read guarantee met). Ready-ness is monotone between a
+    /// worker's own commits, so once this returns the worker can fetch.
+    pub fn wait_until_ready(&self, worker: usize) {
+        if self.is_ready(worker) {
+            return;
+        }
+        let mut guard = self.notify.lock.lock().unwrap();
+        while !self.is_ready(worker) {
+            guard = self.notify.cv.wait(guard).unwrap();
+        }
+    }
+
+    fn is_ready(&self, worker: usize) -> bool {
+        !self.must_wait(worker) && self.read_ready(worker)
+    }
+
+    fn bump(&self) {
+        // State changed *before* this lock is taken: any waiter that
+        // checked its predicate too early is already parked in `wait`
+        // (mutex released) by the time we acquire, so the notify below
+        // cannot be missed.
+        drop(self.notify.lock.lock().unwrap());
+        self.notify.cv.notify_all();
+    }
+
+    /// Serve a read for worker `p`: layer-by-layer snapshot + per-layer
+    /// applied counts of `p`'s own updates + ε statistics — the same
+    /// contract as `Server::fetch`, with no global critical section.
+    /// Each layer's slice is internally consistent (cloned under that
+    /// shard's read lock); layers may tear against each other, which the
+    /// layerwise protocol permits.
+    pub fn fetch(&self, worker: usize) -> (ParamSet, Vec<u64>, ReadStats) {
+        debug_assert!(self.read_ready(worker), "fetch before guarantee met");
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        let c = self.clocks.clock(worker);
+        let s = self.policy.staleness().unwrap_or(u64::MAX);
+        let through = c.saturating_sub(s); // c − s
+        // committed clocks hoisted once so the ε statistics of this read
+        // are computed against a single clock-table view even while
+        // other workers keep committing
+        let committed: Vec<u64> =
+            (0..self.workers).map(|q| self.clocks.clock(q)).collect();
+        let mut stats = ReadStats::default();
+        let mut own = Vec::with_capacity(self.shards.len());
+        let mut layers = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            let params = shard.params.read().unwrap();
+            layers.push(params.clone());
+            // versions read under the same read lock: consistent with
+            // the layer slice just cloned.
+            for (q, v) in shard.versions.iter().enumerate() {
+                let applied = v.load(Ordering::Acquire);
+                if q == worker {
+                    own.push(applied);
+                    continue;
+                }
+                let committed = committed[q];
+                let guaranteed = through.min(committed);
+                stats.guaranteed += guaranteed;
+                let extra_applied = applied.saturating_sub(guaranteed);
+                let extra_committed = committed.saturating_sub(guaranteed);
+                stats.window_included += extra_applied;
+                // concurrent arrivals can race a commit here; saturate
+                // rather than underflow (single-threaded drives are
+                // exact, matching `Server::fetch`)
+                stats.window_missed +=
+                    extra_committed.saturating_sub(extra_applied);
+            }
+        }
+        (ParamSet { layers }, own, stats)
+    }
+
+    /// Assemble the current master state layer by layer (evaluation /
+    /// checkpoint path — never blocks writers for the whole model).
+    pub fn snapshot(&self) -> ParamSet {
+        ParamSet {
+            layers: self
+                .shards
+                .iter()
+                .map(|s| s.params.read().unwrap().clone())
+                .collect(),
+        }
+    }
+
+    /// Applied clocks of `(layer, worker)` — the version vector, read
+    /// lock-free.
+    pub fn applied(&self, layer: usize, worker: usize) -> u64 {
+        self.shards[layer].versions[worker].load(Ordering::Acquire)
+    }
+
+    pub fn applied_count(&self) -> u64 {
+        self.applied.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_received(&self) -> u64 {
+        self.bytes_received.load(Ordering::Relaxed)
+    }
+
+    pub fn reads(&self) -> u64 {
+        self.reads.load(Ordering::Relaxed)
+    }
+}
+
+impl ParamServer for ShardedServer {
+    fn policy(&self) -> Policy {
+        ShardedServer::policy(self)
+    }
+
+    fn workers(&self) -> usize {
+        ShardedServer::workers(self)
+    }
+
+    fn n_layers(&self) -> usize {
+        ShardedServer::n_layers(self)
+    }
+
+    fn clock(&self, worker: usize) -> u64 {
+        self.clocks.clock(worker)
+    }
+
+    fn commit(&mut self, worker: usize) -> u64 {
+        ShardedServer::commit(self, worker)
+    }
+
+    fn apply_arrival(&mut self, msg: &UpdateMsg) {
+        ShardedServer::apply_arrival(self, msg)
+    }
+
+    fn must_wait(&self, worker: usize) -> bool {
+        ShardedServer::must_wait(self, worker)
+    }
+
+    fn read_ready(&self, worker: usize) -> bool {
+        ShardedServer::read_ready(self, worker)
+    }
+
+    fn fetch(&mut self, worker: usize) -> (ParamSet, Vec<u64>, ReadStats) {
+        ShardedServer::fetch(self, worker)
+    }
+
+    fn snapshot(&self) -> ParamSet {
+        ShardedServer::snapshot(self)
+    }
+
+    fn applied(&self, layer: usize, worker: usize) -> u64 {
+        ShardedServer::applied(self, layer, worker)
+    }
+
+    fn reads(&self) -> u64 {
+        ShardedServer::reads(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::nn::LayerParams;
+    use crate::ssp::Server;
+    use crate::tensor::Matrix;
+
+    fn dims() -> Vec<usize> {
+        vec![2, 3, 2]
+    }
+
+    fn msg(from: usize, clock: u64, layer: usize) -> UpdateMsg {
+        let d = dims();
+        UpdateMsg::new(
+            from,
+            clock,
+            layer,
+            LayerParams {
+                w: Matrix::from_fn(d[layer], d[layer + 1], |_, _| 0.1),
+                b: vec![0.1; d[layer + 1]],
+            },
+        )
+    }
+
+    fn commit_and_arrive(srv: &ShardedServer, worker: usize) {
+        let clock = srv.clocks().clock(worker);
+        srv.commit(worker);
+        for l in 0..srv.n_layers() {
+            srv.apply_arrival(&msg(worker, clock, l));
+        }
+    }
+
+    #[test]
+    fn ssp_read_guarantee() {
+        let srv = ShardedServer::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Ssp { staleness: 1 },
+        );
+        commit_and_arrive(&srv, 0);
+        commit_and_arrive(&srv, 1);
+        srv.commit(0); // clock-1 arrival delayed
+        assert!(srv.read_ready(0));
+        assert!(srv.read_ready(1));
+    }
+
+    #[test]
+    fn read_not_ready_when_guaranteed_update_missing() {
+        let srv = ShardedServer::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Ssp { staleness: 0 },
+        );
+        srv.commit(1);
+        srv.commit(0);
+        assert!(!srv.read_ready(0));
+        for l in 0..srv.n_layers() {
+            srv.apply_arrival(&msg(1, 0, l));
+        }
+        assert!(!srv.read_ready(0));
+        for l in 0..srv.n_layers() {
+            srv.apply_arrival(&msg(0, 0, l));
+        }
+        assert!(srv.read_ready(0));
+    }
+
+    #[test]
+    fn epsilon_stats_count_window_inclusion() {
+        let srv = ShardedServer::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Ssp { staleness: 2 },
+        );
+        srv.commit(1);
+        srv.apply_arrival(&msg(1, 0, 0));
+        srv.apply_arrival(&msg(1, 0, 1));
+        srv.commit(1);
+        let (_, own, stats) = srv.fetch(0);
+        assert_eq!(own, vec![0, 0]);
+        assert_eq!(stats.guaranteed, 0);
+        assert_eq!(stats.window_included, 2);
+        assert_eq!(stats.window_missed, 2);
+        assert!((stats.epsilon_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_is_lock_free_and_matches_clock_table() {
+        let srv = ShardedServer::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Ssp { staleness: 0 },
+        );
+        srv.commit(0);
+        assert!(srv.must_wait(0));
+        assert!(!srv.must_wait(1));
+        srv.commit(1);
+        assert!(!srv.must_wait(0));
+    }
+
+    #[test]
+    fn async_always_ready() {
+        let srv = ShardedServer::new(ParamSet::zeros(&dims()), 3, Policy::Async);
+        for _ in 0..5 {
+            srv.commit(0);
+        }
+        assert!(srv.read_ready(0));
+        assert!(!srv.must_wait(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-order")]
+    fn out_of_order_update_rejected() {
+        let srv = ShardedServer::new(ParamSet::zeros(&dims()), 2, Policy::Bsp);
+        srv.apply_arrival(&msg(0, 1, 0)); // skips clock 0
+    }
+
+    #[test]
+    fn matches_reference_server_bitwise_on_a_fixed_schedule() {
+        let init = {
+            let mut rng = crate::util::Pcg64::new(42);
+            ParamSet::glorot(&dims(), &mut rng)
+        };
+        let policy = Policy::Ssp { staleness: 2 };
+        let mut reference = Server::new(init.clone(), 2, policy);
+        let sharded = ShardedServer::new(init, 2, policy);
+
+        for clock in 0..3u64 {
+            for worker in 0..2 {
+                reference.commit(worker);
+                sharded.commit(worker);
+                for l in 0..2 {
+                    let m = msg(worker, clock, l);
+                    reference.apply_arrival(&m);
+                    sharded.apply_arrival(&m);
+                }
+            }
+            let (p_ref, own_ref, st_ref) = reference.fetch(0);
+            let (p_sh, own_sh, st_sh) = sharded.fetch(0);
+            assert_eq!(p_ref, p_sh, "master diverged at clock {clock}");
+            assert_eq!(own_ref, own_sh);
+            assert_eq!(st_ref, st_sh);
+        }
+        assert_eq!(reference.reads(), sharded.reads());
+    }
+
+    #[test]
+    fn wait_until_ready_blocks_and_wakes() {
+        let srv = Arc::new(ShardedServer::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Bsp,
+        ));
+        // worker 0 is one clock ahead: it must wait for worker 1
+        commit_and_arrive(&srv, 0);
+        assert!(srv.must_wait(0));
+        let waiter = {
+            let srv = Arc::clone(&srv);
+            std::thread::spawn(move || {
+                srv.wait_until_ready(0);
+                srv.clocks().clock(1)
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        commit_and_arrive(&srv, 1); // releases the waiter
+        let seen = waiter.join().unwrap();
+        assert_eq!(seen, 1);
+        assert!(srv.is_ready(0));
+    }
+
+    #[test]
+    fn concurrent_commits_hold_staleness_bound() {
+        let s = 2u64;
+        let srv = Arc::new(ShardedServer::new(
+            ParamSet::zeros(&dims()),
+            4,
+            Policy::Ssp { staleness: s },
+        ));
+        let clocks = 30u64;
+        std::thread::scope(|scope| {
+            for p in 0..4usize {
+                let srv = Arc::clone(&srv);
+                scope.spawn(move || {
+                    for clock in 0..clocks {
+                        srv.wait_until_ready(p);
+                        // every observable clock obeys the SSP bound
+                        // relative to this worker's own clock
+                        let own = srv.clocks().clock(p);
+                        for q in 0..4 {
+                            assert!(
+                                srv.clocks().clock(q) <= own + s + 1,
+                                "staleness bound broken"
+                            );
+                        }
+                        let ms: Vec<UpdateMsg> =
+                            (0..srv.n_layers()).map(|l| msg(p, clock, l)).collect();
+                        srv.commit(p);
+                        srv.apply_arrivals(&ms);
+                    }
+                });
+            }
+        });
+        assert_eq!(srv.clocks().min(), clocks);
+        assert_eq!(srv.applied_count(), 4 * clocks * 2);
+    }
+}

@@ -12,9 +12,18 @@
 //!  P4  read-my-writes: a worker's own committed updates are always in
 //!      its view
 //!  P5  ε accounting: included + missed = committed − guaranteed, rate ∈ [0,1]
+//!
+//! Every server-side invariant runs against **both** implementations of
+//! `ParamServer` — the single-lock reference `Server` and the sharded
+//! per-layer `ShardedServer` — and an oracle-equivalence property drives
+//! the two through identical random schedules asserting bitwise-equal
+//! masters, own-version vectors and ε statistics at every read.
 
 use sspdnn::nn::{LayerParams, ParamSet};
-use sspdnn::ssp::{ClockTable, Policy, Server, UpdateMsg, WorkerCache};
+use sspdnn::ssp::{
+    ClockTable, ParamServer, Policy, Server, ShardedServer, UpdateMsg,
+    WorkerCache,
+};
 use sspdnn::tensor::Matrix;
 use sspdnn::util::Pcg64;
 
@@ -31,15 +40,29 @@ fn rand_delta(dims: &[usize], layer: usize, rng: &mut Pcg64) -> LayerParams {
     }
 }
 
+fn make_reference(init: ParamSet, workers: usize, policy: Policy) -> Server {
+    Server::new(init, workers, policy)
+}
+
+fn make_sharded(init: ParamSet, workers: usize, policy: Policy) -> ShardedServer {
+    ShardedServer::new(init, workers, policy)
+}
+
 /// Drive a random but protocol-legal schedule against the server:
 /// each step, a random non-blocked worker commits a clock; its per-layer
 /// updates arrive after a random backlog of earlier arrivals drains.
-fn random_schedule(seed: u64, workers: usize, staleness: u64, steps: usize) {
+fn random_schedule<S: ParamServer>(
+    make: fn(ParamSet, usize, Policy) -> S,
+    seed: u64,
+    workers: usize,
+    staleness: u64,
+    steps: usize,
+) {
     let mut rng = Pcg64::new(seed);
     let d = dims();
     let init = ParamSet::glorot(&d, &mut rng);
     let policy = Policy::Ssp { staleness };
-    let mut server = Server::new(init.clone(), workers, policy);
+    let mut server = make(init.clone(), workers, policy);
     let mut expected = init.clone(); // P2 accumulator
     let mut pending: Vec<UpdateMsg> = Vec::new(); // in-flight messages
     let mut committed = vec![0u64; workers];
@@ -72,8 +95,8 @@ fn random_schedule(seed: u64, workers: usize, staleness: u64, steps: usize) {
         server.commit(p);
 
         // P1: staleness bound holds after every commit
-        let min = (0..workers).map(|q| server.clocks().clock(q)).min().unwrap();
-        let max = (0..workers).map(|q| server.clocks().clock(q)).max().unwrap();
+        let min = (0..workers).map(|q| server.clock(q)).min().unwrap();
+        let max = (0..workers).map(|q| server.clock(q)).max().unwrap();
         assert!(
             max - min <= staleness + 1,
             "P1 violated: spread {} > s+1={} (seed {seed})",
@@ -94,7 +117,7 @@ fn random_schedule(seed: u64, workers: usize, staleness: u64, steps: usize) {
     for msg in pending.drain(..) {
         server.apply_arrival(&msg);
     }
-    let master = server.table().snapshot();
+    let master = server.snapshot();
     let dist = master.dist_sq(&expected).sqrt();
     assert!(
         dist < 1e-3,
@@ -103,16 +126,105 @@ fn random_schedule(seed: u64, workers: usize, staleness: u64, steps: usize) {
 }
 
 #[test]
-fn p1_p2_p5_hold_over_random_schedules() {
+fn p1_p2_p5_hold_over_random_schedules_reference() {
     for seed in 0..60 {
         let workers = 2 + (seed as usize % 5);
         let staleness = seed % 7;
-        random_schedule(seed, workers, staleness, 120);
+        random_schedule(make_reference, seed, workers, staleness, 120);
     }
 }
 
 #[test]
-fn p3_guaranteed_visibility_enforced_by_read_ready() {
+fn p1_p2_p5_hold_over_random_schedules_sharded() {
+    for seed in 0..60 {
+        let workers = 2 + (seed as usize % 5);
+        let staleness = seed % 7;
+        random_schedule(make_sharded, seed, workers, staleness, 120);
+    }
+}
+
+/// The sharded server must be *indistinguishable* from the reference
+/// under any legal schedule: same master bits, same own-version vector,
+/// same ε statistics at every read. The reference `Server` is the oracle.
+#[test]
+fn sharded_server_is_bitwise_equivalent_to_reference() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg64::new(seed ^ 0x5EED);
+        let d = dims();
+        let workers = 2 + (seed as usize % 4);
+        let staleness = seed % 5;
+        let policy = if seed % 7 == 0 {
+            Policy::Async
+        } else if seed % 5 == 0 {
+            Policy::Bsp
+        } else {
+            Policy::Ssp { staleness }
+        };
+        let init = ParamSet::glorot(&d, &mut rng);
+        let mut reference = Server::new(init.clone(), workers, policy);
+        let mut sharded = ShardedServer::new(init, workers, policy);
+
+        let mut pending: Vec<UpdateMsg> = Vec::new();
+        let mut committed = vec![0u64; workers];
+        for _ in 0..150 {
+            // both servers must agree on who may proceed
+            for p in 0..workers {
+                assert_eq!(
+                    ParamServer::must_wait(&reference, p),
+                    ParamServer::must_wait(&sharded, p),
+                    "must_wait diverged (seed {seed})"
+                );
+                assert_eq!(
+                    ParamServer::read_ready(&reference, p),
+                    ParamServer::read_ready(&sharded, p),
+                    "read_ready diverged (seed {seed})"
+                );
+            }
+            let candidates: Vec<usize> = (0..workers)
+                .filter(|&p| !ParamServer::must_wait(&reference, p))
+                .collect();
+            let p = candidates[rng.below(candidates.len())];
+
+            let deliver = rng.below(pending.len() + 1);
+            for msg in pending.drain(..deliver) {
+                ParamServer::apply_arrival(&mut reference, &msg);
+                ParamServer::apply_arrival(&mut sharded, &msg);
+            }
+            for l in 0..d.len() - 1 {
+                let delta = rand_delta(&d, l, &mut rng);
+                pending.push(UpdateMsg::new(p, committed[p], l, delta));
+            }
+            committed[p] += 1;
+            ParamServer::commit(&mut reference, p);
+            ParamServer::commit(&mut sharded, p);
+
+            let reader = rng.below(workers);
+            if ParamServer::read_ready(&reference, reader) {
+                let (m_ref, own_ref, st_ref) =
+                    ParamServer::fetch(&mut reference, reader);
+                let (m_sh, own_sh, st_sh) =
+                    ParamServer::fetch(&mut sharded, reader);
+                assert_eq!(m_ref, m_sh, "master bits diverged (seed {seed})");
+                assert_eq!(own_ref, own_sh, "own versions diverged (seed {seed})");
+                assert_eq!(st_ref, st_sh, "eps stats diverged (seed {seed})");
+            }
+        }
+        for msg in pending.drain(..) {
+            ParamServer::apply_arrival(&mut reference, &msg);
+            ParamServer::apply_arrival(&mut sharded, &msg);
+        }
+        assert_eq!(
+            ParamServer::snapshot(&reference),
+            ParamServer::snapshot(&sharded),
+            "final master diverged (seed {seed})"
+        );
+        assert_eq!(ParamServer::reads(&reference), ParamServer::reads(&sharded));
+    }
+}
+
+fn p3_guaranteed_visibility<S: ParamServer>(
+    make: fn(ParamSet, usize, Policy) -> S,
+) {
     // read_ready(p) must be false exactly while some guaranteed update is
     // missing; fetch after read_ready includes all of them.
     for seed in 0..40u64 {
@@ -121,7 +233,7 @@ fn p3_guaranteed_visibility_enforced_by_read_ready() {
         let workers = 3;
         let s = 1u64;
         let mut server =
-            Server::new(ParamSet::zeros(&d), workers, Policy::Ssp { staleness: s });
+            make(ParamSet::zeros(&d), workers, Policy::Ssp { staleness: s });
         // all workers commit 2 clocks, arrivals randomly delayed
         let mut pending = Vec::new();
         for c in 0..2u64 {
@@ -150,12 +262,22 @@ fn p3_guaranteed_visibility_enforced_by_read_ready() {
         for l in 0..d.len() - 1 {
             for q in 0..workers {
                 assert!(
-                    server.table().versions().applied(l, q) >= 1,
+                    server.applied(l, q) >= 1,
                     "P3: missing guaranteed update layer {l} worker {q} (seed {seed})"
                 );
             }
         }
     }
+}
+
+#[test]
+fn p3_guaranteed_visibility_enforced_by_read_ready_reference() {
+    p3_guaranteed_visibility(make_reference);
+}
+
+#[test]
+fn p3_guaranteed_visibility_enforced_by_read_ready_sharded() {
+    p3_guaranteed_visibility(make_sharded);
 }
 
 #[test]

@@ -1,0 +1,178 @@
+//! Concurrency stress test for the sharded per-layer parameter server:
+//! 8 real worker threads × 4 layers hammering fetch/commit/apply with no
+//! coordinator in between.
+//!
+//! Asserted, at every read and at the end:
+//! * no deadlock (the run completes; the barrier never wedges),
+//! * bounded staleness observed at every read — both on the clock table
+//!   (no observable clock exceeds own + s + 1) and on the *parameter
+//!   content* (every fetched element stays inside the SSP-feasible
+//!   envelope of guaranteed vs maximum-possible applied updates),
+//! * read-my-writes (own applied counts equal own committed clock),
+//! * conservation of the master sum: with all-ones deltas the final
+//!   master must equal init + workers × clocks exactly (f32-exact in
+//!   this range).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use sspdnn::nn::{LayerParams, ParamSet};
+use sspdnn::ssp::{Policy, ShardedServer, UpdateMsg};
+use sspdnn::tensor::Matrix;
+
+const WORKERS: usize = 8;
+const CLOCKS: u64 = 40;
+const STALENESS: u64 = 3;
+
+/// dims chain with 4 layers: 4 independent shards.
+fn dims() -> Vec<usize> {
+    vec![6, 5, 4, 3, 2]
+}
+
+fn ones_delta(d: &[usize], layer: usize) -> LayerParams {
+    LayerParams {
+        w: Matrix::from_fn(d[layer], d[layer + 1], |_, _| 1.0),
+        b: vec![1.0; d[layer + 1]],
+    }
+}
+
+#[test]
+fn stress_8_workers_4_layers() {
+    let d = dims();
+    let n_layers = d.len() - 1;
+    assert_eq!(n_layers, 4);
+    let server = ShardedServer::new(
+        ParamSet::zeros(&d),
+        WORKERS,
+        Policy::Ssp {
+            staleness: STALENESS,
+        },
+    );
+    let total_reads = AtomicU64::new(0);
+
+    std::thread::scope(|scope| {
+        for p in 0..WORKERS {
+            let server = &server;
+            let d = d.clone();
+            let total_reads = &total_reads;
+            scope.spawn(move || {
+                for clock in 0..CLOCKS {
+                    server.wait_until_ready(p);
+
+                    // clock-table staleness bound, race-free form: while
+                    // our own clock is `clock`, no worker can ever commit
+                    // past clock + s + 1
+                    for q in 0..WORKERS {
+                        let cq = server.clocks().clock(q);
+                        assert!(
+                            cq <= clock + STALENESS + 1,
+                            "P1 observed: worker {q} at {cq}, reader at {clock}"
+                        );
+                    }
+
+                    let (snap, own, stats) = server.fetch(p);
+                    total_reads.fetch_add(1, Ordering::Relaxed);
+
+                    // read-my-writes: all of our own commits are applied
+                    // (we applied them ourselves before this fetch)
+                    assert_eq!(own, vec![clock; n_layers], "own clocks");
+
+                    // ε accounting stays a probability
+                    let rate = stats.epsilon_rate();
+                    assert!((0.0..=1.0).contains(&rate), "eps rate {rate}");
+
+                    // parameter-content staleness envelope: with all-ones
+                    // deltas every element counts applied updates for its
+                    // layer. Guaranteed floor: own `clock` updates plus
+                    // (workers−1)·max(0, clock−s) foreign ones. Ceiling:
+                    // no worker can exceed clock+s+1 commits.
+                    let floor = clock
+                        + (WORKERS as u64 - 1) * clock.saturating_sub(STALENESS);
+                    let ceil = clock
+                        + (WORKERS as u64 - 1) * (clock + STALENESS + 1);
+                    for (l, lp) in snap.layers.iter().enumerate() {
+                        let got = lp.w.at(0, 0) as u64;
+                        assert!(
+                            (got as f32 - lp.w.at(0, 0)).abs() == 0.0,
+                            "layer {l} element not integral"
+                        );
+                        assert!(
+                            got >= floor && got <= ceil,
+                            "layer {l}: {got} outside SSP envelope \
+                             [{floor}, {ceil}] at clock {clock}"
+                        );
+                    }
+
+                    // commit: advance the clock, then apply our own
+                    // per-layer updates (FIFO per (layer, worker))
+                    let msgs: Vec<UpdateMsg> = (0..n_layers)
+                        .map(|l| UpdateMsg::new(p, clock, l, ones_delta(&d, l)))
+                        .collect();
+                    server.commit(p);
+                    server.apply_arrivals(&msgs);
+                }
+            });
+        }
+    });
+
+    // no deadlock: every worker ran all its clocks
+    assert_eq!(server.clocks().min(), CLOCKS);
+    assert_eq!(server.clocks().max(), CLOCKS);
+    assert_eq!(total_reads.load(Ordering::Relaxed), WORKERS as u64 * CLOCKS);
+    assert_eq!(server.reads(), WORKERS as u64 * CLOCKS);
+
+    // conservation: master = init + Σ updates, exactly
+    let want = (WORKERS as u64 * CLOCKS) as f32;
+    let master = server.snapshot();
+    for (l, lp) in master.layers.iter().enumerate() {
+        for &v in lp.w.data() {
+            assert_eq!(v, want, "layer {l} weight sum");
+        }
+        for &v in &lp.b {
+            assert_eq!(v, want, "layer {l} bias sum");
+        }
+    }
+    // version vector fully caught up
+    for l in 0..n_layers {
+        for q in 0..WORKERS {
+            assert_eq!(server.applied(l, q), CLOCKS);
+        }
+    }
+    assert_eq!(server.applied_count(), WORKERS as u64 * CLOCKS * n_layers as u64);
+}
+
+/// Same shape under BSP: strict lockstep, still no deadlock, and the
+/// conservation sum holds.
+#[test]
+fn stress_bsp_lockstep() {
+    let d = dims();
+    let n_layers = d.len() - 1;
+    let server = ShardedServer::new(ParamSet::zeros(&d), WORKERS, Policy::Bsp);
+    std::thread::scope(|scope| {
+        for p in 0..WORKERS {
+            let server = &server;
+            let d = d.clone();
+            scope.spawn(move || {
+                for clock in 0..CLOCKS {
+                    server.wait_until_ready(p);
+                    for q in 0..WORKERS {
+                        assert!(server.clocks().clock(q) <= clock + 1);
+                    }
+                    let (_, own, _) = server.fetch(p);
+                    assert_eq!(own, vec![clock; n_layers]);
+                    let msgs: Vec<UpdateMsg> = (0..n_layers)
+                        .map(|l| UpdateMsg::new(p, clock, l, ones_delta(&d, l)))
+                        .collect();
+                    server.commit(p);
+                    server.apply_arrivals(&msgs);
+                }
+            });
+        }
+    });
+    let want = (WORKERS as u64 * CLOCKS) as f32;
+    let master = server.snapshot();
+    for lp in &master.layers {
+        for &v in lp.w.data() {
+            assert_eq!(v, want);
+        }
+    }
+}
