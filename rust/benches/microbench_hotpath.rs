@@ -1,15 +1,23 @@
-//! Hot-path microbenchmarks — the §Perf instrument (see EXPERIMENTS.md).
+//! Hot-path microbenchmarks — the §Perf instrument (methodology and
+//! before/after records: rust/EXPERIMENTS.md).
 //!
 //! * GEMM family at model shapes (GFLOP/s): the native engine's floor
 //! * full loss_and_grads step at TIMIT/ImageNet bench shapes (steps/s)
-//! * SSP server ops: commit+arrival application and fetch throughput
+//! * SSP server ops: commit+arrival application, full-copy fetch, and
+//!   the version-gated zero-copy fetch (gate hot and cold)
 //! * discrete-event queue throughput
 //! * ParamSet axpy (the SSP update application primitive)
+//!
+//! Key numbers land in bench_results/BENCH_hotpath.json (section
+//! "microbench") so the repo's perf trajectory is tracked per run.
+
+mod support;
 
 use sspdnn::nn::{Activation, Labels, Loss, Mlp, ParamSet, Workspace};
 use sspdnn::sim::EventQueue;
-use sspdnn::ssp::{Policy, Server, UpdateMsg};
+use sspdnn::ssp::{Policy, Server, ShardedServer, UpdateMsg};
 use sspdnn::tensor::{gemm, gemm_nt, gemm_tn, Matrix};
+use sspdnn::util::json::Json;
 use sspdnn::util::{Pcg64, Stopwatch};
 
 fn bench<F: FnMut()>(name: &str, iters: usize, flops_per_iter: f64, mut f: F) -> f64 {
@@ -85,6 +93,7 @@ fn gemm_nt_baseline(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 
 fn main() {
     let mut rng = Pcg64::new(0);
+    let mut json: Vec<(&str, Json)> = Vec::new();
     println!("=== hot-path microbench ===\n");
 
     // ---- §Perf before/after on the two optimized kernels ----
@@ -160,13 +169,19 @@ fn main() {
 
     // ---- full gradient step at bench shapes ----
     println!();
-    for (dims, batch, label) in [
+    for (dims, batch, label, key) in [
         (
             vec![360, 128, 128, 128, 128, 128, 128, 2001],
             50usize,
             "timit bench step",
+            "timit_steps_per_s",
         ),
-        (vec![2150, 256, 160, 120, 1000], 50, "imagenet bench step"),
+        (
+            vec![2150, 256, 160, 120, 1000],
+            50,
+            "imagenet bench step",
+            "imagenet_steps_per_s",
+        ),
     ] {
         let mlp = Mlp::new(dims.clone(), Activation::Sigmoid, Loss::Xent);
         let p = ParamSet::glorot(&dims, &mut rng);
@@ -179,9 +194,10 @@ fn main() {
         let mut ws = Workspace::default();
         let mut g = p.zeros_like();
         let flops = 6.0 * mlp.n_params() as f64 * batch as f64; // fwd+bwd ≈ 6/param/sample
-        bench(&format!("loss_and_grads {label}"), 10, flops, || {
+        let dt = bench(&format!("loss_and_grads {label}"), 10, flops, || {
             mlp.loss_and_grads_ws(&p, &x, &y, &mut ws, &mut g);
         });
+        json.push((key, Json::num(1.0 / dt)));
     }
 
     // ---- SSP server ops ----
@@ -201,9 +217,54 @@ fn main() {
             clock[worker] += 1;
             worker = (worker + 1) % 6;
         });
-        bench("ssp fetch (snapshot + eps stats)", 500, 0.0, || {
+        let dt = bench("ssp fetch (full snapshot copy + eps stats)", 500, 0.0, || {
             let _ = server.fetch(0);
         });
+        json.push(("fetch_full_ops_per_s", Json::num(1.0 / dt)));
+
+        // version-gated zero-copy fetch, gate hot: nothing changed since
+        // the previous read, so no layer is copied and no lock taken
+        let mut buf = init.clone();
+        let mut seen = vec![0u64; init.n_layers()];
+        let mut own = Vec::new();
+        server.fetch_into(0, &mut buf, &mut seen, &mut own); // sync buffer
+        let dt = bench("ssp fetch_into (gate hot: unchanged)", 2000, 0.0, || {
+            let _ = server.fetch_into(0, &mut buf, &mut seen, &mut own);
+        });
+        json.push(("fetch_gated_hot_ops_per_s", Json::num(1.0 / dt)));
+
+        // the whole zero-copy clock on the sharded server: atomic clock
+        // advance + allocation-free nonzero commit + gated fetch (gate
+        // cold: every layer changed, so this is the memcpy floor).
+        // Fresh gated-read state: (buf, seen) must describe THIS
+        // server's master (fetch_into's caller contract) — the pair
+        // above belonged to the single-lock server.
+        let srv = ShardedServer::new(init.clone(), 1, Policy::Async);
+        let mut buf = init.clone();
+        let mut seen = vec![0u64; init.n_layers()];
+        let mut nonzero = init.zeros_like();
+        for l in &mut nonzero.layers {
+            l.w.fill(1e-7);
+            l.b.fill(1e-7);
+        }
+        let mut clk = 0u64;
+        let dt = bench(
+            "ssp zero-copy clock (commit+apply+gated fetch)",
+            500,
+            0.0,
+            || {
+                srv.commit(0);
+                srv.apply_commit(0, clk, &nonzero);
+                clk += 1;
+                let _ = srv.fetch_into(0, &mut buf, &mut seen, &mut own);
+            },
+        );
+        json.push(("zero_copy_clock_ops_per_s", Json::num(1.0 / dt)));
+        let totals = srv.copy_totals();
+        json.push((
+            "zero_copy_clock_bytes_per_fetch",
+            Json::num(totals.bytes_copied as f64 / (clk as f64).max(1.0)),
+        ));
     }
 
     // ---- ParamSet axpy (update application primitive) ----
@@ -212,9 +273,10 @@ fn main() {
         let mut a = ParamSet::glorot(&dims, &mut rng);
         let b = ParamSet::glorot(&dims, &mut rng);
         let n = a.n_params() as f64;
-        bench("paramset axpy (655k params)", 200, 2.0 * n, || {
+        let dt = bench("paramset axpy (655k params)", 200, 2.0 * n, || {
             a.axpy(-0.05, &b);
         });
+        json.push(("axpy_gflops", Json::num(2.0 * n / dt / 1e9)));
     }
 
     // ---- event queue ----
@@ -222,11 +284,14 @@ fn main() {
     {
         let mut q: EventQueue<u64> = EventQueue::new();
         let mut i = 0u64;
-        bench("event queue push+pop", 100_000, 0.0, || {
+        let dt = bench("event queue push+pop", 100_000, 0.0, || {
             q.push((i % 997) as f64, i);
             q.pop();
             i += 1;
         });
+        json.push(("event_queue_ops_per_s", Json::num(1.0 / dt)));
     }
+
+    support::record_hotpath_json("microbench", Json::obj(json));
     println!("\nmicrobench done");
 }

@@ -6,6 +6,31 @@ use sspdnn::config::ExperimentConfig;
 use sspdnn::coordinator::{run_experiment_on, DriverOptions, RunResult};
 use sspdnn::data::Dataset;
 use sspdnn::metrics;
+use sspdnn::util::json::Json;
+
+/// The machine-readable perf-trajectory file the hot-path benches emit
+/// (see rust/EXPERIMENTS.md). Each bench owns one top-level section;
+/// read-modify-write so the benches compose regardless of run order.
+pub const HOTPATH_JSON: &str = "bench_results/BENCH_hotpath.json";
+
+/// Merge `value` under `section` in BENCH_hotpath.json, stamping the
+/// bench scale alongside so numbers from quick (CI smoke) and default
+/// runs are distinguishable.
+pub fn record_hotpath_json(section: &str, value: Json) {
+    let mut root = std::fs::read_to_string(HOTPATH_JSON)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    root.insert(section.to_string(), value);
+    root.insert("scale".to_string(), Json::str(scale()));
+    if let Err(e) = metrics::write_file(HOTPATH_JSON, &Json::Obj(root).to_string())
+    {
+        eprintln!("  [bench] {HOTPATH_JSON} write failed: {e}");
+    } else {
+        eprintln!("  [bench] wrote {HOTPATH_JSON} section '{section}'");
+    }
+}
 
 /// Workload scale: SSPDNN_BENCH_SCALE ∈ {quick, default, full}.
 pub fn scale() -> &'static str {

@@ -19,6 +19,21 @@ pub trait GradEngine: Send {
         y: &Labels,
     ) -> (f64, GradSet);
 
+    /// Batch-mean loss with gradients written into the caller's reusable
+    /// buffer — the zero-allocation training-loop path. Engines with
+    /// internal buffers override this to skip the default's extra copy.
+    fn loss_and_grads_into(
+        &mut self,
+        params: &ParamSet,
+        x: &Matrix,
+        y: &Labels,
+        grads: &mut GradSet,
+    ) -> f64 {
+        let (loss, g) = self.loss_and_grads(params, x, y);
+        grads.copy_from(&g);
+        loss
+    }
+
     /// Objective only (used by evaluation instrumentation).
     fn objective(&mut self, params: &ParamSet, x: &Matrix, y: &Labels) -> f64;
 
@@ -44,6 +59,19 @@ impl GradEngine for EngineKind {
         }
     }
 
+    fn loss_and_grads_into(
+        &mut self,
+        params: &ParamSet,
+        x: &Matrix,
+        y: &Labels,
+        grads: &mut GradSet,
+    ) -> f64 {
+        match self {
+            EngineKind::Native(e) => e.loss_and_grads_into(params, x, y, grads),
+            EngineKind::Boxed(e) => e.loss_and_grads_into(params, x, y, grads),
+        }
+    }
+
     fn objective(&mut self, params: &ParamSet, x: &Matrix, y: &Labels) -> f64 {
         match self {
             EngineKind::Native(e) => e.objective(params, x, y),
@@ -59,11 +87,15 @@ impl GradEngine for EngineKind {
     }
 }
 
-/// The native Rust backprop engine with a reusable workspace + gradient
-/// buffer (allocation-free per step after warmup).
+/// The native Rust backprop engine with a reusable training workspace +
+/// gradient buffer and a *separate* persistent evaluation workspace
+/// (eval batches are a different size than training batches — sharing
+/// one workspace would reallocate activations on every train↔eval
+/// switch). Allocation-free per step and per eval after warmup.
 pub struct NativeEngine {
     mlp: Mlp,
     ws: Workspace,
+    eval_ws: Workspace,
     grads: Option<GradSet>,
 }
 
@@ -72,12 +104,18 @@ impl NativeEngine {
         NativeEngine {
             mlp,
             ws: Workspace::default(),
+            eval_ws: Workspace::default(),
             grads: None,
         }
     }
 
     pub fn mlp(&self) -> &Mlp {
         &self.mlp
+    }
+
+    /// Classification accuracy through the persistent eval workspace.
+    pub fn accuracy(&mut self, params: &ParamSet, x: &Matrix, y: &Labels) -> f64 {
+        self.mlp.accuracy_ws(params, x, y, &mut self.eval_ws)
     }
 }
 
@@ -97,9 +135,18 @@ impl GradEngine for NativeEngine {
         (loss, grads.clone())
     }
 
+    fn loss_and_grads_into(
+        &mut self,
+        params: &ParamSet,
+        x: &Matrix,
+        y: &Labels,
+        grads: &mut GradSet,
+    ) -> f64 {
+        self.mlp.loss_and_grads_ws(params, x, y, &mut self.ws, grads)
+    }
+
     fn objective(&mut self, params: &ParamSet, x: &Matrix, y: &Labels) -> f64 {
-        let out = self.mlp.forward_ws(params, x, &mut self.ws);
-        crate::nn::loss_value(self.mlp.loss, &out, y)
+        self.mlp.objective_ws(params, x, y, &mut self.eval_ws)
     }
 
     fn name(&self) -> &'static str {
@@ -130,5 +177,27 @@ mod tests {
         let obj = eng.objective(&p, &x, &y);
         assert!((obj - l_direct).abs() < 1e-12);
         assert_eq!(eng.name(), "native");
+    }
+
+    #[test]
+    fn loss_and_grads_into_matches_allocating_path() {
+        let mlp = Mlp::new(vec![5, 4, 3], Activation::Sigmoid, Loss::Xent);
+        let mut rng = Pcg64::new(9);
+        let p = ParamSet::glorot(&mlp.dims, &mut rng);
+        let x = Matrix::randn(6, 5, 1.0, &mut rng);
+        let y = Labels::Class(vec![0, 1, 2, 0, 1, 2]);
+        let mut a = NativeEngine::new(mlp.clone());
+        let mut b = EngineKind::Native(NativeEngine::new(mlp));
+        let (l1, g1) = a.loss_and_grads(&p, &x, &y);
+        let mut g2 = p.zeros_like();
+        // run twice through the same buffer: reuse must not drift
+        b.loss_and_grads_into(&p, &x, &y, &mut g2);
+        let l2 = b.loss_and_grads_into(&p, &x, &y, &mut g2);
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        // eval workspace is persistent and independent of training size
+        let obj1 = b.objective(&p, &x, &y);
+        let obj2 = b.objective(&p, &x, &y);
+        assert_eq!(obj1, obj2);
     }
 }

@@ -7,33 +7,42 @@
 //! Two interchangeable server backends:
 //!
 //! * `run_threaded` — the **sharded per-layer server**
-//!   (`ssp::ShardedServer`): commits advance an atomic clock table,
-//!   updates lock only their own layer's shard, blocked workers park on
-//!   the server's condvar, and evaluation snapshots assemble layer by
-//!   layer so the hot path never stalls behind an eval. This is the
-//!   deployment path: server throughput scales with workers instead of
-//!   serializing on one mutex.
+//!   (`ssp::ShardedServer`) on the **zero-copy hot path**: fetches go
+//!   through the version-gated `fetch_into` straight into each worker's
+//!   reusable view buffer (only layers whose revision advanced are
+//!   copied), minibatches are gathered into per-worker batch buffers,
+//!   gradients land in a per-worker buffer, commits hand the
+//!   accumulated deltas to the server without cloning them into
+//!   messages, and evaluation runs on a **dedicated evaluator thread**:
+//!   worker 0 takes a cheap gated snapshot at the clock boundary and
+//!   hands the buffer over an mpsc channel, then keeps training while
+//!   the evaluator (which owns its own engine and eval set) computes
+//!   the objective and sends the buffer back for reuse. The steady
+//!   state allocates nothing and copies nothing redundant.
 //! * `run_threaded_global` — the original single-lock reference
-//!   (`Mutex<Server>` + condvar), kept as the baseline the
+//!   (`Mutex<Server>` + condvar, full-copy fetch, message-based
+//!   commits, eval on worker 0's thread), kept as the baseline the
 //!   `sharded_server` bench compares against and as the oracle for the
-//!   equivalence tests (for 1 machine the two paths are bitwise
-//!   identical).
+//!   equivalence tests (for 1 machine the two paths are value-identical
+//!   at every eval point and in the final parameters).
 //!
 //! In shared memory a worker applies its own committed update before its
-//! next fetch, so read-my-writes always holds and `own_missing` is zero.
-//! Under the global lock every committed update is immediately visible
-//! (ε ≡ 1); under the sharded server a reader can overlap another
-//! worker's in-flight commit and miss part of its in-window update
-//! (ε ≤ 1) — exactly the best-effort semantics of Eq. 5 condition 5.
-//! The staleness barrier governs how far workers drift in both.
+//! next fetch, so read-my-writes always holds and nothing needs
+//! re-folding after a fetch. Under the global lock every committed
+//! update is immediately visible (ε ≡ 1); under the sharded server a
+//! reader can overlap another worker's in-flight commit and miss part
+//! of its in-window update (ε ≤ 1) — exactly the best-effort semantics
+//! of Eq. 5 condition 5. The staleness barrier governs how far workers
+//! drift in both.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
-use crate::nn::ParamSet;
+use crate::nn::{Labels, ParamSet};
 use crate::ssp::{Server, ShardedServer};
+use crate::tensor::Matrix;
 use crate::util::Pcg64;
 
 use super::engine::{EngineKind, GradEngine};
@@ -41,7 +50,11 @@ use super::EtaSchedule;
 
 pub struct ThreadedOptions {
     pub machines: usize,
-    /// Build one engine per worker thread (engines are not Sync).
+    /// Build one engine per thread (engines are not Sync). Called with
+    /// the worker index `0..machines` for the training threads, and —
+    /// in `run_threaded` — once with index `machines` for the dedicated
+    /// evaluator thread; factories that index per-worker state must
+    /// accommodate that extra slot.
     pub engine_factory: Box<dyn Fn(usize) -> EngineKind + Send + Sync>,
     pub eta: EtaSchedule,
     /// Log the master objective every this many clocks (on worker 0).
@@ -93,10 +106,26 @@ fn setup(cfg: &ExperimentConfig, dataset: &Dataset, opts: &ThreadedOptions) -> (
     )
 }
 
+/// One in-flight evaluation hand-off: worker 0 fills the snapshot
+/// buffer with a cheap version-gated copy at the clock boundary (so the
+/// evaluated state is exactly the post-commit master, deterministically)
+/// and sends it to the evaluator thread; the evaluator computes the
+/// objective and sends the package back for reuse. Two packages
+/// ping-pong, so the steady state allocates nothing and worker 0 only
+/// ever blocks if it laps the evaluator twice.
+struct EvalJob {
+    clock: u64,
+    wall: f64,
+    snap: ParamSet,
+    last_seen: Vec<u64>,
+}
+
 /// Run SSP training on real threads against the **sharded per-layer
-/// server**. The statistical path matches the simulated driver's (same
-/// update rule, same staleness semantics); no global lock anywhere on
-/// the hot path.
+/// server**, on the zero-copy hot path (`fetch_into` + reusable batch /
+/// gradient buffers + allocation-free commits + evaluator thread). The
+/// statistical path matches the simulated driver's (same update rule,
+/// same staleness semantics); no global lock and no steady-state
+/// allocation anywhere on the hot path.
 pub fn run_threaded(
     cfg: &ExperimentConfig,
     dataset: &Dataset,
@@ -110,7 +139,43 @@ pub fn run_threaded(
     let start = std::time::Instant::now();
     let evals = Arc::new(Mutex::new(Vec::new()));
 
+    // evaluation plumbing: requests flow worker 0 → evaluator, drained
+    // buffers flow back evaluator → worker 0
+    let (eval_tx, eval_rx) = mpsc::channel::<EvalJob>();
+    let (pool_tx, pool_rx) = mpsc::channel::<EvalJob>();
+    for _ in 0..2 {
+        pool_tx
+            .send(EvalJob {
+                clock: 0,
+                wall: 0.0,
+                snap: su.init.clone(),
+                last_seen: vec![0; su.init.n_layers()],
+            })
+            .unwrap();
+    }
+
     thread::scope(|scope| {
+        // the dedicated evaluator: owns its own engine, borrows the eval
+        // set, and reuses the ping-pong snapshot buffers. Exits when
+        // worker 0 drops its sender.
+        {
+            let mut engine = (opts.engine_factory)(machines);
+            let evals = Arc::clone(&evals);
+            let (eval_x, eval_y) = (&su.eval_x, &su.eval_y);
+            let pool_tx = pool_tx.clone();
+            scope.spawn(move || {
+                while let Ok(job) = eval_rx.recv() {
+                    let obj = engine.objective(&job.snap, eval_x, eval_y);
+                    evals.lock().unwrap().push((job.clock, job.wall, obj));
+                    // hand the buffer back; if the worker is gone the
+                    // run is over and the buffer just drops
+                    let _ = pool_tx.send(job);
+                }
+            });
+        }
+        drop(pool_tx); // only the evaluator refills the pool now
+
+        let mut eval_chan = Some((eval_tx, pool_rx));
         for shard in &su.shards {
             let p = shard.worker();
             let server = &server;
@@ -119,32 +184,45 @@ pub fn run_threaded(
                 shard.minibatches(cfg.train.batch, root_rng.split(100 + p as u64));
             let init = su.init.clone();
             let eta = opts.eta;
-            let evals = Arc::clone(&evals);
-            // only worker 0 evaluates; scoped threads can borrow the
-            // eval set instead of cloning it per worker
-            let (eval_x, eval_y) = (&su.eval_x, &su.eval_y);
+            // only worker 0 evaluates: it takes the channel pair
+            let eval_chan = if p == 0 { eval_chan.take() } else { None };
             let dataset = &*dataset;
             let cfg = &*cfg;
             let opts = &opts;
             scope.spawn(move || {
+                // per-worker reusable buffers: gradient accumulator,
+                // batch indices, batch features/labels — written every
+                // step, allocated once
+                let mut grads = init.zeros_like();
                 let mut cache = crate::ssp::WorkerCache::new(p, init);
+                let mut idx = Vec::with_capacity(cfg.train.batch);
+                let mut bx =
+                    Matrix::zeros(cfg.train.batch, dataset.n_features());
+                let mut by =
+                    Labels::Class(Vec::with_capacity(cfg.train.batch));
                 let mut steps: u64 = 0;
                 for clock in 0..cfg.train.clocks as u64 {
                     // barrier + read guarantee: park on the server's
                     // condvar; no parameter state is locked while waiting
                     server.wait_until_ready(p);
-                    let (snap, _own, _stats) = server.fetch(p);
-                    // shared memory: our own commits were applied by us
-                    // before this fetch → nothing missing.
-                    let missing = snap.zeros_like();
-                    cache.install_snapshot(snap, &missing);
+                    // version-gated zero-copy fetch straight into the
+                    // cache's view buffer: only layers whose revision
+                    // advanced since our last fetch move at all. Our own
+                    // commits were applied by us before this fetch, so
+                    // the refreshed view needs no read-my-writes re-fold.
+                    let (buf, seen, own) = cache.refresh_target();
+                    server.fetch_into(p, buf, seen, own);
 
                     // compute without holding anything
                     for _ in 0..cfg.train.batches_per_clock {
-                        let idx = batches.next_batch();
-                        let (x, y) = dataset.gather(&idx);
-                        let (_, grads) =
-                            engine.loss_and_grads(cache.view(), &x, &y);
+                        batches.next_batch_into(&mut idx);
+                        dataset.gather_into(&idx, &mut bx, &mut by);
+                        engine.loss_and_grads_into(
+                            cache.view(),
+                            &bx,
+                            &by,
+                            &mut grads,
+                        );
                         cache.add_scaled_local_update(-eta.at(steps), &grads);
                         steps += 1;
                     }
@@ -152,24 +230,29 @@ pub fn run_threaded(
                         "worker {p}: clock {clock} computed ({} steps)",
                         steps
                     );
-                    // per-shard commit: clock advance is atomic, each
-                    // layer's delta locks only its own shard, waiters
-                    // get one condvar pulse for the whole batch
-                    let msgs = cache.commit_clock();
+                    // allocation-free per-shard commit: clock advance is
+                    // atomic, each layer's accumulated delta is applied
+                    // under only its own shard's lock (no UpdateMsg
+                    // clones), waiters get one condvar pulse
+                    let committed = cache.clock();
                     server.commit(p);
-                    server.apply_arrivals(&msgs);
+                    server.apply_commit(p, committed, cache.pending());
+                    cache.finish_commit();
 
-                    if p == 0 && (clock + 1) % opts.eval_every == 0 {
-                        // eval off the hot path: the snapshot takes each
-                        // shard's read lock briefly; the objective runs
-                        // on this thread while the others keep training
-                        let snap = server.snapshot();
-                        let obj = engine.objective(&snap, eval_x, eval_y);
-                        evals.lock().unwrap().push((
-                            clock + 1,
-                            start.elapsed().as_secs_f64(),
-                            obj,
-                        ));
+                    if let Some((tx, pool)) = &eval_chan {
+                        if (clock + 1) % opts.eval_every == 0 {
+                            // cheap gated snapshot at the clock boundary
+                            // (deterministic state), objective off-thread
+                            let mut job =
+                                pool.recv().expect("evaluator died");
+                            server.snapshot_into_gated(
+                                &mut job.snap,
+                                &mut job.last_seen,
+                            );
+                            job.clock = clock + 1;
+                            job.wall = start.elapsed().as_secs_f64();
+                            tx.send(job).expect("evaluator died");
+                        }
                     }
                 }
             });
@@ -372,7 +455,10 @@ mod tests {
     #[test]
     fn sharded_matches_global_bitwise_on_one_machine() {
         // with a single worker both paths run the exact same sequence of
-        // f32 operations: the sharded refactor must be bit-identical
+        // f32 operations: the zero-copy path must be value-identical
+        // (identical params, objectives and eval curve; the only bit
+        // divergence permitted anywhere is the sign of zero, which no
+        // comparison or arithmetic path distinguishes)
         let cfg = tiny_cfg();
         let ds = build_dataset(&cfg);
         let a = run_threaded(&cfg, &ds, opts(&cfg, 1));

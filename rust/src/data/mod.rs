@@ -44,15 +44,29 @@ impl Dataset {
         )
     }
 
-    /// Gather a minibatch by sample indices.
-    pub fn gather(&self, idx: &[usize]) -> (Matrix, Labels) {
-        let mut x = Matrix::zeros(idx.len(), self.n_features());
-        let mut y = Vec::with_capacity(idx.len());
+    /// Gather a minibatch by sample indices into reusable buffers — the
+    /// training hot loop's allocation-free path. `x` must be
+    /// `(idx.len(), n_features)` and `y` a `Labels::Class` buffer (its
+    /// vector is cleared and refilled).
+    pub fn gather_into(&self, idx: &[usize], x: &mut Matrix, y: &mut Labels) {
+        assert_eq!(x.rows(), idx.len(), "gather_into batch rows");
+        assert_eq!(x.cols(), self.n_features(), "gather_into features");
+        let Labels::Class(cls) = y else {
+            panic!("gather_into needs a Labels::Class buffer")
+        };
+        cls.clear();
         for (r, &i) in idx.iter().enumerate() {
             x.row_mut(r).copy_from_slice(self.x.row(i));
-            y.push(self.y[i]);
+            cls.push(self.y[i]);
         }
-        (x, Labels::Class(y))
+    }
+
+    /// Gather a minibatch by sample indices (allocating convenience).
+    pub fn gather(&self, idx: &[usize]) -> (Matrix, Labels) {
+        let mut x = Matrix::zeros(idx.len(), self.n_features());
+        let mut y = Labels::Class(Vec::with_capacity(idx.len()));
+        self.gather_into(idx, &mut x, &mut y);
+        (x, y)
     }
 
     /// Split into `p` worker shards (paper: "we randomly partition the

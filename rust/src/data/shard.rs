@@ -68,24 +68,34 @@ impl MinibatchIter {
         self.epoch.saturating_sub(1)
     }
 
-    /// Next minibatch of sample indices (always exactly `batch` long,
-    /// unless the shard itself is smaller than one batch, in which case
-    /// the whole shard is returned with wraparound sampling).
-    pub fn next_batch(&mut self) -> Vec<usize> {
+    /// Next minibatch of sample indices into a reusable buffer (cleared
+    /// first; always exactly `batch` long, unless the shard itself is
+    /// smaller than one batch, in which case wraparound sampling is
+    /// used). Allocation-free after the first epoch's shuffle buffer.
+    pub fn next_batch_into(&mut self, out: &mut Vec<usize>) {
+        out.clear();
         if self.indices.len() < self.batch {
             // degenerate shard: sample with replacement
-            return (0..self.batch)
-                .map(|_| self.indices[self.rng.below(self.indices.len())])
-                .collect();
+            for _ in 0..self.batch {
+                out.push(self.indices[self.rng.below(self.indices.len())]);
+            }
+            return;
         }
         if self.cursor + self.batch > self.order.len() {
-            self.order = self.indices.clone();
+            self.order.clear();
+            self.order.extend_from_slice(&self.indices);
             self.rng.shuffle(&mut self.order);
             self.cursor = 0;
             self.epoch += 1;
         }
-        let out = self.order[self.cursor..self.cursor + self.batch].to_vec();
+        out.extend_from_slice(&self.order[self.cursor..self.cursor + self.batch]);
         self.cursor += self.batch;
+    }
+
+    /// Next minibatch of sample indices (allocating convenience).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.batch);
+        self.next_batch_into(&mut out);
         out
     }
 }

@@ -40,6 +40,29 @@
 //!   sequence the two implementations are bitwise identical (asserted by
 //!   `tests/property_ssp.rs`), and the shard boundary is the intended
 //!   message boundary for a future multi-process network transport.
+//!
+//! ## The steady-state training step is zero-copy and zero-allocation
+//!
+//! Both `ParamServer` implementations additionally serve the
+//! **version-gated zero-copy read path**: `fetch_into` writes into the
+//! caller's reusable snapshot buffer and copies only the layers whose
+//! per-layer *revision* (count of effective, nonzero-delta updates)
+//! advanced since that caller's previous read — the layerwise
+//! independence of Theorem 3 makes staleness of one layer's copy
+//! independent of every other's, so "has this layer changed?" is one
+//! atomic compare. `snapshot_into` (and the sharded
+//! `snapshot_into_gated`) do the same for evaluation snapshots, and the
+//! sharded `apply_commit` absorbs a worker's accumulated clock delta
+//! without cloning it into messages. On top of this,
+//! `coordinator::run_threaded` reuses per-worker batch, gradient and
+//! view buffers (`Dataset::gather_into`, `MinibatchIter::next_batch_into`,
+//! `GradEngine::loss_and_grads_into`, `nn::Workspace` borrowing the
+//! minibatch as activation 0) and runs evaluation on a **dedicated
+//! evaluator thread** fed cheap gated snapshots over a channel — the
+//! training threads allocate nothing and copy nothing redundant at
+//! steady state. `FetchStats` counts what the gate copied vs skipped;
+//! `benches/sharded_server.rs` tracks the resulting throughput in
+//! `bench_results/BENCH_hotpath.json` (methodology: `rust/EXPERIMENTS.md`).
 
 pub mod checkpoint;
 pub mod cli;

@@ -90,29 +90,37 @@ pub fn loss_value(loss: Loss, out: &Matrix, y: &Labels) -> f64 {
 
 /// delta_M — the output-layer error term dE/da (already including the
 /// output nonlinearity), *not* divided by batch; grad accumulation divides.
-pub fn output_delta(loss: Loss, out: &Matrix, y: &Labels) -> Matrix {
+/// Writes into `dst` (same shape as `out`) so the training loop reuses its
+/// workspace delta buffer instead of allocating per step.
+pub fn output_delta_into(loss: Loss, out: &Matrix, y: &Labels, dst: &mut Matrix) {
     let batch = out.rows();
+    assert_eq!(dst.rows(), out.rows(), "delta rows");
+    assert_eq!(dst.cols(), out.cols(), "delta cols");
     match (loss, y) {
         (Loss::Xent, Labels::Class(cls)) => {
             // softmax(out) - onehot(y)
-            let mut d = out.clone();
-            softmax_rows(&mut d);
+            dst.copy_from(out);
+            softmax_rows(dst);
             for r in 0..batch {
-                *d.at_mut(r, cls[r] as usize) -= 1.0;
+                *dst.at_mut(r, cls[r] as usize) -= 1.0;
             }
-            d
         }
         (Loss::Mse, Labels::Dense(t)) => {
             // out = sigmoid(a): dE/da = (out - y) * out (1 - out)
-            let mut d = Matrix::zeros(out.rows(), out.cols());
             for i in 0..out.data().len() {
                 let o = out.data()[i];
-                d.data_mut()[i] = (o - t.data()[i]) * o * (1.0 - o);
+                dst.data_mut()[i] = (o - t.data()[i]) * o * (1.0 - o);
             }
-            d
         }
         _ => panic!("loss/label kind mismatch"),
     }
+}
+
+/// Allocating convenience wrapper around [`output_delta_into`].
+pub fn output_delta(loss: Loss, out: &Matrix, y: &Labels) -> Matrix {
+    let mut d = Matrix::zeros(out.rows(), out.cols());
+    output_delta_into(loss, out, y, &mut d);
+    d
 }
 
 #[cfg(test)]

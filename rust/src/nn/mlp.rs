@@ -3,7 +3,7 @@
 
 use crate::tensor::{gemm, gemm_nt, gemm_tn, Matrix};
 
-use super::loss::{loss_value, output_delta};
+use super::loss::{loss_value, output_delta_into};
 use super::{Activation, GradSet, Labels, Loss, ParamSet};
 
 /// Model definition: layer dims, hidden activation, loss.
@@ -14,13 +14,23 @@ pub struct Mlp {
     pub loss: Loss,
 }
 
-/// Reusable per-batch buffers: activations z_0..z_M and two delta buffers.
+/// Reusable per-batch buffers: activations z_1..z_M (the minibatch input
+/// is *borrowed* as z_0, never copied in) and per-layer delta buffers.
 /// Reused across minibatches so the hot training loop does not allocate.
 #[derive(Debug, Default)]
 pub struct Workspace {
+    /// `acts[m]` = z_{m+1}, the output of layer `m`.
     acts: Vec<Matrix>,
     deltas: Vec<Matrix>,
     batch: usize,
+}
+
+impl Workspace {
+    /// Output-layer values of the most recent forward pass (logits for
+    /// Xent, sigmoid outputs for Mse). Panics before the first forward.
+    pub fn output(&self) -> &Matrix {
+        self.acts.last().expect("no forward pass has run")
+    }
 }
 
 impl Mlp {
@@ -45,15 +55,22 @@ impl Mlp {
     }
 
     fn ensure_ws(&self, ws: &mut Workspace, batch: usize) {
-        if ws.batch == batch && ws.acts.len() == self.dims.len() {
+        if ws.batch == batch
+            && ws.acts.len() == self.dims.len() - 1
+            && ws
+                .acts
+                .iter()
+                .zip(&self.dims[1..])
+                .all(|(a, &d)| a.cols() == d)
+        {
             return;
         }
-        ws.acts = self
-            .dims
+        // one activation + one delta buffer per layer output (the input
+        // is borrowed straight from the caller, never staged here)
+        ws.acts = self.dims[1..]
             .iter()
             .map(|&d| Matrix::zeros(batch, d))
             .collect();
-        // delta buffers: one per layer width (excluding input)
         ws.deltas = self.dims[1..]
             .iter()
             .map(|&d| Matrix::zeros(batch, d))
@@ -61,54 +78,88 @@ impl Mlp {
         ws.batch = batch;
     }
 
-    /// Forward pass; returns the output-layer values (logits for Xent,
-    /// sigmoid outputs for Mse). Activations are left in `ws.acts`.
-    pub fn forward_ws(&self, p: &ParamSet, x: &Matrix, ws: &mut Workspace) -> Matrix {
+    /// Bias add + activation for one layer's pre-activations `a`.
+    fn finish_layer(&self, a: &mut Matrix, b: &[f32], is_output: bool) {
+        for r in 0..a.rows() {
+            let row = a.row_mut(r);
+            for (v, bias) in row.iter_mut().zip(b) {
+                *v += bias;
+            }
+        }
+        if !is_output {
+            let act = self.activation;
+            a.map_inplace(|v| act.apply(v));
+        } else if self.loss == Loss::Mse {
+            a.map_inplace(|v| Activation::Sigmoid.apply(v));
+        }
+    }
+
+    /// Forward pass; returns a borrow of the output-layer values (logits
+    /// for Xent, sigmoid outputs for Mse), which live in `ws` —
+    /// zero-allocation and zero-copy after warmup: `x` is used directly
+    /// as activation 0 and the output stays in the workspace.
+    pub fn forward_ws<'ws>(
+        &self,
+        p: &ParamSet,
+        x: &Matrix,
+        ws: &'ws mut Workspace,
+    ) -> &'ws Matrix {
         assert_eq!(x.cols(), self.dims[0], "input width");
         assert_eq!(p.layers.len(), self.n_layers());
         let batch = x.rows();
         self.ensure_ws(ws, batch);
-        ws.acts[0] = x.clone();
         let m_top = self.n_layers() - 1;
         for m in 0..=m_top {
             let lp = &p.layers[m];
-            // a = z_prev @ w + b
-            let (prev, rest) = ws.acts.split_at_mut(m + 1);
-            let z_prev = &prev[m];
-            let a = &mut rest[0];
-            a.fill(0.0);
-            gemm(z_prev, &lp.w, a);
-            for r in 0..batch {
-                let row = a.row_mut(r);
-                for (v, b) in row.iter_mut().zip(&lp.b) {
-                    *v += b;
-                }
-            }
             let is_output = m == m_top;
-            if !is_output {
-                let act = self.activation;
-                a.map_inplace(|v| act.apply(v));
-            } else if self.loss == Loss::Mse {
-                a.map_inplace(|v| Activation::Sigmoid.apply(v));
+            // a = z_prev @ w + b; z_prev is x for the first layer and the
+            // previous layer's workspace buffer after that
+            if m == 0 {
+                let a = &mut ws.acts[0];
+                a.fill(0.0);
+                gemm(x, &lp.w, a);
+                self.finish_layer(a, &lp.b, is_output);
+            } else {
+                let (prev, rest) = ws.acts.split_at_mut(m);
+                let a = &mut rest[0];
+                a.fill(0.0);
+                gemm(&prev[m - 1], &lp.w, a);
+                self.finish_layer(a, &lp.b, is_output);
             }
         }
-        ws.acts[m_top + 1].clone()
+        &ws.acts[m_top]
     }
 
-    /// Convenience forward without an external workspace.
+    /// Convenience forward without an external workspace (allocates; eval
+    /// loops should hold a `Workspace` and use `forward_ws`).
     pub fn forward(&self, p: &ParamSet, x: &Matrix) -> Matrix {
         let mut ws = Workspace::default();
-        self.forward_ws(p, x, &mut ws)
+        self.forward_ws(p, x, &mut ws).clone()
     }
 
-    /// Objective value E (Eq. 3) on a minibatch.
+    /// Objective value E (Eq. 3) on a minibatch, via a caller workspace.
+    pub fn objective_ws(
+        &self,
+        p: &ParamSet,
+        x: &Matrix,
+        y: &Labels,
+        ws: &mut Workspace,
+    ) -> f64 {
+        let out = self.forward_ws(p, x, ws);
+        loss_value(self.loss, out, y)
+    }
+
+    /// Objective value E (Eq. 3) on a minibatch (allocating convenience).
     pub fn objective(&self, p: &ParamSet, x: &Matrix, y: &Labels) -> f64 {
-        let out = self.forward(p, x);
-        loss_value(self.loss, &out, y)
+        let mut ws = Workspace::default();
+        self.objective_ws(p, x, y, &mut ws)
     }
 
-    /// The paper's layerwise backprop (Eq. 6): returns (loss, grads).
-    /// Gradients are batch-mean: dE/dw for E = mean over the minibatch.
+    /// The paper's layerwise backprop (Eq. 6): returns the loss, leaving
+    /// gradients in `grads`. Gradients are batch-mean: dE/dw for E = mean
+    /// over the minibatch. Allocation-free after warmup: the minibatch
+    /// input is borrowed as activation 0 and every intermediate lives in
+    /// the workspace.
     pub fn loss_and_grads_ws(
         &self,
         p: &ParamSet,
@@ -119,21 +170,31 @@ impl Mlp {
     ) -> f64 {
         let batch = x.rows();
         assert_eq!(y.len(), batch, "labels/batch mismatch");
-        let out = self.forward_ws(p, x, ws);
-        let loss = loss_value(self.loss, &out, y);
+        let loss = {
+            let out = self.forward_ws(p, x, ws);
+            loss_value(self.loss, out, y)
+        };
 
         let m_top = self.n_layers() - 1;
         let inv_b = 1.0 / batch as f32;
 
-        // delta_M at the output layer
-        ws.deltas[m_top] = output_delta(self.loss, &out, y);
+        // delta_M at the output layer, written into the workspace buffer
+        // (acts and deltas are disjoint fields, so the borrows split)
+        output_delta_into(
+            self.loss,
+            &ws.acts[m_top],
+            y,
+            &mut ws.deltas[m_top],
+        );
 
-        // walk down: grads for layer m need delta_{m+1-indexed} and z_m
+        // walk down: grads for layer m need delta_m and layer m's input
+        // z_m (the caller's x for m = 0, acts[m-1] above that)
         for m in (0..=m_top).rev() {
             // grads: dW = z_m^T @ delta / B ; db = mean_b delta
+            let z_m: &Matrix = if m == 0 { x } else { &ws.acts[m - 1] };
             let gl = &mut grads.layers[m];
             gl.w.fill(0.0);
-            gemm_tn(&ws.acts[m], &ws.deltas[m], &mut gl.w);
+            gemm_tn(z_m, &ws.deltas[m], &mut gl.w);
             gl.w.scale(inv_b);
             gl.b.fill(0.0);
             for r in 0..batch {
@@ -151,7 +212,7 @@ impl Mlp {
                 dst.fill(0.0);
                 gemm_nt(&upper[0], &p.layers[m].w, dst);
                 let act = self.activation;
-                let z = &ws.acts[m];
+                let z = &ws.acts[m - 1];
                 for (dv, zv) in dst.data_mut().iter_mut().zip(z.data()) {
                     *dv *= act.grad_from_output(*zv);
                 }
@@ -173,9 +234,15 @@ impl Mlp {
         p.axpy(-eta, grads);
     }
 
-    /// Classification accuracy (Xent models only).
-    pub fn accuracy(&self, p: &ParamSet, x: &Matrix, y: &Labels) -> f64 {
-        let out = self.forward(p, x);
+    /// Classification accuracy (Xent models only), via a caller workspace.
+    pub fn accuracy_ws(
+        &self,
+        p: &ParamSet,
+        x: &Matrix,
+        y: &Labels,
+        ws: &mut Workspace,
+    ) -> f64 {
+        let out = self.forward_ws(p, x, ws);
         let Labels::Class(cls) = y else {
             panic!("accuracy requires class labels")
         };
@@ -193,6 +260,12 @@ impl Mlp {
             }
         }
         hits as f64 / out.rows() as f64
+    }
+
+    /// Classification accuracy (allocating convenience).
+    pub fn accuracy(&self, p: &ParamSet, x: &Matrix, y: &Labels) -> f64 {
+        let mut ws = Workspace::default();
+        self.accuracy_ws(p, x, y, &mut ws)
     }
 }
 

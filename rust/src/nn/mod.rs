@@ -13,7 +13,7 @@ mod optim;
 mod params;
 
 pub use activation::Activation;
-pub use loss::{loss_value, softmax_rows, Loss};
+pub use loss::{loss_value, output_delta, output_delta_into, softmax_rows, Loss};
 pub use mlp::{Mlp, Workspace};
 pub use optim::{OptimState, Optimizer};
 pub use params::{layer_shapes, GradSet, LayerParams, LayerShape, ParamSet};

@@ -37,6 +37,27 @@ pub struct LayerParams {
     pub b: Vec<f32>,
 }
 
+impl LayerParams {
+    /// self = other (same shape), reusing existing allocations — the
+    /// version-gated fetch path copies exactly the layers that changed.
+    pub fn copy_from(&mut self, other: &LayerParams) {
+        self.w.copy_from(&other.w);
+        self.b.copy_from_slice(&other.b);
+    }
+
+    /// True iff every parameter is (±)0.0 — an additive update that
+    /// cannot change the master (θ + 0 == θ up to the sign of zero).
+    pub fn is_zero(&self) -> bool {
+        self.w.data().iter().all(|&x| x == 0.0)
+            && self.b.iter().all(|&x| x == 0.0)
+    }
+
+    /// Parameter payload size in bytes (f32 storage).
+    pub fn n_bytes(&self) -> usize {
+        (self.w.len() + self.b.len()) * 4
+    }
+}
+
 /// Full parameter state of the DNN — `layers[m]` is w^{(m+1,m)}, b^{(m+1)}.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamSet {
@@ -103,6 +124,14 @@ impl ParamSet {
                 fan_out: l.w.cols(),
             })
             .collect()
+    }
+
+    /// self = other (same shapes), reusing every existing allocation.
+    pub fn copy_from(&mut self, other: &ParamSet) {
+        assert_eq!(self.layers.len(), other.layers.len());
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            a.copy_from(b);
+        }
     }
 
     /// self += alpha * other, layerwise (the SSP additive update).

@@ -1,9 +1,13 @@
 //! Worker-side cache: the stale snapshot θ̃_{p,c} plus read-my-writes.
 //!
-//! Between fetches, a worker computes against its cached snapshot with its
-//! own pending updates folded in (SSP condition 4). At a clock boundary it
-//! drains the accumulated per-layer deltas into `UpdateMsg`s for the
-//! server and (on fetch) replaces the snapshot.
+//! Between fetches, a worker computes against its cached view with its
+//! own pending updates folded in (SSP condition 4). At a clock boundary
+//! it either drains the accumulated per-layer deltas into `UpdateMsg`s
+//! for the server (`commit_clock`, the message path) or hands the
+//! accumulated `GradSet` straight to the shared-memory server
+//! (`pending` + `finish_commit`, the allocation-free path), and on fetch
+//! refreshes the view — in place, through the version-gated
+//! `ParamServer::fetch_into`, when running the zero-copy path.
 
 use crate::nn::{GradSet, ParamSet};
 
@@ -12,14 +16,23 @@ use super::UpdateMsg;
 #[derive(Clone, Debug)]
 pub struct WorkerCache {
     worker: usize,
-    /// Server snapshot as of the last fetch (θ without own recent writes).
-    snapshot: ParamSet,
-    /// Own updates accumulated since the snapshot was taken, *already
-    /// folded into `view`* (read-my-writes) but not yet part of any
-    /// server state this cache has seen.
-    own_since_snapshot: GradSet,
-    /// snapshot + own_since_snapshot — what the worker computes against.
+    /// θ̃_{p,c}: server snapshot + own folded-in updates — what the
+    /// worker computes against. On the zero-copy path this buffer is
+    /// also the target `fetch_into` copies changed layers into.
     view: ParamSet,
+    /// Per-layer server revisions the view buffer last absorbed — the
+    /// version gate's memory (`u64::MAX` = unknown, copy everything).
+    last_seen: Vec<u64>,
+    /// Layers that received a nonzero local fold-in since the last
+    /// refresh. Folding `a1·g1` then `a2·g2` into the view is not
+    /// bitwise the same as the server folding their committed sum once
+    /// (f32 addition is non-associative) — and the sum can even cancel
+    /// to exactly zero, in which case the server's revision would not
+    /// advance and the gate would wrongly keep our drifted bits. Touched
+    /// layers therefore force a recopy at the next refresh.
+    touched: Vec<bool>,
+    /// Scratch for the per-layer own-applied counts a fetch reports.
+    own_scratch: Vec<u64>,
     /// Updates accumulated in the current (uncommitted) clock.
     pending: GradSet,
     pending_dirty: bool,
@@ -28,14 +41,19 @@ pub struct WorkerCache {
 }
 
 impl WorkerCache {
+    /// `init` must be the same initial parameters the server was built
+    /// with: the zero-copy fetch path starts from the shared premise
+    /// that the view buffer holds the master state at revision 0.
     pub fn new(worker: usize, init: ParamSet) -> WorkerCache {
-        let zeros = init.zeros_like();
+        let pending = init.zeros_like();
+        let layers = init.n_layers();
         WorkerCache {
             worker,
-            snapshot: init.clone(),
-            own_since_snapshot: zeros.clone(),
             view: init,
-            pending: zeros,
+            last_seen: vec![0; layers],
+            touched: vec![false; layers],
+            own_scratch: Vec::with_capacity(layers),
+            pending,
             pending_dirty: false,
             clock: 0,
         }
@@ -57,17 +75,22 @@ impl WorkerCache {
     /// Accumulate a local additive update (−η·grad, Eq. 7's Δw^p term) and
     /// fold it into the view immediately (read-my-writes).
     pub fn add_local_update(&mut self, update: &GradSet) {
-        self.pending.axpy(1.0, update);
-        self.own_since_snapshot.axpy(1.0, update);
-        self.view.axpy(1.0, update);
-        self.pending_dirty = true;
+        self.add_scaled_local_update(1.0, update);
     }
 
     /// Scaled variant: add `alpha * g` (e.g. `alpha = -eta`).
     pub fn add_scaled_local_update(&mut self, alpha: f32, g: &GradSet) {
         self.pending.axpy(alpha, g);
-        self.own_since_snapshot.axpy(alpha, g);
         self.view.axpy(alpha, g);
+        if alpha != 0.0 {
+            for (t, lp) in self.touched.iter_mut().zip(&g.layers) {
+                // early-exits at the first nonzero entry: O(1) on dense
+                // gradients, a full scan only for genuinely zero layers
+                if !*t && !lp.is_zero() {
+                    *t = true;
+                }
+            }
+        }
         self.pending_dirty = true;
     }
 
@@ -78,34 +101,73 @@ impl WorkerCache {
         for (layer, lp) in self.pending.layers.iter().enumerate() {
             msgs.push(UpdateMsg::new(self.worker, self.clock, layer, lp.clone()));
         }
-        self.pending.fill_zero();
-        self.pending_dirty = false;
-        self.clock += 1;
+        self.finish_commit();
         msgs
     }
 
-    /// Install a fresh server snapshot. The server state may or may not
-    /// include this worker's own recent commits; `own_applied_clocks[l]`
-    /// says how many of our clocks the server had applied *for layer l*
-    /// when the snapshot was taken — our own not-yet-applied updates are
-    /// re-folded on top so read-my-writes is never violated.
+    /// The current clock's accumulated deltas — the payload the
+    /// allocation-free commit path (`ShardedServer::apply_commit`) reads
+    /// directly instead of cloning into messages. Pair with
+    /// `finish_commit` once the server has taken the update.
+    pub fn pending(&self) -> &GradSet {
+        &self.pending
+    }
+
+    /// Close out the current clock after the server has absorbed
+    /// `pending` (via `commit_clock`'s messages or `apply_commit`):
+    /// zero the accumulator and advance the local clock.
+    pub fn finish_commit(&mut self) {
+        self.pending.fill_zero();
+        self.pending_dirty = false;
+        self.clock += 1;
+    }
+
+    /// Zero-copy refresh target for `ParamServer::fetch_into`: the view
+    /// buffer, its per-layer last-seen revision vector, and the
+    /// own-applied scratch, as one reusable package.
     ///
-    /// For simplicity of bookkeeping the cache tracks own updates since
-    /// the last snapshot as a single accumulated delta; callers fetch at
-    /// clock boundaries right after committing, so "own updates the
-    /// snapshot may miss" == own_since_snapshot minus what arrived. The
-    /// server tells us which of our commits it contains via
-    /// `own_missing`: the portion of our accumulated delta NOT yet in the
-    /// snapshot (computed server-side from arrival bookkeeping).
+    /// Contract (shared-memory workers): callers fetch at clock
+    /// boundaries, *after* their own commit has been applied at the
+    /// server — the refreshed view is then exactly the server snapshot
+    /// and no read-my-writes re-fold is needed. Layers the gate may
+    /// skip are exactly the layers to which no effective update was
+    /// applied *and* into which this worker folded nothing nonzero
+    /// (touched layers have their gate entry invalidated here, forcing
+    /// a recopy), so a skipped layer's buffer matches the master
+    /// bit-for-bit up to the sign of zero.
+    pub fn refresh_target(
+        &mut self,
+    ) -> (&mut ParamSet, &mut [u64], &mut Vec<u64>) {
+        assert!(
+            !self.pending_dirty,
+            "fetch mid-clock would lose read-my-writes accounting"
+        );
+        for (seen, t) in self.last_seen.iter_mut().zip(&mut self.touched) {
+            if *t {
+                *seen = u64::MAX; // our fold-ins drifted this layer: recopy
+                *t = false;
+            }
+        }
+        (&mut self.view, &mut self.last_seen, &mut self.own_scratch)
+    }
+
+    /// Install a fresh server snapshot (the message path: the snapshot
+    /// may or may not include this worker's own recent commits).
+    /// `own_missing` is the portion of our committed updates NOT yet in
+    /// the snapshot (computed by the caller from the server's per-layer
+    /// applied counts); it is re-folded on top so read-my-writes is
+    /// never violated. Invalidates the version gate: the next gated
+    /// fetch copies every layer.
     pub fn install_snapshot(&mut self, snapshot: ParamSet, own_missing: &GradSet) {
         assert!(
             !self.pending_dirty,
             "fetch mid-clock would lose read-my-writes accounting"
         );
-        self.view = snapshot.clone();
+        self.view = snapshot;
         self.view.axpy(1.0, own_missing);
-        self.snapshot = snapshot;
-        self.own_since_snapshot = own_missing.clone();
+        // unknown provenance relative to the server's revision counters
+        self.last_seen.fill(u64::MAX);
+        self.touched.fill(false);
     }
 }
 
@@ -157,6 +219,24 @@ mod tests {
     }
 
     #[test]
+    fn pending_and_finish_commit_match_commit_clock() {
+        let init = ParamSet::zeros(&dims());
+        let mut a = WorkerCache::new(0, init.clone());
+        let mut b = WorkerCache::new(0, init);
+        let u = unit_update(&dims(), 0.25);
+        a.add_local_update(&u);
+        b.add_local_update(&u);
+        let msgs = a.commit_clock();
+        // the allocation-free path exposes the same deltas directly
+        for (m, lp) in msgs.iter().zip(&b.pending().layers) {
+            assert_eq!(&m.delta, lp);
+        }
+        b.finish_commit();
+        assert_eq!(a.clock(), b.clock());
+        assert_eq!(b.pending().layers[0].w.norm_sq(), 0.0);
+    }
+
+    #[test]
     fn scaled_update_is_minus_eta_grad() {
         let init = ParamSet::zeros(&dims());
         let mut c = WorkerCache::new(0, init);
@@ -184,11 +264,48 @@ mod tests {
     }
 
     #[test]
+    fn refresh_invalidates_touched_layers_only() {
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(0, init.clone());
+        // nonzero fold-in hits layer 0 only: its gate entry must be
+        // invalidated (forced recopy), the untouched layer's kept
+        let mut u = init.zeros_like();
+        u.layers[0].w.fill(0.1);
+        c.add_local_update(&u);
+        c.commit_clock();
+        let (_, seen, _) = c.refresh_target();
+        assert_eq!(seen[0], u64::MAX);
+        assert_eq!(seen[1], 0);
+    }
+
+    #[test]
+    fn install_snapshot_invalidates_version_gate() {
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(0, init.clone());
+        {
+            let (_, seen, _) = c.refresh_target();
+            assert!(seen.iter().all(|&s| s == 0));
+        }
+        c.install_snapshot(init.clone(), &init.zeros_like());
+        let (_, seen, _) = c.refresh_target();
+        assert!(seen.iter().all(|&s| s == u64::MAX));
+    }
+
+    #[test]
     #[should_panic(expected = "mid-clock")]
     fn snapshot_mid_clock_panics() {
         let init = ParamSet::zeros(&dims());
         let mut c = WorkerCache::new(0, init.clone());
         c.add_local_update(&unit_update(&dims(), 0.2));
         c.install_snapshot(init.clone(), &init.zeros_like());
+    }
+
+    #[test]
+    #[should_panic(expected = "mid-clock")]
+    fn refresh_mid_clock_panics() {
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(0, init);
+        c.add_local_update(&unit_update(&dims(), 0.2));
+        let _ = c.refresh_target();
     }
 }

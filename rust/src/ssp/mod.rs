@@ -18,6 +18,14 @@
 //! Updates are applied **per layer** (`UpdateMsg` carries one layer's
 //! delta): layers synchronize independently of each other, the property
 //! Theorem 3's layerwise analysis requires.
+//!
+//! Reads come in two flavors: the allocating `fetch`/`snapshot`, and the
+//! **version-gated zero-copy** `fetch_into`/`snapshot_into` — the caller
+//! keeps a reusable snapshot buffer plus a per-layer last-seen revision
+//! vector, and the server copies only the layers that actually changed
+//! (`FetchStats` reports what the gate moved vs skipped). Layerwise
+//! independence is what makes the gate sound: each layer's copy is
+//! allowed to be stale independently, exactly like any other SSP read.
 
 mod client;
 mod clock;
@@ -27,7 +35,7 @@ mod table;
 
 pub use client::WorkerCache;
 pub use clock::ClockTable;
-pub use server::{ReadStats, Server};
+pub use server::{FetchStats, ReadStats, Server};
 pub use sharded::{AtomicClockTable, ShardedServer};
 pub use table::{ParamTable, VersionVector};
 
@@ -59,8 +67,29 @@ pub trait ParamServer {
     fn read_ready(&self, worker: usize) -> bool;
     /// Serve a read: snapshot + own applied counts + ε statistics.
     fn fetch(&mut self, worker: usize) -> (ParamSet, Vec<u64>, ReadStats);
+    /// Version-gated zero-copy read: identical observable state to
+    /// `fetch`, but the snapshot lands in the caller's reusable `buf`
+    /// and only layers whose per-layer revision advanced since
+    /// `last_seen` are copied (zero-delta updates advance the protocol's
+    /// version vector but not the revision — they cannot change θ).
+    /// `own` is cleared and refilled with the caller's per-layer applied
+    /// counts. The caller must pass the same `(buf, last_seen)` pair it
+    /// received the previous gated read into, initially the init
+    /// parameters with `last_seen` all zero.
+    fn fetch_into(
+        &mut self,
+        worker: usize,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        own: &mut Vec<u64>,
+    ) -> (ReadStats, FetchStats);
     /// Current master state (evaluation / checkpoint path).
     fn snapshot(&self) -> ParamSet;
+    /// Current master state into a reusable buffer (allocation-free
+    /// sibling of `snapshot`).
+    fn snapshot_into(&self, buf: &mut ParamSet);
+    /// Aggregate copy accounting over all gated reads served.
+    fn copy_totals(&self) -> FetchStats;
     /// Applied clocks of `(layer, worker)` — the version vector.
     fn applied(&self, layer: usize, worker: usize) -> u64;
     /// Total reads served.

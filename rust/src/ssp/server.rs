@@ -33,23 +33,54 @@ impl ReadStats {
     }
 }
 
+/// Copy accounting for the version-gated read path (`fetch_into` /
+/// `snapshot_into_gated`): how much parameter data actually moved, and
+/// how much the per-layer revision gate saved.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FetchStats {
+    /// Layers whose revision advanced since the caller's buffer was
+    /// last current — copied.
+    pub layers_copied: u64,
+    /// Layers skipped because the buffer already held the layer's bits.
+    pub layers_skipped: u64,
+    /// f32 payload bytes copied (sum over copied layers).
+    pub bytes_copied: u64,
+}
+
+impl FetchStats {
+    pub fn absorb(&mut self, other: &FetchStats) {
+        self.layers_copied += other.layers_copied;
+        self.layers_skipped += other.layers_skipped;
+        self.bytes_copied += other.bytes_copied;
+    }
+}
+
 #[derive(Debug)]
 pub struct Server {
     table: ParamTable,
     clocks: ClockTable,
     policy: Policy,
+    /// `layer_revs[l]` = count of *effective* (nonzero-delta) updates
+    /// applied to layer `l` — the revision the fetch gate compares
+    /// against. Zero deltas advance the version vector (protocol FIFO)
+    /// but cannot change θ, so they leave the revision alone.
+    layer_revs: Vec<u64>,
     bytes_received: u64,
     reads: u64,
+    copy_totals: FetchStats,
 }
 
 impl Server {
     pub fn new(init: ParamSet, workers: usize, policy: Policy) -> Server {
+        let layers = init.n_layers();
         Server {
             table: ParamTable::new(init, workers),
             clocks: ClockTable::new(workers),
             policy,
+            layer_revs: vec![0; layers],
             bytes_received: 0,
             reads: 0,
+            copy_totals: FetchStats::default(),
         }
     }
 
@@ -79,6 +110,9 @@ impl Server {
     /// A (delayed) update message reaches the server.
     pub fn apply_arrival(&mut self, msg: &UpdateMsg) {
         self.bytes_received += msg.bytes as u64;
+        if !msg.delta.is_zero() {
+            self.layer_revs[msg.layer] += 1;
+        }
         self.table.apply(msg);
     }
 
@@ -134,6 +168,97 @@ impl Server {
         (self.table.snapshot(), own, stats)
     }
 
+    /// Version-gated zero-copy read: same contract as `fetch`, but the
+    /// snapshot lands in the caller's reusable `buf` and only the layers
+    /// whose revision advanced since `last_seen` are copied. `own` is
+    /// cleared and refilled with the per-layer applied counts of the
+    /// caller's updates. Caller contract: `buf` holds exactly the layer
+    /// bits it held when `last_seen` was last updated (initially: the
+    /// init parameters with `last_seen` all zero).
+    pub fn fetch_into(
+        &mut self,
+        worker: usize,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        own: &mut Vec<u64>,
+    ) -> (ReadStats, FetchStats) {
+        debug_assert!(self.read_ready(worker), "fetch before guarantee met");
+        let layers = self.n_layers();
+        assert_eq!(buf.layers.len(), layers, "fetch_into buffer layers");
+        assert_eq!(last_seen.len(), layers, "fetch_into last_seen layers");
+        self.reads += 1;
+        let c = self.clocks.clock(worker);
+        let s = self.policy.staleness().unwrap_or(u64::MAX);
+        let through = c.saturating_sub(s);
+        let mut stats = ReadStats::default();
+        let mut fs = FetchStats::default();
+        own.clear();
+        for l in 0..layers {
+            for q in 0..self.clocks.workers() {
+                if q == worker {
+                    continue;
+                }
+                let applied = self.table.versions().applied(l, q);
+                let committed = self.clocks.clock(q);
+                let guaranteed = through.min(committed);
+                stats.guaranteed += guaranteed;
+                let extra_applied = applied.saturating_sub(guaranteed);
+                let extra_committed = committed.saturating_sub(guaranteed);
+                stats.window_included += extra_applied;
+                stats.window_missed += extra_committed - extra_applied;
+            }
+            own.push(self.table.versions().applied(l, worker));
+            let rev = self.layer_revs[l];
+            if rev == last_seen[l] {
+                fs.layers_skipped += 1;
+            } else {
+                let src = &self.table.master().layers[l];
+                buf.layers[l].copy_from(src);
+                fs.layers_copied += 1;
+                fs.bytes_copied += src.n_bytes() as u64;
+                last_seen[l] = rev;
+            }
+        }
+        self.copy_totals.absorb(&fs);
+        (stats, fs)
+    }
+
+    /// Current master state into a reusable buffer (evaluation /
+    /// checkpoint path without the allocation).
+    pub fn snapshot_into(&self, buf: &mut ParamSet) {
+        buf.copy_from(self.table.master());
+    }
+
+    /// Gated variant of `snapshot_into` for a repeat reader (the
+    /// evaluator): copies only layers whose revision advanced since this
+    /// buffer's previous snapshot. Feeds `copy_totals`, matching
+    /// `ShardedServer::snapshot_into_gated`.
+    pub fn snapshot_into_gated(
+        &mut self,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+    ) -> FetchStats {
+        let mut fs = FetchStats::default();
+        for (l, rev) in self.layer_revs.iter().enumerate() {
+            if *rev == last_seen[l] {
+                fs.layers_skipped += 1;
+                continue;
+            }
+            let src = &self.table.master().layers[l];
+            buf.layers[l].copy_from(src);
+            fs.layers_copied += 1;
+            fs.bytes_copied += src.n_bytes() as u64;
+            last_seen[l] = *rev;
+        }
+        self.copy_totals.absorb(&fs);
+        fs
+    }
+
+    /// Aggregate copy accounting over every gated read served.
+    pub fn copy_totals(&self) -> FetchStats {
+        self.copy_totals
+    }
+
     pub fn bytes_received(&self) -> u64 {
         self.bytes_received
     }
@@ -180,8 +305,26 @@ impl ParamServer for Server {
         Server::fetch(self, worker)
     }
 
+    fn fetch_into(
+        &mut self,
+        worker: usize,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        own: &mut Vec<u64>,
+    ) -> (ReadStats, FetchStats) {
+        Server::fetch_into(self, worker, buf, last_seen, own)
+    }
+
     fn snapshot(&self) -> ParamSet {
         self.table.snapshot()
+    }
+
+    fn snapshot_into(&self, buf: &mut ParamSet) {
+        Server::snapshot_into(self, buf)
+    }
+
+    fn copy_totals(&self) -> FetchStats {
+        Server::copy_totals(self)
     }
 
     fn applied(&self, layer: usize, worker: usize) -> u64 {

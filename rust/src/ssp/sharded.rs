@@ -39,9 +39,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, RwLock};
 
-use crate::nn::ParamSet;
+use crate::nn::{GradSet, LayerParams, ParamSet};
 
-use super::{ParamServer, Policy, ReadStats, UpdateMsg};
+use super::{FetchStats, ParamServer, Policy, ReadStats, UpdateMsg};
 
 /// Lock-free committed-clock table: `clocks[p] = c` means worker `p` has
 /// committed `c` clocks (same contract as `ClockTable`, atomically).
@@ -106,6 +106,15 @@ struct LayerShard {
     /// `versions[q]` = clocks of worker `q`'s updates applied to this
     /// layer (updates arrive FIFO per (layer, worker) link).
     versions: Vec<AtomicU64>,
+    /// Count of *effective* (nonzero-delta) updates applied — the
+    /// revision the version-gated fetch compares against. Zero deltas
+    /// advance `versions` (protocol FIFO bookkeeping) but cannot change
+    /// θ, so they leave the revision alone and gated readers keep their
+    /// buffered copy. Bumped (SeqCst) *before* the `versions` store so a
+    /// lock-free reader that loads versions and then confirms the
+    /// revision unchanged cannot have observed a newer effective update
+    /// than its buffer holds.
+    rev: AtomicU64,
 }
 
 /// Condvar the barrier parks on. The mutex guards no data — waiters
@@ -127,6 +136,9 @@ pub struct ShardedServer {
     bytes_received: AtomicU64,
     reads: AtomicU64,
     applied: AtomicU64,
+    layers_copied: AtomicU64,
+    layers_skipped: AtomicU64,
+    bytes_copied: AtomicU64,
     notify: Notifier,
 }
 
@@ -139,6 +151,7 @@ impl ShardedServer {
             .map(|lp| LayerShard {
                 params: RwLock::new(lp),
                 versions: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+                rev: AtomicU64::new(0),
             })
             .collect();
         ShardedServer {
@@ -149,6 +162,9 @@ impl ShardedServer {
             bytes_received: AtomicU64::new(0),
             reads: AtomicU64::new(0),
             applied: AtomicU64::new(0),
+            layers_copied: AtomicU64::new(0),
+            layers_skipped: AtomicU64::new(0),
+            bytes_copied: AtomicU64::new(0),
             notify: Notifier::default(),
         }
     }
@@ -196,23 +212,56 @@ impl ShardedServer {
     fn apply_no_wake(&self, msg: &UpdateMsg) {
         self.bytes_received
             .fetch_add(msg.bytes as u64, Ordering::Relaxed);
-        let shard = &self.shards[msg.layer];
+        self.apply_delta(msg.layer, msg.from, msg.clock, &msg.delta);
+    }
+
+    /// Apply one layer's additive delta under that shard's write lock —
+    /// the shared body of the message path (`apply_arrival`) and the
+    /// allocation-free local-commit path (`apply_commit`).
+    fn apply_delta(
+        &self,
+        layer: usize,
+        from: usize,
+        clock: u64,
+        delta: &LayerParams,
+    ) {
+        let shard = &self.shards[layer];
         let mut params = shard.params.write().unwrap();
         // FIFO check per (layer, worker), as VersionVector::record.
-        let v = shard.versions[msg.from].load(Ordering::Relaxed);
+        let v = shard.versions[from].load(Ordering::Relaxed);
         assert_eq!(
-            v, msg.clock,
-            "out-of-order update: layer {} worker {} expected clock {v}, got {}",
-            msg.layer, msg.from, msg.clock
+            v, clock,
+            "out-of-order update: layer {layer} worker {from} expected clock {v}, got {clock}"
         );
         // θ ← θ + u, exactly as ParamTable::apply (bitwise-equal path).
-        params.w.axpy(1.0, &msg.delta.w);
-        for (x, y) in params.b.iter_mut().zip(&msg.delta.b) {
+        params.w.axpy(1.0, &delta.w);
+        for (x, y) in params.b.iter_mut().zip(&delta.b) {
             *x += *y;
         }
-        shard.versions[msg.from].store(v + 1, Ordering::Release);
+        // revision before versions (both SeqCst): see `LayerShard::rev`.
+        if !delta.is_zero() {
+            shard.rev.fetch_add(1, Ordering::SeqCst);
+        }
+        shard.versions[from].store(v + 1, Ordering::SeqCst);
         drop(params);
         self.applied.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Shared-memory fast path for a worker's own clock commit: applies
+    /// the accumulated per-layer deltas directly (no `UpdateMsg`
+    /// allocation, no delta clone), with the same version bookkeeping
+    /// and byte accounting as `apply_arrivals` over
+    /// `WorkerCache::commit_clock`'s messages. One condvar pulse for the
+    /// whole batch. The caller must have advanced the clock table with
+    /// `commit` first, exactly as with the message path.
+    pub fn apply_commit(&self, worker: usize, clock: u64, delta: &GradSet) {
+        assert_eq!(delta.layers.len(), self.shards.len(), "commit layers");
+        for (layer, lp) in delta.layers.iter().enumerate() {
+            self.bytes_received
+                .fetch_add((lp.n_bytes() + 32) as u64, Ordering::Relaxed);
+            self.apply_delta(layer, worker, clock, lp);
+        }
+        self.bump();
     }
 
     /// Must worker `p` block before starting its next clock? Lock-free.
@@ -311,6 +360,106 @@ impl ShardedServer {
         (ParamSet { layers }, own, stats)
     }
 
+    /// Per-layer ε / own accounting for one shard of a read, from the
+    /// shard's version counters (loaded SeqCst). Mirrors the loop body
+    /// of `fetch`; factored out so the gated path can run it either
+    /// lock-free (skipped layer) or under the shard read lock (copied
+    /// layer).
+    #[allow(clippy::too_many_arguments)]
+    fn layer_read_stats(
+        shard: &LayerShard,
+        worker: usize,
+        through: u64,
+        committed: &[u64],
+        own: &mut Vec<u64>,
+        stats: &mut ReadStats,
+    ) {
+        for (q, v) in shard.versions.iter().enumerate() {
+            let applied = v.load(Ordering::SeqCst);
+            if q == worker {
+                own.push(applied);
+                continue;
+            }
+            let committed_q = committed[q];
+            let guaranteed = through.min(committed_q);
+            stats.guaranteed += guaranteed;
+            let extra_applied = applied.saturating_sub(guaranteed);
+            let extra_committed = committed_q.saturating_sub(guaranteed);
+            stats.window_included += extra_applied;
+            stats.window_missed +=
+                extra_committed.saturating_sub(extra_applied);
+        }
+    }
+
+    /// Version-gated zero-copy read: same observable contract as
+    /// `fetch`, but the snapshot lands in the caller's reusable `buf`
+    /// and only the layers whose revision advanced since `last_seen`
+    /// are copied (and take a read lock at all). Skipped layers are
+    /// confirmed by a revision double-check around the lock-free
+    /// version reads: an effective update bumps the revision *before*
+    /// its version store (both SeqCst), so if the revision is still
+    /// `last_seen` after the version loads, those loads cannot have
+    /// included an effective update the buffer is missing — the
+    /// accounting a skipped layer reports is consistent with the bits
+    /// the caller already holds. Zero-delta updates are the only
+    /// in-between: they advance versions without a revision bump, which
+    /// is sound because they cannot change θ.
+    pub fn fetch_into(
+        &self,
+        worker: usize,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        own: &mut Vec<u64>,
+    ) -> (ReadStats, FetchStats) {
+        debug_assert!(self.read_ready(worker), "fetch before guarantee met");
+        assert_eq!(buf.layers.len(), self.shards.len(), "fetch_into buffer");
+        assert_eq!(last_seen.len(), self.shards.len(), "fetch_into last_seen");
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        let c = self.clocks.clock(worker);
+        let s = self.policy.staleness().unwrap_or(u64::MAX);
+        let through = c.saturating_sub(s); // c − s
+        let committed: Vec<u64> =
+            (0..self.workers).map(|q| self.clocks.clock(q)).collect();
+        let mut stats = ReadStats::default();
+        let mut fs = FetchStats::default();
+        own.clear();
+        for (l, shard) in self.shards.iter().enumerate() {
+            let own_mark = own.len();
+            let stats_mark = stats;
+            let rev_pre = shard.rev.load(Ordering::SeqCst);
+            if rev_pre == last_seen[l] {
+                Self::layer_read_stats(
+                    shard, worker, through, &committed, own, &mut stats,
+                );
+                if shard.rev.load(Ordering::SeqCst) == rev_pre {
+                    fs.layers_skipped += 1;
+                    continue;
+                }
+                // raced an effective update: discard the tentative
+                // accounting and fall through to the locked copy
+                own.truncate(own_mark);
+                stats = stats_mark;
+            }
+            let params = shard.params.read().unwrap();
+            // revision re-read under the lock: matches the copied bits
+            last_seen[l] = shard.rev.load(Ordering::SeqCst);
+            buf.layers[l].copy_from(&params);
+            fs.layers_copied += 1;
+            fs.bytes_copied += params.n_bytes() as u64;
+            Self::layer_read_stats(
+                shard, worker, through, &committed, own, &mut stats,
+            );
+            drop(params);
+        }
+        self.layers_copied
+            .fetch_add(fs.layers_copied, Ordering::Relaxed);
+        self.layers_skipped
+            .fetch_add(fs.layers_skipped, Ordering::Relaxed);
+        self.bytes_copied
+            .fetch_add(fs.bytes_copied, Ordering::Relaxed);
+        (stats, fs)
+    }
+
     /// Assemble the current master state layer by layer (evaluation /
     /// checkpoint path — never blocks writers for the whole model).
     pub fn snapshot(&self) -> ParamSet {
@@ -320,6 +469,56 @@ impl ShardedServer {
                 .iter()
                 .map(|s| s.params.read().unwrap().clone())
                 .collect(),
+        }
+    }
+
+    /// Current master state into a reusable buffer — `snapshot` without
+    /// the allocation.
+    pub fn snapshot_into(&self, buf: &mut ParamSet) {
+        assert_eq!(buf.layers.len(), self.shards.len(), "snapshot buffer");
+        for (dst, shard) in buf.layers.iter_mut().zip(&self.shards) {
+            dst.copy_from(&shard.params.read().unwrap());
+        }
+    }
+
+    /// Gated variant of `snapshot_into` for a repeat reader (the
+    /// evaluator thread): copies only the layers whose revision advanced
+    /// since this buffer's previous snapshot, taking no lock at all for
+    /// unchanged layers.
+    pub fn snapshot_into_gated(
+        &self,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+    ) -> FetchStats {
+        assert_eq!(buf.layers.len(), self.shards.len(), "snapshot buffer");
+        assert_eq!(last_seen.len(), self.shards.len(), "snapshot last_seen");
+        let mut fs = FetchStats::default();
+        for (l, shard) in self.shards.iter().enumerate() {
+            if shard.rev.load(Ordering::SeqCst) == last_seen[l] {
+                fs.layers_skipped += 1;
+                continue;
+            }
+            let params = shard.params.read().unwrap();
+            last_seen[l] = shard.rev.load(Ordering::SeqCst);
+            buf.layers[l].copy_from(&params);
+            fs.layers_copied += 1;
+            fs.bytes_copied += params.n_bytes() as u64;
+        }
+        self.layers_copied
+            .fetch_add(fs.layers_copied, Ordering::Relaxed);
+        self.layers_skipped
+            .fetch_add(fs.layers_skipped, Ordering::Relaxed);
+        self.bytes_copied
+            .fetch_add(fs.bytes_copied, Ordering::Relaxed);
+        fs
+    }
+
+    /// Aggregate copy accounting over every gated read served.
+    pub fn copy_totals(&self) -> FetchStats {
+        FetchStats {
+            layers_copied: self.layers_copied.load(Ordering::Relaxed),
+            layers_skipped: self.layers_skipped.load(Ordering::Relaxed),
+            bytes_copied: self.bytes_copied.load(Ordering::Relaxed),
         }
     }
 
@@ -379,8 +578,26 @@ impl ParamServer for ShardedServer {
         ShardedServer::fetch(self, worker)
     }
 
+    fn fetch_into(
+        &mut self,
+        worker: usize,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        own: &mut Vec<u64>,
+    ) -> (ReadStats, FetchStats) {
+        ShardedServer::fetch_into(self, worker, buf, last_seen, own)
+    }
+
     fn snapshot(&self) -> ParamSet {
         ShardedServer::snapshot(self)
+    }
+
+    fn snapshot_into(&self, buf: &mut ParamSet) {
+        ShardedServer::snapshot_into(self, buf)
+    }
+
+    fn copy_totals(&self) -> FetchStats {
+        ShardedServer::copy_totals(self)
     }
 
     fn applied(&self, layer: usize, worker: usize) -> u64 {
@@ -561,6 +778,181 @@ mod tests {
         let seen = waiter.join().unwrap();
         assert_eq!(seen, 1);
         assert!(srv.is_ready(0));
+    }
+
+    #[test]
+    fn fetch_into_matches_full_fetch_and_gates_unchanged_layers() {
+        let policy = Policy::Ssp { staleness: 3 };
+        let init = {
+            let mut rng = crate::util::Pcg64::new(11);
+            ParamSet::glorot(&dims(), &mut rng)
+        };
+        let srv = ShardedServer::new(init.clone(), 2, policy);
+        let mut buf = init.clone();
+        let mut seen = vec![0u64; srv.n_layers()];
+        let mut own = Vec::new();
+
+        // nothing applied yet: gated fetch copies nothing, matches full
+        let (st_into, fs) = srv.fetch_into(0, &mut buf, &mut seen, &mut own);
+        assert_eq!(fs.layers_copied, 0);
+        assert_eq!(fs.layers_skipped, 2);
+        let (full, own_full, st_full) = srv.fetch(0);
+        assert_eq!(buf, full);
+        assert_eq!(own, own_full);
+        assert_eq!(st_into, st_full);
+
+        // one layer changes: exactly that layer is copied
+        srv.commit(1);
+        srv.apply_arrival(&msg(1, 0, 1));
+        let (_, fs) = srv.fetch_into(0, &mut buf, &mut seen, &mut own);
+        assert_eq!(fs.layers_copied, 1);
+        assert_eq!(fs.layers_skipped, 1);
+        assert!(fs.bytes_copied > 0);
+        let (full, _, _) = srv.fetch(0);
+        assert_eq!(buf, full);
+
+        // buffer reuse across clocks keeps matching the full fetch
+        srv.apply_arrival(&msg(1, 0, 0));
+        srv.commit(0);
+        srv.apply_arrival(&msg(0, 0, 0));
+        srv.apply_arrival(&msg(0, 0, 1));
+        let (_, fs) = srv.fetch_into(0, &mut buf, &mut seen, &mut own);
+        assert_eq!(fs.layers_copied, 2);
+        let (full, own_full, _) = srv.fetch(0);
+        assert_eq!(buf, full);
+        assert_eq!(own, own_full);
+        let totals = srv.copy_totals();
+        assert_eq!(totals.layers_copied, 3);
+        assert_eq!(totals.layers_skipped, 3);
+    }
+
+    #[test]
+    fn apply_commit_matches_message_path() {
+        let init = {
+            let mut rng = crate::util::Pcg64::new(13);
+            ParamSet::glorot(&dims(), &mut rng)
+        };
+        let policy = Policy::Ssp { staleness: 2 };
+        let by_msg = ShardedServer::new(init.clone(), 2, policy);
+        let direct = ShardedServer::new(init.clone(), 2, policy);
+
+        let mut delta = init.zeros_like();
+        for (l, lp) in delta.layers.iter_mut().enumerate() {
+            *lp = msg(0, 0, l).delta;
+        }
+        for clock in 0..3u64 {
+            let msgs: Vec<UpdateMsg> = delta
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(l, lp)| UpdateMsg::new(0, clock, l, lp.clone()))
+                .collect();
+            by_msg.commit(0);
+            by_msg.apply_arrivals(&msgs);
+            direct.commit(0);
+            direct.apply_commit(0, clock, &delta);
+        }
+        assert_eq!(by_msg.snapshot(), direct.snapshot());
+        assert_eq!(by_msg.applied_count(), direct.applied_count());
+        assert_eq!(by_msg.bytes_received(), direct.bytes_received());
+        for l in 0..2 {
+            assert_eq!(by_msg.applied(l, 0), direct.applied(l, 0));
+        }
+    }
+
+    #[test]
+    fn zero_delta_advances_versions_but_not_revision() {
+        let srv = ShardedServer::new(ParamSet::zeros(&dims()), 1, Policy::Async);
+        let mut buf = ParamSet::zeros(&dims());
+        let mut seen = vec![0u64; srv.n_layers()];
+        let mut own = Vec::new();
+        let zero = ParamSet::zeros(&dims());
+        srv.commit(0);
+        srv.apply_commit(0, 0, &zero);
+        // protocol bookkeeping advanced...
+        assert_eq!(srv.applied(0, 0), 1);
+        assert_eq!(srv.applied(1, 0), 1);
+        // ...but θ cannot have changed, so the gate skips every layer
+        let (_, fs) = srv.fetch_into(0, &mut buf, &mut seen, &mut own);
+        assert_eq!(fs.layers_copied, 0);
+        assert_eq!(fs.layers_skipped, 2);
+        assert_eq!(own, vec![1, 1]);
+        assert_eq!(buf, srv.snapshot());
+    }
+
+    #[test]
+    fn concurrent_gated_fetch_keeps_accounting_consistent() {
+        // hammer fetch_into from a reader thread while a writer commits
+        // effective updates: exercises the raced-skip rollback (rev
+        // moved between the two SeqCst loads), whose regression mode is
+        // duplicated `own` entries / double-counted stats. Async policy
+        // so neither side ever blocks.
+        let srv = Arc::new(ShardedServer::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Async,
+        ));
+        let clocks = 300u64;
+        std::thread::scope(|scope| {
+            {
+                let srv = Arc::clone(&srv);
+                scope.spawn(move || {
+                    for clock in 0..clocks {
+                        srv.commit(1);
+                        for l in 0..srv.n_layers() {
+                            srv.apply_arrival(&msg(1, clock, l));
+                        }
+                    }
+                });
+            }
+            let srv = Arc::clone(&srv);
+            scope.spawn(move || {
+                let mut buf = ParamSet::zeros(&dims());
+                let mut seen = vec![0u64; srv.n_layers()];
+                let mut own = Vec::new();
+                let layers = srv.n_layers() as u64;
+                while srv.applied(0, 1) < clocks {
+                    let (_, fs) =
+                        srv.fetch_into(0, &mut buf, &mut seen, &mut own);
+                    assert_eq!(
+                        own.len(),
+                        srv.n_layers(),
+                        "own must have exactly one entry per layer"
+                    );
+                    assert!(own.iter().all(|&v| v == 0), "worker 0 never wrote");
+                    assert_eq!(fs.layers_copied + fs.layers_skipped, layers);
+                }
+            });
+        });
+        // quiescent: a final gated fetch must exactly match the master
+        let mut buf = ParamSet::zeros(&dims());
+        let mut seen = vec![0u64; srv.n_layers()];
+        let mut own = Vec::new();
+        srv.fetch_into(0, &mut buf, &mut seen, &mut own);
+        assert_eq!(buf, srv.snapshot());
+    }
+
+    #[test]
+    fn gated_snapshot_tracks_master() {
+        let srv = ShardedServer::new(
+            ParamSet::zeros(&dims()),
+            2,
+            Policy::Ssp { staleness: 2 },
+        );
+        let mut buf = ParamSet::zeros(&dims());
+        let mut seen = vec![0u64; srv.n_layers()];
+        let fs = srv.snapshot_into_gated(&mut buf, &mut seen);
+        assert_eq!(fs.layers_copied, 0);
+        srv.commit(0);
+        srv.apply_arrival(&msg(0, 0, 0));
+        let fs = srv.snapshot_into_gated(&mut buf, &mut seen);
+        assert_eq!(fs.layers_copied, 1);
+        assert_eq!(fs.layers_skipped, 1);
+        assert_eq!(buf, srv.snapshot());
+        // plain snapshot_into always copies everything
+        let mut full = ParamSet::zeros(&dims());
+        srv.snapshot_into(&mut full);
+        assert_eq!(full, buf);
     }
 
     #[test]

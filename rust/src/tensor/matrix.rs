@@ -107,6 +107,14 @@ impl Matrix {
         self.data.fill(v);
     }
 
+    /// self = other (same shape), reusing this matrix's allocation — the
+    /// zero-copy hot path's replacement for `clone()`.
+    pub fn copy_from(&mut self, other: &Matrix) {
+        assert_eq!(self.rows, other.rows, "copy_from rows");
+        assert_eq!(self.cols, other.cols, "copy_from cols");
+        self.data.copy_from_slice(&other.data);
+    }
+
     /// self += alpha * other (same shape).
     pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
         assert_eq!(self.rows, other.rows);

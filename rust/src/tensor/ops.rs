@@ -8,7 +8,9 @@
 //!
 //! All use a cache-blocked loop order with a k-innermost accumulation over
 //! row slices so LLVM autovectorizes the inner loop (verified in the §Perf
-//! pass; see EXPERIMENTS.md). Block sizes chosen for ~32 KiB L1 tiles.
+//! pass; methodology and before/after records in `rust/EXPERIMENTS.md`,
+//! baselines re-runnable via `benches/microbench_hotpath.rs`). Block sizes
+//! chosen for ~32 KiB L1 tiles.
 
 use super::Matrix;
 

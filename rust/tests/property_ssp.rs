@@ -18,6 +18,14 @@
 //! per-layer `ShardedServer` — and an oracle-equivalence property drives
 //! the two through identical random schedules asserting bitwise-equal
 //! masters, own-version vectors and ε statistics at every read.
+//!
+//! Every read additionally runs through the **version-gated zero-copy
+//! path** (`fetch_into`): each worker keeps one reusable snapshot buffer
+//! plus its per-layer last-seen revision vector across the whole random
+//! schedule (stale vectors, interleaved commits, arbitrary gaps between
+//! that worker's reads), and after every gated read the buffer must
+//! equal the full `fetch` snapshot exactly, with identical own-version
+//! and ε accounting.
 
 use sspdnn::nn::{LayerParams, ParamSet};
 use sspdnn::ssp::{
@@ -66,6 +74,11 @@ fn random_schedule<S: ParamServer>(
     let mut expected = init.clone(); // P2 accumulator
     let mut pending: Vec<UpdateMsg> = Vec::new(); // in-flight messages
     let mut committed = vec![0u64; workers];
+    // per-worker reusable gated-fetch state, live across the whole
+    // schedule: (snapshot buffer, last-seen revisions, own scratch)
+    let mut gated: Vec<(ParamSet, Vec<u64>, Vec<u64>)> = (0..workers)
+        .map(|_| (init.clone(), vec![0u64; d.len() - 1], Vec::new()))
+        .collect();
 
     for _ in 0..steps {
         // pick a worker allowed to proceed
@@ -107,9 +120,19 @@ fn random_schedule<S: ParamServer>(
         // P5 on a random reader that is read-ready
         let reader = rng.below(workers);
         if server.read_ready(reader) {
-            let (_, _, stats) = server.fetch(reader);
+            let (snap, own_full, stats) = server.fetch(reader);
             let rate = stats.epsilon_rate();
             assert!((0.0..=1.0).contains(&rate), "P5 rate {rate} (seed {seed})");
+            // the gated zero-copy read, resuming from this worker's
+            // possibly-stale buffer, must reproduce the full fetch
+            let (buf, seen, own) = &mut gated[reader];
+            let (st2, _) = server.fetch_into(reader, buf, seen, own);
+            assert_eq!(
+                *buf, snap,
+                "gated buffer != full snapshot (seed {seed})"
+            );
+            assert_eq!(*own, own_full, "gated own diverged (seed {seed})");
+            assert_eq!(st2, stats, "gated eps stats diverged (seed {seed})");
         }
     }
 
@@ -162,10 +185,15 @@ fn sharded_server_is_bitwise_equivalent_to_reference() {
         };
         let init = ParamSet::glorot(&d, &mut rng);
         let mut reference = Server::new(init.clone(), workers, policy);
-        let mut sharded = ShardedServer::new(init, workers, policy);
+        let mut sharded = ShardedServer::new(init.clone(), workers, policy);
 
         let mut pending: Vec<UpdateMsg> = Vec::new();
         let mut committed = vec![0u64; workers];
+        // persistent gated-read state per (implementation, worker)
+        let mut gated_ref: Vec<(ParamSet, Vec<u64>, Vec<u64>)> = (0..workers)
+            .map(|_| (init.clone(), vec![0u64; d.len() - 1], Vec::new()))
+            .collect();
+        let mut gated_sh = gated_ref.clone();
         for _ in 0..150 {
             // both servers must agree on who may proceed
             for p in 0..workers {
@@ -207,6 +235,38 @@ fn sharded_server_is_bitwise_equivalent_to_reference() {
                 assert_eq!(m_ref, m_sh, "master bits diverged (seed {seed})");
                 assert_eq!(own_ref, own_sh, "own versions diverged (seed {seed})");
                 assert_eq!(st_ref, st_sh, "eps stats diverged (seed {seed})");
+
+                // the gated path must agree across implementations AND
+                // with the full fetch, resuming from reused buffers
+                let (b_r, s_r, o_r) = &mut gated_ref[reader];
+                let (st_gr, fs_r) = ParamServer::fetch_into(
+                    &mut reference,
+                    reader,
+                    b_r,
+                    s_r,
+                    o_r,
+                );
+                let (b_s, s_s, o_s) = &mut gated_sh[reader];
+                let (st_gs, fs_s) = ParamServer::fetch_into(
+                    &mut sharded,
+                    reader,
+                    b_s,
+                    s_s,
+                    o_s,
+                );
+                assert_eq!(*b_r, m_ref, "gated ref buffer (seed {seed})");
+                assert_eq!(b_r, b_s, "gated buffers diverged (seed {seed})");
+                assert_eq!(o_r, o_s, "gated own diverged (seed {seed})");
+                assert_eq!(st_gr, st_ref, "gated stats != full (seed {seed})");
+                assert_eq!(st_gr, st_gs, "gated stats diverged (seed {seed})");
+                assert_eq!(
+                    fs_r, fs_s,
+                    "copy gate accounting diverged (seed {seed})"
+                );
+                assert_eq!(
+                    s_r, s_s,
+                    "last-seen revisions diverged (seed {seed})"
+                );
             }
         }
         for msg in pending.drain(..) {
