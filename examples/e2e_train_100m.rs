@@ -82,6 +82,7 @@ fn main() {
             seed: 5,
             engine: sspdnn::config::Engine::Pjrt,
             artifact: Some("e2e_100m".into()),
+            intra_op_threads: 1,
         },
     };
 

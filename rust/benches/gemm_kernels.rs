@@ -1,0 +1,324 @@
+//! GEMM backend benchmark — the §Perf pass 5 instrument.
+//!
+//! Measures GFLOP/s for all three kernel orientations at the model
+//! shapes the TIMIT/ImageNet benches exercise, against the **pass-3
+//! kernels kept compilable right here** (the pre-packing cache-blocked
+//! saxpy/dot loops that shipped before the packed backend), so the
+//! before/after is re-measurable on any host forever — plus the fused
+//! bias/activation epilogue against the unfused two-pass equivalent,
+//! and the intra-op thread-scaling curve of `GemmPool`.
+//!
+//! Machine-readable results land in `bench_results/BENCH_gemm.json`
+//! (GFLOP/s per kernel per shape, speedup ratios, scaling curve),
+//! uploaded by CI next to BENCH_hotpath.json.
+
+mod support;
+
+use sspdnn::tensor::{gemm_ep, gemm_nt_ep, gemm_tn_ep, Epilogue, GemmPool, Matrix, Unary};
+use sspdnn::util::json::Json;
+use sspdnn::util::{Pcg64, Stopwatch};
+
+// ---------------------------------------------------------------------------
+// §Perf pass-3 kernels (pre-packing baselines, verbatim)
+// ---------------------------------------------------------------------------
+
+/// `gemm` as of §Perf pass 3: cache-blocked, 4 fused saxpies per pass,
+/// per-element zero skip.
+fn gemm_pass3(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    const MC: usize = 64;
+    const KC: usize = 256;
+    const NC: usize = 256;
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for p0 in (0..k).step_by(KC) {
+            let p1 = (p0 + KC).min(k);
+            for j0 in (0..n).step_by(NC) {
+                let j1 = (j0 + NC).min(n);
+                for i in i0..i1 {
+                    let arow = &ad[i * k..(i + 1) * k];
+                    let crow = &mut cd[i * n + j0..i * n + j1];
+                    let w = j1 - j0;
+                    let mut p = p0;
+                    while p + 4 <= p1 {
+                        let a0 = arow[p];
+                        let a1 = arow[p + 1];
+                        let a2 = arow[p + 2];
+                        let a3 = arow[p + 3];
+                        if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                            let b0 = &bd[p * n + j0..p * n + j0 + w];
+                            let b1 = &bd[(p + 1) * n + j0..(p + 1) * n + j0 + w];
+                            let b2 = &bd[(p + 2) * n + j0..(p + 2) * n + j0 + w];
+                            let b3 = &bd[(p + 3) * n + j0..(p + 3) * n + j0 + w];
+                            for t in 0..w {
+                                crow[t] += a0 * b0[t]
+                                    + a1 * b1[t]
+                                    + a2 * b2[t]
+                                    + a3 * b3[t];
+                            }
+                        }
+                        p += 4;
+                    }
+                    for p in p..p1 {
+                        let aip = arow[p];
+                        if aip == 0.0 {
+                            continue;
+                        }
+                        let brow = &bd[p * n + j0..p * n + j1];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += aip * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `gemm_nt` as of §Perf pass 3: 16-accumulator dot product.
+fn gemm_nt_pass3(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.rows();
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = [0.0f32; 16];
+            let chunks = k / 16;
+            for t in 0..chunks {
+                let p = 16 * t;
+                let a16 = &arow[p..p + 16];
+                let b16 = &brow[p..p + 16];
+                for l in 0..16 {
+                    acc[l] += a16[l] * b16[l];
+                }
+            }
+            let mut s = acc.iter().sum::<f32>();
+            for p in 16 * chunks..k {
+                s += arow[p] * brow[p];
+            }
+            cd[i * n + j] += s;
+        }
+    }
+}
+
+/// `gemm_tn` as of §Perf pass 3: rank-1 updates fused 4 samples per pass.
+fn gemm_tn_pass3(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (k, m) = (a.rows(), a.cols());
+    let n = b.cols();
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    let mut p = 0;
+    while p + 4 <= k {
+        let a0 = &ad[p * m..(p + 1) * m];
+        let a1 = &ad[(p + 1) * m..(p + 2) * m];
+        let a2 = &ad[(p + 2) * m..(p + 3) * m];
+        let a3 = &ad[(p + 3) * m..(p + 4) * m];
+        let b0 = &bd[p * n..(p + 1) * n];
+        let b1 = &bd[(p + 1) * n..(p + 2) * n];
+        let b2 = &bd[(p + 2) * n..(p + 3) * n];
+        let b3 = &bd[(p + 3) * n..(p + 4) * n];
+        for i in 0..m {
+            let (v0, v1, v2, v3) = (a0[i], a1[i], a2[i], a3[i]);
+            if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for t in 0..n {
+                crow[t] += v0 * b0[t] + v1 * b1[t] + v2 * b2[t] + v3 * b3[t];
+            }
+        }
+        p += 4;
+    }
+    for p in p..k {
+        let arow = &ad[p * m..(p + 1) * m];
+        let brow = &bd[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let sw = Stopwatch::new();
+    for _ in 0..iters {
+        f();
+    }
+    sw.elapsed_secs() / iters as f64
+}
+
+fn gflops(m: usize, k: usize, n: usize, dt: f64) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64 / dt / 1e9
+}
+
+fn main() {
+    let mut rng = Pcg64::new(0);
+    let iters = if support::scale() == "quick" { 8 } else { 30 };
+    let mut json: Vec<(&str, Json)> = Vec::new();
+    println!("=== gemm backend bench ({} scale) ===\n", support::scale());
+
+    // ---- before/after per kernel per shape (single thread) ----
+    // (m, k, n, short key). 256^3 is the acceptance shape; the rest are
+    // the TIMIT/ImageNet bench layer shapes.
+    let shapes: &[(usize, usize, usize, &str)] = &[
+        (256, 256, 256, "256"),
+        (128, 512, 512, "512"),
+        (50, 360, 128, "timit_in"),
+        (50, 128, 2001, "timit_out"),
+        (100, 2150, 500, "imagenet_in"),
+    ];
+    let mut entries: Vec<(String, Json)> = Vec::new();
+    for &(m, k, n, key) in shapes {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let bt = b.transpose();
+        let at = a.transpose();
+        let mut c = Matrix::zeros(m, n);
+
+        let dt_old = time(iters, || {
+            c.fill(0.0);
+            gemm_pass3(&a, &b, &mut c);
+        });
+        let dt_new = time(iters, || {
+            gemm_ep(&a, &b, &mut c, Epilogue::Overwrite);
+        });
+        let (go, gn) = (gflops(m, k, n, dt_old), gflops(m, k, n, dt_new));
+        println!(
+            "gemm    {m:>4}x{k:>4}x{n:>4}  pass3 {go:7.2}  packed {gn:7.2} GFLOP/s  ({:.2}x)",
+            gn / go
+        );
+        entries.push((format!("gemm_{key}_pass3_gflops"), Json::num(go)));
+        entries.push((format!("gemm_{key}_packed_gflops"), Json::num(gn)));
+        entries.push((format!("gemm_{key}_speedup"), Json::num(gn / go)));
+
+        let dt_old = time(iters, || {
+            c.fill(0.0);
+            gemm_nt_pass3(&a, &bt, &mut c);
+        });
+        let dt_new = time(iters, || {
+            gemm_nt_ep(&a, &bt, &mut c, Epilogue::Overwrite);
+        });
+        let (go, gn) = (gflops(m, k, n, dt_old), gflops(m, k, n, dt_new));
+        println!(
+            "gemm_nt {m:>4}x{k:>4}x{n:>4}  pass3 {go:7.2}  packed {gn:7.2} GFLOP/s  ({:.2}x)",
+            gn / go
+        );
+        entries.push((format!("gemm_nt_{key}_pass3_gflops"), Json::num(go)));
+        entries.push((format!("gemm_nt_{key}_packed_gflops"), Json::num(gn)));
+        entries.push((format!("gemm_nt_{key}_speedup"), Json::num(gn / go)));
+
+        let dt_old = time(iters, || {
+            c.fill(0.0);
+            gemm_tn_pass3(&at, &b, &mut c);
+        });
+        let dt_new = time(iters, || {
+            gemm_tn_ep(&at, &b, &mut c, Epilogue::Overwrite);
+        });
+        let (go, gn) = (gflops(m, k, n, dt_old), gflops(m, k, n, dt_new));
+        println!(
+            "gemm_tn {m:>4}x{k:>4}x{n:>4}  pass3 {go:7.2}  packed {gn:7.2} GFLOP/s  ({:.2}x)",
+            gn / go
+        );
+        entries.push((format!("gemm_tn_{key}_pass3_gflops"), Json::num(go)));
+        entries.push((format!("gemm_tn_{key}_packed_gflops"), Json::num(gn)));
+        entries.push((format!("gemm_tn_{key}_speedup"), Json::num(gn / go)));
+        println!();
+    }
+
+    // ---- fused epilogue vs unfused two extra passes ----
+    {
+        let (m, k, n) = (100usize, 256usize, 256usize);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..n).map(|i| i as f32 * 0.001).collect();
+        let mut c = Matrix::zeros(m, n);
+        let dt_unfused = time(iters, || {
+            gemm_ep(&a, &b, &mut c, Epilogue::Overwrite);
+            for r in 0..c.rows() {
+                let row = c.row_mut(r);
+                for (v, bv) in row.iter_mut().zip(&bias) {
+                    *v += bv;
+                }
+            }
+            c.map_inplace(|v| Unary::Sigmoid.apply(v));
+        });
+        let dt_fused = time(iters, || {
+            let ep = Epilogue::BiasUnary {
+                bias: &bias,
+                f: Unary::Sigmoid,
+            };
+            gemm_ep(&a, &b, &mut c, ep);
+        });
+        println!(
+            "bias+sigmoid {m}x{k}x{n}: unfused {:.3} ms  fused {:.3} ms  ({:.2}x)\n",
+            dt_unfused * 1e3,
+            dt_fused * 1e3,
+            dt_unfused / dt_fused
+        );
+        entries.push(("epilogue_unfused_ms".into(), Json::num(dt_unfused * 1e3)));
+        entries.push(("epilogue_fused_ms".into(), Json::num(dt_fused * 1e3)));
+        entries.push((
+            "epilogue_fusion_speedup".into(),
+            Json::num(dt_unfused / dt_fused),
+        ));
+    }
+
+    // ---- intra-op thread scaling (the pool path) ----
+    for &(m, k, n, key) in
+        &[(256usize, 256usize, 256usize, "256"), (512, 512, 512, "512")]
+    {
+        if support::scale() == "quick" && key == "512" {
+            continue; // keep the CI smoke fast
+        }
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut c = Matrix::zeros(m, n);
+        let mut curve: Vec<f64> = Vec::new();
+        print!("threads {m}x{k}x{n}:");
+        for threads in [1usize, 2, 4, 8] {
+            let mut pool = GemmPool::new(threads);
+            let dt = time(iters, || {
+                pool.gemm(&a, &b, &mut c, Epilogue::Overwrite);
+            });
+            let g = gflops(m, k, n, dt);
+            print!("  t{threads} {g:7.2}");
+            curve.push(g);
+        }
+        println!("  GFLOP/s");
+        entries.push((format!("thread_scaling_{key}_gflops"), Json::arr_f64(&curve)));
+        entries.push((
+            format!("thread_scaling_{key}_t4_speedup"),
+            Json::num(curve[2] / curve[0]),
+        ));
+    }
+
+    let entry_refs: Vec<(&str, Json)> = entries
+        .iter()
+        .map(|(k, v)| (k.as_str(), v.clone()))
+        .collect();
+    json.extend(entry_refs);
+    json.push(("scale", Json::str(support::scale())));
+    let path = "bench_results/BENCH_gemm.json";
+    match sspdnn::metrics::write_file(path, &Json::obj(json).to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\n{path} write failed: {e}"),
+    }
+}

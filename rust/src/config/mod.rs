@@ -103,6 +103,13 @@ pub struct TrainConfig {
     pub engine: Engine,
     /// Artifact name in artifacts/manifest.json (Pjrt engine).
     pub artifact: Option<String>,
+    /// Intra-op GEMM threads per worker (`tensor::GemmPool`). The
+    /// cluster's parallelism budget is explicit: N workers × T intra-op
+    /// threads. Default 1 — worker-level parallelism owns the cores
+    /// unless a run raises it (CLI `--threads`, TOML
+    /// `train.intra_op_threads`). Thread count never changes values
+    /// (the packed backend is bitwise split-invariant).
+    pub intra_op_threads: usize,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -146,6 +153,7 @@ impl ExperimentConfig {
                 seed: 7,
                 engine: Engine::Native,
                 artifact: Some("timit_scaled".into()),
+                intra_op_threads: 1,
             },
         }
     }
@@ -189,6 +197,7 @@ impl ExperimentConfig {
                 seed: 17,
                 engine: Engine::Native,
                 artifact: Some("imagenet_scaled".into()),
+                intra_op_threads: 1,
             },
         }
     }
@@ -236,6 +245,7 @@ impl ExperimentConfig {
                 seed: 3,
                 engine: Engine::Native,
                 artifact: Some("tiny".into()),
+                intra_op_threads: 1,
             },
         }
     }
@@ -341,6 +351,14 @@ impl ExperimentConfig {
                 ("train", "artifact", Str(s)) => {
                     self.train.artifact = Some(s.clone())
                 }
+                ("train", "intra_op_threads", Int(n)) => {
+                    if *n < 1 {
+                        return Err(format!(
+                            "train.intra_op_threads must be >= 1, got {n}"
+                        ));
+                    }
+                    self.train.intra_op_threads = *n as usize
+                }
                 (sec, k, _) => {
                     return Err(format!("unknown config key [{sec}] {k}"))
                 }
@@ -383,6 +401,9 @@ impl ExperimentConfig {
         }
         if self.train.batch == 0 || self.train.clocks == 0 {
             return Err("batch/clocks must be positive".into());
+        }
+        if self.train.intra_op_threads == 0 {
+            return Err("train.intra_op_threads must be >= 1".into());
         }
         if self.cluster.machines == 0 {
             return Err("need >= 1 machine".into());
@@ -446,6 +467,19 @@ mod tests {
         assert_eq!(c.model.activation, Activation::Tanh);
         assert_eq!(c.ssp.policy, Policy::Ssp { staleness: 5 });
         assert_eq!(c.train.eta, 0.25);
+    }
+
+    #[test]
+    fn intra_op_threads_key_and_validation() {
+        let mut c = ExperimentConfig::tiny();
+        assert_eq!(c.train.intra_op_threads, 1, "serial by default");
+        let doc = parse_toml("[train]\nintra_op_threads = 4\n").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.train.intra_op_threads, 4);
+        let bad = parse_toml("[train]\nintra_op_threads = -1\n").unwrap();
+        assert!(c.apply_toml(&bad).is_err(), "negative threads rejected");
+        c.train.intra_op_threads = 0;
+        assert!(c.validate().is_err(), "0 threads rejected");
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::data::{imagenet_like, timit_like, Dataset, MinibatchIter, SynthSpec};
 use crate::net::NetModel;
 use crate::nn::{GradSet, Labels, Mlp, OptimState, Optimizer, ParamSet};
 use crate::sim::{ComputeModel, EventQueue};
-use crate::ssp::{ReadStats, Server, UpdateMsg, WorkerCache};
+use crate::ssp::{ParamServer, Policy, ReadStats, Server, UpdateMsg, WorkerCache};
 use crate::tensor::Matrix;
 use crate::util::Pcg64;
 
@@ -174,11 +174,27 @@ pub fn run_experiment(cfg: &ExperimentConfig, opts: DriverOptions) -> RunResult 
 }
 
 /// Same, with a pre-built dataset (benches reuse one dataset across the
-/// machine sweep so curves are comparable).
+/// machine sweep so curves are comparable). Uses the single-lock
+/// reference `Server`.
 pub fn run_experiment_on(
+    cfg: &ExperimentConfig,
+    opts: DriverOptions,
+    dataset: &Dataset,
+) -> RunResult {
+    run_experiment_with(cfg, opts, dataset, Server::new)
+}
+
+/// The generic driver: any [`ParamServer`] implementation can back the
+/// simulated figures — the single-lock reference `Server` (default) or
+/// the sharded per-layer `ShardedServer`. Given the same config the two
+/// produce bitwise-identical runs (the servers apply the same f32
+/// operations in the same order; `sharded_server_matches_reference`
+/// pins this end to end).
+pub fn run_experiment_with<S: ParamServer>(
     cfg: &ExperimentConfig,
     mut opts: DriverOptions,
     dataset: &Dataset,
+    make_server: impl FnOnce(ParamSet, usize, Policy) -> S,
 ) -> RunResult {
     let machines = opts.machines.unwrap_or(cfg.cluster.machines);
     assert!(machines >= 1);
@@ -189,7 +205,8 @@ pub fn run_experiment_on(
         cfg.model.dims.clone(),
         cfg.model.activation,
         cfg.model.loss,
-    );
+    )
+    .with_intra_op_threads(cfg.train.intra_op_threads);
     let mut engine = opts
         .engine
         .take()
@@ -223,7 +240,7 @@ pub fn run_experiment_on(
         })
         .collect();
 
-    let mut server = Server::new(init.clone(), machines, policy);
+    let mut server = make_server(init.clone(), machines, policy);
     let mut net = NetModel::new(&cfg.cluster, machines, root_rng.split(2));
 
     // calibrate compute model
@@ -333,7 +350,7 @@ pub fn run_experiment_on(
                     && min_clock % opts.eval_every == 0
                 {
                     last_eval_clock = min_clock as i64;
-                    let snap = server.table().snapshot();
+                    let snap = server.snapshot();
                     let obj = engine.objective(&snap, &eval_x, &eval_y);
                     if let Some(tr) = trace.as_mut() {
                         tr.push(
@@ -375,7 +392,7 @@ pub fn run_experiment_on(
     }
 
     let total_vtime = queue.now();
-    let final_params = server.table().snapshot();
+    let final_params = server.snapshot();
     let final_objective = engine.objective(&final_params, &eval_x, &eval_y);
 
     let clock_loss: Vec<f64> = clock_loss_sum
@@ -408,12 +425,12 @@ pub fn run_experiment_on(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn try_start_clock(
+fn try_start_clock<S: ParamServer>(
     worker: usize,
     now: f64,
     cfg: &ExperimentConfig,
     w: &mut WorkerState,
-    server: &mut Server,
+    server: &mut S,
     engine: &mut EngineKind,
     dataset: &Dataset,
     eta: &EtaSchedule,
@@ -451,12 +468,16 @@ fn try_start_clock(
     }
     w.status = WorkerStatus::Ready;
     if let Some(tr) = trace.as_deref_mut() {
-        let observed = server.clocks().max() - server.clocks().clock(worker);
+        let max_clock = (0..server.workers())
+            .map(|q| server.clock(q))
+            .max()
+            .unwrap_or(0);
+        let observed = max_clock - server.clock(worker);
         tr.push(
             now,
             TraceEvent::ClockStart {
                 worker,
-                clock: server.clocks().clock(worker),
+                clock: server.clock(worker),
                 observed_staleness: observed,
             },
         );
@@ -519,9 +540,9 @@ fn try_start_clock(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn wake_blocked(
+fn wake_blocked<S: ParamServer>(
     workers: &mut [WorkerState],
-    server: &Server,
+    server: &S,
     now: f64,
     queue: &mut EventQueue<Payload>,
     barrier_wait: &mut [f64],
@@ -643,6 +664,28 @@ mod tests {
         );
         assert!(r.final_objective.is_finite());
         assert_eq!(r.epsilon_rate, 1.0); // no other workers, no window
+    }
+
+    #[test]
+    fn sharded_server_matches_reference() {
+        // the discrete-event driver generic over ParamServer: backing it
+        // with the sharded per-layer server must reproduce the reference
+        // run bitwise (same f32 ops in the same order — the property
+        // suite pins the servers; this pins the driver plumbing)
+        use crate::ssp::ShardedServer;
+        let cfg = tiny_cfg();
+        let ds = build_dataset(&cfg);
+        let a = run_experiment_on(&cfg, fast_opts(), &ds);
+        let b = run_experiment_with(&cfg, fast_opts(), &ds, ShardedServer::new);
+        assert_eq!(a.final_objective, b.final_objective);
+        assert_eq!(a.total_vtime, b.total_vtime);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.final_params, b.final_params);
+        let a_curve: Vec<(u64, f64)> =
+            a.evals.iter().map(|e| (e.clock, e.objective)).collect();
+        let b_curve: Vec<(u64, f64)> =
+            b.evals.iter().map(|e| (e.clock, e.objective)).collect();
+        assert_eq!(a_curve, b_curve);
     }
 
     #[test]

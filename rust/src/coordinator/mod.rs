@@ -17,7 +17,8 @@ mod trace;
 mod tracker;
 
 pub use driver::{
-    build_dataset, run_experiment, run_experiment_on, DriverOptions, RunResult,
+    build_dataset, run_experiment, run_experiment_on, run_experiment_with,
+    DriverOptions, RunResult,
 };
 pub use engine::{EngineKind, GradEngine, NativeEngine};
 pub use trace::{Trace, TraceEvent, TraceSummary, WorkerSummary};

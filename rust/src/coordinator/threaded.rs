@@ -389,7 +389,8 @@ pub fn native_factory(
         cfg.model.dims.clone(),
         cfg.model.activation,
         cfg.model.loss,
-    );
+    )
+    .with_intra_op_threads(cfg.train.intra_op_threads);
     Box::new(move |_p| {
         EngineKind::Native(super::engine::NativeEngine::new(mlp.clone()))
     })

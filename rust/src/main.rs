@@ -72,6 +72,7 @@ FLAGS (train/speedup/theory):
   --staleness S               SSP staleness bound
   --policy <ssp|bsp|async>
   --clocks N  --eta F  --batch N  --samples N
+  --threads T                 intra-op GEMM threads per worker (default 1)
   --engine <native|pjrt>      gradient engine (pjrt needs artifacts/)
   --out <dir>                 write curve CSV + run JSON
 ";
@@ -109,6 +110,9 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     }
     if let Some(n) = args.get_usize("samples").map_err(|e| e.to_string())? {
         cfg.data.n_samples = n;
+    }
+    if let Some(t) = args.get_usize("threads").map_err(|e| e.to_string())? {
+        cfg.train.intra_op_threads = t;
     }
     cfg.validate()?;
     Ok(cfg)

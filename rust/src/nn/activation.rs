@@ -1,5 +1,11 @@
 //! Activation units. The paper's Assumption 3 restricts analysis to
 //! logistic units; tanh/relu are provided for the ablation benches.
+//!
+//! The math lives in `tensor::Unary` so the GEMM epilogue (which fuses
+//! the activation into the kernel's tile store) and this unfused surface
+//! are the same code — bit-identical by construction.
+
+use crate::tensor::Unary;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activation {
@@ -9,38 +15,27 @@ pub enum Activation {
 }
 
 impl Activation {
+    /// The epilogue-fusable elementwise map this activation computes.
+    #[inline]
+    pub fn unary(self) -> Unary {
+        match self {
+            Activation::Sigmoid => Unary::Sigmoid,
+            Activation::Tanh => Unary::Tanh,
+            Activation::Relu => Unary::Relu,
+        }
+    }
+
     /// h(a), numerically stable.
     #[inline]
     pub fn apply(self, a: f32) -> f32 {
-        match self {
-            Activation::Sigmoid => {
-                if a >= 0.0 {
-                    1.0 / (1.0 + (-a).exp())
-                } else {
-                    let e = a.exp();
-                    e / (1.0 + e)
-                }
-            }
-            Activation::Tanh => a.tanh(),
-            Activation::Relu => a.max(0.0),
-        }
+        self.unary().apply(a)
     }
 
     /// h'(a) expressed through the *output* z = h(a); this is what the
     /// backward pass has in hand (paper: h'(a_i) = z_i (1 - z_i)).
     #[inline]
     pub fn grad_from_output(self, z: f32) -> f32 {
-        match self {
-            Activation::Sigmoid => z * (1.0 - z),
-            Activation::Tanh => 1.0 - z * z,
-            Activation::Relu => {
-                if z > 0.0 {
-                    1.0
-                } else {
-                    0.0
-                }
-            }
-        }
+        self.unary().deriv_from_output(z)
     }
 
     pub fn parse(s: &str) -> Option<Activation> {

@@ -1,28 +1,44 @@
 //! The MLP engine: forward pass and the paper's layerwise backpropagation
 //! (Eq. 6), allocation-free per step after warmup via `Workspace`.
+//!
+//! The heavy lifting is three GEMMs per layer, all driven through the
+//! workspace's `GemmPool` (intra-op threads, per-thread pack buffers)
+//! with their elementwise tails **fused into the kernel epilogue**:
+//! bias + activation on the forward pass, the activation-derivative mask
+//! on the backward delta, and the 1/B scaling on the weight gradient.
+//! None of those cost a separate pass over the matrices anymore.
 
-use crate::tensor::{gemm, gemm_nt, gemm_tn, Matrix};
+use crate::tensor::{Epilogue, GemmPool, Matrix, Unary};
 
 use super::loss::{loss_value, output_delta_into};
 use super::{Activation, GradSet, Labels, Loss, ParamSet};
 
-/// Model definition: layer dims, hidden activation, loss.
+/// Model definition: layer dims, hidden activation, loss — plus the
+/// intra-op GEMM thread count its engines run with (`N workers × T
+/// intra-op threads` is explicit end to end; see
+/// `config::TrainConfig::intra_op_threads`).
 #[derive(Clone, Debug)]
 pub struct Mlp {
     pub dims: Vec<usize>,
     pub activation: Activation,
     pub loss: Loss,
+    /// Threads each GEMM may split across (1 = serial, the default:
+    /// worker-level parallelism owns the cores unless the run says
+    /// otherwise). Applied to workspaces built by this model.
+    pub intra_op_threads: usize,
 }
 
 /// Reusable per-batch buffers: activations z_1..z_M (the minibatch input
-/// is *borrowed* as z_0, never copied in) and per-layer delta buffers.
-/// Reused across minibatches so the hot training loop does not allocate.
+/// is *borrowed* as z_0, never copied in), per-layer delta buffers, and
+/// the intra-op GEMM pool (per-thread pack workspaces). Reused across
+/// minibatches so the hot training loop does not allocate.
 #[derive(Debug, Default)]
 pub struct Workspace {
     /// `acts[m]` = z_{m+1}, the output of layer `m`.
     acts: Vec<Matrix>,
     deltas: Vec<Matrix>,
     batch: usize,
+    gemm: GemmPool,
 }
 
 impl Workspace {
@@ -40,7 +56,16 @@ impl Mlp {
             dims,
             activation,
             loss,
+            intra_op_threads: 1,
         }
+    }
+
+    /// Builder: run this model's GEMMs across `threads` intra-op threads
+    /// (clamped to ≥ 1). Thread count never changes values — the packed
+    /// backend is bitwise identical for every split.
+    pub fn with_intra_op_threads(mut self, threads: usize) -> Mlp {
+        self.intra_op_threads = threads.max(1);
+        self
     }
 
     pub fn n_layers(&self) -> usize {
@@ -55,6 +80,12 @@ impl Mlp {
     }
 
     fn ensure_ws(&self, ws: &mut Workspace, batch: usize) {
+        // compare against the clamped value GemmPool::new will report, so
+        // a hand-built Mlp with intra_op_threads = 0 can't force a pool
+        // rebuild (and its cold pack buffers) on every call
+        if ws.gemm.threads() != self.intra_op_threads.max(1) {
+            ws.gemm = GemmPool::new(self.intra_op_threads);
+        }
         if ws.batch == batch
             && ws.acts.len() == self.dims.len() - 1
             && ws
@@ -78,19 +109,16 @@ impl Mlp {
         ws.batch = batch;
     }
 
-    /// Bias add + activation for one layer's pre-activations `a`.
-    fn finish_layer(&self, a: &mut Matrix, b: &[f32], is_output: bool) {
-        for r in 0..a.rows() {
-            let row = a.row_mut(r);
-            for (v, bias) in row.iter_mut().zip(b) {
-                *v += bias;
-            }
-        }
+    /// The fused elementwise tail of layer `m`'s GEMM: bias add, then
+    /// the hidden activation (sigmoid for the Mse output layer, bare
+    /// logits for Xent).
+    fn layer_unary(&self, is_output: bool) -> Unary {
         if !is_output {
-            let act = self.activation;
-            a.map_inplace(|v| act.apply(v));
+            self.activation.unary()
         } else if self.loss == Loss::Mse {
-            a.map_inplace(|v| Activation::Sigmoid.apply(v));
+            Unary::Sigmoid
+        } else {
+            Unary::Identity
         }
     }
 
@@ -111,20 +139,20 @@ impl Mlp {
         let m_top = self.n_layers() - 1;
         for m in 0..=m_top {
             let lp = &p.layers[m];
-            let is_output = m == m_top;
-            // a = z_prev @ w + b; z_prev is x for the first layer and the
-            // previous layer's workspace buffer after that
+            // z = f(z_prev @ w + b), bias + activation fused into the
+            // GEMM epilogue (no pre-zeroing, no extra passes); z_prev is
+            // x for the first layer — where the packing-time sparse
+            // panel filter earns its keep — and the previous layer's
+            // workspace buffer after that
+            let ep = Epilogue::BiasUnary {
+                bias: &lp.b,
+                f: self.layer_unary(m == m_top),
+            };
             if m == 0 {
-                let a = &mut ws.acts[0];
-                a.fill(0.0);
-                gemm(x, &lp.w, a);
-                self.finish_layer(a, &lp.b, is_output);
+                ws.gemm.gemm(x, &lp.w, &mut ws.acts[0], ep);
             } else {
                 let (prev, rest) = ws.acts.split_at_mut(m);
-                let a = &mut rest[0];
-                a.fill(0.0);
-                gemm(&prev[m - 1], &lp.w, a);
-                self.finish_layer(a, &lp.b, is_output);
+                ws.gemm.gemm(&prev[m - 1], &lp.w, &mut rest[0], ep);
             }
         }
         &ws.acts[m_top]
@@ -190,12 +218,13 @@ impl Mlp {
         // walk down: grads for layer m need delta_m and layer m's input
         // z_m (the caller's x for m = 0, acts[m-1] above that)
         for m in (0..=m_top).rev() {
-            // grads: dW = z_m^T @ delta / B ; db = mean_b delta
+            // grads: dW = z_m^T @ delta / B (the 1/B scaling is the
+            // GEMM epilogue — no fill, no separate scale pass);
+            // db = mean_b delta
             let z_m: &Matrix = if m == 0 { x } else { &ws.acts[m - 1] };
             let gl = &mut grads.layers[m];
-            gl.w.fill(0.0);
-            gemm_tn(z_m, &ws.deltas[m], &mut gl.w);
-            gl.w.scale(inv_b);
+            ws.gemm
+                .gemm_tn(z_m, &ws.deltas[m], &mut gl.w, Epilogue::Scale(inv_b));
             gl.b.fill(0.0);
             for r in 0..batch {
                 for (bv, dv) in gl.b.iter_mut().zip(ws.deltas[m].row(r)) {
@@ -206,16 +235,15 @@ impl Mlp {
                 *bv *= inv_b;
             }
             if m > 0 {
-                // delta_{m-1} = h'(a_{m-1}) * (delta_m @ w_m^T)
+                // delta_{m-1} = h'(a_{m-1}) ⊙ (delta_m @ w_m^T), the
+                // derivative mask fused into the epilogue
                 let (lower, upper) = ws.deltas.split_at_mut(m);
-                let dst = &mut lower[m - 1];
-                dst.fill(0.0);
-                gemm_nt(&upper[0], &p.layers[m].w, dst);
-                let act = self.activation;
-                let z = &ws.acts[m - 1];
-                for (dv, zv) in dst.data_mut().iter_mut().zip(z.data()) {
-                    *dv *= act.grad_from_output(*zv);
-                }
+                let ep = Epilogue::MaskDeriv {
+                    z: &ws.acts[m - 1],
+                    f: self.activation.unary(),
+                };
+                ws.gemm
+                    .gemm_nt(&upper[0], &p.layers[m].w, &mut lower[m - 1], ep);
             }
         }
         loss
@@ -358,6 +386,19 @@ mod tests {
         let l2 = mlp.loss_and_grads_ws(&p, &x, &y, &mut ws, &mut g2);
         assert_eq!(l1, l2);
         for (a, b) in g1.layers.iter().zip(&g2.layers) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.b, b.b);
+        }
+    }
+
+    #[test]
+    fn intra_op_threads_do_not_change_results() {
+        let (mlp, p, x, y) = tiny();
+        let (l1, g1) = mlp.loss_and_grads(&p, &x, &y);
+        let mlp4 = mlp.clone().with_intra_op_threads(4);
+        let (l4, g4) = mlp4.loss_and_grads(&p, &x, &y);
+        assert_eq!(l1, l4);
+        for (a, b) in g1.layers.iter().zip(&g4.layers) {
             assert_eq!(a.w, b.w);
             assert_eq!(a.b, b.b);
         }

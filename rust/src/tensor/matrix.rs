@@ -138,14 +138,26 @@ impl Matrix {
         }
     }
 
+    /// Allocating transpose — convenience only. Hot paths either go
+    /// through `transpose_into` (buffer reuse) or, for GEMM operands,
+    /// need no transpose at all (`gemm_nt`/`gemm_tn` pack through
+    /// strided views).
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Transpose into a caller-owned `cols × rows` buffer (the
+    /// allocation-free sibling of `transpose`).
+    pub fn transpose_into(&self, t: &mut Matrix) {
+        assert_eq!(t.rows, self.cols, "transpose_into rows");
+        assert_eq!(t.cols, self.rows, "transpose_into cols");
         for r in 0..self.rows {
             for c in 0..self.cols {
                 t.data[c * self.rows + r] = self.data[r * self.cols + c];
             }
         }
-        t
     }
 
     /// Frobenius norm squared.
@@ -209,6 +221,24 @@ mod tests {
         let m = Matrix::randn(5, 7, 1.0, &mut rng);
         assert_eq!(m.transpose().transpose(), m);
         assert_eq!(m.transpose().at(3, 2), m.at(2, 3));
+    }
+
+    #[test]
+    fn transpose_into_matches_allocating() {
+        let mut rng = Pcg64::new(3);
+        let m = Matrix::randn(4, 9, 1.0, &mut rng);
+        let mut t = Matrix::zeros(9, 4);
+        t.fill(5.0); // stale contents must be fully overwritten
+        m.transpose_into(&mut t);
+        assert_eq!(t, m.transpose());
+    }
+
+    #[test]
+    #[should_panic(expected = "transpose_into rows")]
+    fn transpose_into_shape_checked() {
+        let m = Matrix::zeros(2, 3);
+        let mut t = Matrix::zeros(2, 3);
+        m.transpose_into(&mut t);
     }
 
     #[test]

@@ -1,12 +1,20 @@
 //! Dense f32 matrix type and the BLAS-like kernels the native engine runs on.
 //!
-//! Row-major storage. The GEMM family is the native hot path (profiled and
-//! tuned in the §Perf pass): register-blocked micro-kernels with
-//! autovectorizable inner loops, plus transposed variants used by backprop
-//! (`gemm_nt` for `delta @ W^T`, `gemm_tn` for `z^T @ delta`).
+//! Row-major storage. The GEMM family is the native hot path (§Perf
+//! pass 5): a packed, register-blocked BLIS-style backend (`pack.rs` +
+//! `ops.rs`) with fused bias/activation/scale/mask epilogues and an
+//! intra-op thread pool (`pool.rs`, `GemmPool`). The transposed variants
+//! used by backprop (`gemm_nt` for `delta @ W^T`, `gemm_tn` for
+//! `z^T @ delta`) read through strided views at packing time and never
+//! materialize a transpose. Methodology and before/after records:
+//! `rust/EXPERIMENTS.md`; baselines re-runnable via
+//! `benches/gemm_kernels.rs`.
 
 mod matrix;
 mod ops;
+mod pack;
+mod pool;
 
 pub use matrix::Matrix;
-pub use ops::{gemm, gemm_nt, gemm_tn};
+pub use ops::{gemm, gemm_ep, gemm_nt, gemm_nt_ep, gemm_tn, gemm_tn_ep, Epilogue, Unary};
+pub use pool::{GemmPool, PAR_MIN_FLOPS};

@@ -1,0 +1,258 @@
+//! Panel packing for the blocked GEMM backend (§Perf pass 5).
+//!
+//! The macrokernel in `ops.rs` never reads `A`/`B` directly: each cache
+//! block is first repacked into a contiguous, microkernel-ordered buffer
+//! so the innermost loop streams both operands with unit stride no matter
+//! how the caller's matrix is oriented. That is what makes `gemm_nt` /
+//! `gemm_tn` transpose-free — a transposed operand is just a different
+//! (row-stride, col-stride) pair handed to the same packing routine.
+//!
+//! Layouts (standard BLIS):
+//!
+//! * packed A block (`mc × kc`): micro-panels of `MR` rows, each stored
+//!   k-major — `a_buf[panel*kc*MR + p*MR + r]`, short panels zero-padded
+//!   to `MR` so the microkernel is uniform;
+//! * packed B block (`kc × nc`): micro-panels of `NR` columns, stored
+//!   k-major — `b_buf[panel*kc*NR + p*NR + c]`, zero-padded to `NR`.
+//!
+//! The packing pass is also where the sparse-input skip lives now: the
+//! old kernels branched on `a == 0.0` per element *inside* the inner
+//! loop, which pessimizes dense workloads. Here, while packing an A
+//! micro-panel (data already in hand), we count k-slices whose `MR`
+//! values are all zero; if at least [`SPARSE_MIN_ZERO_FRAC`] of the
+//! panel's slices are zero — the sparse-LLC-features first layer — we
+//! record the index list of nonzero slices and the microkernel walks
+//! only those. Dense panels take a branch-free inner loop.
+
+/// Microkernel tile rows. 8×8 f32 accumulators fill eight 256-bit
+/// vector registers (one per tile row), leaving registers for the B
+/// row vector and A broadcasts — see `rust/EXPERIMENTS.md` §Perf pass 5.
+pub(crate) const MR: usize = 8;
+/// Microkernel tile columns (one 8-wide f32 vector per accumulator row).
+pub(crate) const NR: usize = 8;
+/// k extent of a cache block: an MR×KC packed A panel (8 KiB) plus an
+/// NR×KC packed B panel (8 KiB) live in L1 beside the C tile.
+pub(crate) const KC: usize = 256;
+/// Row extent of a packed A block (MC×KC = 64 KiB, L2-resident).
+pub(crate) const MC: usize = 64;
+/// Column extent of a packed B block (KC×NC = 256 KiB, L2/L3-resident).
+pub(crate) const NC: usize = 256;
+
+/// A panel qualifies for the sparse skip path when at least this
+/// fraction of its k-slices are entirely zero (denominator 4 → 25%).
+/// Below that, the branch-free dense kernel wins: skipping a zero slice
+/// saves 2·MR·NR flops but costs an indexed load per slice.
+pub(crate) const SPARSE_MIN_ZERO_NUM: usize = 1;
+pub(crate) const SPARSE_MIN_ZERO_DEN: usize = 4;
+
+/// Strided read-only view of a matrix operand: element `(i, p)` is
+/// `data[i * rs + p * cs]`. A plain row-major matrix is `(cols, 1)`;
+/// its transpose is `(1, cols)` over the same storage — no transposed
+/// copy is ever materialized.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct View<'a> {
+    pub data: &'a [f32],
+    pub rs: usize,
+    pub cs: usize,
+}
+
+impl<'a> View<'a> {
+    #[inline]
+    pub fn at(&self, i: usize, p: usize) -> f32 {
+        self.data[i * self.rs + p * self.cs]
+    }
+
+    /// The same view starting `rows` rows down (thread band offsets).
+    #[inline]
+    pub fn offset_rows(&self, rows: usize) -> View<'a> {
+        View {
+            data: &self.data[rows * self.rs..],
+            rs: self.rs,
+            cs: self.cs,
+        }
+    }
+}
+
+/// Per-A-micro-panel sparse metadata: `Dense`, or the range of this
+/// panel's nonzero k-slice indices inside `PackBuf::idx`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum PanelSkip {
+    Dense,
+    Sparse { start: u32, len: u32 },
+}
+
+/// One thread's reusable packing workspace. Buffers grow to the block
+/// sizes on first use and are reused for every subsequent call — the
+/// GEMM hot path allocates nothing at steady state (the PR 2 contract).
+#[derive(Debug, Default)]
+pub struct PackBuf {
+    pub(crate) a: Vec<f32>,
+    pub(crate) b: Vec<f32>,
+    pub(crate) panels: Vec<PanelSkip>,
+    pub(crate) idx: Vec<u32>,
+}
+
+impl PackBuf {
+    pub fn new() -> PackBuf {
+        PackBuf::default()
+    }
+
+    fn ensure(&mut self) {
+        if self.a.len() < MC * KC {
+            self.a.resize(MC * KC, 0.0);
+        }
+        if self.b.len() < KC * NC {
+            self.b.resize(KC * NC, 0.0);
+        }
+    }
+}
+
+/// Pack the `mcb × kc` block of `a` starting at (absolute) row `i0`,
+/// depth `p0` into `buf.a` as MR-row micro-panels; when `filter` is set,
+/// fill `buf.panels`/`buf.idx` with the sparse skip plan (otherwise
+/// every panel is marked dense).
+pub(crate) fn pack_a(
+    a: View,
+    i0: usize,
+    mcb: usize,
+    p0: usize,
+    kc: usize,
+    buf: &mut PackBuf,
+    filter: bool,
+) {
+    buf.ensure();
+    buf.panels.clear();
+    buf.idx.clear();
+    let np = mcb.div_ceil(MR);
+    for pi in 0..np {
+        let r0 = pi * MR;
+        let mr = (mcb - r0).min(MR);
+        let panel = &mut buf.a[pi * kc * MR..(pi + 1) * kc * MR];
+        let mut zero_slices = 0usize;
+        for p in 0..kc {
+            let dst = &mut panel[p * MR..p * MR + MR];
+            let mut any = false;
+            for (r, d) in dst.iter_mut().enumerate().take(mr) {
+                let v = a.at(i0 + r0 + r, p0 + p);
+                any |= v != 0.0;
+                *d = v;
+            }
+            for d in dst.iter_mut().skip(mr) {
+                *d = 0.0;
+            }
+            zero_slices += usize::from(!any);
+        }
+        let skip = if filter
+            && kc > 0
+            && zero_slices * SPARSE_MIN_ZERO_DEN >= kc * SPARSE_MIN_ZERO_NUM
+        {
+            let start = buf.idx.len() as u32;
+            for p in 0..kc {
+                let slice = &panel[p * MR..p * MR + MR];
+                if slice.iter().any(|&v| v != 0.0) {
+                    buf.idx.push(p as u32);
+                }
+            }
+            PanelSkip::Sparse {
+                start,
+                len: buf.idx.len() as u32 - start,
+            }
+        } else {
+            PanelSkip::Dense
+        };
+        buf.panels.push(skip);
+    }
+}
+
+/// Pack the `kc × ncb` block of `b` at depth `p0`, (absolute) column
+/// `j0` into `buf.b` as NR-column micro-panels.
+pub(crate) fn pack_b(b: View, p0: usize, kc: usize, j0: usize, ncb: usize, buf: &mut PackBuf) {
+    buf.ensure();
+    let np = ncb.div_ceil(NR);
+    for pj in 0..np {
+        let c0 = pj * NR;
+        let nr = (ncb - c0).min(NR);
+        let panel = &mut buf.b[pj * kc * NR..(pj + 1) * kc * NR];
+        for p in 0..kc {
+            let dst = &mut panel[p * NR..p * NR + NR];
+            for (c, d) in dst.iter_mut().enumerate().take(nr) {
+                *d = b.at(p0 + p, j0 + c0 + c);
+            }
+            for d in dst.iter_mut().skip(nr) {
+                *d = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        // 3×4 row-major matrix, one short panel (mr = 3 < MR)
+        let data: Vec<f32> = (1..=12).map(|x| x as f32).collect();
+        let v = View {
+            data: &data,
+            rs: 4,
+            cs: 1,
+        };
+        let mut buf = PackBuf::new();
+        pack_a(v, 0, 3, 0, 4, &mut buf, false);
+        assert_eq!(buf.panels, vec![PanelSkip::Dense]);
+        for p in 0..4 {
+            let s = &buf.a[p * MR..p * MR + MR];
+            assert_eq!(s[0], data[p]); // row 0
+            assert_eq!(s[1], data[4 + p]); // row 1
+            assert_eq!(s[2], data[8 + p]); // row 2
+            assert!(s[3..].iter().all(|&x| x == 0.0), "padding");
+        }
+    }
+
+    #[test]
+    fn pack_b_layout_matches_transposed_view() {
+        // pack B' (k×n) from a row-major n×k matrix via strides
+        let (n, k) = (3usize, 5usize);
+        let data: Vec<f32> = (0..n * k).map(|x| x as f32).collect();
+        let bt = View {
+            data: &data,
+            rs: 1,
+            cs: k,
+        }; // B'[p, j] = data[j*k + p]
+        let mut buf = PackBuf::new();
+        pack_b(bt, 0, k, 0, n, &mut buf);
+        for p in 0..k {
+            for j in 0..n {
+                assert_eq!(buf.b[p * NR + j], data[j * k + p]);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_filter_records_nonzero_slices() {
+        // 8×8 block with only k-slices 2 and 5 nonzero
+        let mut data = vec![0.0f32; 64];
+        data[2] = 1.0; // row 0, col 2
+        data[8 + 5] = 2.0; // row 1, col 5
+        let v = View {
+            data: &data,
+            rs: 8,
+            cs: 1,
+        };
+        let mut buf = PackBuf::new();
+        pack_a(v, 0, 8, 0, 8, &mut buf, true);
+        assert_eq!(buf.panels.len(), 1);
+        match buf.panels[0] {
+            PanelSkip::Sparse { start, len } => {
+                assert_eq!(start, 0);
+                assert_eq!(len, 2);
+                assert_eq!(&buf.idx[..2], &[2, 5]);
+            }
+            PanelSkip::Dense => panic!("expected sparse plan"),
+        }
+        // same block without the filter: dense
+        pack_a(v, 0, 8, 0, 8, &mut buf, false);
+        assert_eq!(buf.panels, vec![PanelSkip::Dense]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Intra-op GEMM parallelism: an M-split band pool over scoped threads.
+//!
+//! `GemmPool` owns one [`PackBuf`] packing workspace per intra-op thread
+//! (reused across calls — zero allocation at steady state) and runs each
+//! GEMM by splitting the output's rows into micro-panel-aligned bands,
+//! one scoped thread per band (`std::thread::scope`; no dependency on an
+//! external pool crate). Row bands are disjoint row-major slices of C,
+//! so the split is safe (`split_at_mut`), each thread packs its own A
+//! band, and — because a band never subdivides a C element's
+//! k-accumulation — the result is **bitwise identical for every thread
+//! count**, which the property suite asserts.
+//!
+//! Costs that shaped the design (records: `rust/EXPERIMENTS.md` §Perf
+//! pass 5): spawning a scoped thread is ~10–50 µs, so tiny GEMMs (under
+//! [`PAR_MIN_FLOPS`]) run on the calling thread; per-band B packing is
+//! duplicated across threads but is O(k·n) against O(m·k·n / T) compute,
+//! a few percent at the bench shapes. `N workers × T intra-op threads`
+//! is explicit end to end: the config's `train.intra_op_threads` (CLI
+//! `--threads`) reaches every engine's pool through `Mlp`.
+
+use super::ops::{band_ep, check_ep, gemm_band, nn_views, nt_views, tn_views, Epilogue};
+use super::pack::{PackBuf, View, MR};
+use super::Matrix;
+
+/// Below this many flops (2·m·k·n) a GEMM runs on the calling thread:
+/// thread spawn latency would eat the win. ~4 MFLOP ≈ 0.3–1 ms serial,
+/// an order of magnitude above spawn cost.
+pub const PAR_MIN_FLOPS: usize = 4_000_000;
+
+/// A configurable intra-op worker pool with per-thread pack workspaces.
+#[derive(Debug)]
+pub struct GemmPool {
+    threads: usize,
+    bufs: Vec<PackBuf>,
+}
+
+impl Default for GemmPool {
+    fn default() -> Self {
+        GemmPool::new(1)
+    }
+}
+
+impl GemmPool {
+    /// A pool that splits GEMMs across `threads` intra-op threads
+    /// (clamped to ≥ 1; 1 = serial, the deterministic default).
+    pub fn new(threads: usize) -> GemmPool {
+        let threads = threads.max(1);
+        GemmPool {
+            threads,
+            bufs: (0..threads).map(|_| PackBuf::new()).collect(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// `C = epilogue(A · B)`; the packing-time sparse panel filter is on
+    /// for `A` (the sparse-input first-layer orientation).
+    pub fn gemm(&mut self, a: &Matrix, b: &Matrix, c: &mut Matrix, ep: Epilogue) {
+        let (av, m, k, bv, n) = nn_views(a, b, c);
+        check_ep(&ep, c);
+        self.run(av, m, k, bv, n, c, &ep, true);
+    }
+
+    /// `C = epilogue(A · Bᵀ)` — transpose-free via strided packing.
+    pub fn gemm_nt(&mut self, a: &Matrix, b: &Matrix, c: &mut Matrix, ep: Epilogue) {
+        let (av, m, k, bv, n) = nt_views(a, b, c);
+        check_ep(&ep, c);
+        self.run(av, m, k, bv, n, c, &ep, false);
+    }
+
+    /// `C = epilogue(Aᵀ · B)` — transpose-free via strided packing.
+    pub fn gemm_tn(&mut self, a: &Matrix, b: &Matrix, c: &mut Matrix, ep: Epilogue) {
+        let (av, m, k, bv, n) = tn_views(a, b, c);
+        check_ep(&ep, c);
+        self.run(av, m, k, bv, n, c, &ep, false);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        &mut self,
+        a: View,
+        m: usize,
+        k: usize,
+        b: View,
+        n: usize,
+        c: &mut Matrix,
+        ep: &Epilogue,
+        filter_a: bool,
+    ) {
+        let panels = m.div_ceil(MR);
+        let t = self.threads.min(panels);
+        if t <= 1 || 2 * m * k * n < PAR_MIN_FLOPS {
+            let bep = band_ep(ep, 0, n);
+            gemm_band(a, m, k, b, n, c.data_mut(), &bep, filter_a, &mut self.bufs[0]);
+            return;
+        }
+        // micro-panel-aligned row bands: the first (panels % t) threads
+        // take one extra panel
+        let base = panels / t;
+        let extra = panels % t;
+        std::thread::scope(|scope| {
+            let mut c_rest = c.data_mut();
+            let mut bufs = self.bufs.iter_mut();
+            let mut row0 = 0usize;
+            for ti in 0..t {
+                let band_panels = base + usize::from(ti < extra);
+                let band_rows = (band_panels * MR).min(m - row0);
+                let (c_band, tail) = c_rest.split_at_mut(band_rows * n);
+                c_rest = tail;
+                let buf = bufs.next().expect("one buf per thread");
+                let bep = band_ep(ep, row0, n);
+                let a_band = a.offset_rows(row0);
+                scope.spawn(move || {
+                    gemm_band(a_band, band_rows, k, b, n, c_band, &bep, filter_a, buf);
+                });
+                row0 += band_rows;
+            }
+            debug_assert_eq!(row0, m, "bands must cover all rows");
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Unary;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn threaded_matches_serial_bitwise() {
+        let mut rng = Pcg64::new(11);
+        // large enough to clear PAR_MIN_FLOPS (2·96·200·64 ≈ 2.5M… use
+        // 128 cols: 2·96·200·128 ≈ 4.9M) with a non-multiple-of-MR m
+        let (m, k, n) = (97usize, 200usize, 128usize);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut c1 = Matrix::zeros(m, n);
+        let mut c4 = Matrix::zeros(m, n);
+        GemmPool::new(1).gemm(&a, &b, &mut c1, Epilogue::Overwrite);
+        GemmPool::new(4).gemm(&a, &b, &mut c4, Epilogue::Overwrite);
+        assert_eq!(c1, c4, "thread count must not change bits");
+    }
+
+    #[test]
+    fn threaded_epilogues_match_serial_bitwise() {
+        let mut rng = Pcg64::new(12);
+        let (m, k, n) = (80usize, 160usize, 160usize);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..n).map(|i| (i as f32) * 0.01 - 0.5).collect();
+        let ep = Epilogue::BiasUnary {
+            bias: &bias,
+            f: Unary::Sigmoid,
+        };
+        let mut c1 = Matrix::zeros(m, n);
+        let mut c3 = Matrix::zeros(m, n);
+        GemmPool::new(1).gemm(&a, &b, &mut c1, ep);
+        GemmPool::new(3).gemm(&a, &b, &mut c3, ep);
+        assert_eq!(c1, c3);
+    }
+
+    #[test]
+    fn more_threads_than_panels_is_fine() {
+        let mut rng = Pcg64::new(13);
+        let a = Matrix::randn(4, 600, 1.0, &mut rng); // 1 micro-panel
+        let b = Matrix::randn(600, 700, 1.0, &mut rng);
+        let mut c = Matrix::zeros(4, 700);
+        let mut want = Matrix::zeros(4, 700);
+        GemmPool::new(8).gemm(&a, &b, &mut c, Epilogue::Overwrite);
+        GemmPool::new(1).gemm(&a, &b, &mut want, Epilogue::Overwrite);
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn pool_reuse_across_shapes() {
+        // one pool serving differently-shaped calls must keep matching
+        let mut rng = Pcg64::new(14);
+        let mut pool = GemmPool::new(2);
+        for &(m, k, n) in &[(30, 40, 50), (97, 200, 128), (8, 8, 8)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut c = Matrix::zeros(m, n);
+            let mut want = Matrix::zeros(m, n);
+            pool.gemm(&a, &b, &mut c, Epilogue::Overwrite);
+            GemmPool::new(1).gemm(&a, &b, &mut want, Epilogue::Overwrite);
+            assert_eq!(c, want);
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Property suite for the packed GEMM backend (§Perf pass 5): all three
+//! kernel orientations and every fused epilogue are driven against a
+//! naive f32 oracle over adversarial shapes — empty dims, single
+//! elements, non-multiples of the MR/NR/KC blocking, k below the
+//! microkernel's unroll width, shapes crossing every cache-block
+//! boundary — and the intra-op thread split is pinned to be bitwise
+//! invariant (1 thread vs T threads must agree to the last bit).
+
+use sspdnn::tensor::{
+    gemm_ep, gemm_nt_ep, gemm_tn_ep, Epilogue, GemmPool, Matrix, Unary,
+};
+use sspdnn::util::Pcg64;
+
+/// Naive row-major oracle: C[i,j] = Σ_p A[i,p]·B[p,j], f32 accumulation
+/// in ascending p — the same per-element order the packed kernels use.
+fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut s = 0.0f32;
+            for p in 0..a.cols() {
+                s += a.at(i, p) * b.at(p, j);
+            }
+            *c.at_mut(i, j) = s;
+        }
+    }
+    c
+}
+
+fn assert_close(got: &Matrix, want: &Matrix, tol: f32, what: &str) {
+    assert_eq!(got.rows(), want.rows(), "{what} rows");
+    assert_eq!(got.cols(), want.cols(), "{what} cols");
+    let d = got.max_abs_diff(want);
+    assert!(d <= tol, "{what}: max diff {d} > {tol}");
+}
+
+/// Adversarial shape grid: zeros, ones, unroll-width edges (k < 4),
+/// MR/NR (8) edges, KC (256) / NC (256) / MC (64) crossings.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (0, 0, 0),
+    (0, 5, 3),
+    (5, 0, 3),
+    (5, 3, 0),
+    (1, 1, 1),
+    (1, 3, 1),
+    (3, 1, 9),
+    (7, 2, 5),
+    (8, 8, 8),
+    (9, 7, 17),
+    (16, 33, 8),
+    (63, 64, 65),
+    (64, 256, 64),
+    (65, 257, 31),
+    (13, 513, 19),
+    (3, 5, 258),
+    (70, 300, 130),
+    (129, 5, 7),
+];
+
+#[test]
+fn gemm_all_shapes_match_oracle() {
+    let mut rng = Pcg64::new(100);
+    for &(m, k, n) in SHAPES {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut c = Matrix::zeros(m, n);
+        c.fill(f32::NAN); // Overwrite must not read stale C
+        gemm_ep(&a, &b, &mut c, Epilogue::Overwrite);
+        let tol = 1e-4 * (k as f32).max(1.0).sqrt() * 4.0;
+        assert_close(&c, &naive(&a, &b), tol, &format!("gemm {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn gemm_nt_all_shapes_match_oracle() {
+    let mut rng = Pcg64::new(101);
+    for &(m, k, n) in SHAPES {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(n, k, 1.0, &mut rng); // B is n×k, used as Bᵀ
+        let mut c = Matrix::zeros(m, n);
+        c.fill(f32::NAN);
+        gemm_nt_ep(&a, &b, &mut c, Epilogue::Overwrite);
+        let mut bt = Matrix::zeros(k, n);
+        b.transpose_into(&mut bt);
+        let tol = 1e-4 * (k as f32).max(1.0).sqrt() * 4.0;
+        assert_close(&c, &naive(&a, &bt), tol, &format!("gemm_nt {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn gemm_tn_all_shapes_match_oracle() {
+    let mut rng = Pcg64::new(102);
+    for &(m, k, n) in SHAPES {
+        let a = Matrix::randn(k, m, 1.0, &mut rng); // A is k×m, used as Aᵀ
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut c = Matrix::zeros(m, n);
+        c.fill(f32::NAN);
+        gemm_tn_ep(&a, &b, &mut c, Epilogue::Overwrite);
+        let mut at = Matrix::zeros(m, k);
+        a.transpose_into(&mut at);
+        let tol = 1e-4 * (k as f32).max(1.0).sqrt() * 4.0;
+        assert_close(&c, &naive(&at, &b), tol, &format!("gemm_tn {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn accumulate_epilogue_adds_to_existing() {
+    let mut rng = Pcg64::new(103);
+    for &(m, k, n) in &[(5, 3, 7), (17, 65, 9), (64, 256, 33)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut c = Matrix::from_fn(m, n, |r, s| (r + s) as f32 * 0.25);
+        let before = c.clone();
+        gemm_ep(&a, &b, &mut c, Epilogue::Accumulate);
+        // exact contract: C = before + (overwrite result), elementwise
+        let mut prod = Matrix::zeros(m, n);
+        gemm_ep(&a, &b, &mut prod, Epilogue::Overwrite);
+        for i in 0..m * n {
+            let want = before.data()[i] + prod.data()[i];
+            assert_eq!(c.data()[i], want, "accumulate at flat index {i}");
+        }
+    }
+}
+
+#[test]
+fn fused_epilogues_bitwise_match_unfused_all_orientations() {
+    let mut rng = Pcg64::new(104);
+    for &(m, k, n) in &[(1, 1, 1), (9, 7, 17), (63, 300, 65), (13, 513, 19)] {
+        // --- BiasUnary on gemm ---
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..n).map(|i| (i as f32) * 0.1 - 0.3).collect();
+        for f in [Unary::Identity, Unary::Sigmoid, Unary::Tanh, Unary::Relu] {
+            let mut fused = Matrix::zeros(m, n);
+            gemm_ep(&a, &b, &mut fused, Epilogue::BiasUnary { bias: &bias, f });
+            let mut want = Matrix::zeros(m, n);
+            gemm_ep(&a, &b, &mut want, Epilogue::Overwrite);
+            for r in 0..m {
+                for (v, bv) in want.row_mut(r).iter_mut().zip(&bias) {
+                    *v = f.apply(*v + bv);
+                }
+            }
+            assert_eq!(fused, want, "bias+{f:?} {m}x{k}x{n}");
+        }
+
+        // --- MaskDeriv on gemm_nt ---
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+        let z = Matrix::from_fn(m, n, |r, c| {
+            Unary::Sigmoid.apply(((r * 31 + c * 7) % 13) as f32 * 0.1 - 0.6)
+        });
+        let mut fused = Matrix::zeros(m, n);
+        let ep = Epilogue::MaskDeriv {
+            z: &z,
+            f: Unary::Sigmoid,
+        };
+        gemm_nt_ep(&a, &bt, &mut fused, ep);
+        let mut want = Matrix::zeros(m, n);
+        gemm_nt_ep(&a, &bt, &mut want, Epilogue::Overwrite);
+        for (v, zv) in want.data_mut().iter_mut().zip(z.data()) {
+            *v *= Unary::Sigmoid.deriv_from_output(*zv);
+        }
+        assert_eq!(fused, want, "mask {m}x{k}x{n}");
+
+        // --- Scale on gemm_tn ---
+        let at = Matrix::randn(k, m, 1.0, &mut rng);
+        let bb = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut fused = Matrix::zeros(m, n);
+        gemm_tn_ep(&at, &bb, &mut fused, Epilogue::Scale(1.0 / 50.0));
+        let mut want = Matrix::zeros(m, n);
+        gemm_tn_ep(&at, &bb, &mut want, Epilogue::Overwrite);
+        want.scale(1.0 / 50.0);
+        assert_eq!(fused, want, "scale {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn thread_split_is_bitwise_invariant() {
+    // the pool splits rows into micro-panel bands; a C element's
+    // k-accumulation is never subdivided, so every thread count must
+    // produce identical bits — including at shapes that don't divide
+    // evenly and shapes big enough to actually engage the parallel path
+    let mut rng = Pcg64::new(105);
+    for &(m, k, n) in &[
+        (97, 200, 128),  // above PAR_MIN_FLOPS, m % MR != 0
+        (256, 256, 256), // the bench shape
+        (64, 300, 130),  // barely above the flops floor
+        (9, 7, 17),      // tiny (serial fallback; must still match)
+    ] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..n).map(|i| (i as f32) * 0.01).collect();
+        let mut reference: Option<Matrix> = None;
+        for threads in [1usize, 2, 3, 4, 7] {
+            let mut pool = GemmPool::new(threads);
+            let mut c = Matrix::zeros(m, n);
+            let ep = Epilogue::BiasUnary {
+                bias: &bias,
+                f: Unary::Sigmoid,
+            };
+            pool.gemm(&a, &b, &mut c, ep);
+            match &reference {
+                None => reference = Some(c),
+                Some(r) => {
+                    assert_eq!(&c, r, "threads={threads} diverged {m}x{k}x{n}")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_split_invariant_for_transposed_orientations() {
+    let mut rng = Pcg64::new(106);
+    let (m, k, n) = (128usize, 200usize, 96usize);
+    let a = Matrix::randn(m, k, 1.0, &mut rng);
+    let bt = Matrix::randn(n, k, 1.0, &mut rng);
+    let mut c1 = Matrix::zeros(m, n);
+    let mut c4 = Matrix::zeros(m, n);
+    GemmPool::new(1).gemm_nt(&a, &bt, &mut c1, Epilogue::Overwrite);
+    GemmPool::new(4).gemm_nt(&a, &bt, &mut c4, Epilogue::Overwrite);
+    assert_eq!(c1, c4, "gemm_nt thread split");
+
+    let at = Matrix::randn(k, m, 1.0, &mut rng);
+    let b = Matrix::randn(k, n, 1.0, &mut rng);
+    let mut d1 = Matrix::zeros(m, n);
+    let mut d4 = Matrix::zeros(m, n);
+    GemmPool::new(1).gemm_tn(&at, &b, &mut d1, Epilogue::Scale(0.02));
+    GemmPool::new(4).gemm_tn(&at, &b, &mut d4, Epilogue::Scale(0.02));
+    assert_eq!(d1, d4, "gemm_tn thread split");
+}
+
+#[test]
+fn sparse_input_panels_match_dense_oracle() {
+    // column-sparse A (whole features zero across the batch — the
+    // sparse-LLC first-layer pattern the packing-time filter targets):
+    // results must match the oracle and the thread split must hold
+    let mut rng = Pcg64::new(107);
+    let (m, k, n) = (64usize, 360usize, 128usize);
+    let mut a = Matrix::from_fn(m, k, |_, _| rng.uniform_f32(0.05, 1.0));
+    for r in 0..m {
+        for p in 0..k {
+            if p % 7 != 0 {
+                *a.at_mut(r, p) = 0.0;
+            }
+        }
+    }
+    let b = Matrix::from_fn(k, n, |_, _| rng.uniform_f32(0.05, 1.0));
+    let mut c = Matrix::zeros(m, n);
+    gemm_ep(&a, &b, &mut c, Epilogue::Overwrite);
+    assert_close(&c, &naive(&a, &b), 1e-3, "sparse gemm");
+    let mut c4 = Matrix::zeros(m, n);
+    GemmPool::new(4).gemm(&a, &b, &mut c4, Epilogue::Overwrite);
+    assert_eq!(c, c4, "sparse thread split");
+}
+
+#[test]
+fn k_zero_with_epilogues() {
+    // k = 0: the product is all-zero, and epilogues still apply
+    let a = Matrix::zeros(4, 0);
+    let b = Matrix::zeros(0, 6);
+    let bias: Vec<f32> = (0..6).map(|i| i as f32 - 2.0).collect();
+    let mut c = Matrix::zeros(4, 6);
+    c.fill(99.0);
+    let ep = Epilogue::BiasUnary {
+        bias: &bias,
+        f: Unary::Relu,
+    };
+    gemm_ep(&a, &b, &mut c, ep);
+    for r in 0..4 {
+        for j in 0..6 {
+            assert_eq!(c.at(r, j), bias[j].max(0.0), "relu(0 + bias)");
+        }
+    }
+}
