@@ -1,0 +1,220 @@
+//! Discrete-event driver hot-loop + sweep-harness benchmark.
+//!
+//! Two measurements, recorded in `bench_results/BENCH_driver.json`
+//! (see rust/EXPERIMENTS.md §Perf pass 6):
+//!
+//! * **driver_zero_copy** — clocks/second of the zero-copy driver loop
+//!   vs the frozen allocating oracle on the same config + dataset
+//!   (identical statistical results, asserted), plus the steady-state
+//!   allocation audit.
+//! * **sweep_scaling** — wall seconds of a fixed (machines × staleness)
+//!   grid dispatched at thread budgets 1/2/4: the near-linear scaling
+//!   curve of the deterministic sweep harness.
+//!
+//! Scale via SSPDNN_BENCH_SCALE ∈ {quick, default, full} as usual.
+
+mod support;
+
+use sspdnn::config::{DataKind, ExperimentConfig, SweepConfig};
+use sspdnn::coordinator::{
+    build_dataset, run_experiment_alloc_on, run_experiment_on, DriverOptions,
+    RunResult, SweepOptions,
+};
+use sspdnn::data::Dataset;
+use sspdnn::metrics;
+use sspdnn::util::json::Json;
+
+/// A **protocol-bound** configuration: tiny minibatches and evaluation
+/// off the measured horizon, so what the wall clock sees is the driver
+/// machinery itself — fetch/install, commit, arrivals, event queue —
+/// not the gradient GEMMs (those are BENCH_gemm.json's subject, and
+/// they are identical f32 work on both driver paths). This is the
+/// regime where the oracle's per-clock allocations (snapshot clone,
+/// grads + direction clones, per-layer message clones, own-pending
+/// zeros) dominate and the zero-copy rewrite shows its structural win;
+/// at large batch sizes both paths converge on compute and the ratio
+/// truthfully approaches 1.
+fn bench_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::tiny();
+    c.name = "driver_protocol".into();
+    c.model.dims = vec![64, 96, 96, 96, 96, 10];
+    c.data.kind = DataKind::TimitLike;
+    c.data.n_features = 64;
+    c.data.n_classes = 10;
+    c.data.n_samples = 3_000;
+    c.cluster.machines = 6;
+    // keep the in-flight message population flat so the steady-state
+    // allocation audit's ==0 claim holds (same as the d2 property tests)
+    c.cluster.drop_prob = 0.0;
+    c.cluster.straggler_prob = 0.0;
+    c.train.batch = 2;
+    c.train.batches_per_clock = 1;
+    c.train.clocks = match support::scale() {
+        "quick" => 30,
+        "full" => 300,
+        _ => 120,
+    };
+    c
+}
+
+fn opts() -> DriverOptions {
+    DriverOptions {
+        per_batch_s: Some(support::PER_BATCH_S),
+        // evaluate only at boundaries far apart: the objective pass is
+        // identical on both paths and would otherwise swamp the loop
+        eval_every: 1_000_000,
+        eval_samples: 256,
+        ..DriverOptions::default()
+    }
+}
+
+/// Best-of-2 wall time for one driver run.
+fn timed(f: impl Fn() -> RunResult) -> (RunResult, f64) {
+    let t = std::time::Instant::now();
+    let first = f();
+    let mut best = t.elapsed().as_secs_f64();
+    let t = std::time::Instant::now();
+    let _ = f();
+    best = best.min(t.elapsed().as_secs_f64());
+    (first, best)
+}
+
+fn bench_zero_copy(cfg: &ExperimentConfig, ds: &Dataset) -> Json {
+    let committed = (cfg.cluster.machines * cfg.train.clocks) as f64;
+    let (alloc_run, alloc_wall) = timed(|| run_experiment_alloc_on(cfg, opts(), ds));
+    let (zc_run, zc_wall) = timed(|| run_experiment_on(cfg, opts(), ds));
+    let matches = alloc_run.final_objective == zc_run.final_objective
+        && alloc_run.total_vtime == zc_run.total_vtime
+        && alloc_run.final_params == zc_run.final_params;
+    assert!(
+        matches,
+        "zero-copy run diverged from the allocating oracle: {} vs {}",
+        zc_run.final_objective, alloc_run.final_objective
+    );
+    assert_eq!(
+        zc_run.steady_reallocs, 0,
+        "zero-copy driver allocated at steady state"
+    );
+    let alloc_cps = committed / alloc_wall;
+    let zc_cps = committed / zc_wall;
+    println!(
+        "{}",
+        metrics::render_table(
+            &["path", "wall s", "clocks/s", "steady reallocs"],
+            &[
+                vec![
+                    "allocating (oracle)".into(),
+                    format!("{alloc_wall:.3}"),
+                    format!("{alloc_cps:.1}"),
+                    "-".into(),
+                ],
+                vec![
+                    "zero-copy".into(),
+                    format!("{zc_wall:.3}"),
+                    format!("{zc_cps:.1}"),
+                    zc_run.steady_reallocs.to_string(),
+                ],
+            ],
+        )
+    );
+    println!("zero-copy speedup: {:.2}x\n", zc_cps / alloc_cps);
+    Json::obj(vec![
+        ("config", Json::str(cfg.name.clone())),
+        ("machines", Json::num(cfg.cluster.machines as f64)),
+        ("clocks", Json::num(cfg.train.clocks as f64)),
+        ("alloc_wall_s", Json::num(alloc_wall)),
+        ("zc_wall_s", Json::num(zc_wall)),
+        ("alloc_clocks_per_s", Json::num(alloc_cps)),
+        ("zc_clocks_per_s", Json::num(zc_cps)),
+        ("speedup", Json::num(zc_cps / alloc_cps)),
+        (
+            "steady_reallocs",
+            Json::num(zc_run.steady_reallocs as f64),
+        ),
+        ("results_match", Json::Bool(matches)),
+    ])
+}
+
+fn bench_sweep_scaling(cfg: &ExperimentConfig) -> Json {
+    // 4 independent cells so a budget of 4 can fill every slot
+    let grid = SweepConfig {
+        machines: vec![1, 2, 3, 4],
+        staleness: vec![cfg.ssp.policy.staleness().unwrap_or(10)],
+        policies: vec!["ssp".into()],
+        etas: Vec::new(),
+        threads: 1,
+    };
+    let budgets = [1usize, 2, 4];
+    let mut walls = Vec::new();
+    let mut rows = Vec::new();
+    let mut baseline_json: Option<String> = None;
+    for &budget in &budgets {
+        let report = sspdnn::coordinator::run_sweep(
+            cfg,
+            &grid,
+            &SweepOptions {
+                threads: budget,
+                per_batch_s: Some(support::PER_BATCH_S),
+                eval_samples: 256,
+                eval_every: 4,
+                ..SweepOptions::default()
+            },
+        )
+        .expect("sweep");
+        // the harness's core promise: identical statistical content at
+        // every budget
+        let stat = metrics::sweep_json(&report, false).to_string();
+        match &baseline_json {
+            None => baseline_json = Some(stat),
+            Some(b) => assert_eq!(b, &stat, "budget {budget} changed results"),
+        }
+        walls.push((budget, report.wall_s));
+        rows.push(vec![
+            budget.to_string(),
+            format!("{:.3}", report.wall_s),
+            format!("{:.2}x", walls[0].1 / report.wall_s),
+        ]);
+    }
+    println!(
+        "{}",
+        metrics::render_table(&["thread budget", "wall s", "speedup"], &rows)
+    );
+    Json::obj(vec![
+        ("cells", Json::num(4.0)),
+        (
+            "budget_wall_s",
+            Json::Arr(
+                walls
+                    .iter()
+                    .map(|&(b, w)| {
+                        Json::obj(vec![
+                            ("budget", Json::num(b as f64)),
+                            ("wall_s", Json::num(w)),
+                            ("speedup", Json::num(walls[0].1 / w)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("bitwise_identical", Json::Bool(true)),
+    ])
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    println!(
+        "=== driver_sweep bench (scale {}, config {}) ===\n",
+        support::scale(),
+        cfg.name
+    );
+    let ds = build_dataset(&cfg);
+
+    println!("--- zero-copy driver vs allocating oracle ---");
+    let zc = bench_zero_copy(&cfg, &ds);
+
+    println!("--- sweep thread-budget scaling (4 cells) ---");
+    let sweep = bench_sweep_scaling(&cfg);
+
+    support::record_json(support::DRIVER_JSON, "driver_zero_copy", zc);
+    support::record_json(support::DRIVER_JSON, "sweep_scaling", sweep);
+}

@@ -13,23 +13,31 @@ use sspdnn::util::json::Json;
 /// read-modify-write so the benches compose regardless of run order.
 pub const HOTPATH_JSON: &str = "bench_results/BENCH_hotpath.json";
 
-/// Merge `value` under `section` in BENCH_hotpath.json, stamping the
-/// bench scale alongside so numbers from quick (CI smoke) and default
-/// runs are distinguishable.
-pub fn record_hotpath_json(section: &str, value: Json) {
-    let mut root = std::fs::read_to_string(HOTPATH_JSON)
+/// The driver/sweep perf-trajectory file (`benches/driver_sweep.rs`).
+pub const DRIVER_JSON: &str = "bench_results/BENCH_driver.json";
+
+/// Merge `value` under `section` in `path`, stamping the bench scale
+/// alongside so numbers from quick (CI smoke) and default runs are
+/// distinguishable. Read-modify-write so benches compose regardless of
+/// run order.
+pub fn record_json(path: &str, section: &str, value: Json) {
+    let mut root = std::fs::read_to_string(path)
         .ok()
         .and_then(|text| Json::parse(&text).ok())
         .and_then(|j| j.as_obj().cloned())
         .unwrap_or_default();
     root.insert(section.to_string(), value);
     root.insert("scale".to_string(), Json::str(scale()));
-    if let Err(e) = metrics::write_file(HOTPATH_JSON, &Json::Obj(root).to_string())
-    {
-        eprintln!("  [bench] {HOTPATH_JSON} write failed: {e}");
+    if let Err(e) = metrics::write_file(path, &Json::Obj(root).to_string()) {
+        eprintln!("  [bench] {path} write failed: {e}");
     } else {
-        eprintln!("  [bench] wrote {HOTPATH_JSON} section '{section}'");
+        eprintln!("  [bench] wrote {path} section '{section}'");
     }
+}
+
+/// Merge `value` under `section` in BENCH_hotpath.json.
+pub fn record_hotpath_json(section: &str, value: Json) {
+    record_json(HOTPATH_JSON, section, value);
 }
 
 /// Workload scale: SSPDNN_BENCH_SCALE ∈ {quick, default, full}.

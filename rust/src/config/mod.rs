@@ -9,7 +9,7 @@
 
 mod toml;
 
-pub use toml::{parse_toml, TomlValue};
+pub use toml::{parse_toml, TomlDoc, TomlValue};
 
 use crate::nn::{Activation, Loss};
 use crate::ssp::Policy;
@@ -359,6 +359,10 @@ impl ExperimentConfig {
                     }
                     self.train.intra_op_threads = *n as usize
                 }
+                // the [sweep] table belongs to SweepConfig::apply_toml
+                // (the sweep harness); skip it here so one file can
+                // carry both the experiment and its grid
+                ("sweep", _, _) => {}
                 (sec, k, _) => {
                     return Err(format!("unknown config key [{sec}] {k}"))
                 }
@@ -407,6 +411,132 @@ impl ExperimentConfig {
         }
         if self.cluster.machines == 0 {
             return Err("need >= 1 machine".into());
+        }
+        Ok(())
+    }
+}
+
+/// The sweep harness's grid (`coordinator::sweep`): every
+/// `(machines × eta × policy-cell)` combination becomes one full driver
+/// run, where an `"ssp"` policy entry expands to one cell per staleness
+/// value. Parsed from the `[sweep]` TOML table (which
+/// `ExperimentConfig::apply_toml` deliberately skips) and overridable
+/// from the `sweep` subcommand's flags.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepConfig {
+    pub machines: Vec<usize>,
+    /// Staleness bounds for `"ssp"` policy cells.
+    pub staleness: Vec<u64>,
+    /// Policy names: any of `"ssp"`, `"bsp"`, `"async"`.
+    pub policies: Vec<String>,
+    /// Learning rates; empty = sweep only the config's `train.eta`.
+    pub etas: Vec<f32>,
+    /// Total thread budget, shared with `train.intra_op_threads` (the
+    /// harness runs `budget / intra_op_threads` cells concurrently).
+    pub threads: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            machines: vec![1, 2, 4, 6],
+            staleness: vec![10],
+            policies: vec!["ssp".into()],
+            etas: Vec::new(),
+            threads: 4,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// Apply a parsed TOML-subset document's `[sweep]` table.
+    pub fn apply_toml(&mut self, doc: &toml::TomlDoc) -> Result<(), String> {
+        use TomlValue::*;
+        for (section, key, value) in doc.entries() {
+            if section != "sweep" {
+                continue;
+            }
+            // negative integers would wrap to huge unsigned values past
+            // validate()'s zero checks — reject them at parse time
+            let non_negative = |what: &str, xs: &[i64]| -> Result<(), String> {
+                match xs.iter().find(|&&x| x < 0) {
+                    Some(x) => Err(format!("sweep.{what} must be >= 0, got {x}")),
+                    None => Ok(()),
+                }
+            };
+            match (key.as_str(), value) {
+                ("machines", IntArray(v)) => {
+                    non_negative("machines", v)?;
+                    self.machines = v.iter().map(|&x| x as usize).collect()
+                }
+                ("machines", Int(n)) => {
+                    non_negative("machines", &[*n])?;
+                    self.machines = vec![*n as usize]
+                }
+                ("staleness", IntArray(v)) => {
+                    non_negative("staleness", v)?;
+                    self.staleness = v.iter().map(|&x| x as u64).collect()
+                }
+                ("staleness", Int(n)) => {
+                    non_negative("staleness", &[*n])?;
+                    self.staleness = vec![*n as u64]
+                }
+                ("policies", Str(s)) => {
+                    self.policies = s
+                        .split(',')
+                        .map(|p| p.trim().to_string())
+                        .filter(|p| !p.is_empty())
+                        .collect()
+                }
+                ("etas", v) => {
+                    self.etas = v
+                        .as_f64_vec()
+                        .ok_or("sweep.etas must be a numeric array")?
+                        .iter()
+                        .map(|&x| x as f32)
+                        .collect()
+                }
+                ("threads", Int(n)) => {
+                    if *n < 1 {
+                        return Err(format!(
+                            "sweep.threads must be >= 1, got {n}"
+                        ));
+                    }
+                    self.threads = *n as usize
+                }
+                (k, _) => {
+                    return Err(format!("unknown config key [sweep] {k}"))
+                }
+            }
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.machines.is_empty() {
+            return Err("sweep.machines must not be empty".into());
+        }
+        if self.machines.iter().any(|&m| m == 0) {
+            return Err("sweep.machines entries must be >= 1".into());
+        }
+        if self.threads == 0 {
+            return Err("sweep.threads must be >= 1".into());
+        }
+        if self.policies.is_empty() {
+            return Err("sweep.policies must not be empty".into());
+        }
+        for p in &self.policies {
+            match p.as_str() {
+                "ssp" | "bsp" | "async" => {}
+                other => {
+                    return Err(format!("unknown sweep policy {other:?}"))
+                }
+            }
+        }
+        if self.policies.iter().any(|p| p == "ssp")
+            && self.staleness.is_empty()
+        {
+            return Err("sweep.staleness must not be empty for ssp".into());
         }
         Ok(())
     }
@@ -487,6 +617,77 @@ mod tests {
         let mut c = ExperimentConfig::tiny();
         let doc = parse_toml("[train]\nbogus = 1\n").unwrap();
         assert!(c.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn sweep_table_parses_and_is_skipped_by_experiment_config() {
+        let doc = parse_toml(
+            r#"
+            [train]
+            eta = 0.1
+            [sweep]
+            machines = [1, 2, 4]
+            staleness = [0, 10]
+            policies = "ssp, bsp"
+            etas = [0.05, 0.1]
+            threads = 8
+            "#,
+        )
+        .unwrap();
+        // the experiment config skips the [sweep] table entirely
+        let mut c = ExperimentConfig::tiny();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.train.eta, 0.1);
+        // ... while SweepConfig picks it up
+        let mut s = SweepConfig::default();
+        s.apply_toml(&doc).unwrap();
+        assert_eq!(s.machines, vec![1, 2, 4]);
+        assert_eq!(s.staleness, vec![0, 10]);
+        assert_eq!(s.policies, vec!["ssp".to_string(), "bsp".to_string()]);
+        assert_eq!(s.etas, vec![0.05f32, 0.1f32]);
+        assert_eq!(s.threads, 8);
+    }
+
+    #[test]
+    fn sweep_config_validation() {
+        let mut s = SweepConfig::default();
+        s.validate().unwrap();
+        s.threads = 0;
+        assert!(s.validate().is_err());
+        s = SweepConfig {
+            machines: vec![],
+            ..SweepConfig::default()
+        };
+        assert!(s.validate().is_err());
+        s = SweepConfig {
+            policies: vec!["turbo".into()],
+            ..SweepConfig::default()
+        };
+        assert!(s.validate().is_err());
+        s = SweepConfig {
+            staleness: vec![],
+            ..SweepConfig::default()
+        };
+        assert!(s.validate().is_err(), "ssp needs staleness values");
+        s.policies = vec!["bsp".into()];
+        s.validate().unwrap();
+        let bad = parse_toml("[sweep]\nbogus = 1\n").unwrap();
+        assert!(SweepConfig::default().apply_toml(&bad).is_err());
+        let neg = parse_toml("[sweep]\nthreads = 0\n").unwrap();
+        assert!(SweepConfig::default().apply_toml(&neg).is_err());
+        // negative entries must not wrap to huge unsigned values
+        for doc in [
+            "[sweep]\nmachines = [1, -2]\n",
+            "[sweep]\nmachines = -1\n",
+            "[sweep]\nstaleness = [-1]\n",
+            "[sweep]\nstaleness = -3\n",
+        ] {
+            let d = parse_toml(doc).unwrap();
+            assert!(
+                SweepConfig::default().apply_toml(&d).is_err(),
+                "negative value accepted: {doc}"
+            );
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! TOML-subset parser: `[section]` headers, `key = value` pairs, `#`
 //! comments. Values: integers, floats, booleans, quoted strings, and
-//! arrays of integers. That is the entire grammar the config system uses.
+//! arrays of integers or floats. That is the entire grammar the config
+//! system uses.
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
@@ -9,6 +10,9 @@ pub enum TomlValue {
     Bool(bool),
     Str(String),
     IntArray(Vec<i64>),
+    /// An array with at least one non-integer item (e.g. the `[sweep]`
+    /// table's `etas = [0.05, 0.1]`).
+    FloatArray(Vec<f64>),
 }
 
 impl TomlValue {
@@ -16,6 +20,20 @@ impl TomlValue {
         match self {
             TomlValue::Int(i) => Some(*i as f64),
             TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// Numeric-array view: both array flavors (and, for convenience, a
+    /// bare number) coerce to `Vec<f64>`.
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlValue::Int(i) => Some(vec![*i as f64]),
+            TomlValue::Float(f) => Some(vec![*f]),
+            TomlValue::IntArray(v) => {
+                Some(v.iter().map(|&x| x as f64).collect())
+            }
+            TomlValue::FloatArray(v) => Some(v.clone()),
             _ => None,
         }
     }
@@ -98,18 +116,34 @@ fn parse_value(s: &str) -> Result<TomlValue, String> {
     }
     if let Some(inner) = s.strip_prefix('[') {
         let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
-        let mut items = Vec::new();
+        // all-integer arrays stay IntArray (model dims etc.); any
+        // non-integer item promotes the whole array to FloatArray
+        let mut ints = Vec::new();
+        let mut floats = Vec::new();
+        let mut all_int = true;
         for part in inner.split(',') {
             let part = part.trim();
             if part.is_empty() {
                 continue;
             }
-            items.push(
-                part.parse::<i64>()
+            if all_int {
+                if let Ok(i) = part.parse::<i64>() {
+                    ints.push(i);
+                    floats.push(i as f64);
+                    continue;
+                }
+                all_int = false;
+            }
+            floats.push(
+                part.parse::<f64>()
                     .map_err(|_| format!("bad array item {part:?}"))?,
             );
         }
-        return Ok(TomlValue::IntArray(items));
+        return Ok(if all_int {
+            TomlValue::IntArray(ints)
+        } else {
+            TomlValue::FloatArray(floats)
+        });
     }
     if let Ok(i) = s.parse::<i64>() {
         return Ok(TomlValue::Int(i));
@@ -165,7 +199,36 @@ mod tests {
         assert!(parse_toml("novalue").is_err());
         assert!(parse_toml("x = ").is_err());
         assert!(parse_toml("x = [1, two]").is_err());
+        assert!(parse_toml("x = [0.1, two]").is_err());
         assert!(parse_toml(r#"x = "unterminated"#).is_err());
+    }
+
+    #[test]
+    fn float_arrays_and_numeric_views() {
+        let doc =
+            parse_toml("a = [0.05, 0.1]\nb = [1, 2.5]\nc = [1, 2]\nd = 3")
+                .unwrap();
+        assert_eq!(
+            doc.get("", "a"),
+            Some(&TomlValue::FloatArray(vec![0.05, 0.1]))
+        );
+        // a single float item promotes the whole array
+        assert_eq!(
+            doc.get("", "b"),
+            Some(&TomlValue::FloatArray(vec![1.0, 2.5]))
+        );
+        // all-integer arrays keep their historical type
+        assert_eq!(doc.get("", "c"), Some(&TomlValue::IntArray(vec![1, 2])));
+        assert_eq!(
+            doc.get("", "a").unwrap().as_f64_vec(),
+            Some(vec![0.05, 0.1])
+        );
+        assert_eq!(
+            doc.get("", "c").unwrap().as_f64_vec(),
+            Some(vec![1.0, 2.0])
+        );
+        assert_eq!(doc.get("", "d").unwrap().as_f64_vec(), Some(vec![3.0]));
+        assert_eq!(TomlValue::Str("x".into()).as_f64_vec(), None);
     }
 
     #[test]

@@ -3,7 +3,15 @@
 //! * `engine`   — `GradEngine` abstraction (native backprop or a PJRT
 //!   artifact) so the driver is agnostic to where gradients come from.
 //! * `driver`   — the discrete-event SSP training run: real gradients &
-//!   parameter versions, virtual time (see DESIGN.md).
+//!   parameter versions, virtual time (see DESIGN.md). The default loop
+//!   is zero-copy/zero-allocation at steady state; the pre-refactor
+//!   allocating loop survives as `run_experiment_alloc_*`, the value-
+//!   equality oracle.
+//! * `sweep`    — parallel deterministic grid sweeps over (machines,
+//!   staleness, policy, eta): every cell trains from the root seed
+//!   (grid axes compare the protocol effect, not seed noise), thread
+//!   budget shared with the intra-op GEMM pool, bitwise-reproducible
+//!   `SweepReport` at any parallelism.
 //! * `threaded` — real-thread SSP runners: `run_threaded` on the sharded
 //!   per-layer server (the deployment path), `run_threaded_global` on
 //!   the single-lock reference server (bench baseline / oracle).
@@ -12,13 +20,19 @@
 
 mod driver;
 mod engine;
+mod sweep;
 mod threaded;
 mod trace;
 mod tracker;
 
 pub use driver::{
-    build_dataset, run_experiment, run_experiment_on, run_experiment_with,
+    build_dataset, run_experiment, run_experiment_alloc_on,
+    run_experiment_alloc_with, run_experiment_on, run_experiment_with,
     DriverOptions, RunResult,
+};
+pub use sweep::{
+    run_sweep, run_sweep_with, sweep_cells, CellResult, SweepCell,
+    SweepOptions, SweepReport,
 };
 pub use engine::{EngineKind, GradEngine, NativeEngine};
 pub use trace::{Trace, TraceEvent, TraceSummary, WorkerSummary};

@@ -1,0 +1,425 @@
+//! Parallel deterministic sweep harness for the discrete-event driver.
+//!
+//! The paper's figure protocol (Figs 2–5) and the trade-off studies it
+//! cites (Jin et al.'s sync/async comparison, Das et al.'s design-space
+//! sweeps) all need *dense grids*: every `(machines, staleness, policy,
+//! eta)` combination is one full simulated training run. The harness
+//! turns such a grid into independent **cells**, dispatches them across
+//! OS threads under a bounded thread budget shared with the intra-op
+//! GEMM pool (`outer_workers = budget / train.intra_op_threads`), and
+//! collects one [`SweepReport`].
+//!
+//! Determinism is the design constraint everything else serves:
+//!
+//! * every cell trains from the **root seed** (`train.seed`) itself:
+//!   same Glorot init, same eval subset, same batch streams per worker
+//!   index — exactly the driver's "same seed across machine counts so
+//!   trajectories match" invariant the `speedup` command relies on, so
+//!   differences along any grid axis isolate the protocol effect
+//!   (staleness, policy, eta, parallelism) instead of seed noise, and
+//!   editing the grid never changes an existing cell's result;
+//! * a cell's run is a pure function of its `(config, seed)` pair — it
+//!   never depends on which thread executed it or in which order;
+//! * cells share one dataset (built from `data.seed`) and one
+//!   calibrated `per_batch_s`, measured once before dispatch (pin it
+//!   via [`SweepOptions::per_batch_s`] for cross-process repeatability);
+//! * results are written into a slot indexed by cell, never appended.
+//!
+//! Consequence: the statistical content of a report is **bitwise
+//! identical at any thread budget** (`tests/property_driver.rs` pins
+//! budgets {1, 2, 4, 7}); only the wall-clock fields differ. To draw an
+//! independent replicate of a whole sweep, change the root seed.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::{ExperimentConfig, SweepConfig};
+use crate::data::Dataset;
+use crate::nn::{Labels, Mlp, ParamSet};
+use crate::ssp::{ParamServer, Policy, Server};
+use crate::tensor::Matrix;
+
+use super::driver::{
+    build_dataset, measure_per_batch_into, run_experiment_with, RunResult,
+};
+use super::engine::{EngineKind, NativeEngine};
+use super::DriverOptions;
+
+/// One grid point: a full driver run at this configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SweepCell {
+    /// Position in the expanded grid (also the result slot).
+    pub index: usize,
+    pub machines: usize,
+    pub policy: Policy,
+    pub eta: f32,
+    /// Training seed — the root seed, shared by every cell so grid
+    /// axes stay statistically comparable (see module docs).
+    pub seed: u64,
+}
+
+/// Harness knobs independent of the grid itself.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOptions {
+    /// Total thread budget, shared with the intra-op GEMM pool: the
+    /// harness runs `max(1, threads / train.intra_op_threads)` cells
+    /// concurrently so `outer × intra` never exceeds the budget.
+    pub threads: usize,
+    pub eval_every: u64,
+    pub eval_samples: usize,
+    /// Virtual seconds per minibatch. `None` calibrates once on this
+    /// host and shares the value across all cells (deterministic within
+    /// the process; pin it for cross-process bitwise repeatability).
+    pub per_batch_s: Option<f64>,
+    /// Driver allocation-audit warmup (see `DriverOptions`).
+    pub warmup_clocks: u64,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            threads: 1,
+            eval_every: 2,
+            eval_samples: 512,
+            per_batch_s: None,
+            warmup_clocks: 4,
+        }
+    }
+}
+
+/// One cell's outcome: the deterministic run statistics plus wall-clock
+/// throughput (the only fields allowed to vary across thread budgets).
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub index: usize,
+    pub machines: usize,
+    pub policy: String,
+    pub staleness: Option<u64>,
+    pub eta: f32,
+    pub seed: u64,
+    pub final_objective: f64,
+    pub total_vtime: f64,
+    pub steps: u64,
+    pub barrier_wait_s: f64,
+    pub read_wait_s: f64,
+    pub compute_s: f64,
+    pub epsilon_rate: f64,
+    pub steady_reallocs: u64,
+    /// (virtual seconds, min clock, objective) convergence curve.
+    pub evals: Vec<(f64, u64, f64)>,
+    /// Host seconds this cell took (timing section — not deterministic).
+    pub wall_s: f64,
+    /// Committed clocks per host second across the cell's workers.
+    pub clocks_per_s: f64,
+}
+
+impl CellResult {
+    fn from_run(
+        cell: &SweepCell,
+        run: &RunResult,
+        batches_per_clock: usize,
+        wall_s: f64,
+    ) -> CellResult {
+        let committed = run.steps as f64 / batches_per_clock.max(1) as f64;
+        CellResult {
+            index: cell.index,
+            machines: cell.machines,
+            policy: cell.policy.name(),
+            staleness: cell.policy.staleness(),
+            eta: cell.eta,
+            seed: cell.seed,
+            final_objective: run.final_objective,
+            total_vtime: run.total_vtime,
+            steps: run.steps,
+            barrier_wait_s: run.barrier_wait_s,
+            read_wait_s: run.read_wait_s,
+            compute_s: run.compute_s,
+            epsilon_rate: run.epsilon_rate,
+            steady_reallocs: run.steady_reallocs,
+            evals: run
+                .evals
+                .iter()
+                .map(|e| (e.vtime, e.clock, e.objective))
+                .collect(),
+            wall_s,
+            clocks_per_s: if wall_s > 0.0 { committed / wall_s } else { 0.0 },
+        }
+    }
+}
+
+/// The consolidated sweep outcome (`metrics::sweep_json` serializes it).
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub name: String,
+    /// `train.seed` the per-cell seeds were derived from.
+    pub root_seed: u64,
+    /// Total thread budget the caller granted.
+    pub thread_budget: usize,
+    /// Concurrent cells actually run (`budget / intra_op_threads`).
+    pub outer_workers: usize,
+    pub intra_op_threads: usize,
+    /// Shared virtual seconds per minibatch (calibrated or pinned).
+    pub per_batch_s: f64,
+    /// Host seconds for the whole sweep.
+    pub wall_s: f64,
+    pub cells: Vec<CellResult>,
+}
+
+/// Expand a grid into cells: `machines × etas × policy-cells`, where a
+/// `"ssp"` policy entry contributes one cell per staleness value and
+/// `"bsp"`/`"async"` contribute one each (their semantics carry no
+/// staleness knob). Cell order — and therefore result-slot assignment —
+/// is the deterministic nesting order machines → etas → policies →
+/// staleness. Every cell carries the root training seed (see module
+/// docs: shared-seed cells keep grid axes comparable, the same way the
+/// speedup protocol holds the seed fixed across machine counts).
+pub fn sweep_cells(
+    grid: &SweepConfig,
+    base: &ExperimentConfig,
+) -> Result<Vec<SweepCell>, String> {
+    grid.validate()?;
+    let etas: Vec<f32> = if grid.etas.is_empty() {
+        vec![base.train.eta]
+    } else {
+        grid.etas.clone()
+    };
+    let root = base.train.seed;
+    let mut cells = Vec::new();
+    for &machines in &grid.machines {
+        for &eta in &etas {
+            for policy in &grid.policies {
+                let expanded: Vec<Policy> = match policy.as_str() {
+                    "ssp" => grid
+                        .staleness
+                        .iter()
+                        .map(|&s| Policy::Ssp { staleness: s })
+                        .collect(),
+                    "bsp" => vec![Policy::Bsp],
+                    "async" => vec![Policy::Async],
+                    // grid.validate() above rejects anything else
+                    other => unreachable!("unvalidated policy {other:?}"),
+                };
+                for policy in expanded {
+                    let index = cells.len();
+                    cells.push(SweepCell {
+                        index,
+                        machines,
+                        policy,
+                        eta,
+                        seed: root,
+                    });
+                }
+            }
+        }
+    }
+    if cells.is_empty() {
+        return Err("sweep grid is empty".into());
+    }
+    Ok(cells)
+}
+
+/// Calibrate the shared per-minibatch virtual duration once, through a
+/// persistent gather workspace (same measurement protocol the driver
+/// uses, on a deterministic prefix batch).
+fn calibrate(cfg: &ExperimentConfig, dataset: &Dataset) -> f64 {
+    let mlp = Mlp::new(
+        cfg.model.dims.clone(),
+        cfg.model.activation,
+        cfg.model.loss,
+    )
+    .with_intra_op_threads(cfg.train.intra_op_threads);
+    let mut engine = EngineKind::Native(NativeEngine::new(mlp));
+    let mut init_rng = crate::util::Pcg64::new(cfg.train.seed ^ 0xD11);
+    let init = ParamSet::glorot(&cfg.model.dims, &mut init_rng);
+    let idx: Vec<usize> =
+        (0..cfg.train.batch.min(dataset.n_samples())).collect();
+    let mut x = Matrix::zeros(idx.len(), dataset.n_features());
+    let mut y = Labels::Class(Vec::with_capacity(idx.len()));
+    dataset.gather_into(&idx, &mut x, &mut y);
+    let mut grads = init.zeros_like();
+    measure_per_batch_into(
+        &mut engine,
+        &init,
+        &x,
+        &y,
+        &mut grads,
+        cfg.cluster.cores_per_machine,
+    )
+}
+
+/// Run a sweep on the single-lock reference `Server` (the driver's
+/// default backing).
+pub fn run_sweep(
+    cfg: &ExperimentConfig,
+    grid: &SweepConfig,
+    opts: &SweepOptions,
+) -> Result<SweepReport, String> {
+    run_sweep_with(cfg, grid, opts, Server::new)
+}
+
+/// Generic sweep: any [`ParamServer`] can back the cells. Cells are
+/// pulled from a shared atomic counter by `outer_workers` scoped
+/// threads and written into their index slot; the report's statistical
+/// content is identical for any thread budget.
+pub fn run_sweep_with<S: ParamServer>(
+    cfg: &ExperimentConfig,
+    grid: &SweepConfig,
+    opts: &SweepOptions,
+    make_server: impl Fn(ParamSet, usize, Policy) -> S + Sync,
+) -> Result<SweepReport, String> {
+    let cells = sweep_cells(grid, cfg)?;
+    let dataset = build_dataset(cfg);
+    let per_batch_s = match opts.per_batch_s {
+        Some(v) => v,
+        None => calibrate(cfg, &dataset),
+    };
+    let budget = opts.threads.max(1);
+    let intra = cfg.train.intra_op_threads.max(1);
+    // cells.len() >= 1 (sweep_cells rejects empty grids)
+    let outer = (budget / intra).clamp(1, cells.len());
+
+    let start = Instant::now();
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<CellResult>>> =
+        (0..cells.len()).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..outer {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let cell = &cells[i];
+                let mut c = cfg.clone();
+                c.cluster.machines = cell.machines;
+                c.ssp.policy = cell.policy;
+                c.train.eta = cell.eta;
+                c.train.seed = cell.seed;
+                let t = Instant::now();
+                let run = run_experiment_with(
+                    &c,
+                    DriverOptions {
+                        machines: Some(cell.machines),
+                        eval_every: opts.eval_every,
+                        eval_samples: opts.eval_samples,
+                        per_batch_s: Some(per_batch_s),
+                        warmup_clocks: opts.warmup_clocks,
+                        ..DriverOptions::default()
+                    },
+                    &dataset,
+                    |init, m, p| make_server(init, m, p),
+                );
+                let wall = t.elapsed().as_secs_f64();
+                *results[i].lock().unwrap() = Some(CellResult::from_run(
+                    cell,
+                    &run,
+                    c.train.batches_per_clock,
+                    wall,
+                ));
+            });
+        }
+    });
+
+    let cells_out: Vec<CellResult> = results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("cell never ran"))
+        .collect();
+    Ok(SweepReport {
+        name: cfg.name.clone(),
+        root_seed: cfg.train.seed,
+        thread_budget: budget,
+        outer_workers: outer,
+        intra_op_threads: intra,
+        per_batch_s,
+        wall_s: start.elapsed().as_secs_f64(),
+        cells: cells_out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SweepConfig;
+
+    fn grid(machines: Vec<usize>, staleness: Vec<u64>) -> SweepConfig {
+        SweepConfig {
+            machines,
+            staleness,
+            policies: vec!["ssp".into()],
+            etas: vec![],
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn cell_expansion_order_and_seeds() {
+        let base = ExperimentConfig::tiny();
+        let mut g = grid(vec![1, 2], vec![0, 4]);
+        g.policies = vec!["ssp".into(), "bsp".into()];
+        let cells = sweep_cells(&g, &base).unwrap();
+        // per machines: ssp(s=0), ssp(s=4), bsp — nesting order fixed
+        assert_eq!(cells.len(), 6);
+        assert_eq!(cells[0].policy, Policy::Ssp { staleness: 0 });
+        assert_eq!(cells[1].policy, Policy::Ssp { staleness: 4 });
+        assert_eq!(cells[2].policy, Policy::Bsp);
+        assert_eq!(cells[3].machines, 2);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            // every cell shares the root seed: grid axes compare the
+            // protocol effect, never seed noise, and editing the grid
+            // can't silently change an existing cell's run
+            assert_eq!(c.seed, base.train.seed);
+        }
+    }
+
+    #[test]
+    fn empty_or_invalid_grids_rejected() {
+        let base = ExperimentConfig::tiny();
+        let mut g = grid(vec![], vec![0]);
+        assert!(sweep_cells(&g, &base).is_err());
+        g = grid(vec![1], vec![0]);
+        g.policies = vec!["nope".into()];
+        assert!(sweep_cells(&g, &base).is_err());
+        g = grid(vec![0], vec![0]);
+        assert!(g.validate().is_err() || sweep_cells(&g, &base).is_err());
+    }
+
+    #[test]
+    fn eta_defaults_to_train_eta() {
+        let base = ExperimentConfig::tiny();
+        let g = grid(vec![1], vec![2]);
+        let cells = sweep_cells(&g, &base).unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].eta, base.train.eta);
+    }
+
+    #[test]
+    fn tiny_sweep_runs_and_orders_cells() {
+        let mut base = ExperimentConfig::tiny();
+        base.train.clocks = 6;
+        base.train.batches_per_clock = 1;
+        let g = grid(vec![1, 2], vec![2]);
+        let report = run_sweep(
+            &base,
+            &g,
+            &SweepOptions {
+                threads: 2,
+                per_batch_s: Some(0.01),
+                eval_samples: 64,
+                ..SweepOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert_eq!(report.cells[0].machines, 1);
+        assert_eq!(report.cells[1].machines, 2);
+        assert_eq!(report.outer_workers, 2);
+        for c in &report.cells {
+            assert!(c.final_objective.is_finite());
+            assert!(c.wall_s >= 0.0);
+            assert!(!c.evals.is_empty());
+        }
+    }
+}

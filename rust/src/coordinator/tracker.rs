@@ -50,7 +50,13 @@ impl Tracker {
                 (msd, layer_msd)
             }
         };
-        self.prev = Some(params.clone());
+        // reuse the previous-snapshot buffer: one allocation on the
+        // first record, copy-in-place on every later one (the zero-copy
+        // driver evaluates through here each eval interval)
+        match &mut self.prev {
+            Some(prev) => prev.copy_from(params),
+            None => self.prev = Some(params.clone()),
+        }
         self.points.push(EvalPoint {
             vtime,
             clock,

@@ -163,15 +163,24 @@ impl Generator {
         // activates `active` coordinates drawn mostly from those regions,
         // with non-negative lognormal magnitudes (max-pooled LLC codes).
         let region = (s.n_features / (s.components.max(1))).max(1);
+        // class-specific region offsets, deterministic per class: the
+        // per-class stream is independent of the sample stream, so
+        // tabulating all classes up front draws the exact same offsets
+        // as the old per-row recompute while dropping an O(components)
+        // RNG replay + Vec allocation from every sample
+        let class_offsets: Vec<usize> = (0..s.n_classes)
+            .flat_map(|c| {
+                let mut class_rng = Pcg64::with_stream(c as u64, 0xC1A55);
+                (0..s.components)
+                    .map(|_| class_rng.below(s.n_features))
+                    .collect::<Vec<usize>>()
+            })
+            .collect();
         let mut x = Matrix::zeros(s.n_samples, s.n_features);
         let mut y = Vec::with_capacity(s.n_samples);
         for r in 0..s.n_samples {
             let c = rng.below(s.n_classes);
-            // class-specific region offsets, deterministic per class
-            let mut class_rng = Pcg64::with_stream(c as u64, 0xC1A55);
-            let offsets: Vec<usize> = (0..s.components)
-                .map(|_| class_rng.below(s.n_features))
-                .collect();
+            let offsets = &class_offsets[c * s.components..(c + 1) * s.components];
             let row = x.row_mut(r);
             for _ in 0..active {
                 let j = if rng.coin(0.8) {

@@ -63,6 +63,21 @@
 //! steady state. `FetchStats` counts what the gate copied vs skipped;
 //! `benches/sharded_server.rs` tracks the resulting throughput in
 //! `bench_results/BENCH_hotpath.json` (methodology: `rust/EXPERIMENTS.md`).
+//!
+//! The **discrete-event driver** (`coordinator::run_experiment_with`)
+//! runs the same zero-copy machinery: version-gated fetches into each
+//! simulated worker's view, pooled arrival slots and own-pending
+//! entries instead of per-clock message clones, and an allocation audit
+//! (`RunResult::steady_reallocs`) that pins "zero steady-state
+//! allocations per simulated clock". The pre-refactor allocating loop
+//! is retained as `run_experiment_alloc_*` — the value-equality oracle
+//! (`tests/property_driver.rs`). Dense figure grids run through
+//! `coordinator::sweep` (CLI `sweep`, TOML `[sweep]`): cells dispatched
+//! across a bounded thread budget shared with the intra-op GEMM pool,
+//! every cell training from the shared root seed (axes compare the
+//! protocol effect, not seed noise), so a `SweepReport`'s
+//! statistical content is bitwise identical at any parallelism
+//! (`benches/driver_sweep.rs` → `bench_results/BENCH_driver.json`).
 
 pub mod checkpoint;
 pub mod cli;

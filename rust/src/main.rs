@@ -13,9 +13,10 @@
 //! --out <dir> (write CSV/JSON results).
 
 use sspdnn::cli::Args;
-use sspdnn::config::ExperimentConfig;
+use sspdnn::config::{ExperimentConfig, SweepConfig, TomlDoc};
 use sspdnn::coordinator::{
-    build_dataset, run_experiment_on, DriverOptions, EtaSchedule,
+    build_dataset, run_experiment_on, run_sweep, DriverOptions, EtaSchedule,
+    SweepOptions,
 };
 use sspdnn::metrics;
 use sspdnn::runtime::{Manifest, PjrtEngine};
@@ -34,6 +35,7 @@ fn main() {
     let code = match args.command.as_str() {
         "train" => cmd_train(&args),
         "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
         "speedup" => cmd_speedup(&args),
         "theory" => cmd_theory(&args),
         "data" => cmd_data(&args),
@@ -59,6 +61,8 @@ USAGE: sspdnn <command> [flags]
 COMMANDS:
   train      run one SSP training experiment on the simulated cluster
   simulate   traced protocol run: per-worker staleness/blocking/delay stats
+  sweep      parallel deterministic grid sweep over (machines, staleness,
+             policy, eta) cells; consolidated SweepReport JSON/CSV
   speedup    sweep 1..N machines, print the paper's speedup table (Fig 4/5)
   theory     empirical validation of Theorems 1-3
   data       generate a synthetic dataset and print Table-1 statistics
@@ -75,17 +79,46 @@ FLAGS (train/speedup/theory):
   --threads T                 intra-op GEMM threads per worker (default 1)
   --engine <native|pjrt>      gradient engine (pjrt needs artifacts/)
   --out <dir>                 write curve CSV + run JSON
+
+FLAGS (sweep; grid also settable via the [sweep] TOML table):
+  --grid-machines 1,2,4       machine counts to sweep
+  --grid-staleness 0,10       staleness bounds for ssp cells
+  --grid-policies ssp,bsp     policy names (ssp|bsp|async)
+  --grid-etas 0.05,0.1        learning rates (default: train.eta)
+  --budget N                  total thread budget shared with --threads
+                              (cells in flight = budget / threads)
+  --per-batch-s F             pin virtual seconds per minibatch
+                              (default: calibrate once on this host)
+  --out <dir>                 write <name>_sweep.json + _sweep.csv
 ";
 
+/// Read + parse the `--config` TOML once; commands that need the raw
+/// document (the sweep grid lives in its `[sweep]` table) reuse it via
+/// `build_config_with` instead of re-reading the file.
+fn config_doc(args: &Args) -> Result<Option<TomlDoc>, String> {
+    match args.get("config") {
+        None => Ok(None),
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+            Ok(Some(sspdnn::config::parse_toml(&text)?))
+        }
+    }
+}
+
 fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
+    build_config_with(args, config_doc(args)?.as_ref())
+}
+
+fn build_config_with(
+    args: &Args,
+    doc: Option<&TomlDoc>,
+) -> Result<ExperimentConfig, String> {
     let preset = args.get("preset").unwrap_or("tiny");
     let mut cfg = ExperimentConfig::preset(preset)
         .ok_or_else(|| format!("unknown preset {preset:?}"))?;
-    if let Some(path) = args.get("config") {
-        let doc = sspdnn::config::parse_toml(
-            &std::fs::read_to_string(path).map_err(|e| e.to_string())?,
-        )?;
-        cfg.apply_toml(&doc)?;
+    if let Some(doc) = doc {
+        cfg.apply_toml(doc)?;
     }
     if let Some(m) = args.get_usize("machines").map_err(|e| e.to_string())? {
         cfg.cluster.machines = m;
@@ -233,6 +266,105 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         let path = format!("{dir}/{}_trace.csv", cfg.name);
         metrics::write_file(&path, &trace.to_csv()).map_err(|e| e.to_string())?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn parse_list<T: std::str::FromStr>(flag: &str, s: &str) -> Result<Vec<T>, String> {
+    s.split(',')
+        .map(|p| p.trim())
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            p.parse::<T>()
+                .map_err(|_| format!("bad --{flag} item {p:?}"))
+        })
+        .collect()
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let doc = config_doc(args)?;
+    let cfg = build_config_with(args, doc.as_ref())?;
+    let mut grid = SweepConfig::default();
+    if let Some(doc) = &doc {
+        grid.apply_toml(doc)?;
+    }
+    if let Some(s) = args.get("grid-machines") {
+        grid.machines = parse_list("grid-machines", s)?;
+    }
+    if let Some(s) = args.get("grid-staleness") {
+        grid.staleness = parse_list("grid-staleness", s)?;
+    }
+    if let Some(s) = args.get("grid-policies") {
+        grid.policies = parse_list("grid-policies", s)?;
+    }
+    if let Some(s) = args.get("grid-etas") {
+        grid.etas = parse_list("grid-etas", s)?;
+    }
+    if let Some(t) = args.get_usize("budget").map_err(|e| e.to_string())? {
+        grid.threads = t;
+    }
+    grid.validate()?;
+    let per_batch_s =
+        args.get_f64("per-batch-s").map_err(|e| e.to_string())?;
+    if let Some(v) = per_batch_s {
+        if !(v > 0.0 && v.is_finite()) {
+            return Err(format!("--per-batch-s must be > 0, got {v}"));
+        }
+    }
+    let opts = SweepOptions {
+        threads: grid.threads,
+        per_batch_s,
+        ..SweepOptions::default()
+    };
+    let report = run_sweep(&cfg, &grid, &opts)?;
+    println!(
+        "sweep: {} | {} cells | budget {} ({} cells in flight x {} intra-op) | per-batch {:.3}ms",
+        report.name,
+        report.cells.len(),
+        report.thread_budget,
+        report.outer_workers,
+        report.intra_op_threads,
+        report.per_batch_s * 1e3,
+    );
+    let rows: Vec<Vec<String>> = report
+        .cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.machines.to_string(),
+                c.policy.clone(),
+                format!("{:.3}", c.eta),
+                format!("{:.4}", c.final_objective),
+                fmt_duration(c.total_vtime),
+                fmt_duration(c.barrier_wait_s),
+                format!("{:.3}", c.epsilon_rate),
+                format!("{:.2}s", c.wall_s),
+                format!("{:.1}", c.clocks_per_s),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        metrics::render_table(
+            &[
+                "machines", "policy", "eta", "final", "vtime", "barrier",
+                "eps", "wall", "clocks/s"
+            ],
+            &rows
+        )
+    );
+    println!("sweep wall: {:.2}s", report.wall_s);
+    if let Some(dir) = args.get("out") {
+        let json_path = format!("{dir}/{}_sweep.json", cfg.name);
+        metrics::write_file(
+            &json_path,
+            &metrics::sweep_json(&report, true).to_string(),
+        )
+        .map_err(|e| e.to_string())?;
+        let csv_path = format!("{dir}/{}_sweep.csv", cfg.name);
+        metrics::write_file(&csv_path, &metrics::sweep_csv(&report))
+            .map_err(|e| e.to_string())?;
+        println!("wrote {json_path} and {csv_path}");
     }
     Ok(())
 }

@@ -8,7 +8,7 @@ pub use plot::{line_chart, Series};
 
 use std::io::Write;
 
-use crate::coordinator::RunResult;
+use crate::coordinator::{RunResult, SweepReport};
 use crate::util::json::Json;
 
 /// The paper's speedup protocol (§6.2): record the run time `t_n` by
@@ -85,6 +85,7 @@ pub fn run_json(run: &RunResult) -> Json {
         ("congestion_events", Json::num(run.congestion_events as f64)),
         ("epsilon_rate", Json::num(run.epsilon_rate)),
         ("steps", Json::num(run.steps as f64)),
+        ("steady_reallocs", Json::num(run.steady_reallocs as f64)),
         (
             "evals",
             Json::Arr(
@@ -102,6 +103,104 @@ pub fn run_json(run: &RunResult) -> Json {
             ),
         ),
     ])
+}
+
+/// JSON record of a sweep. `include_timing = false` drops the
+/// wall-clock fields (sweep wall, per-cell wall / clocks-per-second) —
+/// what remains is a pure function of (config, grid, root seed,
+/// per_batch_s), bitwise identical at any thread budget; the
+/// determinism tests compare exactly this serialization.
+pub fn sweep_json(report: &SweepReport, include_timing: bool) -> Json {
+    let cells = report
+        .cells
+        .iter()
+        .map(|c| {
+            let mut pairs = vec![
+                ("index", Json::num(c.index as f64)),
+                ("machines", Json::num(c.machines as f64)),
+                ("policy", Json::str(c.policy.clone())),
+                (
+                    "staleness",
+                    match c.staleness {
+                        Some(s) => Json::num(s as f64),
+                        None => Json::Null,
+                    },
+                ),
+                ("eta", Json::num(c.eta as f64)),
+                ("seed", Json::num(c.seed as f64)),
+                ("final_objective", Json::num(c.final_objective)),
+                ("total_vtime_s", Json::num(c.total_vtime)),
+                ("steps", Json::num(c.steps as f64)),
+                ("barrier_wait_s", Json::num(c.barrier_wait_s)),
+                ("read_wait_s", Json::num(c.read_wait_s)),
+                ("compute_s", Json::num(c.compute_s)),
+                ("epsilon_rate", Json::num(c.epsilon_rate)),
+                ("steady_reallocs", Json::num(c.steady_reallocs as f64)),
+                (
+                    "evals",
+                    Json::Arr(
+                        c.evals
+                            .iter()
+                            .map(|&(vtime, clock, objective)| {
+                                Json::obj(vec![
+                                    ("vtime", Json::num(vtime)),
+                                    ("clock", Json::num(clock as f64)),
+                                    ("objective", Json::num(objective)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ];
+            if include_timing {
+                pairs.push(("wall_s", Json::num(c.wall_s)));
+                pairs.push(("clocks_per_s", Json::num(c.clocks_per_s)));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    let mut pairs = vec![
+        ("name", Json::str(report.name.clone())),
+        ("root_seed", Json::num(report.root_seed as f64)),
+        ("per_batch_s", Json::num(report.per_batch_s)),
+        ("cells", Json::Arr(cells)),
+    ];
+    if include_timing {
+        pairs.push(("thread_budget", Json::num(report.thread_budget as f64)));
+        pairs.push(("outer_workers", Json::num(report.outer_workers as f64)));
+        pairs.push((
+            "intra_op_threads",
+            Json::num(report.intra_op_threads as f64),
+        ));
+        pairs.push(("wall_s", Json::num(report.wall_s)));
+    }
+    Json::obj(pairs)
+}
+
+/// CSV of a sweep: one row per cell (the table the plotting scripts eat).
+pub fn sweep_csv(report: &SweepReport) -> String {
+    let mut out = String::from(
+        "index,machines,policy,staleness,eta,final_objective,total_vtime_s,\
+         barrier_wait_s,read_wait_s,epsilon_rate,wall_s,clocks_per_s\n",
+    );
+    for c in &report.cells {
+        out.push_str(&format!(
+            "{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{:.2}\n",
+            c.index,
+            c.machines,
+            c.policy,
+            c.staleness.map_or(String::new(), |s| s.to_string()),
+            c.eta,
+            c.final_objective,
+            c.total_vtime,
+            c.barrier_wait_s,
+            c.read_wait_s,
+            c.epsilon_rate,
+            c.wall_s,
+            c.clocks_per_s,
+        ));
+    }
+    out
 }
 
 /// Write a string to a file, creating parent dirs.
@@ -207,6 +306,39 @@ mod tests {
             master_trajectory: vec![],
             final_params: ParamSet::zeros(&[1, 1]),
             trace: None,
+            steady_reallocs: 0,
+        }
+    }
+
+    fn fake_sweep() -> SweepReport {
+        use crate::coordinator::CellResult;
+        SweepReport {
+            name: "t".into(),
+            root_seed: 7,
+            thread_budget: 4,
+            outer_workers: 4,
+            intra_op_threads: 1,
+            per_batch_s: 0.05,
+            wall_s: 1.5,
+            cells: vec![CellResult {
+                index: 0,
+                machines: 2,
+                policy: "ssp(s=1)".into(),
+                staleness: Some(1),
+                eta: 0.05,
+                seed: 99,
+                final_objective: 1.25,
+                total_vtime: 10.0,
+                steps: 40,
+                barrier_wait_s: 0.5,
+                read_wait_s: 0.1,
+                compute_s: 8.0,
+                epsilon_rate: 0.9,
+                steady_reallocs: 0,
+                evals: vec![(1.0, 2, 2.0), (2.0, 4, 1.25)],
+                wall_s: 0.75,
+                clocks_per_s: 53.3,
+            }],
         }
     }
 
@@ -244,6 +376,24 @@ mod tests {
         let j = run_json(&r);
         assert_eq!(j.get("machines").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("evals").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn sweep_json_timing_split() {
+        let r = fake_sweep();
+        let with = sweep_json(&r, true);
+        let without = sweep_json(&r, false);
+        assert!(with.get("wall_s").is_some());
+        assert!(without.get("wall_s").is_none());
+        assert_eq!(with.get("root_seed").unwrap().as_usize(), Some(7));
+        let cell = &with.get("cells").unwrap().as_arr().unwrap()[0];
+        assert!(cell.get("clocks_per_s").is_some());
+        let cell = &without.get("cells").unwrap().as_arr().unwrap()[0];
+        assert!(cell.get("clocks_per_s").is_none());
+        assert_eq!(cell.get("evals").unwrap().as_arr().unwrap().len(), 2);
+        let csv = sweep_csv(&r);
+        assert!(csv.starts_with("index,machines"));
+        assert_eq!(csv.lines().count(), 2);
     }
 
     #[test]

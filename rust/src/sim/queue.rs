@@ -66,6 +66,13 @@ impl<T: PartialEq> EventQueue<T> {
         self.heap.is_empty()
     }
 
+    /// Backing-heap capacity — the zero-copy driver's steady-state
+    /// allocation audit watches this: after warmup the in-flight event
+    /// population is bounded, so the capacity must stop growing.
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
     pub fn push(&mut self, time: f64, payload: T) {
         debug_assert!(time.is_finite(), "non-finite event time");
         let seq = self.seq;

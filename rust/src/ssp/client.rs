@@ -151,6 +151,37 @@ impl WorkerCache {
         (&mut self.view, &mut self.last_seen, &mut self.own_scratch)
     }
 
+    /// Per-layer applied counts of this worker's own updates reported by
+    /// the most recent gated fetch (the `own` scratch `refresh_target`
+    /// hands to `ParamServer::fetch_into`). Empty before the first fetch.
+    pub fn own_applied(&self) -> &[u64] {
+        &self.own_scratch
+    }
+
+    /// Message-path read-my-writes re-fold for the zero-copy driver:
+    /// after a gated `fetch_into`, fold back the portion of this
+    /// worker's committed updates the server has not applied yet
+    /// (`missing`), restricted to the layers flagged in `mask`. Folded
+    /// layers are marked touched — their view bits now differ from the
+    /// master, so the next `refresh_target` forces a recopy regardless
+    /// of the server revision. This is the in-place equivalent of
+    /// `install_snapshot`'s `view = snapshot + own_missing` for layers
+    /// the gate refreshed, and a no-op (bitwise, up to the sign of
+    /// zero) for layers it soundly skipped.
+    pub fn refold_own_missing(&mut self, missing: &GradSet, mask: &[bool]) {
+        assert!(
+            !self.pending_dirty,
+            "refold mid-clock would lose read-my-writes accounting"
+        );
+        assert_eq!(mask.len(), self.view.n_layers(), "refold mask layers");
+        for (l, &folded) in mask.iter().enumerate() {
+            if folded {
+                self.view.axpy_layer(l, 1.0, &missing.layers[l]);
+                self.touched[l] = true;
+            }
+        }
+    }
+
     /// Install a fresh server snapshot (the message path: the snapshot
     /// may or may not include this worker's own recent commits).
     /// `own_missing` is the portion of our committed updates NOT yet in
@@ -289,6 +320,28 @@ mod tests {
         c.install_snapshot(init.clone(), &init.zeros_like());
         let (_, seen, _) = c.refresh_target();
         assert!(seen.iter().all(|&s| s == u64::MAX));
+    }
+
+    #[test]
+    fn refold_marks_only_masked_layers_touched() {
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(0, init.clone());
+        let missing = unit_update(&dims(), 0.3);
+        c.refold_own_missing(&missing, &[true, false]);
+        assert!((c.view().layers[0].w.at(0, 0) - 0.3).abs() < 1e-7);
+        assert_eq!(c.view().layers[1].w.at(0, 0), 0.0, "unmasked untouched");
+        let (_, seen, _) = c.refresh_target();
+        assert_eq!(seen[0], u64::MAX, "refolded layer forces recopy");
+        assert_eq!(seen[1], 0, "skipped layer keeps its gate entry");
+    }
+
+    #[test]
+    #[should_panic(expected = "mid-clock")]
+    fn refold_mid_clock_panics() {
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(0, init.clone());
+        c.add_local_update(&unit_update(&dims(), 0.2));
+        c.refold_own_missing(&init.zeros_like(), &[false, false]);
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Driver equivalence + sweep determinism properties.
+//!
+//! D1. The zero-copy driver loop reproduces the pre-refactor allocating
+//!     oracle (`run_experiment_alloc_*`) value-for-value — on the
+//!     single-lock reference `Server` AND the sharded per-layer
+//!     `ShardedServer`, across every consistency policy, with and
+//!     without tracing. (The only bit divergence permitted anywhere is
+//!     the sign of zero, which no comparison below distinguishes.)
+//! D2. The zero-copy loop performs zero steady-state allocations: the
+//!     audit armed after warmup observes no pool growth.
+//! D3. A sweep's statistical content is bitwise identical at any thread
+//!     budget, and each cell is exactly the driver run its derived seed
+//!     describes.
+
+use sspdnn::config::{ExperimentConfig, SweepConfig};
+use sspdnn::coordinator::{
+    build_dataset, run_experiment_alloc_on, run_experiment_alloc_with,
+    run_experiment_on, run_experiment_with, run_sweep, DriverOptions,
+    RunResult, SweepOptions,
+};
+use sspdnn::metrics;
+use sspdnn::ssp::{Policy, ShardedServer};
+
+fn tiny_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::tiny();
+    c.train.clocks = 10;
+    c.train.batches_per_clock = 2;
+    c
+}
+
+fn fast_opts() -> DriverOptions {
+    DriverOptions {
+        per_batch_s: Some(0.01),
+        eval_samples: 128,
+        ..DriverOptions::default()
+    }
+}
+
+/// Value-equality over every deterministic field of two runs.
+fn assert_runs_equal(a: &RunResult, b: &RunResult) {
+    assert_eq!(a.final_params, b.final_params, "final params diverged");
+    assert_eq!(a.final_objective, b.final_objective);
+    assert_eq!(a.total_vtime, b.total_vtime);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.reads, b.reads);
+    assert_eq!(a.messages, b.messages);
+    assert_eq!(a.bytes, b.bytes);
+    assert_eq!(a.congestion_events, b.congestion_events);
+    assert_eq!(a.epsilon_rate, b.epsilon_rate);
+    assert_eq!(a.barrier_wait_s, b.barrier_wait_s);
+    assert_eq!(a.read_wait_s, b.read_wait_s);
+    assert_eq!(a.compute_s, b.compute_s);
+    assert_eq!(a.evals.len(), b.evals.len(), "eval curve length");
+    for (x, y) in a.evals.iter().zip(&b.evals) {
+        assert_eq!(x.vtime, y.vtime);
+        assert_eq!(x.clock, y.clock);
+        assert_eq!(x.objective, y.objective);
+        assert_eq!(x.param_msd, y.param_msd);
+        assert_eq!(x.layer_msd, y.layer_msd);
+    }
+    assert_eq!(a.clock_loss.len(), b.clock_loss.len());
+    for (x, y) in a.clock_loss.iter().zip(&b.clock_loss) {
+        // bit comparison: NaN (an index no worker reached) must match NaN
+        assert_eq!(x.to_bits(), y.to_bits(), "clock loss diverged");
+    }
+}
+
+#[test]
+fn d1_zero_copy_matches_oracle_on_reference_server() {
+    let cfg = tiny_cfg();
+    let ds = build_dataset(&cfg);
+    let zc = run_experiment_on(&cfg, fast_opts(), &ds);
+    let oracle = run_experiment_alloc_on(&cfg, fast_opts(), &ds);
+    assert_runs_equal(&zc, &oracle);
+}
+
+#[test]
+fn d1_zero_copy_matches_oracle_on_sharded_server() {
+    let cfg = tiny_cfg();
+    let ds = build_dataset(&cfg);
+    // strongest cross pairing: zero-copy loop on the sharded server vs
+    // the allocating oracle on the reference server
+    let zc = run_experiment_with(&cfg, fast_opts(), &ds, ShardedServer::new);
+    let oracle = run_experiment_alloc_on(&cfg, fast_opts(), &ds);
+    assert_runs_equal(&zc, &oracle);
+    // ... and the sharded oracle agrees too
+    let oracle_sharded =
+        run_experiment_alloc_with(&cfg, fast_opts(), &ds, ShardedServer::new);
+    assert_runs_equal(&zc, &oracle_sharded);
+}
+
+#[test]
+fn d1_equivalence_holds_across_policies() {
+    for policy in [
+        Policy::Bsp,
+        Policy::Ssp { staleness: 0 },
+        Policy::Ssp { staleness: 8 },
+        Policy::Async,
+    ] {
+        let mut cfg = tiny_cfg();
+        cfg.train.clocks = 6;
+        cfg.ssp.policy = policy;
+        let ds = build_dataset(&cfg);
+        let zc = run_experiment_on(&cfg, fast_opts(), &ds);
+        let oracle = run_experiment_alloc_on(&cfg, fast_opts(), &ds);
+        assert_runs_equal(&zc, &oracle);
+    }
+}
+
+#[test]
+fn d1_protocol_traces_are_identical() {
+    let cfg = tiny_cfg();
+    let ds = build_dataset(&cfg);
+    let trace_opts = || DriverOptions {
+        trace: true,
+        ..fast_opts()
+    };
+    let zc = run_experiment_on(&cfg, trace_opts(), &ds);
+    let oracle = run_experiment_alloc_on(&cfg, trace_opts(), &ds);
+    let a = zc.trace.expect("zc trace").to_csv();
+    let b = oracle.trace.expect("oracle trace").to_csv();
+    assert_eq!(a, b, "event-for-event protocol trace must match");
+}
+
+#[test]
+fn d2_steady_state_allocation_free_on_both_servers() {
+    let mut cfg = tiny_cfg();
+    cfg.train.clocks = 24;
+    // keep the in-flight message population flat after warmup
+    cfg.cluster.drop_prob = 0.0;
+    cfg.cluster.straggler_prob = 0.0;
+    let opts = || DriverOptions {
+        warmup_clocks: 8,
+        ..fast_opts()
+    };
+    let ds = build_dataset(&cfg);
+    let reference = run_experiment_on(&cfg, opts(), &ds);
+    assert_eq!(reference.steady_reallocs, 0, "reference server path");
+    let sharded = run_experiment_with(&cfg, opts(), &ds, ShardedServer::new);
+    assert_eq!(sharded.steady_reallocs, 0, "sharded server path");
+}
+
+fn sweep_grid() -> SweepConfig {
+    SweepConfig {
+        machines: vec![1, 2],
+        staleness: vec![0, 4],
+        policies: vec!["ssp".into(), "bsp".into()],
+        etas: vec![],
+        threads: 1,
+    }
+}
+
+fn sweep_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::tiny();
+    c.train.clocks = 6;
+    c.train.batches_per_clock = 1;
+    c
+}
+
+fn sweep_opts(threads: usize) -> SweepOptions {
+    SweepOptions {
+        threads,
+        per_batch_s: Some(0.01),
+        eval_samples: 64,
+        ..SweepOptions::default()
+    }
+}
+
+#[test]
+fn d3_sweep_bitwise_identical_across_thread_budgets() {
+    let cfg = sweep_cfg();
+    let grid = sweep_grid();
+    // 2 machines x (ssp s=0, ssp s=4, bsp) = 6 cells
+    let baseline = run_sweep(&cfg, &grid, &sweep_opts(1)).unwrap();
+    let baseline_json = metrics::sweep_json(&baseline, false).to_string();
+    assert_eq!(baseline.cells.len(), 6);
+    for budget in [2usize, 4, 7] {
+        let report = run_sweep(&cfg, &grid, &sweep_opts(budget)).unwrap();
+        assert_eq!(report.outer_workers, budget.min(6));
+        let json = metrics::sweep_json(&report, false).to_string();
+        assert_eq!(
+            json, baseline_json,
+            "budget {budget} changed the sweep's statistical content"
+        );
+    }
+}
+
+#[test]
+fn d3_sweep_cell_is_exactly_its_derived_driver_run() {
+    let cfg = sweep_cfg();
+    let grid = sweep_grid();
+    let report = run_sweep(&cfg, &grid, &sweep_opts(4)).unwrap();
+    let cell = &report.cells[3]; // machines=2, ssp(s=0)
+    assert_eq!(cell.machines, 2);
+    // cells share the root seed: axes compare protocol, not seed noise
+    assert_eq!(cell.seed, cfg.train.seed);
+
+    let mut direct = cfg.clone();
+    direct.cluster.machines = cell.machines;
+    direct.ssp.policy = Policy::Ssp { staleness: 0 };
+    direct.train.eta = cell.eta;
+    direct.train.seed = cell.seed;
+    let ds = build_dataset(&direct);
+    let run = run_experiment_on(
+        &direct,
+        DriverOptions {
+            machines: Some(cell.machines),
+            per_batch_s: Some(0.01),
+            eval_samples: 64,
+            ..DriverOptions::default()
+        },
+        &ds,
+    );
+    assert_eq!(cell.final_objective, run.final_objective);
+    assert_eq!(cell.total_vtime, run.total_vtime);
+    assert_eq!(cell.steps, run.steps);
+    assert_eq!(cell.evals.len(), run.evals.len());
+    for (&(vtime, clock, objective), e) in cell.evals.iter().zip(&run.evals) {
+        assert_eq!(vtime, e.vtime);
+        assert_eq!(clock, e.clock);
+        assert_eq!(objective, e.objective);
+    }
+}
+
+#[test]
+fn d3_sweep_cells_are_allocation_free_too() {
+    let mut cfg = sweep_cfg();
+    cfg.train.clocks = 16;
+    cfg.cluster.drop_prob = 0.0;
+    cfg.cluster.straggler_prob = 0.0;
+    let grid = SweepConfig {
+        machines: vec![1, 3],
+        staleness: vec![2],
+        policies: vec!["ssp".into()],
+        etas: vec![],
+        threads: 2,
+    };
+    let report = run_sweep(
+        &cfg,
+        &grid,
+        &SweepOptions {
+            warmup_clocks: 6,
+            ..sweep_opts(2)
+        },
+    )
+    .unwrap();
+    for cell in &report.cells {
+        assert_eq!(
+            cell.steady_reallocs, 0,
+            "cell {} allocated at steady state",
+            cell.index
+        );
+    }
+}
