@@ -1,0 +1,188 @@
+//! Multi-process transport benchmark: throughput and bytes-on-wire of
+//! the shard-endpoint message boundary, over loopback TCP.
+//!
+//! Two measurements, recorded in `bench_results/BENCH_transport.json`
+//! (see rust/EXPERIMENTS.md §Transport):
+//!
+//! * **commits_per_s** — full commit cycles per second through a
+//!   `RemoteClient` (clock advance + one per-layer UPDATE per layer,
+//!   all synchronous RPCs), at 1 and at `layers` shard endpoints.
+//! * **gated_fetch** — bytes received per fetch with the version gate
+//!   cold (every layer ships), hot (nothing changed — headers only),
+//!   one-layer-dirty, and with the gate disabled. Asserts the
+//!   acceptance criterion: the hot fetch keeps the whole model payload
+//!   off the wire.
+//!
+//! Scale via SSPDNN_BENCH_SCALE ∈ {quick, default, full} as usual.
+
+mod support;
+
+use std::time::Instant;
+
+use sspdnn::nn::{GradSet, ParamSet};
+use sspdnn::ssp::transport::{self, RemoteClient};
+use sspdnn::ssp::{ParamServer, Policy, WorkerPort};
+use sspdnn::util::json::Json;
+use sspdnn::util::Pcg64;
+
+const TRANSPORT_JSON: &str = "bench_results/BENCH_transport.json";
+
+fn bench_dims() -> Vec<usize> {
+    match support::scale() {
+        "quick" => vec![64, 48, 32, 10],
+        "full" => vec![360, 512, 512, 512, 2001],
+        _ => vec![360, 256, 256, 2001],
+    }
+}
+
+fn commit_clocks() -> u64 {
+    match support::scale() {
+        "quick" => 60,
+        "full" => 2_000,
+        _ => 400,
+    }
+}
+
+/// Commit cycles/second through the wire: each cycle is one COMMIT RPC
+/// plus one UPDATE per layer (dense deltas), the worker hot path.
+fn bench_commits(init: &ParamSet, groups: usize) -> f64 {
+    let mut client =
+        transport::loopback(init.clone(), 1, Policy::Async, groups);
+    let mut delta: GradSet = init.zeros_like();
+    for l in &mut delta.layers {
+        l.w.fill(1e-4);
+        l.b.fill(1e-4);
+    }
+    let clocks = commit_clocks();
+    let start = Instant::now();
+    for clock in 0..clocks {
+        WorkerPort::commit_clock(&mut client, 0);
+        WorkerPort::apply_commit(&mut client, 0, clock, &delta);
+    }
+    let dt = start.elapsed().as_secs_f64();
+    let rate = clocks as f64 / dt;
+    let wire = client.wire_stats();
+    eprintln!(
+        "  [bench] commits: {groups} endpoint(s): {rate:.0} clocks/s \
+         ({:.1} MB sent over {clocks} clocks)",
+        wire.bytes_sent as f64 / 1e6
+    );
+    rate
+}
+
+struct FetchBytes {
+    cold: u64,
+    hot: u64,
+    one_layer: u64,
+    ungated: u64,
+}
+
+/// Bytes received per gated fetch in the cold / hot / one-dirty-layer /
+/// gate-off regimes.
+fn bench_gated_fetch(init: &ParamSet, groups: usize) -> FetchBytes {
+    let n_layers = init.n_layers();
+    let mut client =
+        transport::loopback(init.clone(), 1, Policy::Async, groups);
+    let mut buf = init.clone();
+    let mut seen = vec![u64::MAX; n_layers];
+    let mut own = Vec::new();
+    let mut delta: GradSet = init.zeros_like();
+
+    let mut fetch_bytes = |client: &mut RemoteClient,
+                           buf: &mut ParamSet,
+                           seen: &mut [u64],
+                           own: &mut Vec<u64>| {
+        let before = client.wire_stats().bytes_received;
+        client.fetch_into(0, buf, seen, own);
+        client.wire_stats().bytes_received - before
+    };
+
+    // cold: unknown provenance, every layer ships
+    let cold = fetch_bytes(&mut client, &mut buf, &mut seen, &mut own);
+    // hot: nothing changed, headers only
+    let hot = fetch_bytes(&mut client, &mut buf, &mut seen, &mut own);
+    // one layer dirty
+    delta.layers[0].w.fill(1e-4);
+    WorkerPort::commit_clock(&mut client, 0);
+    WorkerPort::apply_commit(&mut client, 0, 0, &delta);
+    let one_layer = fetch_bytes(&mut client, &mut buf, &mut seen, &mut own);
+
+    // gate off: the hot regime still ships everything
+    let mut ungated_client = client.with_gate(false);
+    let ungated =
+        fetch_bytes(&mut ungated_client, &mut buf, &mut seen, &mut own);
+
+    let model_payload: u64 =
+        init.layers.iter().map(|l| l.n_bytes() as u64).sum();
+    assert!(
+        cold >= model_payload && cold - hot >= model_payload,
+        "gate must keep the model payload off the wire: \
+         cold {cold}, hot {hot}, payload {model_payload}"
+    );
+    assert!(one_layer < cold, "one dirty layer must ship less than all");
+    assert!(ungated >= model_payload, "no-gate fetch ships everything");
+    eprintln!(
+        "  [bench] gated fetch ({groups} endpoint(s)): cold {cold} B | \
+         hot {hot} B | one-layer {one_layer} B | no-gate {ungated} B \
+         (model payload {model_payload} B)"
+    );
+    FetchBytes {
+        cold,
+        hot,
+        one_layer,
+        ungated,
+    }
+}
+
+fn main() {
+    let dims = bench_dims();
+    let mut rng = Pcg64::new(42);
+    let init = ParamSet::glorot(&dims, &mut rng);
+    let n_layers = init.n_layers();
+    let model_payload: u64 =
+        init.layers.iter().map(|l| l.n_bytes() as u64).sum();
+    println!(
+        "transport bench [{}]: dims {:?} ({} layers, {:.2} MB payload)",
+        support::scale(),
+        dims,
+        n_layers,
+        model_payload as f64 / 1e6
+    );
+
+    let commits_1 = bench_commits(&init, 1);
+    let commits_n = bench_commits(&init, n_layers);
+    let fetch_1 = bench_gated_fetch(&init, 1);
+    let fetch_n = bench_gated_fetch(&init, n_layers);
+
+    let fetch_json = |f: &FetchBytes| {
+        Json::obj(vec![
+            ("cold_bytes", Json::num(f.cold as f64)),
+            ("hot_bytes", Json::num(f.hot as f64)),
+            ("one_layer_bytes", Json::num(f.one_layer as f64)),
+            ("no_gate_bytes", Json::num(f.ungated as f64)),
+        ])
+    };
+    support::record_json(
+        TRANSPORT_JSON,
+        "transport",
+        Json::obj(vec![
+            (
+                "dims",
+                Json::Arr(dims.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            ("model_payload_bytes", Json::num(model_payload as f64)),
+            ("commits_per_s_1_endpoint", Json::num(commits_1)),
+            (
+                "commits_per_s_per_layer_endpoints",
+                Json::num(commits_n),
+            ),
+            ("gated_fetch_1_endpoint", fetch_json(&fetch_1)),
+            ("gated_fetch_per_layer_endpoints", fetch_json(&fetch_n)),
+        ]),
+    );
+    println!(
+        "commits/s: {commits_1:.0} (1 endpoint) vs {commits_n:.0} \
+         ({n_layers} endpoints); gated fetch cold {} B -> hot {} B",
+        fetch_1.cold, fetch_1.hot
+    );
+}

@@ -360,9 +360,12 @@ impl ExperimentConfig {
                     self.train.intra_op_threads = *n as usize
                 }
                 // the [sweep] table belongs to SweepConfig::apply_toml
-                // (the sweep harness); skip it here so one file can
-                // carry both the experiment and its grid
+                // (the sweep harness) and [transport] to
+                // TransportConfig::apply_toml (the serve/--server
+                // deployment path); skip them here so one file can
+                // carry the experiment, its grid and its endpoints
                 ("sweep", _, _) => {}
+                ("transport", _, _) => {}
                 (sec, k, _) => {
                     return Err(format!("unknown config key [{sec}] {k}"))
                 }
@@ -542,6 +545,81 @@ impl SweepConfig {
     }
 }
 
+/// The multi-process transport deployment (`ssp::transport`): where the
+/// shard service listens and how the layer shards map onto message
+/// endpoints. Parsed from the `[transport]` TOML table (which
+/// `ExperimentConfig::apply_toml` deliberately skips, like `[sweep]`)
+/// and overridable from the `serve`/`train --server` CLI flags.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportConfig {
+    /// Base listen/connect address `host:port`; shard group `g` uses
+    /// `port + g`.
+    pub addr: String,
+    /// Endpoint count (clamped to the layer count at serve time).
+    pub shard_groups: usize,
+    /// Version-gate delta fetches on the wire. Off: every read ships
+    /// every layer (the bench's no-gate baseline).
+    pub gated: bool,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            addr: "127.0.0.1:7070".into(),
+            shard_groups: 1,
+            gated: true,
+        }
+    }
+}
+
+impl TransportConfig {
+    /// Apply a parsed TOML-subset document's `[transport]` table.
+    pub fn apply_toml(&mut self, doc: &toml::TomlDoc) -> Result<(), String> {
+        use TomlValue::*;
+        for (section, key, value) in doc.entries() {
+            if section != "transport" {
+                continue;
+            }
+            match (key.as_str(), value) {
+                ("addr", Str(s)) => self.addr = s.clone(),
+                ("shard_groups", Int(n)) => {
+                    if *n < 1 {
+                        return Err(format!(
+                            "transport.shard_groups must be >= 1, got {n}"
+                        ));
+                    }
+                    self.shard_groups = *n as usize
+                }
+                ("gated", Bool(b)) => self.gated = *b,
+                (k, _) => {
+                    return Err(format!("unknown config key [transport] {k}"))
+                }
+            }
+        }
+        self.validate()
+    }
+
+    /// Serialize back to the `[transport]` table — `apply_toml` of the
+    /// output reproduces `self` (pinned by the round-trip test).
+    pub fn to_toml(&self) -> String {
+        format!(
+            "[transport]\naddr = \"{}\"\nshard_groups = {}\ngated = {}\n",
+            self.addr, self.shard_groups, self.gated
+        )
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        // same parser the service/client use, so validation accepts
+        // exactly what they can bind/dial
+        crate::ssp::transport::split_addr(&self.addr)
+            .map_err(|e| format!("transport.addr: {e}"))?;
+        if self.shard_groups == 0 {
+            return Err("transport.shard_groups must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -688,6 +766,85 @@ mod tests {
                 "negative value accepted: {doc}"
             );
         }
+    }
+
+    #[test]
+    fn transport_table_parses_and_is_skipped_by_experiment_config() {
+        // the PR-4 lesson: a new table must be explicitly skipped by
+        // ExperimentConfig::apply_toml or every combined config file
+        // fails with "unknown config key" — pin both halves here
+        let doc = parse_toml(
+            r#"
+            [train]
+            eta = 0.1
+            [transport]
+            addr = "0.0.0.0:9000"
+            shard_groups = 4
+            gated = false
+            "#,
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::tiny();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.train.eta, 0.1);
+        let mut t = TransportConfig::default();
+        t.apply_toml(&doc).unwrap();
+        assert_eq!(t.addr, "0.0.0.0:9000");
+        assert_eq!(t.shard_groups, 4);
+        assert!(!t.gated);
+    }
+
+    #[test]
+    fn transport_table_roundtrips_through_toml() {
+        for t in [
+            TransportConfig::default(),
+            TransportConfig {
+                addr: "10.1.2.3:7171".into(),
+                shard_groups: 7,
+                gated: false,
+            },
+            TransportConfig {
+                addr: "localhost:0".into(),
+                shard_groups: 1,
+                gated: true,
+            },
+        ] {
+            let doc = parse_toml(&t.to_toml()).unwrap();
+            let mut back = TransportConfig::default();
+            back.apply_toml(&doc).unwrap();
+            assert_eq!(back, t, "round trip of {t:?}");
+            // the emitted table is also skippable by the experiment
+            // config (same file, both consumers)
+            ExperimentConfig::tiny().apply_toml(&doc).unwrap();
+        }
+    }
+
+    #[test]
+    fn transport_config_validation() {
+        let mut t = TransportConfig::default();
+        t.validate().unwrap();
+        t.shard_groups = 0;
+        assert!(t.validate().is_err());
+        t = TransportConfig {
+            addr: "noport".into(),
+            ..TransportConfig::default()
+        };
+        assert!(t.validate().is_err());
+        t = TransportConfig {
+            addr: "host:99999".into(),
+            ..TransportConfig::default()
+        };
+        assert!(t.validate().is_err(), "port must fit u16");
+
+        let bad = parse_toml("[transport]\nbogus = 1\n").unwrap();
+        assert!(TransportConfig::default().apply_toml(&bad).is_err());
+        let zero = parse_toml("[transport]\nshard_groups = 0\n").unwrap();
+        assert!(TransportConfig::default().apply_toml(&zero).is_err());
+        let neg = parse_toml("[transport]\nshard_groups = -2\n").unwrap();
+        assert!(TransportConfig::default().apply_toml(&neg).is_err());
+        // wrong value type for a known key is rejected, not ignored
+        let wrong = parse_toml("[transport]\ngated = \"yes\"\n").unwrap();
+        assert!(TransportConfig::default().apply_toml(&wrong).is_err());
     }
 
     #[test]

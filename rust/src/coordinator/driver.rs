@@ -405,8 +405,9 @@ pub fn run_experiment_with<S: ParamServer>(
         .unwrap_or_else(|| EngineKind::Native(NativeEngine::new(mlp.clone())));
 
     // init params — same seed across machine counts so trajectories match
-    let mut init_rng = Pcg64::new(cfg.train.seed ^ 0xD11);
-    let init = ParamSet::glorot(&cfg.model.dims, &mut init_rng);
+    // (shared derivation: the serve deployment path builds the remote
+    // server from the same bits)
+    let init = super::init_params(cfg);
     let model_bytes = init.n_params() * 4;
     let n_layers = init.n_layers();
 
@@ -864,8 +865,9 @@ pub fn run_experiment_alloc_with<S: ParamServer>(
         .unwrap_or_else(|| EngineKind::Native(NativeEngine::new(mlp.clone())));
 
     // init params — same seed across machine counts so trajectories match
-    let mut init_rng = Pcg64::new(cfg.train.seed ^ 0xD11);
-    let init = ParamSet::glorot(&cfg.model.dims, &mut init_rng);
+    // (shared derivation: the serve deployment path builds the remote
+    // server from the same bits)
+    let init = super::init_params(cfg);
     let model_bytes = init.n_params() * 4;
 
     // evaluation subset (fixed)

@@ -37,10 +37,25 @@ pub use sweep::{
 pub use engine::{EngineKind, GradEngine, NativeEngine};
 pub use trace::{Trace, TraceEvent, TraceSummary, WorkerSummary};
 pub use threaded::{
-    native_factory, run_threaded, run_threaded_global, ThreadedOptions,
-    ThreadedResult,
+    native_factory, run_threaded, run_threaded_global, run_threaded_on,
+    ThreadedOptions, ThreadedResult,
 };
 pub use tracker::{EvalPoint, Tracker};
+
+use crate::config::ExperimentConfig;
+use crate::nn::ParamSet;
+use crate::util::Pcg64;
+
+/// The deterministic initial parameters every runner derives from the
+/// config seed (`seed ^ 0xD11`, Glorot). One definition on purpose:
+/// the `serve` deployment path must build its remote server from the
+/// same bits the driver, the threaded runner and the sweep calibration
+/// assume, or the version-gated fetch premise ("the worker's initial
+/// buffer holds the master at revision 0") silently breaks.
+pub fn init_params(cfg: &ExperimentConfig) -> ParamSet {
+    let mut init_rng = Pcg64::new(cfg.train.seed ^ 0xD11);
+    ParamSet::glorot(&cfg.model.dims, &mut init_rng)
+}
 
 /// Learning-rate schedule. The paper's experiments use a fixed rate
 /// (§6.1); the theory (Assumption 1) requires η_t = O(t^−d), provided for

@@ -230,8 +230,7 @@ fn calibrate(cfg: &ExperimentConfig, dataset: &Dataset) -> f64 {
     )
     .with_intra_op_threads(cfg.train.intra_op_threads);
     let mut engine = EngineKind::Native(NativeEngine::new(mlp));
-    let mut init_rng = crate::util::Pcg64::new(cfg.train.seed ^ 0xD11);
-    let init = ParamSet::glorot(&cfg.model.dims, &mut init_rng);
+    let init = super::init_params(cfg);
     let idx: Vec<usize> =
         (0..cfg.train.batch.min(dataset.n_samples())).collect();
     let mut x = Matrix::zeros(idx.len(), dataset.n_features());

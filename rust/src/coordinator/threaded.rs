@@ -34,6 +34,12 @@
 //! of its in-window update (ε ≤ 1) — exactly the best-effort semantics
 //! of Eq. 5 condition 5. The staleness barrier governs how far workers
 //! drift in both.
+//!
+//! The worker loop itself is generic over [`ssp::WorkerPort`]
+//! (`run_threaded_on`): `run_threaded` backs it with `&ShardedServer`
+//! ports (shared memory), and `ssp::transport::RemoteClient` backs it
+//! with one framed-TCP connection set per worker — the same loop,
+//! byte-for-byte, across a real process boundary.
 
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
@@ -41,7 +47,7 @@ use std::thread;
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::nn::{Labels, ParamSet};
-use crate::ssp::{Server, ShardedServer};
+use crate::ssp::{Server, ShardedServer, WorkerPort};
 use crate::tensor::Matrix;
 use crate::util::Pcg64;
 
@@ -84,8 +90,7 @@ struct Setup {
 
 fn setup(cfg: &ExperimentConfig, dataset: &Dataset, opts: &ThreadedOptions) -> (Setup, Pcg64) {
     let mut root_rng = Pcg64::new(cfg.train.seed);
-    let mut init_rng = Pcg64::new(cfg.train.seed ^ 0xD11);
-    let init = ParamSet::glorot(&cfg.model.dims, &mut init_rng);
+    let init = super::init_params(cfg);
 
     // fixed eval subset
     let mut eval_rng = Pcg64::new(cfg.train.seed ^ 0xE7A1);
@@ -133,9 +138,39 @@ pub fn run_threaded(
 ) -> ThreadedResult {
     let machines = opts.machines;
     let policy = cfg.ssp.policy;
-    let (su, mut root_rng) = setup(cfg, dataset, &opts);
-
+    let (su, root_rng) = setup(cfg, dataset, &opts);
     let server = ShardedServer::new(su.init.clone(), machines, policy);
+    run_threaded_ports(cfg, dataset, &opts, su, root_rng, |_| &server)
+}
+
+/// The same runner over any [`WorkerPort`] backing — the seam the
+/// multi-process transport plugs into. `port_for(p)` is called once per
+/// worker `0..machines` (each port moves onto that worker's thread, so
+/// a remote backing hands every worker its own connection set — exactly
+/// the per-process deployment shape) and once more with index
+/// `machines` for the final master snapshot. The server behind the
+/// ports must hold the same initial parameters this config derives
+/// (`coordinator::init_params`); `run_threaded` itself is this function
+/// applied to `&ShardedServer` ports.
+pub fn run_threaded_on<P: WorkerPort>(
+    cfg: &ExperimentConfig,
+    dataset: &Dataset,
+    opts: ThreadedOptions,
+    port_for: impl FnMut(usize) -> P,
+) -> ThreadedResult {
+    let (su, root_rng) = setup(cfg, dataset, &opts);
+    run_threaded_ports(cfg, dataset, &opts, su, root_rng, port_for)
+}
+
+fn run_threaded_ports<P: WorkerPort>(
+    cfg: &ExperimentConfig,
+    dataset: &Dataset,
+    opts: &ThreadedOptions,
+    su: Setup,
+    mut root_rng: Pcg64,
+    mut port_for: impl FnMut(usize) -> P,
+) -> ThreadedResult {
+    let machines = opts.machines;
     let start = std::time::Instant::now();
     let evals = Arc::new(Mutex::new(Vec::new()));
 
@@ -178,7 +213,9 @@ pub fn run_threaded(
         let mut eval_chan = Some((eval_tx, pool_rx));
         for shard in &su.shards {
             let p = shard.worker();
-            let server = &server;
+            // the worker's server port (shared-memory reference or a
+            // remote connection set) moves onto its thread
+            let mut port = port_for(p);
             let mut engine = (opts.engine_factory)(p);
             let mut batches =
                 shard.minibatches(cfg.train.batch, root_rng.split(100 + p as u64));
@@ -188,7 +225,7 @@ pub fn run_threaded(
             let eval_chan = if p == 0 { eval_chan.take() } else { None };
             let dataset = &*dataset;
             let cfg = &*cfg;
-            let opts = &opts;
+            let opts = &*opts;
             scope.spawn(move || {
                 // per-worker reusable buffers: gradient accumulator,
                 // batch indices, batch features/labels — written every
@@ -204,14 +241,16 @@ pub fn run_threaded(
                 for clock in 0..cfg.train.clocks as u64 {
                     // barrier + read guarantee: park on the server's
                     // condvar; no parameter state is locked while waiting
-                    server.wait_until_ready(p);
+                    port.wait_until_ready(p);
                     // version-gated zero-copy fetch straight into the
                     // cache's view buffer: only layers whose revision
-                    // advanced since our last fetch move at all. Our own
-                    // commits were applied by us before this fetch, so
-                    // the refreshed view needs no read-my-writes re-fold.
+                    // advanced since our last fetch move at all (over a
+                    // remote port, only those layers ride the wire).
+                    // Our own commits were applied by us before this
+                    // fetch, so the refreshed view needs no
+                    // read-my-writes re-fold.
                     let (buf, seen, own) = cache.refresh_target();
-                    server.fetch_into(p, buf, seen, own);
+                    port.fetch_view(p, buf, seen, own);
 
                     // compute without holding anything
                     for _ in 0..cfg.train.batches_per_clock {
@@ -235,8 +274,8 @@ pub fn run_threaded(
                     // under only its own shard's lock (no UpdateMsg
                     // clones), waiters get one condvar pulse
                     let committed = cache.clock();
-                    server.commit(p);
-                    server.apply_commit(p, committed, cache.pending());
+                    port.commit_clock(p);
+                    port.apply_commit(p, committed, cache.pending());
                     cache.finish_commit();
 
                     if let Some((tx, pool)) = &eval_chan {
@@ -245,7 +284,7 @@ pub fn run_threaded(
                             // (deterministic state), objective off-thread
                             let mut job =
                                 pool.recv().expect("evaluator died");
-                            server.snapshot_into_gated(
+                            port.snapshot_gated(
                                 &mut job.snap,
                                 &mut job.last_seen,
                             );
@@ -260,7 +299,7 @@ pub fn run_threaded(
     });
 
     let wall_seconds = start.elapsed().as_secs_f64();
-    let final_params = server.snapshot();
+    let final_params = port_for(machines).master_snapshot();
     let mut engine = (opts.engine_factory)(0);
     let final_objective = engine.objective(&final_params, &su.eval_x, &su.eval_y);
     let steps =

@@ -38,8 +38,18 @@
 //!   snapshot layer by layer with no global critical section; blocked
 //!   workers park on a condvar that commits pulse. Given the same operation
 //!   sequence the two implementations are bitwise identical (asserted by
-//!   `tests/property_ssp.rs`), and the shard boundary is the intended
-//!   message boundary for a future multi-process network transport.
+//!   `tests/property_ssp.rs`).
+//! * `ssp::transport` — the shard boundary as a **real message
+//!   boundary**: `ShardService` serves a `ShardedServer` over one TCP
+//!   endpoint per shard group (framed little-endian wire protocol,
+//!   `rust/EXPERIMENTS.md` §Transport), and `ssp::RemoteClient` is a
+//!   third `ParamServer` implementation speaking it — the property
+//!   suite, the discrete-event driver, the sweep harness and the
+//!   threaded runner (via `ssp::WorkerPort` / `run_threaded_on`) run
+//!   against a remote server unchanged, bitwise-equal on fixed
+//!   schedules. Gated fetches carry the subscriber's revision vector,
+//!   so unchanged layers never touch the wire. Deployment:
+//!   `sspdnn serve` + `sspdnn train --server`, `[transport]` config.
 //!
 //! ## The steady-state training step is zero-copy and zero-allocation
 //!

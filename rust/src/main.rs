@@ -13,14 +13,15 @@
 //! --out <dir> (write CSV/JSON results).
 
 use sspdnn::cli::Args;
-use sspdnn::config::{ExperimentConfig, SweepConfig, TomlDoc};
+use sspdnn::config::{ExperimentConfig, SweepConfig, TomlDoc, TransportConfig};
 use sspdnn::coordinator::{
-    build_dataset, run_experiment_on, run_sweep, DriverOptions, EtaSchedule,
-    SweepOptions,
+    build_dataset, init_params, run_experiment_on, run_experiment_with,
+    run_sweep, DriverOptions, EtaSchedule, SweepOptions,
 };
 use sspdnn::metrics;
 use sspdnn::runtime::{Manifest, PjrtEngine};
-use sspdnn::ssp::Policy;
+use sspdnn::ssp::transport::{RemoteClient, ShardService};
+use sspdnn::ssp::{Policy, ShardedServer};
 use sspdnn::theory;
 use sspdnn::util::timer::fmt_duration;
 
@@ -34,6 +35,7 @@ fn main() {
     };
     let code = match args.command.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
         "speedup" => cmd_speedup(&args),
@@ -60,6 +62,9 @@ USAGE: sspdnn <command> [flags]
 
 COMMANDS:
   train      run one SSP training experiment on the simulated cluster
+  serve      host a config's sharded SSP parameter server over TCP
+             (one endpoint per shard group; workers attach with
+             `train --server`)
   simulate   traced protocol run: per-worker staleness/blocking/delay stats
   sweep      parallel deterministic grid sweep over (machines, staleness,
              policy, eta) cells; consolidated SweepReport JSON/CSV
@@ -79,6 +84,16 @@ FLAGS (train/speedup/theory):
   --threads T                 intra-op GEMM threads per worker (default 1)
   --engine <native|pjrt>      gradient engine (pjrt needs artifacts/)
   --out <dir>                 write curve CSV + run JSON
+
+FLAGS (transport; also settable via the [transport] TOML table):
+  --server host:port          train: back the run with a remote parameter
+                              server (group 0's endpoint; siblings are
+                              discovered on port+1, port+2, ...)
+  --no-gate                   train: ship every layer on every fetch
+                              (disable the version-gated delta reads)
+  --addr host:port            serve: base listen address (group g binds
+                              port+g; default 127.0.0.1:7070)
+  --shard-groups N            serve: endpoint count (clamped to layers)
 
 FLAGS (sweep; grid also settable via the [sweep] TOML table):
   --grid-machines 1,2,4       machine counts to sweep
@@ -170,8 +185,31 @@ fn driver_opts(args: &Args, cfg: &ExperimentConfig) -> Result<DriverOptions, Str
     Ok(opts)
 }
 
+/// The `[transport]` table plus its CLI overrides.
+fn transport_config(
+    args: &Args,
+    doc: Option<&TomlDoc>,
+) -> Result<TransportConfig, String> {
+    let mut tcfg = TransportConfig::default();
+    if let Some(doc) = doc {
+        tcfg.apply_toml(doc)?;
+    }
+    if let Some(a) = args.get("addr") {
+        tcfg.addr = a.to_string();
+    }
+    if let Some(g) = args.get_usize("shard-groups").map_err(|e| e.to_string())? {
+        tcfg.shard_groups = g;
+    }
+    if args.get_bool("no-gate") {
+        tcfg.gated = false;
+    }
+    tcfg.validate()?;
+    Ok(tcfg)
+}
+
 fn cmd_train(args: &Args) -> Result<(), String> {
-    let cfg = build_config(args)?;
+    let doc = config_doc(args)?;
+    let cfg = build_config_with(args, doc.as_ref())?;
     let opts = driver_opts(args, &cfg)?;
     println!(
         "train: {} | {} machines | {} | {} params | engine {}",
@@ -182,7 +220,25 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         if args.get("engine") == Some("pjrt") { "pjrt" } else { "native" },
     );
     let dataset = build_dataset(&cfg);
-    let run = run_experiment_on(&cfg, opts, &dataset);
+    let run = match args.get("server") {
+        None => run_experiment_on(&cfg, opts, &dataset),
+        Some(addr) => {
+            // remote deployment path: the driver's parameter server is a
+            // RemoteClient speaking the shard-group wire protocol to a
+            // `sspdnn serve` process
+            let tcfg = transport_config(args, doc.as_ref())?;
+            let client = RemoteClient::connect_base(addr)?.with_gate(tcfg.gated);
+            println!(
+                "remote parameter server: {addr} ({} shard endpoints, gate {})",
+                client.groups(),
+                if tcfg.gated { "on" } else { "off" },
+            );
+            run_experiment_with(&cfg, opts, &dataset, move |init, workers, policy| {
+                client.check_run(&init, workers, policy);
+                client
+            })
+        }
+    };
     println!(
         "objective: {:.4} -> {:.4} over {} (virtual) | {} steps | eps {:.3}",
         run.evals.first().map(|e| e.objective).unwrap_or(f64::NAN),
@@ -212,6 +268,49 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
         println!("wrote {dir}/{}_curve.csv and _run.json", cfg.name);
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let doc = config_doc(args)?;
+    let cfg = build_config_with(args, doc.as_ref())?;
+    let tcfg = transport_config(args, doc.as_ref())?;
+    // the served master starts from the exact bits every worker derives
+    // from the shared config seed — the gated-fetch premise
+    let init = init_params(&cfg);
+    let workers = cfg.cluster.machines;
+    let server =
+        std::sync::Arc::new(ShardedServer::new(init, workers, cfg.ssp.policy));
+    let svc = ShardService::bind(server, &tcfg.addr, tcfg.shard_groups)?;
+    println!(
+        "serve: {} | {} workers | {} | {} layer shards over {} endpoints",
+        cfg.name,
+        workers,
+        cfg.ssp.policy.name(),
+        cfg.model.dims.len() - 1,
+        svc.groups(),
+    );
+    for (g, a) in svc.addrs().iter().enumerate() {
+        println!("  group {g}: {a}");
+    }
+    // `train --server` discovers sibling groups on port+1, port+2, ...
+    // — that convention only holds when a fixed base port was bound
+    // (port 0 gives every group an unrelated ephemeral port)
+    let ephemeral = sspdnn::ssp::transport::split_addr(&tcfg.addr)
+        .map(|(_, p)| p == 0)
+        .unwrap_or(false);
+    if ephemeral && svc.groups() > 1 {
+        println!(
+            "note: ephemeral ports — `train --server` needs a fixed base \
+             port to find the sibling groups; rerun with --addr host:PORT"
+        );
+    } else {
+        println!(
+            "attach workers with: sspdnn train --server {} [--preset ...]",
+            svc.addrs()[0]
+        );
+    }
+    svc.join();
     Ok(())
 }
 

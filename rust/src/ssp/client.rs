@@ -182,6 +182,20 @@ impl WorkerCache {
         }
     }
 
+    /// Invalidate the version gate without touching the view bits: the
+    /// next gated fetch recopies every layer. Call after reconnecting
+    /// to a *new server lifetime* — per-layer revision counters restart
+    /// at zero on a fresh server, so a last-seen vector carried over
+    /// from a previous lifetime could collide with the new counters and
+    /// wrongly keep stale bits (within one lifetime revisions only
+    /// grow, so a stale vector is safe and merely copies more). The
+    /// pending accumulator and clock are deliberately left alone: a
+    /// reconnect does not un-commit anything.
+    pub fn reset_gate(&mut self) {
+        self.last_seen.fill(u64::MAX);
+        self.touched.fill(false);
+    }
+
     /// Install a fresh server snapshot (the message path: the snapshot
     /// may or may not include this worker's own recent commits).
     /// `own_missing` is the portion of our committed updates NOT yet in
@@ -333,6 +347,50 @@ mod tests {
         let (_, seen, _) = c.refresh_target();
         assert_eq!(seen[0], u64::MAX, "refolded layer forces recopy");
         assert_eq!(seen[1], 0, "skipped layer keeps its gate entry");
+    }
+
+    #[test]
+    fn reset_gate_forces_full_recopy_across_server_lifetimes() {
+        // reconnect hazard: a fresh server restarts its revision
+        // counters at 0, which collides with a last-seen vector from
+        // the previous lifetime (0 == 0 skips the copy even though the
+        // new master's bits differ). reset_gate makes the next refresh
+        // copy everything, regardless of accumulated gate state.
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(0, init.clone());
+        {
+            let (_, seen, _) = c.refresh_target();
+            assert!(seen.iter().all(|&s| s == 0), "fresh gate state");
+        }
+        c.reset_gate();
+        let (_, seen, _) = c.refresh_target();
+        assert!(
+            seen.iter().all(|&s| s == u64::MAX),
+            "reset gate must invalidate every layer"
+        );
+    }
+
+    #[test]
+    fn reset_gate_is_reusable_and_preserves_pending_clock() {
+        // the reset path must be callable once per reconnect, however
+        // many reconnects happen, without disturbing commit state
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(0, init.clone());
+        c.add_local_update(&unit_update(&dims(), 0.5));
+        c.commit_clock();
+        assert_eq!(c.clock(), 1);
+        for _ in 0..3 {
+            c.reset_gate();
+            let (_, seen, _) = c.refresh_target();
+            assert!(seen.iter().all(|&s| s == u64::MAX));
+            // simulate a gated fetch refreshing the gate
+            for s in seen.iter_mut() {
+                *s = 7;
+            }
+        }
+        assert_eq!(c.clock(), 1, "reconnects never un-commit clocks");
+        let got = c.view().layers[0].w.at(0, 0);
+        assert!((got - 0.5).abs() < 1e-6, "view bits untouched by reset");
     }
 
     #[test]

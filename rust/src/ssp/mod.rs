@@ -32,14 +32,16 @@ mod clock;
 mod server;
 mod sharded;
 mod table;
+pub mod transport;
 
 pub use client::WorkerCache;
 pub use clock::ClockTable;
 pub use server::{FetchStats, ReadStats, Server};
 pub use sharded::{AtomicClockTable, ShardedServer};
 pub use table::{ParamTable, VersionVector};
+pub use transport::{RemoteClient, ShardService};
 
-use crate::nn::{LayerParams, ParamSet};
+use crate::nn::{GradSet, LayerParams, ParamSet};
 
 /// The SSP parameter-server protocol surface, implemented by both the
 /// single-lock reference `Server` and the scalable `ShardedServer`.
@@ -94,6 +96,45 @@ pub trait ParamServer {
     fn applied(&self, layer: usize, worker: usize) -> u64;
     /// Total reads served.
     fn reads(&self) -> u64;
+}
+
+/// Per-worker handle onto a (possibly remote) SSP server for the
+/// real-thread runner (`coordinator::run_threaded_on`): the `&mut self`
+/// surface one worker thread drives for its whole run. Implemented by
+/// `&ShardedServer` (shared memory — every thread's port is a reference
+/// to the same server) and by `transport::RemoteClient` (one message
+/// endpoint set per worker, the multi-process deployment shape).
+///
+/// The methods mirror the zero-copy hot path of `run_threaded`:
+/// barrier + read-guarantee wait, version-gated fetch into the worker's
+/// view buffer, clock commit, allocation-free delta hand-off, and the
+/// gated evaluation snapshot.
+pub trait WorkerPort: Send {
+    /// Block until `worker` may start its next clock (barrier cleared
+    /// and Eq. 5's read guarantee met).
+    fn wait_until_ready(&mut self, worker: usize);
+    /// `ParamServer::fetch_into` through this port.
+    fn fetch_view(
+        &mut self,
+        worker: usize,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        own: &mut Vec<u64>,
+    ) -> (ReadStats, FetchStats);
+    /// Advance the clock table; returns the new committed count.
+    fn commit_clock(&mut self, worker: usize) -> u64;
+    /// Hand the clock's accumulated per-layer deltas to the server
+    /// (the `ShardedServer::apply_commit` contract: call `commit_clock`
+    /// first, deltas carry the just-finished clock's timestamp).
+    fn apply_commit(&mut self, worker: usize, clock: u64, delta: &GradSet);
+    /// Version-gated evaluation snapshot (`snapshot_into_gated`).
+    fn snapshot_gated(
+        &mut self,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+    ) -> FetchStats;
+    /// Full master snapshot (the end-of-run read).
+    fn master_snapshot(&mut self) -> ParamSet;
 }
 
 /// Consistency policy. `Bsp` ≡ `Ssp{staleness: 0}` with a full barrier;

@@ -41,7 +41,7 @@ use std::sync::{Condvar, Mutex, RwLock};
 
 use crate::nn::{GradSet, LayerParams, ParamSet};
 
-use super::{FetchStats, ParamServer, Policy, ReadStats, UpdateMsg};
+use super::{FetchStats, ParamServer, Policy, ReadStats, UpdateMsg, WorkerPort};
 
 /// Lock-free committed-clock table: `clocks[p] = c` means worker `p` has
 /// committed `c` clocks (same contract as `ClockTable`, atomically).
@@ -300,6 +300,36 @@ impl ShardedServer {
         }
     }
 
+    /// Bounded `wait_until_ready`: park at most `timeout`, returning
+    /// whether the worker is ready. The transport's WAIT handler polls
+    /// this instead of parking unconditionally, so a service shutdown
+    /// can interrupt a barrier wait whose releasing commit will never
+    /// arrive (e.g. the peer worker died).
+    pub fn wait_ready_timeout(
+        &self,
+        worker: usize,
+        timeout: std::time::Duration,
+    ) -> bool {
+        if self.is_ready(worker) {
+            return true;
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        let mut guard = self.notify.lock.lock().unwrap();
+        while !self.is_ready(worker) {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _) = self
+                .notify
+                .cv
+                .wait_timeout(guard, deadline - now)
+                .unwrap();
+            guard = g;
+        }
+        true
+    }
+
     fn is_ready(&self, worker: usize) -> bool {
         !self.must_wait(worker) && self.read_ready(worker)
     }
@@ -522,6 +552,95 @@ impl ShardedServer {
         }
     }
 
+    /// `(w rows, w cols, b len)` of layer `l` — the transport handshake
+    /// ships shapes so a remote client can allocate matching buffers.
+    pub fn layer_shape(&self, l: usize) -> (usize, usize, usize) {
+        let p = self.shards[l].params.read().unwrap();
+        (p.w.rows(), p.w.cols(), p.b.len())
+    }
+
+    /// Group-scoped version-gated read for the transport endpoint
+    /// (`transport::ShardService`): the per-layer logic of `fetch_into`
+    /// restricted to `layers`. `sink` is called once per layer in
+    /// order — `Some((rev, params))` under that shard's read lock for a
+    /// layer whose revision moved past `last_seen` (the endpoint
+    /// serializes the bits straight onto the wire), `None` for a layer
+    /// the gate skipped (confirmed by the same revision double-check as
+    /// `fetch_into`, so the subscriber's buffered copy is known
+    /// current). `own` is cleared and refilled with `worker`'s applied
+    /// counts for the group's layers. Deliberately does not touch the
+    /// server-wide read/copy counters: transport accounting lives at
+    /// the message boundary (`RemoteClient::wire_stats`).
+    pub fn fetch_group_gated(
+        &self,
+        worker: usize,
+        layers: std::ops::Range<usize>,
+        last_seen: &[u64],
+        own: &mut Vec<u64>,
+        mut sink: impl FnMut(usize, Option<(u64, &LayerParams)>),
+    ) -> ReadStats {
+        assert!(layers.end <= self.shards.len(), "group out of range");
+        assert_eq!(last_seen.len(), layers.len(), "group last_seen");
+        let c = self.clocks.clock(worker);
+        let s = self.policy.staleness().unwrap_or(u64::MAX);
+        let through = c.saturating_sub(s);
+        let committed: Vec<u64> =
+            (0..self.workers).map(|q| self.clocks.clock(q)).collect();
+        let mut stats = ReadStats::default();
+        own.clear();
+        for (i, l) in layers.enumerate() {
+            let shard = &self.shards[l];
+            let own_mark = own.len();
+            let stats_mark = stats;
+            let rev_pre = shard.rev.load(Ordering::SeqCst);
+            if rev_pre == last_seen[i] {
+                Self::layer_read_stats(
+                    shard, worker, through, &committed, own, &mut stats,
+                );
+                if shard.rev.load(Ordering::SeqCst) == rev_pre {
+                    sink(l, None);
+                    continue;
+                }
+                // raced an effective update: discard the tentative
+                // accounting and fall through to the locked copy
+                own.truncate(own_mark);
+                stats = stats_mark;
+            }
+            let params = shard.params.read().unwrap();
+            let rev = shard.rev.load(Ordering::SeqCst);
+            Self::layer_read_stats(
+                shard, worker, through, &committed, own, &mut stats,
+            );
+            sink(l, Some((rev, &params)));
+            drop(params);
+        }
+        stats
+    }
+
+    /// Group-scoped gated snapshot for the transport endpoint — the
+    /// `snapshot_into_gated` sibling of `fetch_group_gated` (no worker,
+    /// no ε statistics).
+    pub fn snapshot_group_gated(
+        &self,
+        layers: std::ops::Range<usize>,
+        last_seen: &[u64],
+        mut sink: impl FnMut(usize, Option<(u64, &LayerParams)>),
+    ) {
+        assert!(layers.end <= self.shards.len(), "group out of range");
+        assert_eq!(last_seen.len(), layers.len(), "group last_seen");
+        for (i, l) in layers.enumerate() {
+            let shard = &self.shards[l];
+            if shard.rev.load(Ordering::SeqCst) == last_seen[i] {
+                sink(l, None);
+                continue;
+            }
+            let params = shard.params.read().unwrap();
+            let rev = shard.rev.load(Ordering::SeqCst);
+            sink(l, Some((rev, &params)));
+            drop(params);
+        }
+    }
+
     /// Applied clocks of `(layer, worker)` — the version vector, read
     /// lock-free.
     pub fn applied(&self, layer: usize, worker: usize) -> u64 {
@@ -606,6 +725,47 @@ impl ParamServer for ShardedServer {
 
     fn reads(&self) -> u64 {
         ShardedServer::reads(self)
+    }
+}
+
+/// The shared-memory backing of the threaded runner: every worker
+/// thread holds a `&ShardedServer` port onto the same server.
+/// (Delegations deref `self` explicitly — `*self` is the
+/// `&ShardedServer` — so the name-colliding inherent methods are
+/// targeted unambiguously.)
+impl WorkerPort for &ShardedServer {
+    fn wait_until_ready(&mut self, worker: usize) {
+        ShardedServer::wait_until_ready(*self, worker)
+    }
+
+    fn fetch_view(
+        &mut self,
+        worker: usize,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        own: &mut Vec<u64>,
+    ) -> (ReadStats, FetchStats) {
+        ShardedServer::fetch_into(*self, worker, buf, last_seen, own)
+    }
+
+    fn commit_clock(&mut self, worker: usize) -> u64 {
+        ShardedServer::commit(*self, worker)
+    }
+
+    fn apply_commit(&mut self, worker: usize, clock: u64, delta: &GradSet) {
+        ShardedServer::apply_commit(*self, worker, clock, delta)
+    }
+
+    fn snapshot_gated(
+        &mut self,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+    ) -> FetchStats {
+        ShardedServer::snapshot_into_gated(*self, buf, last_seen)
+    }
+
+    fn master_snapshot(&mut self) -> ParamSet {
+        ShardedServer::snapshot(*self)
     }
 }
 
@@ -953,6 +1113,105 @@ mod tests {
         let mut full = ParamSet::zeros(&dims());
         srv.snapshot_into(&mut full);
         assert_eq!(full, buf);
+    }
+
+    #[test]
+    fn group_gated_fetch_matches_fetch_into() {
+        // driving the two halves [0, 1) and [1, 2) through the group
+        // path must reproduce the whole-model gated fetch exactly:
+        // same bits, same own counts, same summed ε stats, same gate
+        // decisions
+        let policy = Policy::Ssp { staleness: 3 };
+        let init = {
+            let mut rng = crate::util::Pcg64::new(21);
+            ParamSet::glorot(&dims(), &mut rng)
+        };
+        let srv = ShardedServer::new(init.clone(), 2, policy);
+        let oracle = ShardedServer::new(init.clone(), 2, policy);
+
+        let mut buf = init.clone();
+        let mut seen = vec![0u64; 2];
+        let mut o_buf = init.clone();
+        let mut o_seen = vec![0u64; 2];
+        let mut o_own = Vec::new();
+
+        for round in 0..3 {
+            if round > 0 {
+                let clock = round as u64 - 1;
+                for s in [&srv, &oracle] {
+                    s.commit(1);
+                    // only layer 1 changes on round 2: the gate must
+                    // skip layer 0 in both paths
+                    if round == 1 {
+                        s.apply_arrival(&msg(1, clock, 0));
+                    }
+                    s.apply_arrival(&msg(1, clock, 1));
+                }
+            }
+            let (o_stats, o_fs) =
+                oracle.fetch_into(0, &mut o_buf, &mut o_seen, &mut o_own);
+            let mut stats_sum = ReadStats::default();
+            let mut fs_sum = FetchStats::default();
+            let mut own_all = Vec::new();
+            for g in 0..2usize {
+                let range = g..g + 1;
+                let mut own = Vec::new();
+                // snapshot of the gate state the request carries (the
+                // wire path copies it into the request frame anyway)
+                let seen_group: Vec<u64> = seen[range.clone()].to_vec();
+                let stats = srv.fetch_group_gated(
+                    0,
+                    range.clone(),
+                    &seen_group,
+                    &mut own,
+                    |l, copied| match copied {
+                        None => fs_sum.layers_skipped += 1,
+                        Some((rev, lp)) => {
+                            buf.layers[l].copy_from(lp);
+                            seen[l] = rev;
+                            fs_sum.layers_copied += 1;
+                            fs_sum.bytes_copied += lp.n_bytes() as u64;
+                        }
+                    },
+                );
+                stats_sum.guaranteed += stats.guaranteed;
+                stats_sum.window_included += stats.window_included;
+                stats_sum.window_missed += stats.window_missed;
+                own_all.extend_from_slice(&own);
+            }
+            assert_eq!(buf, o_buf, "round {round}");
+            assert_eq!(seen, o_seen, "round {round}");
+            assert_eq!(own_all, o_own, "round {round}");
+            assert_eq!(stats_sum, o_stats, "round {round}");
+            assert_eq!(fs_sum, o_fs, "round {round}");
+        }
+    }
+
+    #[test]
+    fn group_gated_snapshot_skips_unchanged() {
+        let srv = ShardedServer::new(ParamSet::zeros(&dims()), 1, Policy::Async);
+        srv.commit(0);
+        srv.apply_arrival(&msg(0, 0, 1));
+        let mut seen = vec![0u64; 2];
+        let seen_req = seen.clone(); // the gate state the request carries
+        let mut copied = Vec::new();
+        let mut buf = ParamSet::zeros(&dims());
+        srv.snapshot_group_gated(0..2, &seen_req, |l, c| {
+            if let Some((rev, lp)) = c {
+                buf.layers[l].copy_from(lp);
+                seen[l] = rev;
+                copied.push(l);
+            }
+        });
+        assert_eq!(copied, vec![1], "only the touched layer ships");
+        assert_eq!(buf, srv.snapshot());
+    }
+
+    #[test]
+    fn layer_shape_reports_wire_dims() {
+        let srv = ShardedServer::new(ParamSet::zeros(&dims()), 1, Policy::Bsp);
+        assert_eq!(srv.layer_shape(0), (2, 3, 3));
+        assert_eq!(srv.layer_shape(1), (3, 2, 2));
     }
 
     #[test]

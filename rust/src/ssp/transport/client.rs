@@ -1,0 +1,805 @@
+//! `RemoteClient` — the worker side of the message boundary.
+//!
+//! A full [`ParamServer`] implementation over framed TCP: every trait
+//! call becomes one synchronous request per relevant endpoint, so the
+//! discrete-event driver (`run_experiment_with`), the sweep harness and
+//! the P1–P5 property suite run against a remote server byte-for-byte
+//! the way they run against the in-process `ShardedServer`. It also
+//! implements [`WorkerPort`], so `coordinator::run_threaded_on` can put
+//! one connection set under each OS worker thread — the multi-process
+//! deployment shape.
+//!
+//! Reads are **version-gated on the wire**: `fetch_into` ships the
+//! caller's per-layer last-seen revision vector and receives only the
+//! layers whose revision advanced (the endpoint's gate skip is a skip
+//! of actual payload bytes — `wire_stats` exposes the saving). The
+//! allocating `fetch`/`snapshot` paths keep a client-side **mirror** of
+//! the master plus a per-connection cached revision vector, so even the
+//! "full" reads only move changed layers over the network.
+//!
+//! Accounting (`reads`, `copy_totals`) is client-side: with one client
+//! per worker process there is no meaningful server-global count, and
+//! keeping it at the subscriber makes the numbers comparable with the
+//! in-process servers call-for-call.
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+
+use crate::nn::{GradSet, LayerParams, ParamSet};
+use crate::ssp::{FetchStats, ParamServer, Policy, ReadStats, UpdateMsg, WorkerPort};
+use crate::tensor::Matrix;
+
+use super::service::{policy_decode, ShardService};
+use super::wire::{self, op, Frame, FrameDecoder};
+
+/// Raw transport accounting, from the client's side of the sockets.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    pub frames_sent: u64,
+    pub frames_received: u64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
+/// Immutable facts learned at the HELLO handshake.
+#[derive(Clone, Debug)]
+struct Meta {
+    workers: usize,
+    n_layers: usize,
+    policy: Policy,
+    /// `(rows, cols, blen)` per layer — buffer allocation + shape checks.
+    shapes: Vec<(usize, usize, usize)>,
+    /// Layer range per shard group (contiguous, ascending).
+    ranges: Vec<std::ops::Range<usize>>,
+    /// Owning group of each layer.
+    layer_group: Vec<usize>,
+    /// FNV-1a digest of the served init (`transport::param_digest`),
+    /// from the handshake — `check_run`'s seed-mismatch tripwire.
+    init_digest: u64,
+    /// Version-gate delta reads (config `transport.gated`). Off: every
+    /// gated read sends an always-miss sentinel, shipping every layer.
+    gated: bool,
+}
+
+struct Conn {
+    stream: TcpStream,
+    dec: FrameDecoder,
+}
+
+/// The socket half: one connection per shard group + wire accounting.
+struct ClientIo {
+    conns: Vec<Conn>,
+    wire: WireStats,
+}
+
+struct Inner {
+    io: ClientIo,
+    /// Client-side master mirror backing the allocating `fetch` /
+    /// `snapshot` paths; refreshed through the same wire gate.
+    mirror: ParamSet,
+    /// The mirror's per-layer cached revision vector (`u64::MAX` =
+    /// unknown — the first refresh copies everything).
+    mirror_seen: Vec<u64>,
+    reads: u64,
+    copy_totals: FetchStats,
+}
+
+pub struct RemoteClient {
+    meta: Meta,
+    inner: Mutex<Inner>,
+    /// A loopback service owned by this client (tests/bench): declared
+    /// after `inner` so the sockets close before the service joins its
+    /// threads on drop.
+    service: Option<ShardService>,
+}
+
+impl ClientIo {
+    fn send(&mut self, g: usize, frame_bytes: &[u8]) -> Result<(), String> {
+        std::io::Write::write_all(&mut self.conns[g].stream, frame_bytes)
+            .map_err(|e| format!("send (group {g}): {e}"))?;
+        self.wire.frames_sent += 1;
+        self.wire.bytes_sent += frame_bytes.len() as u64;
+        Ok(())
+    }
+
+    fn recv(&mut self, g: usize) -> Result<Frame, String> {
+        let conn = &mut self.conns[g];
+        let frame = wire::read_frame(
+            &mut conn.stream,
+            &mut conn.dec,
+            &mut self.wire.bytes_received,
+        )
+        .map_err(|e| format!("recv (group {g}): {e}"))?
+        .ok_or_else(|| format!("server closed connection (group {g})"))?;
+        self.wire.frames_received += 1;
+        if frame.op == op::ERR {
+            return Err(format!(
+                "server error: {}",
+                String::from_utf8_lossy(&frame.payload)
+            ));
+        }
+        Ok(frame)
+    }
+
+    fn rpc(&mut self, g: usize, frame_bytes: &[u8]) -> Result<Frame, String> {
+        self.send(g, frame_bytes)?;
+        self.recv(g)
+    }
+
+    /// Control RPC carrying one u32 argument, returning a u64.
+    fn rpc_u64(&mut self, opcode: u8, arg: u32) -> Result<u64, String> {
+        let f = self.rpc(0, &wire::frame(opcode, &arg.to_le_bytes()))?;
+        expect_op(&f, op::U64)?;
+        let mut r = wire::Reader::new(&f.payload);
+        let v = r.u64()?;
+        r.done()?;
+        Ok(v)
+    }
+
+    /// Control RPC carrying one u32 argument, returning a bool.
+    fn rpc_bool(&mut self, opcode: u8, arg: u32) -> Result<bool, String> {
+        let f = self.rpc(0, &wire::frame(opcode, &arg.to_le_bytes()))?;
+        expect_op(&f, op::BOOL)?;
+        let mut r = wire::Reader::new(&f.payload);
+        let v = r.u8()?;
+        r.done()?;
+        Ok(v != 0)
+    }
+
+    /// Ship one per-layer additive update to its owning endpoint.
+    fn update(
+        &mut self,
+        meta: &Meta,
+        from: usize,
+        clock: u64,
+        layer: usize,
+        delta: &LayerParams,
+    ) -> Result<(), String> {
+        let g = meta.layer_group[layer];
+        let mut tx = Vec::with_capacity(21 + delta.n_bytes() + 12);
+        let mark = wire::begin_frame(&mut tx, op::UPDATE);
+        wire::put_u32(&mut tx, from as u32);
+        wire::put_u64(&mut tx, clock);
+        wire::put_u32(&mut tx, layer as u32);
+        wire::put_layer(&mut tx, delta);
+        wire::end_frame(&mut tx, mark);
+        let f = self.rpc(g, &tx)?;
+        expect_op(&f, op::OK)
+    }
+
+    /// Pipelined whole-clock commit: every layer's UPDATE frame is
+    /// written to its owning endpoint before any acknowledgement is
+    /// read (per-connection ordering preserves the per-layer FIFO), so
+    /// an L-layer commit costs ~1 round trip per *group*, not L
+    /// sequential round trips.
+    fn commit_updates(
+        &mut self,
+        meta: &Meta,
+        worker: usize,
+        clock: u64,
+        delta: &crate::nn::GradSet,
+    ) -> Result<(), String> {
+        for (layer, lp) in delta.layers.iter().enumerate() {
+            let g = meta.layer_group[layer];
+            let mut tx = Vec::with_capacity(21 + lp.n_bytes() + 12);
+            let mark = wire::begin_frame(&mut tx, op::UPDATE);
+            wire::put_u32(&mut tx, worker as u32);
+            wire::put_u64(&mut tx, clock);
+            wire::put_u32(&mut tx, layer as u32);
+            wire::put_layer(&mut tx, lp);
+            wire::end_frame(&mut tx, mark);
+            self.send(g, &tx)?;
+        }
+        for (g, range) in meta.ranges.iter().enumerate() {
+            for _ in range.clone() {
+                let f = self.recv(g)?;
+                expect_op(&f, op::OK)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Version-gated read fan-out: one pipelined FETCH per endpoint
+    /// (all requests sent before any response is read — one round-trip
+    /// of latency regardless of group count), responses decoded in
+    /// group order so `own` comes back in layer order.
+    fn gated_fetch(
+        &mut self,
+        meta: &Meta,
+        worker: usize,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        own: &mut Vec<u64>,
+        use_gate: bool,
+    ) -> Result<(ReadStats, FetchStats), String> {
+        for (g, range) in meta.ranges.iter().enumerate() {
+            let mut tx = Vec::with_capacity(9 + 4 + 8 * range.len());
+            let mark = wire::begin_frame(&mut tx, op::FETCH);
+            wire::put_u32(&mut tx, worker as u32);
+            for l in range.clone() {
+                wire::put_u64(&mut tx, if use_gate { last_seen[l] } else { u64::MAX });
+            }
+            wire::end_frame(&mut tx, mark);
+            self.send(g, &tx)?;
+        }
+        let mut stats = ReadStats::default();
+        let mut fs = FetchStats::default();
+        own.clear();
+        for (g, range) in meta.ranges.iter().enumerate() {
+            let f = self.recv(g)?;
+            expect_op(&f, op::FETCH_OK)?;
+            let mut r = wire::Reader::new(&f.payload);
+            stats.guaranteed += r.u64()?;
+            stats.window_included += r.u64()?;
+            stats.window_missed += r.u64()?;
+            for _ in range.clone() {
+                own.push(r.u64()?);
+            }
+            for l in range.clone() {
+                if r.u8()? == 1 {
+                    let rev = r.u64()?;
+                    r.layer_into(&mut buf.layers[l])?;
+                    last_seen[l] = rev;
+                    fs.layers_copied += 1;
+                    fs.bytes_copied += buf.layers[l].n_bytes() as u64;
+                } else {
+                    fs.layers_skipped += 1;
+                }
+            }
+            r.done()?;
+        }
+        Ok((stats, fs))
+    }
+
+    /// Gated snapshot fan-out (no worker identity, no ε statistics).
+    fn gated_snapshot(
+        &mut self,
+        meta: &Meta,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        use_gate: bool,
+    ) -> Result<FetchStats, String> {
+        for (g, range) in meta.ranges.iter().enumerate() {
+            let mut tx = Vec::with_capacity(9 + 8 * range.len());
+            let mark = wire::begin_frame(&mut tx, op::SNAPSHOT);
+            for l in range.clone() {
+                wire::put_u64(&mut tx, if use_gate { last_seen[l] } else { u64::MAX });
+            }
+            wire::end_frame(&mut tx, mark);
+            self.send(g, &tx)?;
+        }
+        let mut fs = FetchStats::default();
+        for (g, range) in meta.ranges.iter().enumerate() {
+            let f = self.recv(g)?;
+            expect_op(&f, op::SNAP_OK)?;
+            let mut r = wire::Reader::new(&f.payload);
+            for l in range.clone() {
+                if r.u8()? == 1 {
+                    let rev = r.u64()?;
+                    r.layer_into(&mut buf.layers[l])?;
+                    last_seen[l] = rev;
+                    fs.layers_copied += 1;
+                    fs.bytes_copied += buf.layers[l].n_bytes() as u64;
+                } else {
+                    fs.layers_skipped += 1;
+                }
+            }
+            r.done()?;
+        }
+        Ok(fs)
+    }
+}
+
+fn expect_op(f: &Frame, want: u8) -> Result<(), String> {
+    if f.op != want {
+        return Err(format!("unexpected reply opcode {} (want {want})", f.op));
+    }
+    Ok(())
+}
+
+/// Everything a HELLO_OK tells one connection.
+struct Hello {
+    workers: usize,
+    n_layers: usize,
+    groups: usize,
+    group: usize,
+    range: std::ops::Range<usize>,
+    policy: Policy,
+    init_digest: u64,
+    shapes: Vec<(usize, usize, usize)>,
+}
+
+fn handshake(addr: &SocketAddr) -> Result<(Conn, Hello), String> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_nodelay(true)
+        .map_err(|e| format!("nodelay: {e}"))?;
+    let mut conn = Conn {
+        stream,
+        dec: FrameDecoder::default(),
+    };
+    let hello = wire::frame(op::HELLO, &wire::WIRE_VERSION.to_le_bytes());
+    std::io::Write::write_all(&mut conn.stream, &hello)
+        .map_err(|e| format!("hello: {e}"))?;
+    let mut bytes_in = 0u64;
+    let f = wire::read_frame(&mut conn.stream, &mut conn.dec, &mut bytes_in)
+        .map_err(String::from)?
+        .ok_or("server closed during handshake")?;
+    if f.op == op::ERR {
+        return Err(format!(
+            "handshake rejected: {}",
+            String::from_utf8_lossy(&f.payload)
+        ));
+    }
+    expect_op(&f, op::HELLO_OK)?;
+    let mut r = wire::Reader::new(&f.payload);
+    let version = r.u32()?;
+    if version != wire::WIRE_VERSION {
+        return Err(format!(
+            "wire version {version} != {}",
+            wire::WIRE_VERSION
+        ));
+    }
+    let workers = r.u32()? as usize;
+    let n_layers = r.u32()? as usize;
+    let groups = r.u32()? as usize;
+    let group = r.u32()? as usize;
+    let start = r.u32()? as usize;
+    let len = r.u32()? as usize;
+    let tag = r.u8()?;
+    let staleness = r.u64()?;
+    let policy = policy_decode(tag, staleness)?;
+    let init_digest = r.u64()?;
+    let mut shapes = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        let blen = r.u32()? as usize;
+        shapes.push((rows, cols, blen));
+    }
+    r.done()?;
+    if group >= groups || start + len > n_layers {
+        return Err("inconsistent handshake geometry".into());
+    }
+    Ok((
+        conn,
+        Hello {
+            workers,
+            n_layers,
+            groups,
+            group,
+            range: start..start + len,
+            policy,
+            init_digest,
+            shapes,
+        },
+    ))
+}
+
+impl RemoteClient {
+    /// Lock the connection state, recovering from poisoning: transport
+    /// failures panic *between* request/response cycles (never with a
+    /// half-written frame buffered), so `Inner` is consistent even if a
+    /// previous call panicked — e.g. after an ERR reply the connection
+    /// and the caller's client remain usable.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Connect to explicit group endpoints (any order; each connection
+    /// reports which group it serves). Tests pass
+    /// [`ShardService::addrs`] straight through.
+    pub fn connect(addrs: &[SocketAddr]) -> Result<RemoteClient, String> {
+        if addrs.is_empty() {
+            return Err("no endpoint addresses".into());
+        }
+        let mut pairs = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            pairs.push(handshake(addr)?);
+        }
+        Self::assemble(pairs)
+    }
+
+    /// Connect to a base address and discover the sibling group
+    /// endpoints by the CLI port convention (group `g` on `port + g`).
+    pub fn connect_base(addr: &str) -> Result<RemoteClient, String> {
+        let (host, port) = super::service::split_addr(addr)?;
+        let first: SocketAddr = resolve(host, port)?;
+        let (conn, hello) = handshake(&first)?;
+        let groups = hello.groups;
+        if hello.group != 0 {
+            return Err(format!(
+                "{addr} serves group {} — point --server at group 0",
+                hello.group
+            ));
+        }
+        let mut pairs = vec![(conn, hello)];
+        for g in 1..groups {
+            let p = port
+                .checked_add(g as u16)
+                .ok_or_else(|| format!("group {g} port overflows u16"))?;
+            pairs.push(handshake(&resolve(host, p)?)?);
+        }
+        Self::assemble(pairs)
+    }
+
+    fn assemble(pairs: Vec<(Conn, Hello)>) -> Result<RemoteClient, String> {
+        let first = &pairs[0].1;
+        let (workers, n_layers, groups, policy) =
+            (first.workers, first.n_layers, first.groups, first.policy);
+        let init_digest = first.init_digest;
+        let shapes = first.shapes.clone();
+        if pairs.len() != groups {
+            return Err(format!(
+                "server has {groups} shard groups, connected to {}",
+                pairs.len()
+            ));
+        }
+        let mut ranges: Vec<Option<std::ops::Range<usize>>> =
+            vec![None; groups];
+        let mut conns: Vec<Option<Conn>> =
+            pairs.iter().map(|_| None).collect();
+        for (conn, h) in pairs {
+            if h.workers != workers
+                || h.n_layers != n_layers
+                || h.groups != groups
+                || h.policy != policy
+                || h.init_digest != init_digest
+                || h.shapes != shapes
+            {
+                return Err("endpoints disagree about the server".into());
+            }
+            if ranges[h.group].is_some() {
+                return Err(format!("group {} connected twice", h.group));
+            }
+            ranges[h.group] = Some(h.range);
+            conns[h.group] = Some(conn);
+        }
+        let ranges: Vec<std::ops::Range<usize>> =
+            ranges.into_iter().map(Option::unwrap).collect();
+        let conns: Vec<Conn> = conns.into_iter().map(Option::unwrap).collect();
+        // groups must tile 0..n_layers contiguously in order
+        let mut next = 0;
+        for r in &ranges {
+            if r.start != next {
+                return Err("shard groups do not tile the layers".into());
+            }
+            next = r.end;
+        }
+        if next != n_layers {
+            return Err("shard groups do not cover every layer".into());
+        }
+        let mut layer_group = vec![0usize; n_layers];
+        for (g, r) in ranges.iter().enumerate() {
+            for l in r.clone() {
+                layer_group[l] = g;
+            }
+        }
+        let mirror = ParamSet {
+            layers: shapes
+                .iter()
+                .map(|&(rows, cols, blen)| LayerParams {
+                    w: Matrix::zeros(rows, cols),
+                    b: vec![0.0; blen],
+                })
+                .collect(),
+        };
+        Ok(RemoteClient {
+            meta: Meta {
+                workers,
+                n_layers,
+                policy,
+                shapes,
+                ranges,
+                layer_group,
+                init_digest,
+                gated: true,
+            },
+            inner: Mutex::new(Inner {
+                io: ClientIo {
+                    conns,
+                    wire: WireStats::default(),
+                },
+                mirror,
+                mirror_seen: vec![u64::MAX; n_layers],
+                reads: 0,
+                copy_totals: FetchStats::default(),
+            }),
+            service: None,
+        })
+    }
+
+    /// Disable/enable on-wire version gating (config `transport.gated`;
+    /// off ships every layer on every read — the bench's baseline).
+    pub fn with_gate(mut self, gated: bool) -> RemoteClient {
+        self.meta.gated = gated;
+        self
+    }
+
+    /// Adopt a loopback service so it lives (and shuts down) with this
+    /// client — the tests' single-process harness.
+    pub(super) fn attach_service(&mut self, svc: ShardService) {
+        self.service = Some(svc);
+    }
+
+    /// The attached loopback service, if any.
+    pub fn service(&self) -> Option<&ShardService> {
+        self.service.as_ref()
+    }
+
+    pub fn groups(&self) -> usize {
+        self.meta.ranges.len()
+    }
+
+    /// Client-side transport accounting (frames/bytes both directions).
+    pub fn wire_stats(&self) -> WireStats {
+        self.lock().io.wire
+    }
+
+    /// Assert the remote server matches what a local run assumes —
+    /// called by the `--server` driver path before training starts.
+    /// Shapes, worker count and policy are all in the handshake; the
+    /// init *bits* are equal by construction (both sides derive them
+    /// from the config seed — `coordinator::init_params`).
+    pub fn check_run(&self, init: &ParamSet, workers: usize, policy: Policy) {
+        assert_eq!(
+            self.meta.workers, workers,
+            "remote server worker count differs from the run's"
+        );
+        assert_eq!(
+            self.meta.policy, policy,
+            "remote server policy differs from the run's"
+        );
+        assert_eq!(
+            self.meta.n_layers,
+            init.n_layers(),
+            "remote server layer count differs from the run's"
+        );
+        for (l, lp) in init.layers.iter().enumerate() {
+            assert_eq!(
+                self.meta.shapes[l],
+                (lp.w.rows(), lp.w.cols(), lp.b.len()),
+                "remote layer {l} shape differs from the run's"
+            );
+        }
+        assert_eq!(
+            self.meta.init_digest,
+            super::param_digest(init),
+            "remote init digest differs from the run's: the two \
+             processes derive different initial parameters (config \
+             seed mismatch?) — the version gate's premise would \
+             silently break"
+        );
+    }
+
+    /// Block until `worker` may start its next clock — the remote
+    /// sibling of `ShardedServer::wait_until_ready` (the server parks
+    /// this connection on its barrier condvar; other workers' clients
+    /// are unaffected because each has its own connections).
+    pub fn wait_until_ready(&self, worker: usize) {
+        let mut inner = self.lock();
+        let f = inner
+            .io
+            .rpc(0, &wire::frame(op::WAIT, &(worker as u32).to_le_bytes()))
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        expect_op(&f, op::OK).unwrap_or_else(|e| panic!("ssp transport: {e}"));
+    }
+
+    /// Version-gated evaluation snapshot — the remote sibling of
+    /// `ShardedServer::snapshot_into_gated` (feeds `copy_totals`).
+    pub fn snapshot_into_gated(
+        &self,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+    ) -> FetchStats {
+        assert_eq!(buf.layers.len(), self.meta.n_layers, "snapshot buffer");
+        assert_eq!(last_seen.len(), self.meta.n_layers, "snapshot last_seen");
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        let fs = inner
+            .io
+            .gated_snapshot(&self.meta, buf, last_seen, self.meta.gated)
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        inner.copy_totals.absorb(&fs);
+        fs
+    }
+}
+
+impl ParamServer for RemoteClient {
+    fn policy(&self) -> Policy {
+        self.meta.policy
+    }
+
+    fn workers(&self) -> usize {
+        self.meta.workers
+    }
+
+    fn n_layers(&self) -> usize {
+        self.meta.n_layers
+    }
+
+    fn clock(&self, worker: usize) -> u64 {
+        self.lock()
+            .io
+            .rpc_u64(op::CLOCK, worker as u32)
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"))
+    }
+
+    fn commit(&mut self, worker: usize) -> u64 {
+        self.lock()
+            .io
+            .rpc_u64(op::COMMIT, worker as u32)
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"))
+    }
+
+    fn apply_arrival(&mut self, msg: &UpdateMsg) {
+        self.lock()
+            .io
+            .update(&self.meta, msg.from, msg.clock, msg.layer, &msg.delta)
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+    }
+
+    fn must_wait(&self, worker: usize) -> bool {
+        self.lock()
+            .io
+            .rpc_bool(op::MUST_WAIT, worker as u32)
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"))
+    }
+
+    fn read_ready(&self, worker: usize) -> bool {
+        self.lock()
+            .io
+            .rpc_bool(op::READ_READY, worker as u32)
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"))
+    }
+
+    fn fetch(&mut self, worker: usize) -> (ParamSet, Vec<u64>, ReadStats) {
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        inner.reads += 1;
+        let mut own = Vec::with_capacity(self.meta.n_layers);
+        let (stats, _fs) = inner
+            .io
+            .gated_fetch(
+                &self.meta,
+                worker,
+                &mut inner.mirror,
+                &mut inner.mirror_seen,
+                &mut own,
+                self.meta.gated,
+            )
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        (inner.mirror.clone(), own, stats)
+    }
+
+    fn fetch_into(
+        &mut self,
+        worker: usize,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        own: &mut Vec<u64>,
+    ) -> (ReadStats, FetchStats) {
+        assert_eq!(buf.layers.len(), self.meta.n_layers, "fetch_into buffer");
+        assert_eq!(last_seen.len(), self.meta.n_layers, "fetch_into last_seen");
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        inner.reads += 1;
+        let (stats, fs) = inner
+            .io
+            .gated_fetch(&self.meta, worker, buf, last_seen, own, self.meta.gated)
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        inner.copy_totals.absorb(&fs);
+        (stats, fs)
+    }
+
+    fn snapshot(&self) -> ParamSet {
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        inner
+            .io
+            .gated_snapshot(
+                &self.meta,
+                &mut inner.mirror,
+                &mut inner.mirror_seen,
+                self.meta.gated,
+            )
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        inner.mirror.clone()
+    }
+
+    fn snapshot_into(&self, buf: &mut ParamSet) {
+        assert_eq!(buf.layers.len(), self.meta.n_layers, "snapshot buffer");
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        inner
+            .io
+            .gated_snapshot(
+                &self.meta,
+                &mut inner.mirror,
+                &mut inner.mirror_seen,
+                self.meta.gated,
+            )
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        buf.copy_from(&inner.mirror);
+    }
+
+    fn copy_totals(&self) -> FetchStats {
+        self.lock().copy_totals
+    }
+
+    fn applied(&self, layer: usize, worker: usize) -> u64 {
+        assert!(layer < self.meta.n_layers, "layer out of range");
+        let mut payload = Vec::with_capacity(8);
+        wire::put_u32(&mut payload, layer as u32);
+        wire::put_u32(&mut payload, worker as u32);
+        let mut inner = self.lock();
+        let f = inner
+            .io
+            .rpc(0, &wire::frame(op::APPLIED, &payload))
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        expect_op(&f, op::U64).unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        let mut r = wire::Reader::new(&f.payload);
+        let v = r.u64().unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        r.done().unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        v
+    }
+
+    fn reads(&self) -> u64 {
+        self.lock().reads
+    }
+}
+
+/// The per-worker connection set as a threaded-runner port: the same
+/// hot-path sequence `run_threaded` drives in shared memory, each step
+/// one (batched) message exchange.
+impl WorkerPort for RemoteClient {
+    fn wait_until_ready(&mut self, worker: usize) {
+        RemoteClient::wait_until_ready(self, worker)
+    }
+
+    fn fetch_view(
+        &mut self,
+        worker: usize,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        own: &mut Vec<u64>,
+    ) -> (ReadStats, FetchStats) {
+        ParamServer::fetch_into(self, worker, buf, last_seen, own)
+    }
+
+    fn commit_clock(&mut self, worker: usize) -> u64 {
+        ParamServer::commit(self, worker)
+    }
+
+    fn apply_commit(&mut self, worker: usize, clock: u64, delta: &GradSet) {
+        assert_eq!(delta.layers.len(), self.meta.n_layers, "commit layers");
+        self.lock()
+            .io
+            .commit_updates(&self.meta, worker, clock, delta)
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+    }
+
+    fn snapshot_gated(
+        &mut self,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+    ) -> FetchStats {
+        RemoteClient::snapshot_into_gated(self, buf, last_seen)
+    }
+
+    fn master_snapshot(&mut self) -> ParamSet {
+        ParamServer::snapshot(self)
+    }
+}
+
+fn resolve(host: &str, port: u16) -> Result<SocketAddr, String> {
+    use std::net::ToSocketAddrs;
+    (host, port)
+        .to_socket_addrs()
+        .map_err(|e| format!("resolve {host}:{port}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("{host}:{port} resolves to nothing"))
+}

@@ -1,0 +1,256 @@
+//! Multi-process SSP transport: a real message boundary at the shard
+//! seam.
+//!
+//! PR 1 sharded the parameter server per layer; each shard is an
+//! independently-consistent unit (own lock, own version vector, own
+//! slice of the clock-table protocol). This module puts a network
+//! endpoint exactly there:
+//!
+//! * [`wire`] — the framed little-endian binary protocol (length
+//!   prefix, one opcode byte, fixed layouts; documented in
+//!   `rust/EXPERIMENTS.md` §Transport) and the incremental
+//!   [`wire::FrameDecoder`] that survives arbitrarily torn reads.
+//! * [`ShardService`] — one TCP endpoint per **shard group** over a
+//!   shared [`ShardedServer`](crate::ssp::ShardedServer): per-layer
+//!   `UpdateMsg` commits, clock-table advances, barrier waits, and
+//!   **version-gated delta fetches** — the endpoint skips unchanged
+//!   layers for each subscriber the same way the in-process revision
+//!   gate skips copying them, except here the skip is payload bytes
+//!   that never touch the wire.
+//! * [`RemoteClient`] — the full `ssp::ParamServer` implementation over
+//!   those endpoints (plus `ssp::WorkerPort` for the threaded runner),
+//!   so the discrete-event driver, the sweep harness and the P1–P5
+//!   property suite run against a remote server unchanged, bitwise
+//!   equal to the in-process backings on any fixed schedule.
+//!
+//! Deployment: `sspdnn serve` hosts a config's server (one process),
+//! `sspdnn train --server host:port` drives it (another process); the
+//! `[transport]` TOML table / CLI flags pick the address, the shard
+//! group count and whether delta fetches are gated. Tests and benches
+//! run the same stack over loopback in-process via [`loopback`].
+
+mod client;
+mod service;
+pub mod wire;
+
+use std::sync::Arc;
+
+use crate::nn::ParamSet;
+
+use super::{Policy, ShardedServer};
+
+pub use client::{RemoteClient, WireStats};
+pub use service::{group_ranges, split_addr, ShardService};
+
+/// Order-sensitive FNV-1a digest over every parameter's f32 bit
+/// pattern. The HELLO handshake carries the served master's digest *at
+/// bind time* (i.e. of the initial parameters), and
+/// `RemoteClient::check_run` compares it against the worker's locally
+/// derived init — so a `serve`/`train` config-seed mismatch fails
+/// loudly at connect instead of silently breaking the version gate's
+/// premise that the worker's initial buffer holds the master at
+/// revision 0.
+pub fn param_digest(ps: &ParamSet) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h: u64 = 0xcbf29ce484222325;
+    for lp in &ps.layers {
+        for &x in lp.w.data() {
+            for b in x.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(PRIME);
+            }
+        }
+        for &x in &lp.b {
+            for b in x.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(PRIME);
+            }
+        }
+    }
+    h
+}
+
+/// Single-process harness: host `server` on ephemeral loopback
+/// endpoints and hand back a connected client that owns the service
+/// (dropping the client tears both down). The tests', benches' and
+/// property suite's way of standing up the full TCP stack.
+pub fn serve_local(
+    server: Arc<ShardedServer>,
+    groups: usize,
+) -> RemoteClient {
+    let svc = ShardService::bind(server, "127.0.0.1:0", groups)
+        .expect("bind loopback shard service");
+    let mut client =
+        RemoteClient::connect(svc.addrs()).expect("connect loopback client");
+    client.attach_service(svc);
+    client
+}
+
+/// [`serve_local`] plus the server construction — signature-compatible
+/// with the `make_server` constructors the property suite and
+/// `run_experiment_with` take, so a remote backing is one closure away:
+/// `|i, w, p| transport::loopback(i, w, p, groups)`.
+pub fn loopback(
+    init: ParamSet,
+    workers: usize,
+    policy: Policy,
+    groups: usize,
+) -> RemoteClient {
+    serve_local(Arc::new(ShardedServer::new(init, workers, policy)), groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LayerParams;
+    use crate::ssp::{ParamServer, UpdateMsg};
+    use crate::tensor::Matrix;
+
+    fn dims() -> Vec<usize> {
+        vec![3, 4, 2]
+    }
+
+    fn msg(from: usize, clock: u64, layer: usize, v: f32) -> UpdateMsg {
+        let d = dims();
+        UpdateMsg::new(
+            from,
+            clock,
+            layer,
+            LayerParams {
+                w: Matrix::from_fn(d[layer], d[layer + 1], |_, _| v),
+                b: vec![v; d[layer + 1]],
+            },
+        )
+    }
+
+    #[test]
+    fn param_digest_is_deterministic_and_bit_sensitive() {
+        let mut rng = crate::util::Pcg64::new(31);
+        let a = ParamSet::glorot(&dims(), &mut rng);
+        assert_eq!(param_digest(&a), param_digest(&a.clone()));
+        let mut b = a.clone();
+        *b.layers[1].w.at_mut(0, 0) += 1e-7;
+        assert_ne!(param_digest(&a), param_digest(&b), "bit flip detected");
+        // order-sensitive: swapping two layers' roles changes the hash
+        assert_ne!(
+            param_digest(&ParamSet::zeros(&dims())),
+            param_digest(&a),
+        );
+    }
+
+    #[test]
+    fn handshake_reports_server_geometry() {
+        let init = ParamSet::zeros(&dims());
+        let client =
+            loopback(init.clone(), 3, Policy::Ssp { staleness: 5 }, 2);
+        assert_eq!(client.workers(), 3);
+        assert_eq!(client.n_layers(), 2);
+        assert_eq!(client.groups(), 2);
+        assert_eq!(client.policy(), Policy::Ssp { staleness: 5 });
+        client.check_run(&init, 3, Policy::Ssp { staleness: 5 });
+    }
+
+    #[test]
+    fn commit_update_fetch_roundtrip() {
+        let init = ParamSet::zeros(&dims());
+        let mut client = loopback(init.clone(), 2, Policy::Async, 2);
+        assert_eq!(client.clock(0), 0);
+        assert_eq!(ParamServer::commit(&mut client, 0), 1);
+        assert_eq!(client.clock(0), 1);
+        client.apply_arrival(&msg(0, 0, 0, 0.5));
+        client.apply_arrival(&msg(0, 0, 1, 0.25));
+        assert_eq!(client.applied(0, 0), 1);
+        assert_eq!(client.applied(1, 0), 1);
+        let (snap, own, _stats) = client.fetch(1);
+        assert_eq!(own, vec![0, 0], "worker 1 wrote nothing");
+        assert!((snap.layers[0].w.at(0, 0) - 0.5).abs() < 1e-7);
+        assert!((snap.layers[1].b[0] - 0.25).abs() < 1e-7);
+        assert_eq!(client.reads(), 1);
+        // snapshot agrees with fetch
+        assert_eq!(ParamServer::snapshot(&client), snap);
+    }
+
+    #[test]
+    fn gated_fetch_into_matches_full_fetch_across_reuse() {
+        let init = {
+            let mut rng = crate::util::Pcg64::new(5);
+            ParamSet::glorot(&dims(), &mut rng)
+        };
+        let mut client =
+            loopback(init.clone(), 2, Policy::Ssp { staleness: 4 }, 2);
+        let mut buf = init.clone();
+        let mut seen = vec![0u64; 2];
+        let mut own = Vec::new();
+
+        // nothing committed: everything gated, buffer already current
+        let (_, fs) = client.fetch_into(0, &mut buf, &mut seen, &mut own);
+        assert_eq!(fs.layers_copied, 0);
+        assert_eq!(fs.layers_skipped, 2);
+        let (full, own_full, _) = client.fetch(0);
+        assert_eq!(buf, full);
+        assert_eq!(own, own_full);
+
+        // one layer changes: exactly one layer rides the wire
+        ParamServer::commit(&mut client, 1);
+        client.apply_arrival(&msg(1, 0, 1, 0.1));
+        let (_, fs) = client.fetch_into(0, &mut buf, &mut seen, &mut own);
+        assert_eq!(fs.layers_copied, 1);
+        assert_eq!(fs.layers_skipped, 1);
+        let (full, _, _) = client.fetch(0);
+        assert_eq!(buf, full);
+        let totals = client.copy_totals();
+        assert_eq!(totals.layers_copied, 1);
+        assert_eq!(totals.layers_skipped, 3);
+    }
+
+    #[test]
+    fn barrier_wait_blocks_until_peer_commits() {
+        let init = ParamSet::zeros(&dims());
+        let server = Arc::new(ShardedServer::new(init, 2, Policy::Bsp));
+        let mut fast = serve_local(Arc::clone(&server), 1);
+        // worker 0 runs one clock ahead: it must wait for worker 1
+        ParamServer::commit(&mut fast, 0);
+        fast.apply_arrival(&msg(0, 0, 0, 0.1));
+        fast.apply_arrival(&msg(0, 0, 1, 0.1));
+        assert!(fast.must_wait(0));
+        let t = std::thread::spawn(move || {
+            fast.wait_until_ready(0);
+            fast.clock(1)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // a second worker's commit (directly on the shared server, as
+        // another process would) releases the waiter
+        server.commit(1);
+        server.apply_arrival(&msg(1, 0, 0, 0.1));
+        server.apply_arrival(&msg(1, 0, 1, 0.1));
+        let seen = t.join().unwrap();
+        assert_eq!(seen, 1);
+    }
+
+    #[test]
+    fn out_of_order_update_is_rejected_not_fatal() {
+        let init = ParamSet::zeros(&dims());
+        let mut client = loopback(init, 1, Policy::Async, 1);
+        let bad = msg(0, 3, 0, 0.1); // skips clocks 0..3
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || client.apply_arrival(&bad),
+        ));
+        assert!(result.is_err(), "out-of-order update must be refused");
+        // the connection survives the ERR: a legal update still lands
+        client.apply_arrival(&msg(0, 0, 0, 0.2));
+        assert_eq!(client.applied(0, 0), 1);
+    }
+
+    #[test]
+    fn wire_stats_track_both_directions() {
+        let init = ParamSet::zeros(&dims());
+        let client = loopback(init, 1, Policy::Async, 1);
+        let before = client.wire_stats();
+        let _ = client.clock(0);
+        let after = client.wire_stats();
+        assert_eq!(after.frames_sent, before.frames_sent + 1);
+        assert_eq!(after.frames_received, before.frames_received + 1);
+        assert!(after.bytes_sent > before.bytes_sent);
+        assert!(after.bytes_received > before.bytes_received);
+    }
+}

@@ -1,0 +1,497 @@
+//! `ShardService` — the server side of the message boundary.
+//!
+//! One TCP endpoint per **shard group** (a contiguous block of layer
+//! shards), all wrapping a single shared `ShardedServer`. Each accepted
+//! connection is served by its own thread running a synchronous
+//! request/response loop over the framed wire protocol (`wire`):
+//! commits and clock-table reads are answered from the lock-free
+//! tables, per-layer `UpdateMsg`s are applied under only their shard's
+//! write lock, and gated FETCH/SNAPSHOT requests stream exactly the
+//! layers whose revision moved past the subscriber's last-seen vector —
+//! the in-process revision gate, realized as bytes *not* sent.
+//!
+//! The service is stateless per request (the subscriber carries its own
+//! revision vector in every gated read), which is what makes worker
+//! reconnects trivially sound within one server lifetime: revisions
+//! only grow, so a stale vector can only cause extra copies, never a
+//! wrong skip. Across server *restarts* the client must invalidate its
+//! gate (`WorkerCache::reset_gate`).
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::ssp::{Policy, ShardedServer, UpdateMsg};
+
+use super::wire::{self, op, Frame, FrameDecoder, Reader};
+
+/// Contiguous layer partition: `groups` blocks as equal as possible,
+/// earlier groups taking the remainder. Clamped to `[1, n_layers]` —
+/// more endpoints than layers would serve empty groups.
+pub fn group_ranges(n_layers: usize, groups: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(n_layers > 0, "no layers to serve");
+    let groups = groups.clamp(1, n_layers);
+    let base = n_layers / groups;
+    let rem = n_layers % groups;
+    let mut out = Vec::with_capacity(groups);
+    let mut start = 0;
+    for g in 0..groups {
+        let len = base + usize::from(g < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n_layers);
+    out
+}
+
+/// Encode a policy for the HELLO handshake.
+pub(super) fn policy_code(p: Policy) -> (u8, u64) {
+    match p {
+        Policy::Bsp => (0, 0),
+        Policy::Ssp { staleness } => (1, staleness),
+        Policy::Async => (2, 0),
+    }
+}
+
+/// Decode the HELLO policy code.
+pub(super) fn policy_decode(tag: u8, staleness: u64) -> Result<Policy, String> {
+    match tag {
+        0 => Ok(Policy::Bsp),
+        1 => Ok(Policy::Ssp { staleness }),
+        2 => Ok(Policy::Async),
+        t => Err(format!("unknown policy tag {t}")),
+    }
+}
+
+/// What a connection needs to know about its endpoint.
+#[derive(Clone, Debug)]
+struct EndpointInfo {
+    group: usize,
+    groups: usize,
+    range: std::ops::Range<usize>,
+    /// Digest of the served master at bind time (the init parameters)
+    /// — shipped in HELLO_OK for `RemoteClient::check_run`.
+    init_digest: u64,
+}
+
+/// A running shard service: `groups` listener threads plus one thread
+/// per live connection. Dropping the service shuts it down (listeners
+/// are unblocked and joined; connection threads exit when their peer
+/// disconnects — drop all clients before the service).
+pub struct ShardService {
+    addrs: Vec<SocketAddr>,
+    stop: Arc<AtomicBool>,
+    listeners: Vec<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ShardService {
+    /// Serve `server` over TCP. `addr` is `host:port`; with port 0
+    /// every group binds its own ephemeral port (tests — read the real
+    /// addresses back from [`ShardService::addrs`]), otherwise group
+    /// `g` listens on `port + g` (the CLI convention `RemoteClient::
+    /// connect_base` assumes).
+    pub fn bind(
+        server: Arc<ShardedServer>,
+        addr: &str,
+        groups: usize,
+    ) -> Result<ShardService, String> {
+        let (host, port) = split_addr(addr)?;
+        let ranges = group_ranges(server.n_layers(), groups);
+        // the master at bind time IS the init: serve binds before any
+        // worker can commit
+        let init_digest = super::param_digest(&server.snapshot());
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let mut addrs = Vec::with_capacity(ranges.len());
+        let mut listeners = Vec::with_capacity(ranges.len());
+        for (g, range) in ranges.iter().enumerate() {
+            let bind_port = if port == 0 {
+                0
+            } else {
+                port.checked_add(g as u16)
+                    .ok_or_else(|| format!("group {g} port overflows u16"))?
+            };
+            let listener = TcpListener::bind((host, bind_port))
+                .map_err(|e| format!("bind {host}:{bind_port}: {e}"))?;
+            addrs.push(
+                listener
+                    .local_addr()
+                    .map_err(|e| format!("local_addr: {e}"))?,
+            );
+            let info = EndpointInfo {
+                group: g,
+                groups: ranges.len(),
+                range: range.clone(),
+                init_digest,
+            };
+            let server = Arc::clone(&server);
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            listeners.push(std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let _ = stream.set_nodelay(true);
+                    let server = Arc::clone(&server);
+                    let info = info.clone();
+                    let conn_stop = Arc::clone(&stop);
+                    let handle = std::thread::spawn(move || {
+                        serve_conn(&server, &info, &conn_stop, stream)
+                    });
+                    let mut conns = conns.lock().unwrap();
+                    // reap finished connections so a long-lived serve
+                    // process doesn't accumulate JoinHandles forever
+                    conns.retain(|h| !h.is_finished());
+                    conns.push(handle);
+                }
+            }));
+        }
+        Ok(ShardService {
+            addrs,
+            stop,
+            listeners,
+            conns,
+        })
+    }
+
+    /// The bound endpoint addresses, indexed by shard group.
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    pub fn groups(&self) -> usize {
+        self.addrs.len()
+    }
+
+    /// Block on the listener threads — the `serve` CLI's foreground
+    /// mode (returns only after `shutdown`, i.e. effectively never).
+    pub fn join(mut self) {
+        for l in self.listeners.drain(..) {
+            let _ = l.join();
+        }
+    }
+
+    /// Stop accepting, unblock and join the listeners, then join every
+    /// connection thread (their peers must have disconnected first).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        for addr in &self.addrs {
+            // unblock a parked accept; the listener re-checks `stop`
+            let _ = TcpStream::connect(addr);
+        }
+        for l in self.listeners.drain(..) {
+            let _ = l.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Split a `host:port` address (IPv4 / hostname form). The single
+/// parser shared by `TransportConfig::validate`, `ShardService::bind`
+/// and `RemoteClient::connect_base` so the three agree on what an
+/// address is.
+pub fn split_addr(addr: &str) -> Result<(&str, u16), String> {
+    let (host, port) = addr
+        .rsplit_once(':')
+        .ok_or_else(|| format!("address {addr:?} is not host:port"))?;
+    let port = port
+        .parse::<u16>()
+        .map_err(|_| format!("bad port in address {addr:?}"))?;
+    Ok((host, port))
+}
+
+/// One connection's synchronous request/response loop. I/O errors and
+/// torn frames drop the connection; protocol-level errors are answered
+/// with an ERR frame and the connection stays up.
+fn serve_conn(
+    server: &ShardedServer,
+    info: &EndpointInfo,
+    stop: &AtomicBool,
+    mut stream: TcpStream,
+) {
+    let mut dec = FrameDecoder::default();
+    let mut out: Vec<u8> = Vec::new();
+    let mut scratch: Vec<u8> = Vec::new();
+    let mut bytes_in = 0u64;
+    loop {
+        let frame = match wire::read_frame(&mut stream, &mut dec, &mut bytes_in) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // clean close
+            Err(e) => {
+                crate::debug!("transport conn (group {}): {e}", info.group);
+                break;
+            }
+        };
+        out.clear();
+        scratch.clear();
+        if let Err(msg) =
+            handle(server, info, stop, &frame, &mut out, &mut scratch)
+        {
+            out.clear();
+            let mark = wire::begin_frame(&mut out, op::ERR);
+            out.extend_from_slice(msg.as_bytes());
+            wire::end_frame(&mut out, mark);
+        }
+        if std::io::Write::write_all(&mut stream, &out).is_err() {
+            break;
+        }
+    }
+}
+
+fn check_worker(server: &ShardedServer, w: usize) -> Result<(), String> {
+    if w >= server.workers() {
+        return Err(format!("worker {w} >= {}", server.workers()));
+    }
+    Ok(())
+}
+
+fn handle(
+    server: &ShardedServer,
+    info: &EndpointInfo,
+    stop: &AtomicBool,
+    f: &Frame,
+    out: &mut Vec<u8>,
+    scratch: &mut Vec<u8>,
+) -> Result<(), String> {
+    let mut r = Reader::new(&f.payload);
+    match f.op {
+        op::HELLO => {
+            let ver = r.u32()?;
+            r.done()?;
+            if ver != wire::WIRE_VERSION {
+                return Err(format!(
+                    "wire version {ver} != {}",
+                    wire::WIRE_VERSION
+                ));
+            }
+            let mark = wire::begin_frame(out, op::HELLO_OK);
+            wire::put_u32(out, wire::WIRE_VERSION);
+            wire::put_u32(out, server.workers() as u32);
+            wire::put_u32(out, server.n_layers() as u32);
+            wire::put_u32(out, info.groups as u32);
+            wire::put_u32(out, info.group as u32);
+            wire::put_u32(out, info.range.start as u32);
+            wire::put_u32(out, info.range.len() as u32);
+            let (tag, staleness) = policy_code(server.policy());
+            wire::put_u8(out, tag);
+            wire::put_u64(out, staleness);
+            wire::put_u64(out, info.init_digest);
+            for l in 0..server.n_layers() {
+                let (rows, cols, blen) = server.layer_shape(l);
+                wire::put_u32(out, rows as u32);
+                wire::put_u32(out, cols as u32);
+                wire::put_u32(out, blen as u32);
+            }
+            wire::end_frame(out, mark);
+        }
+        op::CLOCK => {
+            let w = r.u32()? as usize;
+            r.done()?;
+            check_worker(server, w)?;
+            reply_u64(out, server.clocks().clock(w));
+        }
+        op::COMMIT => {
+            let w = r.u32()? as usize;
+            r.done()?;
+            check_worker(server, w)?;
+            reply_u64(out, server.commit(w));
+        }
+        op::MUST_WAIT => {
+            let w = r.u32()? as usize;
+            r.done()?;
+            check_worker(server, w)?;
+            reply_bool(out, server.must_wait(w));
+        }
+        op::READ_READY => {
+            let w = r.u32()? as usize;
+            r.done()?;
+            check_worker(server, w)?;
+            reply_bool(out, server.read_ready(w));
+        }
+        op::WAIT => {
+            let w = r.u32()? as usize;
+            r.done()?;
+            check_worker(server, w)?;
+            // park in bounded slices so a service shutdown interrupts a
+            // barrier wait whose releasing commit will never arrive
+            loop {
+                let ready = server.wait_ready_timeout(
+                    w,
+                    std::time::Duration::from_millis(50),
+                );
+                if ready {
+                    break;
+                }
+                if stop.load(Ordering::Acquire) {
+                    return Err("server shutting down".into());
+                }
+            }
+            reply_ok(out);
+        }
+        op::APPLIED => {
+            let layer = r.u32()? as usize;
+            let w = r.u32()? as usize;
+            r.done()?;
+            check_worker(server, w)?;
+            if layer >= server.n_layers() {
+                return Err(format!("layer {layer} >= {}", server.n_layers()));
+            }
+            reply_u64(out, server.applied(layer, w));
+        }
+        op::UPDATE => {
+            let from = r.u32()? as usize;
+            let clock = r.u64()?;
+            let layer = r.u32()? as usize;
+            check_worker(server, from)?;
+            if !info.range.contains(&layer) {
+                return Err(format!(
+                    "layer {layer} outside group {} ({:?})",
+                    info.group, info.range
+                ));
+            }
+            let (rows, cols, blen) = server.layer_shape(layer);
+            let delta = r.layer(rows, cols, blen)?;
+            r.done()?;
+            // FIFO pre-check so a buggy client gets an ERR reply
+            // instead of panicking (and lock-poisoning) the shard
+            let expect = server.applied(layer, from);
+            if clock != expect {
+                return Err(format!(
+                    "out-of-order update: layer {layer} worker {from} \
+                     expected clock {expect}, got {clock}"
+                ));
+            }
+            server.apply_arrival(&UpdateMsg::new(from, clock, layer, delta));
+            reply_ok(out);
+        }
+        op::FETCH => {
+            let w = r.u32()? as usize;
+            check_worker(server, w)?;
+            let n = info.range.len();
+            let mut last_seen = vec![0u64; n];
+            for s in last_seen.iter_mut() {
+                *s = r.u64()?;
+            }
+            r.done()?;
+            let mut own = Vec::with_capacity(n);
+            let stats = server.fetch_group_gated(
+                w,
+                info.range.clone(),
+                &last_seen,
+                &mut own,
+                |_, copied| match copied {
+                    None => wire::put_u8(scratch, 0),
+                    Some((rev, lp)) => {
+                        wire::put_u8(scratch, 1);
+                        wire::put_u64(scratch, rev);
+                        wire::put_layer(scratch, lp);
+                    }
+                },
+            );
+            let mark = wire::begin_frame(out, op::FETCH_OK);
+            wire::put_u64(out, stats.guaranteed);
+            wire::put_u64(out, stats.window_included);
+            wire::put_u64(out, stats.window_missed);
+            debug_assert_eq!(own.len(), n);
+            for &v in &own {
+                wire::put_u64(out, v);
+            }
+            out.extend_from_slice(scratch);
+            wire::end_frame(out, mark);
+        }
+        op::SNAPSHOT => {
+            let n = info.range.len();
+            let mut last_seen = vec![0u64; n];
+            for s in last_seen.iter_mut() {
+                *s = r.u64()?;
+            }
+            r.done()?;
+            server.snapshot_group_gated(
+                info.range.clone(),
+                &last_seen,
+                |_, copied| match copied {
+                    None => wire::put_u8(scratch, 0),
+                    Some((rev, lp)) => {
+                        wire::put_u8(scratch, 1);
+                        wire::put_u64(scratch, rev);
+                        wire::put_layer(scratch, lp);
+                    }
+                },
+            );
+            let mark = wire::begin_frame(out, op::SNAP_OK);
+            out.extend_from_slice(scratch);
+            wire::end_frame(out, mark);
+        }
+        other => return Err(format!("unknown opcode {other}")),
+    }
+    Ok(())
+}
+
+fn reply_ok(out: &mut Vec<u8>) {
+    let mark = wire::begin_frame(out, op::OK);
+    wire::end_frame(out, mark);
+}
+
+fn reply_u64(out: &mut Vec<u8>, v: u64) {
+    let mark = wire::begin_frame(out, op::U64);
+    wire::put_u64(out, v);
+    wire::end_frame(out, mark);
+}
+
+fn reply_bool(out: &mut Vec<u8>, v: bool) {
+    let mark = wire::begin_frame(out, op::BOOL);
+    wire::put_u8(out, u8::from(v));
+    wire::end_frame(out, mark);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_ranges_partition_contiguously() {
+        assert_eq!(group_ranges(2, 1), vec![0..2]);
+        assert_eq!(group_ranges(2, 2), vec![0..1, 1..2]);
+        // clamped: more endpoints than layers serves no empty groups
+        assert_eq!(group_ranges(2, 5), vec![0..1, 1..2]);
+        assert_eq!(group_ranges(7, 3), vec![0..3, 3..5, 5..7]);
+        assert_eq!(group_ranges(5, 0), vec![0..5]);
+    }
+
+    #[test]
+    fn policy_codes_roundtrip() {
+        for p in [
+            Policy::Bsp,
+            Policy::Async,
+            Policy::Ssp { staleness: 0 },
+            Policy::Ssp { staleness: 17 },
+        ] {
+            let (tag, s) = policy_code(p);
+            assert_eq!(policy_decode(tag, s).unwrap(), p);
+        }
+        assert!(policy_decode(9, 0).is_err());
+    }
+
+    #[test]
+    fn split_addr_parses() {
+        assert_eq!(split_addr("127.0.0.1:0").unwrap(), ("127.0.0.1", 0));
+        assert_eq!(split_addr("localhost:7070").unwrap(), ("localhost", 7070));
+        assert!(split_addr("nope").is_err());
+        assert!(split_addr("host:notaport").is_err());
+    }
+}

@@ -1,0 +1,482 @@
+//! Framed binary wire format of the SSP transport.
+//!
+//! Every message is one frame:
+//!
+//! ```text
+//! frame := len:u32 | op:u8 | payload[len - 1]
+//! ```
+//!
+//! `len` counts the opcode byte plus the payload. All integers are
+//! **little-endian**; `f32` payloads are raw LE bit patterns, so a
+//! copied layer's bytes on the wire are exactly the bytes in the
+//! server's shard — the remote gated fetch reproduces the in-process
+//! `fetch_into` bit for bit. The full opcode table and payload layouts
+//! are documented in `rust/EXPERIMENTS.md` §Transport.
+//!
+//! `FrameDecoder` is an incremental reassembler: feed it whatever the
+//! socket returns — including one byte at a time — and it yields each
+//! complete frame exactly once. Torn length prefixes, frames split
+//! across reads, and multiple frames per read all decode identically
+//! (pinned by the byte-by-byte tests below).
+
+use std::io::Read;
+
+use crate::nn::LayerParams;
+use crate::tensor::Matrix;
+
+/// Protocol version, exchanged in the HELLO handshake; mismatches are
+/// rejected before any state flows.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Upper bound on a single frame — a corrupt length prefix fails fast
+/// instead of asking the decoder to buffer gigabytes.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Opcodes. Requests are < 100, responses >= 100.
+pub mod op {
+    /// `{ version:u32 }` → HELLO_OK. First frame on every connection.
+    pub const HELLO: u8 = 1;
+    /// `{ worker:u32 }` → U64: committed clock count.
+    pub const CLOCK: u8 = 2;
+    /// `{ worker:u32 }` → U64: new committed clock after the advance.
+    pub const COMMIT: u8 = 3;
+    /// `{ worker:u32 }` → BOOL: SSP condition 1 (barrier).
+    pub const MUST_WAIT: u8 = 4;
+    /// `{ worker:u32 }` → BOOL: Eq. 5's read guarantee.
+    pub const READ_READY: u8 = 5;
+    /// `{ worker:u32 }` → OK, sent only once the worker may proceed
+    /// (the server parks the connection on its barrier condvar).
+    pub const WAIT: u8 = 6;
+    /// `{ from:u32, clock:u64, layer:u32, layer-params }` → OK.
+    /// One per-layer `UpdateMsg`; `layer` must belong to the
+    /// connection's shard group.
+    pub const UPDATE: u8 = 7;
+    /// `{ worker:u32, last_seen:u64 × group_len }` → FETCH_OK.
+    /// Version-gated delta read of the connection's shard group.
+    pub const FETCH: u8 = 8;
+    /// `{ last_seen:u64 × group_len }` → SNAP_OK. Gated snapshot
+    /// (no read stats — the evaluation/checkpoint path).
+    pub const SNAPSHOT: u8 = 9;
+    /// `{ layer:u32, worker:u32 }` → U64: the version vector entry.
+    pub const APPLIED: u8 = 10;
+
+    /// Empty acknowledgement.
+    pub const OK: u8 = 100;
+    /// `{ version:u32, workers:u32, n_layers:u32, groups:u32,
+    ///    group:u32, group_start:u32, group_len:u32,
+    ///    policy_tag:u8, staleness:u64, init_digest:u64,
+    ///    (rows:u32, cols:u32, blen:u32) × n_layers }`.
+    /// `init_digest` is `transport::param_digest` of the served master
+    /// at bind time — the client's seed-mismatch tripwire.
+    pub const HELLO_OK: u8 = 101;
+    /// `{ value:u64 }`.
+    pub const U64: u8 = 102;
+    /// `{ value:u8 }` (0 or 1).
+    pub const BOOL: u8 = 103;
+    /// `{ guaranteed:u64, window_included:u64, window_missed:u64,
+    ///    own:u64 × group_len,
+    ///    (copied:u8, [rev:u64, layer-params]) × group_len }`.
+    /// A layer's params ride the wire only when `copied == 1` — the
+    /// revision gate's skip is a skip of actual bytes.
+    pub const FETCH_OK: u8 = 104;
+    /// `{ (copied:u8, [rev:u64, layer-params]) × group_len }`.
+    pub const SNAP_OK: u8 = 105;
+    /// `{ utf-8 message }` — protocol-level failure; the connection
+    /// stays usable (the request had no effect).
+    pub const ERR: u8 = 106;
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub op: u8,
+    pub payload: Vec<u8>,
+}
+
+/// Framing/decode failure. Converts into the `String` errors the rest
+/// of the crate uses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError(pub String);
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire: {}", self.0)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<WireError> for String {
+    fn from(e: WireError) -> String {
+        e.to_string()
+    }
+}
+
+/// Incremental frame reassembler (see module docs).
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl FrameDecoder {
+    /// Append raw socket bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// No partial frame buffered (an EOF here is a clean close; an EOF
+    /// with buffered bytes is a torn frame).
+    pub fn is_empty(&self) -> bool {
+        self.start == self.buf.len()
+    }
+
+    /// Pop the next complete frame, if one is buffered.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, WireError> {
+        let avail = self.buf.len() - self.start;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let p = &self.buf[self.start..];
+        let len = u32::from_le_bytes([p[0], p[1], p[2], p[3]]) as usize;
+        if len == 0 {
+            return Err(WireError("zero-length frame".into()));
+        }
+        if len > MAX_FRAME {
+            return Err(WireError(format!("frame length {len} > MAX_FRAME")));
+        }
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        let op = p[4];
+        let payload = p[5..4 + len].to_vec();
+        self.start += 4 + len;
+        // reclaim consumed space once it dominates the buffer
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start > 64 * 1024 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        Ok(Some(Frame { op, payload }))
+    }
+}
+
+/// Read from `stream` until one frame decodes. `Ok(None)` is a clean
+/// close (EOF at a frame boundary); EOF mid-frame is an error.
+/// `bytes_in` accumulates raw bytes received (wire accounting).
+pub fn read_frame(
+    stream: &mut std::net::TcpStream,
+    dec: &mut FrameDecoder,
+    bytes_in: &mut u64,
+) -> Result<Option<Frame>, WireError> {
+    loop {
+        if let Some(f) = dec.next_frame()? {
+            return Ok(Some(f));
+        }
+        let mut chunk = [0u8; 16 * 1024];
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| WireError(format!("read: {e}")))?;
+        if n == 0 {
+            return if dec.is_empty() {
+                Ok(None)
+            } else {
+                Err(WireError("connection closed mid-frame".into()))
+            };
+        }
+        *bytes_in += n as u64;
+        dec.feed(&chunk[..n]);
+    }
+}
+
+// ---------------- frame building ----------------
+
+/// Open a frame in `out`; returns the mark `end_frame` patches.
+pub fn begin_frame(out: &mut Vec<u8>, op: u8) -> usize {
+    let mark = out.len();
+    out.extend_from_slice(&[0, 0, 0, 0]);
+    out.push(op);
+    mark
+}
+
+/// Patch the length prefix of the frame opened at `mark`.
+pub fn end_frame(out: &mut Vec<u8>, mark: usize) {
+    let len = (out.len() - mark - 4) as u32;
+    out[mark..mark + 4].copy_from_slice(&len.to_le_bytes());
+}
+
+/// One-shot frame with a fixed payload.
+pub fn frame(op: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(5 + payload.len());
+    let mark = begin_frame(&mut out, op);
+    out.extend_from_slice(payload);
+    end_frame(&mut out, mark);
+    out
+}
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Serialize one layer's parameters:
+/// `rows:u32, cols:u32, blen:u32, w:f32 × rows·cols, b:f32 × blen`.
+pub fn put_layer(out: &mut Vec<u8>, lp: &LayerParams) {
+    put_u32(out, lp.w.rows() as u32);
+    put_u32(out, lp.w.cols() as u32);
+    put_u32(out, lp.b.len() as u32);
+    put_f32s(out, lp.w.data());
+    put_f32s(out, &lp.b);
+}
+
+// ---------------- payload reading ----------------
+
+/// Cursor over one frame's payload. Every accessor checks bounds; a
+/// short payload is a `WireError`, never a panic.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError(format!(
+                "short payload: need {n} bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn f32s_into(&mut self, dst: &mut [f32]) -> Result<(), WireError> {
+        let bytes = self.take(dst.len() * 4)?;
+        for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+            *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
+    }
+
+    /// Trailing bytes after the last field are a protocol error.
+    pub fn done(&self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError(format!(
+                "{} trailing payload bytes",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Decode a layer into the caller's buffer; the wire shape must
+    /// match the buffer's exactly.
+    pub fn layer_into(&mut self, lp: &mut LayerParams) -> Result<(), WireError> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let blen = self.u32()? as usize;
+        if rows != lp.w.rows() || cols != lp.w.cols() || blen != lp.b.len() {
+            return Err(WireError(format!(
+                "layer shape mismatch: wire {rows}x{cols}+{blen}, buffer {}x{}+{}",
+                lp.w.rows(),
+                lp.w.cols(),
+                lp.b.len()
+            )));
+        }
+        self.f32s_into(lp.w.data_mut())?;
+        self.f32s_into(&mut lp.b)
+    }
+
+    /// Decode a layer, allocating, against an expected shape (the
+    /// service's UPDATE path).
+    pub fn layer(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        blen: usize,
+    ) -> Result<LayerParams, WireError> {
+        let mut lp = LayerParams {
+            w: Matrix::zeros(rows, cols),
+            b: vec![0.0; blen],
+        };
+        self.layer_into(&mut lp)?;
+        Ok(lp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<Vec<u8>> {
+        let mut a = Vec::new();
+        let m = begin_frame(&mut a, op::CLOCK);
+        put_u32(&mut a, 3);
+        end_frame(&mut a, m);
+
+        let mut b = Vec::new();
+        let m = begin_frame(&mut b, op::FETCH);
+        put_u32(&mut b, 1);
+        put_u64(&mut b, u64::MAX);
+        put_u64(&mut b, 7);
+        end_frame(&mut b, m);
+
+        let c = frame(op::OK, &[]);
+        vec![a, b, c]
+    }
+
+    #[test]
+    fn roundtrip_whole_frames() {
+        let frames = sample_frames();
+        let mut dec = FrameDecoder::default();
+        for f in &frames {
+            dec.feed(f);
+        }
+        let got: Vec<Frame> = std::iter::from_fn(|| dec.next_frame().unwrap())
+            .collect();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].op, op::CLOCK);
+        assert_eq!(got[0].payload, 3u32.to_le_bytes());
+        assert_eq!(got[1].op, op::FETCH);
+        assert_eq!(got[1].payload.len(), 4 + 8 + 8);
+        assert_eq!(got[2], Frame { op: op::OK, payload: vec![] });
+        assert!(dec.is_empty());
+    }
+
+    #[test]
+    fn torn_reads_byte_by_byte_decode_identically() {
+        // the satellite's adversarial case: the transport must survive
+        // arbitrarily short reads — feed the decoder one byte at a time
+        let frames = sample_frames();
+        let stream: Vec<u8> = frames.concat();
+        let mut dec = FrameDecoder::default();
+        let mut got = Vec::new();
+        for &byte in &stream {
+            dec.feed(&[byte]);
+            while let Some(f) = dec.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 3);
+        let mut whole = FrameDecoder::default();
+        whole.feed(&stream);
+        for want in got {
+            assert_eq!(whole.next_frame().unwrap(), Some(want));
+        }
+        assert!(whole.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn torn_reads_random_chunking() {
+        // every chunking of the byte stream yields the same frames
+        let stream: Vec<u8> = sample_frames().concat();
+        for chunk in [2usize, 3, 5, 7, 11] {
+            let mut dec = FrameDecoder::default();
+            let mut n = 0;
+            for piece in stream.chunks(chunk) {
+                dec.feed(piece);
+                while dec.next_frame().unwrap().is_some() {
+                    n += 1;
+                }
+            }
+            assert_eq!(n, 3, "chunk size {chunk}");
+            assert!(dec.is_empty());
+        }
+    }
+
+    #[test]
+    fn zero_and_oversized_lengths_rejected() {
+        let mut dec = FrameDecoder::default();
+        dec.feed(&0u32.to_le_bytes());
+        assert!(dec.next_frame().is_err());
+
+        let mut dec = FrameDecoder::default();
+        dec.feed(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert!(dec.next_frame().is_err());
+    }
+
+    #[test]
+    fn incomplete_frame_waits_for_more_bytes() {
+        let f = frame(op::BOOL, &[1]);
+        let mut dec = FrameDecoder::default();
+        dec.feed(&f[..f.len() - 1]);
+        assert_eq!(dec.next_frame().unwrap(), None);
+        assert!(!dec.is_empty());
+        dec.feed(&f[f.len() - 1..]);
+        assert_eq!(
+            dec.next_frame().unwrap(),
+            Some(Frame { op: op::BOOL, payload: vec![1] })
+        );
+    }
+
+    #[test]
+    fn layer_roundtrip_bitwise() {
+        let lp = LayerParams {
+            w: Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32 * 0.25 - 1.0),
+            b: vec![0.5, -0.5],
+        };
+        let mut out = Vec::new();
+        put_layer(&mut out, &lp);
+        assert_eq!(out.len(), 12 + (6 + 2) * 4);
+        let mut r = Reader::new(&out);
+        let got = r.layer(3, 2, 2).unwrap();
+        r.done().unwrap();
+        assert_eq!(got, lp);
+
+        // shape mismatch is an error, not a panic
+        let mut r = Reader::new(&out);
+        assert!(r.layer(2, 3, 2).is_err());
+    }
+
+    #[test]
+    fn reader_bounds_checked() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(r.u32().is_err());
+        let mut r = Reader::new(&[1, 2, 3, 4, 5]);
+        assert_eq!(r.u32().unwrap(), u32::from_le_bytes([1, 2, 3, 4]));
+        assert!(r.done().is_err());
+        assert_eq!(r.u8().unwrap(), 5);
+        r.done().unwrap();
+    }
+}

@@ -13,11 +13,14 @@
 //!      its view
 //!  P5  ε accounting: included + missed = committed − guaranteed, rate ∈ [0,1]
 //!
-//! Every server-side invariant runs against **both** implementations of
-//! `ParamServer` — the single-lock reference `Server` and the sharded
-//! per-layer `ShardedServer` — and an oracle-equivalence property drives
-//! the two through identical random schedules asserting bitwise-equal
-//! masters, own-version vectors and ε statistics at every read.
+//! Every server-side invariant runs against **all three** backings of
+//! `ParamServer` — the single-lock reference `Server`, the sharded
+//! per-layer `ShardedServer`, and `transport::RemoteClient` speaking the
+//! framed wire protocol to a loopback-TCP `ShardService` (the remote
+//! trials use fewer seeds: each one stands up a real socket stack) —
+//! and oracle-equivalence properties drive pairs of backings through
+//! identical random schedules asserting bitwise-equal masters,
+//! own-version vectors and ε statistics at every read.
 //!
 //! Every read additionally runs through the **version-gated zero-copy
 //! path** (`fetch_into`): each worker keeps one reusable snapshot buffer
@@ -28,6 +31,7 @@
 //! and ε accounting.
 
 use sspdnn::nn::{LayerParams, ParamSet};
+use sspdnn::ssp::transport::{self, RemoteClient};
 use sspdnn::ssp::{
     ClockTable, ParamServer, Policy, Server, ShardedServer, UpdateMsg,
     WorkerCache,
@@ -54,6 +58,14 @@ fn make_reference(init: ParamSet, workers: usize, policy: Policy) -> Server {
 
 fn make_sharded(init: ParamSet, workers: usize, policy: Policy) -> ShardedServer {
     ShardedServer::new(init, workers, policy)
+}
+
+/// The third backing: a `RemoteClient` over loopback TCP to a
+/// `ShardService` wrapping a `ShardedServer` — with 2 shard groups, so
+/// every multi-endpoint seam (per-group fetch fan-out, per-layer update
+/// routing, own/stat reassembly) is exercised.
+fn make_remote(init: ParamSet, workers: usize, policy: Policy) -> RemoteClient {
+    transport::loopback(init, workers, policy, 2)
 }
 
 /// Drive a random but protocol-legal schedule against the server:
@@ -166,119 +178,153 @@ fn p1_p2_p5_hold_over_random_schedules_sharded() {
     }
 }
 
-/// The sharded server must be *indistinguishable* from the reference
-/// under any legal schedule: same master bits, same own-version vector,
-/// same ε statistics at every read. The reference `Server` is the oracle.
 #[test]
-fn sharded_server_is_bitwise_equivalent_to_reference() {
-    for seed in 0..40u64 {
-        let mut rng = Pcg64::new(seed ^ 0x5EED);
-        let d = dims();
-        let workers = 2 + (seed as usize % 4);
-        let staleness = seed % 5;
-        let policy = if seed % 7 == 0 {
-            Policy::Async
-        } else if seed % 5 == 0 {
-            Policy::Bsp
-        } else {
-            Policy::Ssp { staleness }
-        };
-        let init = ParamSet::glorot(&d, &mut rng);
-        let mut reference = Server::new(init.clone(), workers, policy);
-        let mut sharded = ShardedServer::new(init.clone(), workers, policy);
+fn p1_p2_p5_hold_over_random_schedules_remote() {
+    // fewer, shorter trials: every one spins up a real loopback TCP
+    // service and each protocol step is a round of synchronous RPCs
+    for seed in 0..10 {
+        let workers = 2 + (seed as usize % 5);
+        let staleness = seed % 7;
+        random_schedule(make_remote, seed, workers, staleness, 60);
+    }
+}
 
-        let mut pending: Vec<UpdateMsg> = Vec::new();
-        let mut committed = vec![0u64; workers];
-        // persistent gated-read state per (implementation, worker)
-        let mut gated_ref: Vec<(ParamSet, Vec<u64>, Vec<u64>)> = (0..workers)
-            .map(|_| (init.clone(), vec![0u64; d.len() - 1], Vec::new()))
-            .collect();
-        let mut gated_sh = gated_ref.clone();
-        for _ in 0..150 {
-            // both servers must agree on who may proceed
-            for p in 0..workers {
-                assert_eq!(
-                    ParamServer::must_wait(&reference, p),
-                    ParamServer::must_wait(&sharded, p),
-                    "must_wait diverged (seed {seed})"
-                );
-                assert_eq!(
-                    ParamServer::read_ready(&reference, p),
-                    ParamServer::read_ready(&sharded, p),
-                    "read_ready diverged (seed {seed})"
-                );
-            }
-            let candidates: Vec<usize> = (0..workers)
-                .filter(|&p| !ParamServer::must_wait(&reference, p))
-                .collect();
-            let p = candidates[rng.below(candidates.len())];
+/// Two backings must be *indistinguishable* under any legal schedule:
+/// same master bits, same own-version vector, same ε statistics at
+/// every read — both through the full fetch and through the gated
+/// zero-copy path resuming from reused buffers. `make_a` builds the
+/// oracle, `make_b` the implementation under test.
+fn equivalence_schedule<A: ParamServer, B: ParamServer>(
+    make_a: fn(ParamSet, usize, Policy) -> A,
+    make_b: fn(ParamSet, usize, Policy) -> B,
+    seed: u64,
+    steps: usize,
+) {
+    let mut rng = Pcg64::new(seed ^ 0x5EED);
+    let d = dims();
+    let workers = 2 + (seed as usize % 4);
+    let staleness = seed % 5;
+    let policy = if seed % 7 == 0 {
+        Policy::Async
+    } else if seed % 5 == 0 {
+        Policy::Bsp
+    } else {
+        Policy::Ssp { staleness }
+    };
+    let init = ParamSet::glorot(&d, &mut rng);
+    let mut reference = make_a(init.clone(), workers, policy);
+    let mut sharded = make_b(init.clone(), workers, policy);
 
-            let deliver = rng.below(pending.len() + 1);
-            for msg in pending.drain(..deliver) {
-                ParamServer::apply_arrival(&mut reference, &msg);
-                ParamServer::apply_arrival(&mut sharded, &msg);
-            }
-            for l in 0..d.len() - 1 {
-                let delta = rand_delta(&d, l, &mut rng);
-                pending.push(UpdateMsg::new(p, committed[p], l, delta));
-            }
-            committed[p] += 1;
-            ParamServer::commit(&mut reference, p);
-            ParamServer::commit(&mut sharded, p);
-
-            let reader = rng.below(workers);
-            if ParamServer::read_ready(&reference, reader) {
-                let (m_ref, own_ref, st_ref) =
-                    ParamServer::fetch(&mut reference, reader);
-                let (m_sh, own_sh, st_sh) =
-                    ParamServer::fetch(&mut sharded, reader);
-                assert_eq!(m_ref, m_sh, "master bits diverged (seed {seed})");
-                assert_eq!(own_ref, own_sh, "own versions diverged (seed {seed})");
-                assert_eq!(st_ref, st_sh, "eps stats diverged (seed {seed})");
-
-                // the gated path must agree across implementations AND
-                // with the full fetch, resuming from reused buffers
-                let (b_r, s_r, o_r) = &mut gated_ref[reader];
-                let (st_gr, fs_r) = ParamServer::fetch_into(
-                    &mut reference,
-                    reader,
-                    b_r,
-                    s_r,
-                    o_r,
-                );
-                let (b_s, s_s, o_s) = &mut gated_sh[reader];
-                let (st_gs, fs_s) = ParamServer::fetch_into(
-                    &mut sharded,
-                    reader,
-                    b_s,
-                    s_s,
-                    o_s,
-                );
-                assert_eq!(*b_r, m_ref, "gated ref buffer (seed {seed})");
-                assert_eq!(b_r, b_s, "gated buffers diverged (seed {seed})");
-                assert_eq!(o_r, o_s, "gated own diverged (seed {seed})");
-                assert_eq!(st_gr, st_ref, "gated stats != full (seed {seed})");
-                assert_eq!(st_gr, st_gs, "gated stats diverged (seed {seed})");
-                assert_eq!(
-                    fs_r, fs_s,
-                    "copy gate accounting diverged (seed {seed})"
-                );
-                assert_eq!(
-                    s_r, s_s,
-                    "last-seen revisions diverged (seed {seed})"
-                );
-            }
+    let mut pending: Vec<UpdateMsg> = Vec::new();
+    let mut committed = vec![0u64; workers];
+    // persistent gated-read state per (implementation, worker)
+    let mut gated_ref: Vec<(ParamSet, Vec<u64>, Vec<u64>)> = (0..workers)
+        .map(|_| (init.clone(), vec![0u64; d.len() - 1], Vec::new()))
+        .collect();
+    let mut gated_sh = gated_ref.clone();
+    for _ in 0..steps {
+        // both servers must agree on who may proceed
+        for p in 0..workers {
+            assert_eq!(
+                ParamServer::must_wait(&reference, p),
+                ParamServer::must_wait(&sharded, p),
+                "must_wait diverged (seed {seed})"
+            );
+            assert_eq!(
+                ParamServer::read_ready(&reference, p),
+                ParamServer::read_ready(&sharded, p),
+                "read_ready diverged (seed {seed})"
+            );
         }
-        for msg in pending.drain(..) {
+        let candidates: Vec<usize> = (0..workers)
+            .filter(|&p| !ParamServer::must_wait(&reference, p))
+            .collect();
+        let p = candidates[rng.below(candidates.len())];
+
+        let deliver = rng.below(pending.len() + 1);
+        for msg in pending.drain(..deliver) {
             ParamServer::apply_arrival(&mut reference, &msg);
             ParamServer::apply_arrival(&mut sharded, &msg);
         }
-        assert_eq!(
-            ParamServer::snapshot(&reference),
-            ParamServer::snapshot(&sharded),
-            "final master diverged (seed {seed})"
-        );
-        assert_eq!(ParamServer::reads(&reference), ParamServer::reads(&sharded));
+        for l in 0..d.len() - 1 {
+            let delta = rand_delta(&d, l, &mut rng);
+            pending.push(UpdateMsg::new(p, committed[p], l, delta));
+        }
+        committed[p] += 1;
+        ParamServer::commit(&mut reference, p);
+        ParamServer::commit(&mut sharded, p);
+
+        let reader = rng.below(workers);
+        if ParamServer::read_ready(&reference, reader) {
+            let (m_ref, own_ref, st_ref) =
+                ParamServer::fetch(&mut reference, reader);
+            let (m_sh, own_sh, st_sh) =
+                ParamServer::fetch(&mut sharded, reader);
+            assert_eq!(m_ref, m_sh, "master bits diverged (seed {seed})");
+            assert_eq!(own_ref, own_sh, "own versions diverged (seed {seed})");
+            assert_eq!(st_ref, st_sh, "eps stats diverged (seed {seed})");
+
+            // the gated path must agree across implementations AND
+            // with the full fetch, resuming from reused buffers
+            let (b_r, s_r, o_r) = &mut gated_ref[reader];
+            let (st_gr, fs_r) = ParamServer::fetch_into(
+                &mut reference,
+                reader,
+                b_r,
+                s_r,
+                o_r,
+            );
+            let (b_s, s_s, o_s) = &mut gated_sh[reader];
+            let (st_gs, fs_s) = ParamServer::fetch_into(
+                &mut sharded,
+                reader,
+                b_s,
+                s_s,
+                o_s,
+            );
+            assert_eq!(*b_r, m_ref, "gated ref buffer (seed {seed})");
+            assert_eq!(b_r, b_s, "gated buffers diverged (seed {seed})");
+            assert_eq!(o_r, o_s, "gated own diverged (seed {seed})");
+            assert_eq!(st_gr, st_ref, "gated stats != full (seed {seed})");
+            assert_eq!(st_gr, st_gs, "gated stats diverged (seed {seed})");
+            assert_eq!(
+                fs_r, fs_s,
+                "copy gate accounting diverged (seed {seed})"
+            );
+            assert_eq!(
+                s_r, s_s,
+                "last-seen revisions diverged (seed {seed})"
+            );
+        }
+    }
+    for msg in pending.drain(..) {
+        ParamServer::apply_arrival(&mut reference, &msg);
+        ParamServer::apply_arrival(&mut sharded, &msg);
+    }
+    assert_eq!(
+        ParamServer::snapshot(&reference),
+        ParamServer::snapshot(&sharded),
+        "final master diverged (seed {seed})"
+    );
+    assert_eq!(ParamServer::reads(&reference), ParamServer::reads(&sharded));
+}
+
+/// The sharded server against the single-lock oracle.
+#[test]
+fn sharded_server_is_bitwise_equivalent_to_reference() {
+    for seed in 0..40u64 {
+        equivalence_schedule(make_reference, make_sharded, seed, 150);
+    }
+}
+
+/// The remote client (loopback TCP, 2 shard endpoints) against the
+/// single-lock oracle: the entire wire protocol — framing, per-group
+/// fan-out, gated delta payloads, own/ε reassembly — must be
+/// observation-equivalent to shared memory, bit for bit.
+#[test]
+fn remote_client_is_bitwise_equivalent_to_reference() {
+    for seed in 0..8u64 {
+        equivalence_schedule(make_reference, make_remote, seed, 80);
     }
 }
 
@@ -338,6 +384,11 @@ fn p3_guaranteed_visibility_enforced_by_read_ready_reference() {
 #[test]
 fn p3_guaranteed_visibility_enforced_by_read_ready_sharded() {
     p3_guaranteed_visibility(make_sharded);
+}
+
+#[test]
+fn p3_guaranteed_visibility_enforced_by_read_ready_remote() {
+    p3_guaranteed_visibility(make_remote);
 }
 
 #[test]

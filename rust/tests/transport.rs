@@ -1,0 +1,304 @@
+//! End-to-end tests of the multi-process SSP transport: the remote
+//! backing must be *observation-equivalent* to the in-process servers —
+//! bitwise-equal final weights on simulated figures, identical sweep
+//! reports, identical threaded runs at one machine — and the version
+//! gate must provably skip unchanged layers **on the wire** (byte
+//! counts, not just FetchStats). Reconnect semantics for stale revision
+//! vectors round out the protocol edge cases (torn-read framing lives
+//! in `ssp::transport::wire`'s unit tests).
+
+use std::sync::Arc;
+
+use sspdnn::config::{ExperimentConfig, SweepConfig};
+use sspdnn::coordinator::{
+    self, build_dataset, native_factory, run_experiment_with, run_sweep_with,
+    run_threaded, run_threaded_on, DriverOptions, EtaSchedule, SweepOptions,
+    ThreadedOptions,
+};
+use sspdnn::metrics;
+use sspdnn::nn::{LayerParams, ParamSet};
+use sspdnn::ssp::transport::{self, RemoteClient, ShardService};
+use sspdnn::ssp::{ParamServer, Policy, ShardedServer, UpdateMsg, WorkerCache};
+use sspdnn::tensor::Matrix;
+
+fn tiny_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::tiny();
+    c.train.clocks = 10;
+    c.train.batches_per_clock = 2;
+    c
+}
+
+fn fast_opts() -> DriverOptions {
+    DriverOptions {
+        per_batch_s: Some(0.01),
+        eval_samples: 128,
+        ..DriverOptions::default()
+    }
+}
+
+fn dims() -> Vec<usize> {
+    vec![3, 4, 2]
+}
+
+fn msg(from: usize, clock: u64, layer: usize, v: f32) -> UpdateMsg {
+    let d = dims();
+    UpdateMsg::new(
+        from,
+        clock,
+        layer,
+        LayerParams {
+            w: Matrix::from_fn(d[layer], d[layer + 1], |_, _| v),
+            b: vec![v; d[layer + 1]],
+        },
+    )
+}
+
+/// The acceptance pin: one simulated figure run with the discrete-event
+/// driver backed by a `RemoteClient` over loopback TCP must reproduce
+/// the in-process `ShardedServer` run **bitwise** — final weights,
+/// objective curve, virtual time, step and read counts.
+#[test]
+fn remote_driver_matches_sharded_bitwise_on_a_simulated_figure() {
+    let cfg = tiny_cfg();
+    let ds = build_dataset(&cfg);
+    let a = run_experiment_with(&cfg, fast_opts(), &ds, ShardedServer::new);
+    let b = run_experiment_with(&cfg, fast_opts(), &ds, |init, workers, policy| {
+        transport::loopback(init, workers, policy, 2)
+    });
+    assert_eq!(a.final_params, b.final_params, "final weights diverged");
+    assert_eq!(a.final_objective, b.final_objective);
+    assert_eq!(a.total_vtime, b.total_vtime);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.reads, b.reads);
+    let a_curve: Vec<(u64, f64)> =
+        a.evals.iter().map(|e| (e.clock, e.objective)).collect();
+    let b_curve: Vec<(u64, f64)> =
+        b.evals.iter().map(|e| (e.clock, e.objective)).collect();
+    assert_eq!(a_curve, b_curve, "objective curves diverged");
+}
+
+/// ROADMAP's transport-evaluation instrument: the same sweep grid run
+/// against the in-process server and the remote client must produce
+/// identical statistical `SweepReport` JSON (timing fields excluded).
+#[test]
+fn remote_sweep_report_matches_inprocess() {
+    let mut cfg = tiny_cfg();
+    cfg.train.clocks = 6;
+    let grid = SweepConfig {
+        machines: vec![1, 2],
+        staleness: vec![1],
+        policies: vec!["ssp".into()],
+        etas: Vec::new(),
+        threads: 1,
+    };
+    let opts = SweepOptions {
+        per_batch_s: Some(0.01),
+        eval_samples: 64,
+        ..SweepOptions::default()
+    };
+    let a = run_sweep_with(&cfg, &grid, &opts, ShardedServer::new).unwrap();
+    let b = run_sweep_with(&cfg, &grid, &opts, |init, workers, policy| {
+        transport::loopback(init, workers, policy, 2)
+    })
+    .unwrap();
+    assert_eq!(
+        metrics::sweep_json(&a, false).to_string(),
+        metrics::sweep_json(&b, false).to_string(),
+        "sweep reports diverged"
+    );
+}
+
+/// The threaded runner over remote worker ports: at one machine the run
+/// is fully deterministic, so the remote-backed `run_threaded_on` must
+/// be value-identical to the in-process `run_threaded`.
+#[test]
+fn remote_threaded_matches_inprocess_at_one_machine() {
+    let mut cfg = tiny_cfg();
+    cfg.train.clocks = 8;
+    let ds = build_dataset(&cfg);
+    let opts = |_: ()| ThreadedOptions {
+        machines: 1,
+        engine_factory: native_factory(&cfg),
+        eta: EtaSchedule::Fixed(cfg.train.eta),
+        eval_every: 2,
+        eval_samples: 64,
+    };
+    let a = run_threaded(&cfg, &ds, opts(()));
+
+    // the remote side: serve the same config-derived server over
+    // loopback, one connection set per port request
+    let init = coordinator::init_params(&cfg);
+    let server = Arc::new(ShardedServer::new(init, 1, cfg.ssp.policy));
+    let svc = ShardService::bind(Arc::clone(&server), "127.0.0.1:0", 2).unwrap();
+    let addrs = svc.addrs().to_vec();
+    let b = run_threaded_on(&cfg, &ds, opts(()), |_p| {
+        RemoteClient::connect(&addrs).expect("connect worker port")
+    });
+
+    assert_eq!(a.final_params, b.final_params, "final weights diverged");
+    assert_eq!(a.final_objective, b.final_objective);
+    assert_eq!(a.steps, b.steps);
+    let a_curve: Vec<(u64, f64)> =
+        a.evals.iter().map(|e| (e.0, e.2)).collect();
+    let b_curve: Vec<(u64, f64)> =
+        b.evals.iter().map(|e| (e.0, e.2)).collect();
+    assert_eq!(a_curve, b_curve, "eval curves diverged");
+    drop(svc);
+}
+
+/// The acceptance criterion's byte-count assertion: a gated fetch of an
+/// unchanged model must move *less data on the wire* than the model
+/// payload — the skip is bytes never sent, not just a stats field.
+#[test]
+fn gated_fetch_skips_unchanged_layers_on_the_wire() {
+    let init = {
+        let mut rng = sspdnn::util::Pcg64::new(3);
+        ParamSet::glorot(&dims(), &mut rng)
+    };
+    let model_payload: u64 = init
+        .layers
+        .iter()
+        .map(|l| l.n_bytes() as u64)
+        .sum();
+    let mut client = transport::loopback(init.clone(), 1, Policy::Async, 2);
+    let mut buf = init.clone();
+    // unknown provenance: the first fetch must copy everything
+    let mut seen = vec![u64::MAX; 2];
+    let mut own = Vec::new();
+
+    let before_cold = client.wire_stats();
+    let (_, fs_cold) = client.fetch_into(0, &mut buf, &mut seen, &mut own);
+    let after_cold = client.wire_stats();
+    assert_eq!(fs_cold.layers_copied, 2);
+    let cold_bytes = after_cold.bytes_received - before_cold.bytes_received;
+    assert!(
+        cold_bytes >= model_payload,
+        "cold fetch must carry the model: {cold_bytes} < {model_payload}"
+    );
+
+    // nothing changed: the hot fetch ships headers only
+    let before_hot = client.wire_stats();
+    let (_, fs_hot) = client.fetch_into(0, &mut buf, &mut seen, &mut own);
+    let after_hot = client.wire_stats();
+    assert_eq!(fs_hot.layers_copied, 0, "zero-layer delta fetch");
+    assert_eq!(fs_hot.layers_skipped, 2);
+    let hot_bytes = after_hot.bytes_received - before_hot.bytes_received;
+    assert!(
+        cold_bytes - hot_bytes >= model_payload,
+        "gate must keep the model payload off the wire: \
+         cold {cold_bytes} - hot {hot_bytes} < {model_payload}"
+    );
+    // and the gated buffer still matches the master exactly
+    assert_eq!(buf, ParamServer::snapshot(&client));
+
+    // gate off: the same zero-delta fetch ships every layer again
+    let mut ungated = client.with_gate(false);
+    let before_off = ungated.wire_stats();
+    let (_, fs_off) = ungated.fetch_into(0, &mut buf, &mut seen, &mut own);
+    let after_off = ungated.wire_stats();
+    assert_eq!(fs_off.layers_copied, 2, "no-gate fetch copies everything");
+    let off_bytes = after_off.bytes_received - before_off.bytes_received;
+    assert!(
+        off_bytes >= model_payload,
+        "no-gate fetch must carry the model: {off_bytes} < {model_payload}"
+    );
+}
+
+/// A worker reconnecting *within one server lifetime* may resume with a
+/// stale revision vector: revisions only grow, so staleness can only
+/// cause extra copies — the reconnected fetch must still land exactly
+/// on the master.
+#[test]
+fn reconnect_with_stale_revision_vector_resumes_correctly() {
+    let init = ParamSet::zeros(&dims());
+    let server = Arc::new(ShardedServer::new(init.clone(), 2, Policy::Async));
+    let svc = ShardService::bind(Arc::clone(&server), "127.0.0.1:0", 2).unwrap();
+    let addrs = svc.addrs().to_vec();
+
+    // first connection: fetch once so the gate has history
+    let mut buf = init.clone();
+    let mut seen = vec![0u64; 2];
+    let mut own = Vec::new();
+    {
+        let mut c1 = RemoteClient::connect(&addrs).unwrap();
+        ParamServer::commit(&mut c1, 0);
+        c1.apply_arrival(&msg(0, 0, 0, 0.5));
+        c1.apply_arrival(&msg(0, 0, 1, 0.5));
+        let (_, fs) = c1.fetch_into(1, &mut buf, &mut seen, &mut own);
+        assert_eq!(fs.layers_copied, 2);
+    } // c1 drops: connection closes, service keeps running
+
+    // more updates land while the worker is away
+    server.commit(0);
+    server.apply_arrival(&msg(0, 1, 1, 0.25));
+
+    // second connection resumes with the carried-over (now stale for
+    // layer 1) revision vector: exactly the changed layer ships
+    let mut c2 = RemoteClient::connect(&addrs).unwrap();
+    let (_, fs) = c2.fetch_into(1, &mut buf, &mut seen, &mut own);
+    assert_eq!(fs.layers_copied, 1, "only the layer that moved re-ships");
+    assert_eq!(fs.layers_skipped, 1);
+    assert_eq!(buf, server.snapshot(), "resumed buffer matches master");
+    drop(c2);
+    drop(svc);
+}
+
+/// A `serve`/`train` config mismatch must fail loudly at connect: the
+/// handshake's init digest catches two processes deriving different
+/// initial parameters (the silent-corruption mode where every layer
+/// gate-skips against a master the worker never actually held).
+#[test]
+#[should_panic(expected = "init digest")]
+fn mismatched_init_is_rejected_by_check_run() {
+    let init_served = ParamSet::zeros(&dims());
+    let init_local = {
+        let mut rng = sspdnn::util::Pcg64::new(9);
+        ParamSet::glorot(&dims(), &mut rng)
+    };
+    let client = transport::loopback(init_served, 1, Policy::Async, 2);
+    client.check_run(&init_local, 1, Policy::Async);
+}
+
+/// Across a server *restart* the revision counters restart too, so a
+/// carried-over gate can collide (0 == 0) and wrongly keep old bits —
+/// exactly the hazard `WorkerCache::reset_gate` exists for.
+#[test]
+fn server_restart_requires_gate_reset() {
+    let d = dims();
+    let init_a = ParamSet::zeros(&d);
+    let init_b = {
+        let mut rng = sspdnn::util::Pcg64::new(77);
+        ParamSet::glorot(&d, &mut rng)
+    };
+
+    // lifetime 1: worker's cache premise matches server A (both zeros)
+    let mut cache = WorkerCache::new(0, init_a.clone());
+    {
+        let mut c = transport::loopback(init_a.clone(), 1, Policy::Async, 2);
+        let (buf, seen, own) = cache.refresh_target();
+        let (_, fs) = c.fetch_into(0, buf, seen, own);
+        assert_eq!(fs.layers_copied, 0, "nothing changed on server A");
+    }
+
+    // lifetime 2: a *new* server with different bits, revisions back at
+    // zero. Without a reset the gate skips everything and the view
+    // silently keeps server A's bits.
+    let mut c = transport::loopback(init_b.clone(), 1, Policy::Async, 2);
+    {
+        let (buf, seen, own) = cache.refresh_target();
+        let (_, fs) = c.fetch_into(0, buf, seen, own);
+        assert_eq!(fs.layers_copied, 0, "the collision: stale gate skips");
+    }
+    assert_ne!(
+        *cache.view(),
+        ParamServer::snapshot(&c),
+        "demonstrated hazard: view disagrees with the new master"
+    );
+
+    // the reset path makes the next fetch recopy everything
+    cache.reset_gate();
+    let (buf, seen, own) = cache.refresh_target();
+    let (_, fs) = c.fetch_into(0, buf, seen, own);
+    assert_eq!(fs.layers_copied, 2, "reset gate recopies every layer");
+    assert_eq!(*cache.view(), ParamServer::snapshot(&c));
+}
