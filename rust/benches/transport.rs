@@ -5,8 +5,12 @@
 //! (see rust/EXPERIMENTS.md §Transport):
 //!
 //! * **commits_per_s** — full commit cycles per second through a
-//!   `RemoteClient` (clock advance + one per-layer UPDATE per layer,
-//!   all synchronous RPCs), at 1 and at `layers` shard endpoints.
+//!   `RemoteClient` (clock advance + one per-layer UPDATE per layer),
+//!   crossed over {synchronous, pipelined} commits × {1 shared
+//!   endpoint, one split server process per layer group}. Pipelined
+//!   runs drain their in-flight window inside the timed region and
+//!   must beat the synchronous baseline at the same endpoint count —
+//!   the tentpole's acceptance assertion.
 //! * **gated_fetch** — bytes received per fetch with the version gate
 //!   cold (every layer ships), hot (nothing changed — headers only),
 //!   one-layer-dirty, and with the gate disabled. Asserts the
@@ -43,11 +47,16 @@ fn commit_clocks() -> u64 {
     }
 }
 
-/// Commit cycles/second through the wire: each cycle is one COMMIT RPC
+/// Commit cycles/second through the wire: each cycle is one COMMIT
 /// plus one UPDATE per layer (dense deltas), the worker hot path.
-fn bench_commits(init: &ParamSet, groups: usize) -> f64 {
-    let mut client =
-        transport::loopback(init.clone(), 1, Policy::Async, groups);
+/// Pipelined clients drain their whole in-flight window before the
+/// clock stops, so the rate never counts unacknowledged work.
+fn bench_commits(
+    label: &str,
+    init: &ParamSet,
+    make: impl Fn() -> RemoteClient,
+) -> f64 {
+    let mut client = make();
     let mut delta: GradSet = init.zeros_like();
     for l in &mut delta.layers {
         l.w.fill(1e-4);
@@ -59,11 +68,12 @@ fn bench_commits(init: &ParamSet, groups: usize) -> f64 {
         WorkerPort::commit_clock(&mut client, 0);
         WorkerPort::apply_commit(&mut client, 0, clock, &delta);
     }
+    client.flush().expect("drain in-flight window");
     let dt = start.elapsed().as_secs_f64();
     let rate = clocks as f64 / dt;
     let wire = client.wire_stats();
     eprintln!(
-        "  [bench] commits: {groups} endpoint(s): {rate:.0} clocks/s \
+        "  [bench] commits ({label}): {rate:.0} clocks/s \
          ({:.1} MB sent over {clocks} clocks)",
         wire.bytes_sent as f64 / 1e6
     );
@@ -149,8 +159,53 @@ fn main() {
         model_payload as f64 / 1e6
     );
 
-    let commits_1 = bench_commits(&init, 1);
-    let commits_n = bench_commits(&init, n_layers);
+    const WINDOW: usize = 64;
+    let commits_1 = bench_commits("sync, 1 shared endpoint", &init, || {
+        transport::loopback(init.clone(), 1, Policy::Async, 1)
+    });
+    let commits_1_pipe =
+        bench_commits("pipelined, 1 shared endpoint", &init, || {
+            transport::loopback(init.clone(), 1, Policy::Async, 1)
+                .with_pipeline(WINDOW)
+                .expect("enable pipeline")
+        });
+    let commits_n =
+        bench_commits("sync, per-layer shared endpoints", &init, || {
+            transport::loopback(init.clone(), 1, Policy::Async, n_layers)
+        });
+    let commits_split =
+        bench_commits("sync, one process per layer group", &init, || {
+            transport::loopback_split(
+                init.clone(),
+                1,
+                Policy::Async,
+                n_layers,
+                None,
+            )
+        });
+    let commits_split_pipe =
+        bench_commits("pipelined, one process per layer group", &init, || {
+            transport::loopback_split(
+                init.clone(),
+                1,
+                Policy::Async,
+                n_layers,
+                Some(WINDOW),
+            )
+        });
+    // the tentpole's acceptance assertion: overlapping the ack round
+    // trips must strictly beat waiting for them, at the same number of
+    // server processes
+    assert!(
+        commits_1_pipe > commits_1,
+        "pipelined commits must beat synchronous at 1 endpoint: \
+         {commits_1_pipe:.0} <= {commits_1:.0} clocks/s"
+    );
+    assert!(
+        commits_split_pipe > commits_split,
+        "pipelined commits must beat synchronous across split processes: \
+         {commits_split_pipe:.0} <= {commits_split:.0} clocks/s"
+    );
     let fetch_1 = bench_gated_fetch(&init, 1);
     let fetch_n = bench_gated_fetch(&init, n_layers);
 
@@ -171,18 +226,33 @@ fn main() {
                 Json::Arr(dims.iter().map(|&d| Json::num(d as f64)).collect()),
             ),
             ("model_payload_bytes", Json::num(model_payload as f64)),
+            ("pipeline_window", Json::num(WINDOW as f64)),
             ("commits_per_s_1_endpoint", Json::num(commits_1)),
+            (
+                "commits_per_s_1_endpoint_pipelined",
+                Json::num(commits_1_pipe),
+            ),
             (
                 "commits_per_s_per_layer_endpoints",
                 Json::num(commits_n),
+            ),
+            (
+                "commits_per_s_split_processes",
+                Json::num(commits_split),
+            ),
+            (
+                "commits_per_s_split_processes_pipelined",
+                Json::num(commits_split_pipe),
             ),
             ("gated_fetch_1_endpoint", fetch_json(&fetch_1)),
             ("gated_fetch_per_layer_endpoints", fetch_json(&fetch_n)),
         ]),
     );
     println!(
-        "commits/s: {commits_1:.0} (1 endpoint) vs {commits_n:.0} \
-         ({n_layers} endpoints); gated fetch cold {} B -> hot {} B",
+        "commits/s: {commits_1:.0} sync -> {commits_1_pipe:.0} pipelined \
+         (1 endpoint); {commits_split:.0} sync -> {commits_split_pipe:.0} \
+         pipelined ({n_layers} split processes); gated fetch cold {} B -> \
+         hot {} B",
         fetch_1.cold, fetch_1.hot
     );
 }

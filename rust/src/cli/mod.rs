@@ -139,6 +139,23 @@ mod tests {
     }
 
     #[test]
+    fn transport_flag_shapes() {
+        // the serve/train transport flags ride the generic parser;
+        // pin the shapes the transport code paths rely on
+        let a = parse("serve --group 1 --addr 0.0.0.0:7070 --shard-groups 2");
+        assert_eq!(a.get_usize("group").unwrap(), Some(1));
+        assert_eq!(a.get("addr"), Some("0.0.0.0:7070"));
+        let t = parse(
+            "train --server 127.0.0.1:7171 --sync-commits --window 8 \
+             --group-addrs [::1]:7171,[::1]:7172",
+        );
+        assert!(t.get_bool("sync-commits"));
+        assert_eq!(t.get_usize("window").unwrap(), Some(8));
+        // bracketed IPv6 endpoints survive the comma-list flag intact
+        assert_eq!(t.get("group-addrs"), Some("[::1]:7171,[::1]:7172"));
+    }
+
+    #[test]
     fn duplicate_flag_rejected() {
         let e = Args::parse(
             ["x", "--a", "1", "--a", "2"].iter().map(|s| s.to_string()),

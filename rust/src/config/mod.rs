@@ -553,13 +553,26 @@ impl SweepConfig {
 #[derive(Clone, Debug, PartialEq)]
 pub struct TransportConfig {
     /// Base listen/connect address `host:port`; shard group `g` uses
-    /// `port + g`.
+    /// `port + g` unless `group_addrs` names its endpoint explicitly.
     pub addr: String,
     /// Endpoint count (clamped to the layer count at serve time).
     pub shard_groups: usize,
     /// Version-gate delta fetches on the wire. Off: every read ships
     /// every layer (the bench's no-gate baseline).
     pub gated: bool,
+    /// Pipeline commits: per-connection writer thread + bounded
+    /// in-flight acknowledgement window instead of one blocking round
+    /// trip per UPDATE/COMMIT frame.
+    pub pipeline: bool,
+    /// Max in-flight unacknowledged frames per connection when
+    /// `pipeline` is on (>= 1).
+    pub window: usize,
+    /// Explicit per-group endpoint addresses for a multi-process server
+    /// tier (one `serve --group g` process per entry, entry `g` for
+    /// group `g`). Empty: derive every endpoint from `addr` by the
+    /// `port + g` convention. When set, the length must equal
+    /// `shard_groups`.
+    pub group_addrs: Vec<String>,
 }
 
 impl Default for TransportConfig {
@@ -568,6 +581,9 @@ impl Default for TransportConfig {
             addr: "127.0.0.1:7070".into(),
             shard_groups: 1,
             gated: true,
+            pipeline: true,
+            window: 32,
+            group_addrs: Vec::new(),
         }
     }
 }
@@ -591,6 +607,20 @@ impl TransportConfig {
                     self.shard_groups = *n as usize
                 }
                 ("gated", Bool(b)) => self.gated = *b,
+                ("pipeline", Bool(b)) => self.pipeline = *b,
+                ("window", Int(n)) => {
+                    if *n < 1 {
+                        return Err(format!(
+                            "transport.window must be >= 1, got {n}"
+                        ));
+                    }
+                    self.window = *n as usize
+                }
+                ("group_addrs", StrArray(v)) => self.group_addrs = v.clone(),
+                // `group_addrs = []` parses as an empty numeric array
+                ("group_addrs", IntArray(v)) if v.is_empty() => {
+                    self.group_addrs = Vec::new()
+                }
                 (k, _) => {
                     return Err(format!("unknown config key [transport] {k}"))
                 }
@@ -602,9 +632,17 @@ impl TransportConfig {
     /// Serialize back to the `[transport]` table — `apply_toml` of the
     /// output reproduces `self` (pinned by the round-trip test).
     pub fn to_toml(&self) -> String {
+        let addrs = self
+            .group_addrs
+            .iter()
+            .map(|a| format!("\"{a}\""))
+            .collect::<Vec<_>>()
+            .join(", ");
         format!(
-            "[transport]\naddr = \"{}\"\nshard_groups = {}\ngated = {}\n",
-            self.addr, self.shard_groups, self.gated
+            "[transport]\naddr = \"{}\"\nshard_groups = {}\ngated = {}\n\
+             pipeline = {}\nwindow = {}\ngroup_addrs = [{addrs}]\n",
+            self.addr, self.shard_groups, self.gated, self.pipeline,
+            self.window,
         )
     }
 
@@ -616,7 +654,44 @@ impl TransportConfig {
         if self.shard_groups == 0 {
             return Err("transport.shard_groups must be >= 1".into());
         }
+        if self.window == 0 {
+            return Err("transport.window must be >= 1".into());
+        }
+        if !self.group_addrs.is_empty()
+            && self.group_addrs.len() != self.shard_groups
+        {
+            return Err(format!(
+                "transport.group_addrs has {} entries but shard_groups = {}",
+                self.group_addrs.len(),
+                self.shard_groups
+            ));
+        }
+        for a in &self.group_addrs {
+            crate::ssp::transport::split_addr(a)
+                .map_err(|e| format!("transport.group_addrs: {e}"))?;
+        }
         Ok(())
+    }
+
+    /// Group `g`'s endpoint address: the explicit `group_addrs` entry
+    /// when configured, else `addr`'s host on `port + g`.
+    pub fn group_addr(&self, g: usize) -> Result<String, String> {
+        if !self.group_addrs.is_empty() {
+            return self.group_addrs.get(g).cloned().ok_or_else(|| {
+                format!("group {g} has no transport.group_addrs entry")
+            });
+        }
+        let (host, port) = crate::ssp::transport::split_addr(&self.addr)
+            .map_err(|e| format!("transport.addr: {e}"))?;
+        let port = port
+            .checked_add(g as u16)
+            .ok_or_else(|| format!("group {g} port overflows u16"))?;
+        // re-bracket IPv6 literals (split_addr strips the brackets)
+        if host.contains(':') {
+            Ok(format!("[{host}]:{port}"))
+        } else {
+            Ok(format!("{host}:{port}"))
+        }
     }
 }
 
@@ -781,6 +856,9 @@ mod tests {
             addr = "0.0.0.0:9000"
             shard_groups = 4
             gated = false
+            pipeline = false
+            window = 8
+            group_addrs = ["10.0.0.1:7070", "10.0.0.2:7070", "10.0.0.3:7070", "10.0.0.4:7070"]
             "#,
         )
         .unwrap();
@@ -792,6 +870,10 @@ mod tests {
         assert_eq!(t.addr, "0.0.0.0:9000");
         assert_eq!(t.shard_groups, 4);
         assert!(!t.gated);
+        assert!(!t.pipeline);
+        assert_eq!(t.window, 8);
+        assert_eq!(t.group_addrs.len(), 4);
+        assert_eq!(t.group_addr(2).unwrap(), "10.0.0.3:7070");
     }
 
     #[test]
@@ -802,11 +884,24 @@ mod tests {
                 addr: "10.1.2.3:7171".into(),
                 shard_groups: 7,
                 gated: false,
+                pipeline: false,
+                window: 1,
+                group_addrs: Vec::new(),
             },
             TransportConfig {
                 addr: "localhost:0".into(),
                 shard_groups: 1,
                 gated: true,
+                ..TransportConfig::default()
+            },
+            TransportConfig {
+                shard_groups: 2,
+                window: 64,
+                group_addrs: vec![
+                    "10.0.0.1:7070".into(),
+                    "[::1]:7171".into(),
+                ],
+                ..TransportConfig::default()
             },
         ] {
             let doc = parse_toml(&t.to_toml()).unwrap();
@@ -845,6 +940,29 @@ mod tests {
         // wrong value type for a known key is rejected, not ignored
         let wrong = parse_toml("[transport]\ngated = \"yes\"\n").unwrap();
         assert!(TransportConfig::default().apply_toml(&wrong).is_err());
+
+        let zero_win = parse_toml("[transport]\nwindow = 0\n").unwrap();
+        assert!(TransportConfig::default().apply_toml(&zero_win).is_err());
+        // group_addrs length must match shard_groups
+        let mismatched = parse_toml(
+            "[transport]\nshard_groups = 3\ngroup_addrs = [\"a:1\", \"b:2\"]\n",
+        )
+        .unwrap();
+        assert!(TransportConfig::default().apply_toml(&mismatched).is_err());
+        // each entry must itself be a dialable host:port
+        let badaddr = parse_toml(
+            "[transport]\ngroup_addrs = [\"noport\"]\n",
+        )
+        .unwrap();
+        assert!(TransportConfig::default().apply_toml(&badaddr).is_err());
+        // the port + g convention re-brackets IPv6 hosts
+        let v6 = TransportConfig {
+            addr: "[::1]:7070".into(),
+            shard_groups: 2,
+            ..TransportConfig::default()
+        };
+        v6.validate().unwrap();
+        assert_eq!(v6.group_addr(1).unwrap(), "[::1]:7071");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! TOML-subset parser: `[section]` headers, `key = value` pairs, `#`
 //! comments. Values: integers, floats, booleans, quoted strings, and
-//! arrays of integers or floats. That is the entire grammar the config
-//! system uses.
+//! arrays of integers, floats, or quoted strings. That is the entire
+//! grammar the config system uses.
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
@@ -13,6 +13,10 @@ pub enum TomlValue {
     /// An array with at least one non-integer item (e.g. the `[sweep]`
     /// table's `etas = [0.05, 0.1]`).
     FloatArray(Vec<f64>),
+    /// An array of quoted strings (e.g. the `[transport]` table's
+    /// `group_addrs = ["10.0.0.1:7070", "10.0.0.2:7070"]`). No mixing
+    /// with numeric items.
+    StrArray(Vec<String>),
 }
 
 impl TomlValue {
@@ -116,6 +120,25 @@ fn parse_value(s: &str) -> Result<TomlValue, String> {
     }
     if let Some(inner) = s.strip_prefix('[') {
         let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        // a quoted first item makes it a string array (every item must
+        // then be quoted — no mixed arrays)
+        if inner.trim_start().starts_with('"') {
+            let mut items = Vec::new();
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let item = part
+                    .strip_prefix('"')
+                    .and_then(|p| p.strip_suffix('"'))
+                    .ok_or_else(|| {
+                        format!("bad string-array item {part:?}")
+                    })?;
+                items.push(item.to_string());
+            }
+            return Ok(TomlValue::StrArray(items));
+        }
         // all-integer arrays stay IntArray (model dims etc.); any
         // non-integer item promotes the whole array to FloatArray
         let mut ints = Vec::new();
@@ -229,6 +252,27 @@ mod tests {
         );
         assert_eq!(doc.get("", "d").unwrap().as_f64_vec(), Some(vec![3.0]));
         assert_eq!(TomlValue::Str("x".into()).as_f64_vec(), None);
+    }
+
+    #[test]
+    fn string_arrays() {
+        let doc = parse_toml(
+            r#"addrs = ["10.0.0.1:7070", "[::1]:7171"]
+               empty = []"#,
+        )
+        .unwrap();
+        assert_eq!(
+            doc.get("", "addrs"),
+            Some(&TomlValue::StrArray(vec![
+                "10.0.0.1:7070".into(),
+                "[::1]:7171".into()
+            ]))
+        );
+        // an empty array has no first quoted item: stays IntArray
+        assert_eq!(doc.get("", "empty"), Some(&TomlValue::IntArray(vec![])));
+        assert_eq!(doc.get("", "addrs").unwrap().as_f64_vec(), None);
+        assert!(parse_toml(r#"x = ["a", 3]"#).is_err(), "no mixed arrays");
+        assert!(parse_toml(r#"x = ["a", b]"#).is_err());
     }
 
     #[test]

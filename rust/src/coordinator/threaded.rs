@@ -152,6 +152,15 @@ pub fn run_threaded(
 /// ports must hold the same initial parameters this config derives
 /// (`coordinator::init_params`); `run_threaded` itself is this function
 /// applied to `&ShardedServer` ports.
+///
+/// Ports may acknowledge commits asynchronously — e.g. a pipelined
+/// `transport::RemoteClient` lets `apply_commit`/`commit_clock` return
+/// before the server acks, overlapping the next minibatch's compute
+/// with the previous clock's network round trips — provided dropping
+/// the port flushes everything still in flight. Each worker's port
+/// drops when its thread ends, before the scoped join completes, so the
+/// final master-snapshot port (index `machines`) always observes every
+/// commit.
 pub fn run_threaded_on<P: WorkerPort>(
     cfg: &ExperimentConfig,
     dataset: &Dataset,

@@ -89,11 +89,21 @@ FLAGS (transport; also settable via the [transport] TOML table):
   --server host:port          train: back the run with a remote parameter
                               server (group 0's endpoint; siblings are
                               discovered on port+1, port+2, ...)
+  --group-addrs a:p,b:p,...   train: explicit endpoint per shard group
+                              (multi-process tier on arbitrary hosts;
+                              overrides the port+g discovery)
   --no-gate                   train: ship every layer on every fetch
                               (disable the version-gated delta reads)
+  --sync-commits              train: block on every UPDATE/COMMIT ack
+                              (disable the pipelined commit path)
+  --window N                  train: max in-flight unacked frames per
+                              connection when pipelining (default 32)
   --addr host:port            serve: base listen address (group g binds
                               port+g; default 127.0.0.1:7070)
   --shard-groups N            serve: endpoint count (clamped to layers)
+  --group N                   serve: host ONLY shard group N in this
+                              process (exclusive tier: run one such
+                              process per group, same config each)
 
 FLAGS (sweep; grid also settable via the [sweep] TOML table):
   --grid-machines 1,2,4       machine counts to sweep
@@ -203,6 +213,15 @@ fn transport_config(
     if args.get_bool("no-gate") {
         tcfg.gated = false;
     }
+    if args.get_bool("sync-commits") {
+        tcfg.pipeline = false;
+    }
+    if let Some(w) = args.get_usize("window").map_err(|e| e.to_string())? {
+        tcfg.window = w;
+    }
+    if let Some(s) = args.get("group-addrs") {
+        tcfg.group_addrs = parse_list("group-addrs", s)?;
+    }
     tcfg.validate()?;
     Ok(tcfg)
 }
@@ -224,14 +243,32 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         None => run_experiment_on(&cfg, opts, &dataset),
         Some(addr) => {
             // remote deployment path: the driver's parameter server is a
-            // RemoteClient speaking the shard-group wire protocol to a
-            // `sspdnn serve` process
+            // RemoteClient speaking the shard-group wire protocol to one
+            // `sspdnn serve` process (shared tier) or one `serve
+            // --group g` process per shard group (exclusive tier)
             let tcfg = transport_config(args, doc.as_ref())?;
-            let client = RemoteClient::connect_base(addr)?.with_gate(tcfg.gated);
+            let client = if tcfg.group_addrs.is_empty() {
+                RemoteClient::connect_base(addr)?
+            } else {
+                RemoteClient::connect_hosts(&tcfg.group_addrs)?
+            };
+            let client = client.with_gate(tcfg.gated);
+            let client = if tcfg.pipeline {
+                client.with_pipeline(tcfg.window)?
+            } else {
+                client
+            };
             println!(
-                "remote parameter server: {addr} ({} shard endpoints, gate {})",
+                "remote parameter server: {addr} ({} {} endpoints, gate {}, \
+                 commits {})",
                 client.groups(),
+                if client.exclusive() { "exclusive" } else { "shared" },
                 if tcfg.gated { "on" } else { "off" },
+                if client.pipelined() {
+                    format!("pipelined (window {})", tcfg.window)
+                } else {
+                    "synchronous".to_string()
+                },
             );
             run_experiment_with(&cfg, opts, &dataset, move |init, workers, policy| {
                 client.check_run(&init, workers, policy);
@@ -239,6 +276,12 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             })
         }
     };
+    // deployment-independent fingerprint of the trained model — lets a
+    // multi-process run be diffed against a single-process run with grep
+    println!(
+        "final weights digest: {:016x}",
+        sspdnn::ssp::transport::param_digest(&run.final_params)
+    );
     println!(
         "objective: {:.4} -> {:.4} over {} (virtual) | {} steps | eps {:.3}",
         run.evals.first().map(|e| e.objective).unwrap_or(f64::NAN),
@@ -281,17 +324,44 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let workers = cfg.cluster.machines;
     let server =
         std::sync::Arc::new(ShardedServer::new(init, workers, cfg.ssp.policy));
-    let svc = ShardService::bind(server, &tcfg.addr, tcfg.shard_groups)?;
-    println!(
-        "serve: {} | {} workers | {} | {} layer shards over {} endpoints",
-        cfg.name,
-        workers,
-        cfg.ssp.policy.name(),
-        cfg.model.dims.len() - 1,
-        svc.groups(),
-    );
+    let group = args.get_usize("group").map_err(|e| e.to_string())?;
+    let svc = match group {
+        // shared tier: this one process hosts every shard group
+        None => ShardService::bind(server, &tcfg.addr, tcfg.shard_groups)?,
+        // exclusive tier: this process hosts ONLY group g's shards and
+        // its private clock table; its siblings run as separate `serve
+        // --group <j>` processes (same config — the cross-process
+        // protocol depends on identical init/geometry, which the
+        // client's handshake digest check enforces)
+        Some(g) => {
+            let addr = tcfg.group_addr(g)?;
+            ShardService::bind_group(server, &addr, tcfg.shard_groups, g)?
+        }
+    };
+    match group {
+        None => println!(
+            "serve: {} | {} workers | {} | {} layer shards over {} endpoints",
+            cfg.name,
+            workers,
+            cfg.ssp.policy.name(),
+            cfg.model.dims.len() - 1,
+            svc.groups(),
+        ),
+        Some(g) => println!(
+            "serve: {} | {} workers | {} | exclusive group {g}/{} \
+             ({} layer shards total)",
+            cfg.name,
+            workers,
+            cfg.ssp.policy.name(),
+            tcfg.shard_groups,
+            cfg.model.dims.len() - 1,
+        ),
+    }
     for (g, a) in svc.addrs().iter().enumerate() {
-        println!("  group {g}: {a}");
+        match group {
+            None => println!("  group {g}: {a}"),
+            Some(mine) => println!("  group {mine}: {a}"),
+        }
     }
     // `train --server` discovers sibling groups on port+1, port+2, ...
     // — that convention only holds when a fixed base port was bound
@@ -299,12 +369,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let ephemeral = sspdnn::ssp::transport::split_addr(&tcfg.addr)
         .map(|(_, p)| p == 0)
         .unwrap_or(false);
-    if ephemeral && svc.groups() > 1 {
+    if ephemeral && (svc.groups() > 1 || group.is_some()) {
         println!(
             "note: ephemeral ports — `train --server` needs a fixed base \
-             port to find the sibling groups; rerun with --addr host:PORT"
+             port (or --group-addrs) to find the sibling groups; rerun \
+             with --addr host:PORT"
         );
-    } else {
+    } else if group.is_none() || group == Some(0) {
         println!(
             "attach workers with: sspdnn train --server {} [--preset ...]",
             svc.addrs()[0]

@@ -334,6 +334,69 @@ impl ShardedServer {
         !self.must_wait(worker) && self.read_ready(worker)
     }
 
+    /// Group-scoped read guarantee: Eq. 5's visibility check restricted
+    /// to `layers`. The exclusive (multi-process) transport tier needs
+    /// this because each server process only ever receives UPDATEs for
+    /// its own shard group — the other layers' version vectors stay at
+    /// zero forever, so the whole-model `read_ready` would deadlock.
+    /// The client ANDs the group-scoped answers across processes, which
+    /// equals the whole-model predicate because the check is a
+    /// conjunction over (layer, worker) pairs.
+    pub fn read_ready_group(
+        &self,
+        worker: usize,
+        layers: std::ops::Range<usize>,
+    ) -> bool {
+        assert!(layers.end <= self.shards.len(), "group out of range");
+        let c = self.clocks.clock(worker);
+        match self.policy.staleness() {
+            None => true,
+            Some(s) => {
+                let through = c.saturating_sub(s);
+                self.shards[layers].iter().all(|shard| {
+                    shard
+                        .versions
+                        .iter()
+                        .all(|v| v.load(Ordering::Acquire) >= through)
+                })
+            }
+        }
+    }
+
+    /// Group-scoped [`ShardedServer::wait_ready_timeout`]: barrier
+    /// cleared *and* the read guarantee met over `layers` only — what
+    /// an exclusive endpoint's WAIT handler polls (it cannot see the
+    /// other groups' shards).
+    pub fn wait_ready_group_timeout(
+        &self,
+        worker: usize,
+        layers: std::ops::Range<usize>,
+        timeout: std::time::Duration,
+    ) -> bool {
+        let ready = |srv: &ShardedServer| {
+            !srv.must_wait(worker)
+                && srv.read_ready_group(worker, layers.clone())
+        };
+        if ready(self) {
+            return true;
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        let mut guard = self.notify.lock.lock().unwrap();
+        while !ready(self) {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _) = self
+                .notify
+                .cv
+                .wait_timeout(guard, deadline - now)
+                .unwrap();
+            guard = g;
+        }
+        true
+    }
+
     fn bump(&self) {
         // State changed *before* this lock is taken: any waiter that
         // checked its predicate too early is already parked in `wait`

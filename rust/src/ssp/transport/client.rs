@@ -1,13 +1,47 @@
 //! `RemoteClient` — the worker side of the message boundary.
 //!
 //! A full [`ParamServer`] implementation over framed TCP: every trait
-//! call becomes one synchronous request per relevant endpoint, so the
+//! call becomes one request per relevant endpoint, so the
 //! discrete-event driver (`run_experiment_with`), the sweep harness and
 //! the P1–P5 property suite run against a remote server byte-for-byte
 //! the way they run against the in-process `ShardedServer`. It also
 //! implements [`WorkerPort`], so `coordinator::run_threaded_on` can put
 //! one connection set under each OS worker thread — the multi-process
 //! deployment shape.
+//!
+//! Two orthogonal deployment axes, both negotiated at the handshake or
+//! chosen at construction:
+//!
+//! * **Shared vs. exclusive endpoints.** Shared (HELLO_OK `exclusive
+//!   = 0`): every endpoint wraps one `ShardedServer` process, so
+//!   control RPCs go to group 0 and a single COMMIT advances the one
+//!   clock table. Exclusive (`= 1`, one `sspdnn serve --group i` per
+//!   process): each process owns a private clock table and only its
+//!   group's shards, so the client *broadcasts* every COMMIT (keeping
+//!   the tables identical), ANDs the group-scoped READ_READY answers,
+//!   fans WAIT out to every endpoint (readiness is monotone between a
+//!   worker's own commits, so waiting the groups out sequentially is
+//!   sound), and routes APPLIED to the owning group. ε statistics sum
+//!   across groups exactly because each group computes them from the
+//!   same clock table over its own disjoint layers.
+//!
+//! * **Synchronous vs. pipelined commits** ([`RemoteClient::
+//!   with_pipeline`]). Synchronous: every UPDATE/COMMIT blocks on its
+//!   acknowledgement — simple, but loopback RTTs bound commits/sec.
+//!   Pipelined: each connection gets a dedicated writer thread and a
+//!   bounded in-flight window; `apply_commit`/`commit_clock` enqueue
+//!   their frames and return immediately, so the worker overlaps the
+//!   next minibatch's compute with the previous clock's acks. The
+//!   pending-acknowledgement queue is drained before *any* response is
+//!   read on that connection (per-connection FIFO — the server
+//!   processes a connection's frames in order — is what keeps the
+//!   observable protocol bitwise identical to the synchronous path),
+//!   and `commit_clock` itself never forces a drain: the blocking
+//!   moves into `wait_until_ready`/`fetch_view`, i.e. exactly where
+//!   the SSP staleness gate requires the worker to stop anyway. A
+//!   server ERR consumes its pending entry like any acknowledgement
+//!   (the window never desyncs) and surfaces as a typed
+//!   [`TransportError`].
 //!
 //! Reads are **version-gated on the wire**: `fetch_into` ships the
 //! caller's per-layer last-seen revision vector and receives only the
@@ -22,23 +56,93 @@
 //! keeping it at the subscriber makes the numbers comparable with the
 //! in-process servers call-for-call.
 
+use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpStream};
-use std::sync::Mutex;
+use std::sync::{mpsc, Mutex};
 
 use crate::nn::{GradSet, LayerParams, ParamSet};
 use crate::ssp::{FetchStats, ParamServer, Policy, ReadStats, UpdateMsg, WorkerPort};
 use crate::tensor::Matrix;
 
 use super::service::{policy_decode, ShardService};
-use super::wire::{self, op, Frame, FrameDecoder};
+use super::wire::{self, op, Frame, FrameDecoder, WireError};
 
 /// Raw transport accounting, from the client's side of the sockets.
+/// In pipelined mode a frame counts as sent when it is handed to the
+/// connection's writer thread (the moment it irrevocably enters the
+/// send FIFO).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WireStats {
     pub frames_sent: u64,
     pub frames_received: u64,
     pub bytes_sent: u64,
     pub bytes_received: u64,
+}
+
+/// What went wrong, typed: protocol-level rejections the server
+/// answered with an ERR frame (the connection and the in-flight window
+/// stay usable), socket-level failures, and malformed/unexpected
+/// replies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportErrorKind {
+    /// The server answered ERR (e.g. the FIFO pre-check rejected an
+    /// out-of-order update). The offending request had no effect and
+    /// the connection stays up.
+    Server,
+    /// Socket-level failure (connect, read, write, torn frame at EOF).
+    Io,
+    /// The bytes arrived but made no sense: undecodable frame,
+    /// unexpected reply opcode, short payload, or a pipelined COMMIT
+    /// acknowledgement disagreeing with the client's clock bookkeeping.
+    Protocol,
+}
+
+/// A typed transport failure. Converts into the `String` errors the
+/// connect paths use, and `Display`s with the same prefixes the
+/// pre-typed error strings carried (so panic-message pins hold).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransportError {
+    pub kind: TransportErrorKind,
+    pub msg: String,
+}
+
+impl TransportError {
+    fn server(msg: impl Into<String>) -> TransportError {
+        TransportError { kind: TransportErrorKind::Server, msg: msg.into() }
+    }
+
+    fn io(msg: impl Into<String>) -> TransportError {
+        TransportError { kind: TransportErrorKind::Io, msg: msg.into() }
+    }
+
+    fn protocol(msg: impl Into<String>) -> TransportError {
+        TransportError { kind: TransportErrorKind::Protocol, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.kind {
+            TransportErrorKind::Server => "server error",
+            TransportErrorKind::Io => "transport io",
+            TransportErrorKind::Protocol => "transport protocol",
+        };
+        write!(f, "{kind}: {}", self.msg)
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<TransportError> for String {
+    fn from(e: TransportError) -> String {
+        e.to_string()
+    }
+}
+
+impl From<WireError> for TransportError {
+    fn from(e: WireError) -> TransportError {
+        TransportError::protocol(e.to_string())
+    }
 }
 
 /// Immutable facts learned at the HELLO handshake.
@@ -56,20 +160,90 @@ struct Meta {
     /// FNV-1a digest of the served init (`transport::param_digest`),
     /// from the handshake — `check_run`'s seed-mismatch tripwire.
     init_digest: u64,
+    /// Every endpoint is its own server process hosting only its
+    /// group's shards (see module docs): COMMIT broadcasts, READ_READY
+    /// / WAIT fan out, APPLIED routes to the owner.
+    exclusive: bool,
     /// Version-gate delta reads (config `transport.gated`). Off: every
     /// gated read sends an always-miss sentinel, shipping every layer.
     gated: bool,
 }
 
+/// One expected-but-unread acknowledgement on a pipelined connection,
+/// in FIFO order with the server's replies.
+#[derive(Clone, Copy, Debug)]
+enum Pending {
+    /// An UPDATE's OK.
+    ExpectOk,
+    /// A COMMIT's U64 reply; must equal the client's locally tracked
+    /// committed count (it advances only through this client).
+    ExpectU64(u64),
+}
+
+/// The dedicated writer thread of one pipelined connection: everything
+/// the client sends on that connection goes through its channel, so
+/// the socket sees exactly the enqueue order (FIFO with the pending
+/// queue). Dropping the writer closes the channel and joins.
+struct Writer {
+    tx: Option<mpsc::Sender<Vec<u8>>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Writer {
+    fn spawn(mut stream: TcpStream) -> Writer {
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        let handle = std::thread::spawn(move || {
+            while let Ok(buf) = rx.recv() {
+                if std::io::Write::write_all(&mut stream, &buf).is_err() {
+                    // the reader side will see the failure as a recv
+                    // error; just stop accepting frames
+                    break;
+                }
+            }
+        });
+        Writer { tx: Some(tx), handle: Some(handle) }
+    }
+
+    fn send(&self, buf: Vec<u8>) -> Result<(), TransportError> {
+        self.tx
+            .as_ref()
+            .expect("writer channel")
+            .send(buf)
+            .map_err(|_| {
+                TransportError::io("writer thread gone (socket write failed)")
+            })
+    }
+}
+
+impl Drop for Writer {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // disconnect: the thread drains and exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 struct Conn {
     stream: TcpStream,
     dec: FrameDecoder,
+    /// `Some` in pipelined mode; owns a `try_clone` of `stream`.
+    writer: Option<Writer>,
+    /// Outstanding acknowledgements, FIFO with the server's replies.
+    pending: VecDeque<Pending>,
 }
 
 /// The socket half: one connection per shard group + wire accounting.
 struct ClientIo {
     conns: Vec<Conn>,
     wire: WireStats,
+    /// Pipelined mode: max outstanding acknowledgements per connection
+    /// before an enqueue first drains. `None` = synchronous.
+    window: Option<usize>,
+    /// Locally tracked committed clock per worker (`None` = unknown;
+    /// the first pipelined commit for that worker runs one synchronous
+    /// round to learn the server's count — the reconnect case).
+    commits: Vec<Option<u64>>,
 }
 
 struct Inner {
@@ -87,48 +261,176 @@ struct Inner {
 pub struct RemoteClient {
     meta: Meta,
     inner: Mutex<Inner>,
-    /// A loopback service owned by this client (tests/bench): declared
-    /// after `inner` so the sockets close before the service joins its
-    /// threads on drop.
-    service: Option<ShardService>,
+    /// Loopback services owned by this client (tests/bench): declared
+    /// after `inner` so the sockets close before the services join
+    /// their threads on drop.
+    services: Vec<ShardService>,
 }
 
 impl ClientIo {
-    fn send(&mut self, g: usize, frame_bytes: &[u8]) -> Result<(), String> {
-        std::io::Write::write_all(&mut self.conns[g].stream, frame_bytes)
-            .map_err(|e| format!("send (group {g}): {e}"))?;
+    fn send(&mut self, g: usize, frame_bytes: &[u8]) -> Result<(), TransportError> {
+        let conn = &mut self.conns[g];
+        match &conn.writer {
+            Some(w) => w.send(frame_bytes.to_vec()).map_err(|mut e| {
+                e.msg = format!("send (group {g}): {}", e.msg);
+                e
+            })?,
+            None => std::io::Write::write_all(&mut conn.stream, frame_bytes)
+                .map_err(|e| {
+                    TransportError::io(format!("send (group {g}): {e}"))
+                })?,
+        }
         self.wire.frames_sent += 1;
         self.wire.bytes_sent += frame_bytes.len() as u64;
         Ok(())
     }
 
-    fn recv(&mut self, g: usize) -> Result<Frame, String> {
+    fn recv(&mut self, g: usize) -> Result<Frame, TransportError> {
         let conn = &mut self.conns[g];
         let frame = wire::read_frame(
             &mut conn.stream,
             &mut conn.dec,
             &mut self.wire.bytes_received,
         )
-        .map_err(|e| format!("recv (group {g}): {e}"))?
-        .ok_or_else(|| format!("server closed connection (group {g})"))?;
+        .map_err(|e| TransportError::io(format!("recv (group {g}): {e}")))?
+        .ok_or_else(|| {
+            TransportError::io(format!("server closed connection (group {g})"))
+        })?;
         self.wire.frames_received += 1;
         if frame.op == op::ERR {
-            return Err(format!(
-                "server error: {}",
-                String::from_utf8_lossy(&frame.payload)
+            return Err(TransportError::server(
+                String::from_utf8_lossy(&frame.payload).into_owned(),
             ));
         }
         Ok(frame)
     }
 
-    fn rpc(&mut self, g: usize, frame_bytes: &[u8]) -> Result<Frame, String> {
+    /// Consume one outstanding acknowledgement from `g`'s pending
+    /// queue. The entry is popped *before* the reply is read, so a
+    /// server ERR (which answers exactly that request) leaves the
+    /// window aligned — the error is surfaced, not a desync.
+    fn drain_one(&mut self, g: usize) -> Result<(), TransportError> {
+        let expect = self.conns[g]
+            .pending
+            .pop_front()
+            .expect("drain_one on an empty pending queue");
+        let f = self.recv(g)?;
+        match expect {
+            Pending::ExpectOk => expect_op(&f, op::OK),
+            Pending::ExpectU64(want) => {
+                expect_op(&f, op::U64)?;
+                let mut r = wire::Reader::new(&f.payload);
+                let got = r.u64()?;
+                r.done()?;
+                if got != want {
+                    return Err(TransportError::protocol(format!(
+                        "pipelined COMMIT ack {got} != locally tracked \
+                         {want} (group {g}) — another client committed \
+                         for this worker?"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Drain every outstanding acknowledgement on `g` — required
+    /// before reading any synchronous reply on that connection (the
+    /// server answers strictly in request order).
+    fn drain(&mut self, g: usize) -> Result<(), TransportError> {
+        while !self.conns[g].pending.is_empty() {
+            self.drain_one(g)?;
+        }
+        Ok(())
+    }
+
+    /// Drain everything on every connection, reporting the first error
+    /// but consuming every outstanding acknowledgement regardless (a
+    /// server ERR consumes its entry; an io/protocol failure abandons
+    /// that connection's queue — nothing more will arrive on it).
+    fn flush_all(&mut self) -> Result<(), TransportError> {
+        let mut first: Option<TransportError> = None;
+        for g in 0..self.conns.len() {
+            while !self.conns[g].pending.is_empty() {
+                match self.drain_one(g) {
+                    Ok(()) => {}
+                    Err(e) => {
+                        let fatal = e.kind != TransportErrorKind::Server;
+                        if first.is_none() {
+                            first = Some(e);
+                        }
+                        if fatal {
+                            self.conns[g].pending.clear();
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        match first {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Drain every connection's in-flight window (no-op when
+    /// synchronous or empty). Called before reads whose answer spans
+    /// connections — e.g. shared-mode READ_READY is evaluated by one
+    /// endpoint but depends on updates pipelined to *other*
+    /// connections; acknowledgements are sent after application, so a
+    /// full drain makes every previously-issued operation visible and
+    /// keeps the answer deterministic (bitwise equal to the oracle's).
+    fn settle(&mut self) -> Result<(), TransportError> {
+        if self.window.is_some() {
+            for g in 0..self.conns.len() {
+                self.drain(g)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Make room for one more in-flight acknowledgement on `g`
+    /// (pipelined mode): the bounded window that keeps the number of
+    /// unread replies — and with it the receive-buffer footprint —
+    /// finite without ever blocking on a whole round trip per frame.
+    fn make_room(&mut self, g: usize) -> Result<(), TransportError> {
+        let window = self.window.expect("make_room in synchronous mode");
+        while self.conns[g].pending.len() >= window {
+            self.drain_one(g)?;
+        }
+        Ok(())
+    }
+
+    /// Enqueue a frame expecting an acknowledgement later (pipelined
+    /// fire-and-account path).
+    fn enqueue(
+        &mut self,
+        g: usize,
+        frame_bytes: &[u8],
+        expect: Pending,
+    ) -> Result<(), TransportError> {
+        self.make_room(g)?;
         self.send(g, frame_bytes)?;
+        self.conns[g].pending.push_back(expect);
+        Ok(())
+    }
+
+    /// Synchronous request/response on one connection (draining any
+    /// pipelined backlog first — the server replies in request order).
+    fn rpc(&mut self, g: usize, frame_bytes: &[u8]) -> Result<Frame, TransportError> {
+        self.send(g, frame_bytes)?;
+        self.drain(g)?;
         self.recv(g)
     }
 
     /// Control RPC carrying one u32 argument, returning a u64.
-    fn rpc_u64(&mut self, opcode: u8, arg: u32) -> Result<u64, String> {
-        let f = self.rpc(0, &wire::frame(opcode, &arg.to_le_bytes()))?;
+    fn rpc_u64_on(
+        &mut self,
+        g: usize,
+        opcode: u8,
+        arg: u32,
+    ) -> Result<u64, TransportError> {
+        let f = self.rpc(g, &wire::frame(opcode, &arg.to_le_bytes()))?;
         expect_op(&f, op::U64)?;
         let mut r = wire::Reader::new(&f.payload);
         let v = r.u64()?;
@@ -137,8 +439,13 @@ impl ClientIo {
     }
 
     /// Control RPC carrying one u32 argument, returning a bool.
-    fn rpc_bool(&mut self, opcode: u8, arg: u32) -> Result<bool, String> {
-        let f = self.rpc(0, &wire::frame(opcode, &arg.to_le_bytes()))?;
+    fn rpc_bool_on(
+        &mut self,
+        g: usize,
+        opcode: u8,
+        arg: u32,
+    ) -> Result<bool, TransportError> {
+        let f = self.rpc(g, &wire::frame(opcode, &arg.to_le_bytes()))?;
         expect_op(&f, op::BOOL)?;
         let mut r = wire::Reader::new(&f.payload);
         let v = r.u8()?;
@@ -146,7 +453,62 @@ impl ClientIo {
         Ok(v != 0)
     }
 
-    /// Ship one per-layer additive update to its owning endpoint.
+    /// The COMMIT targets: every endpoint in exclusive mode (each
+    /// process's private clock table must advance), group 0 alone in
+    /// shared mode (they all wrap the same table).
+    fn commit_targets(&self, meta: &Meta) -> std::ops::Range<usize> {
+        if meta.exclusive {
+            0..self.conns.len()
+        } else {
+            0..1
+        }
+    }
+
+    /// Advance `worker`'s clock. Synchronous mode (or the first
+    /// pipelined commit for this worker — the count is still unknown,
+    /// e.g. right after a reconnect): a blocking COMMIT round,
+    /// asserting every exclusive endpoint agrees. Pipelined steady
+    /// state: the COMMIT frames enter the send FIFOs with an expected
+    /// acknowledgement queued, and the locally tracked count is
+    /// returned immediately — no round trip on the worker's hot path.
+    fn commit(&mut self, meta: &Meta, worker: usize) -> Result<u64, TransportError> {
+        let targets = self.commit_targets(meta);
+        let bytes = wire::frame(op::COMMIT, &(worker as u32).to_le_bytes());
+        if self.window.is_some() {
+            if let Some(known) = self.commits[worker] {
+                let expected = known + 1;
+                for g in targets {
+                    self.enqueue(g, &bytes, Pending::ExpectU64(expected))?;
+                }
+                self.commits[worker] = Some(expected);
+                return Ok(expected);
+            }
+        }
+        let mut agreed: Option<u64> = None;
+        for g in targets {
+            let f = self.rpc(g, &bytes)?;
+            expect_op(&f, op::U64)?;
+            let mut r = wire::Reader::new(&f.payload);
+            let v = r.u64()?;
+            r.done()?;
+            match agreed {
+                None => agreed = Some(v),
+                Some(prev) if prev != v => {
+                    return Err(TransportError::protocol(format!(
+                        "exclusive endpoints disagree on worker {worker}'s \
+                         clock: {prev} vs {v} (group {g})"
+                    )));
+                }
+                Some(_) => {}
+            }
+        }
+        let v = agreed.expect("at least one commit target");
+        self.commits[worker] = Some(v);
+        Ok(v)
+    }
+
+    /// Ship one per-layer additive update to its owning endpoint —
+    /// synchronously, or into the pipeline's in-flight window.
     fn update(
         &mut self,
         meta: &Meta,
@@ -154,7 +516,7 @@ impl ClientIo {
         clock: u64,
         layer: usize,
         delta: &LayerParams,
-    ) -> Result<(), String> {
+    ) -> Result<(), TransportError> {
         let g = meta.layer_group[layer];
         let mut tx = Vec::with_capacity(21 + delta.n_bytes() + 12);
         let mark = wire::begin_frame(&mut tx, op::UPDATE);
@@ -163,22 +525,28 @@ impl ClientIo {
         wire::put_u32(&mut tx, layer as u32);
         wire::put_layer(&mut tx, delta);
         wire::end_frame(&mut tx, mark);
+        if self.window.is_some() {
+            return self.enqueue(g, &tx, Pending::ExpectOk);
+        }
         let f = self.rpc(g, &tx)?;
         expect_op(&f, op::OK)
     }
 
-    /// Pipelined whole-clock commit: every layer's UPDATE frame is
-    /// written to its owning endpoint before any acknowledgement is
-    /// read (per-connection ordering preserves the per-layer FIFO), so
-    /// an L-layer commit costs ~1 round trip per *group*, not L
-    /// sequential round trips.
+    /// Whole-clock commit of per-layer updates. Synchronous mode:
+    /// every layer's UPDATE frame is written to its owning endpoint
+    /// before any acknowledgement is read (per-connection ordering
+    /// preserves the per-layer FIFO), so an L-layer commit costs ~1
+    /// round trip per *group*. Pipelined mode: the frames enter the
+    /// send FIFOs and the call returns — the acks drain at the next
+    /// blocking read on each connection (or when the window fills),
+    /// overlapping the worker's next minibatch with the network.
     fn commit_updates(
         &mut self,
         meta: &Meta,
         worker: usize,
         clock: u64,
         delta: &crate::nn::GradSet,
-    ) -> Result<(), String> {
+    ) -> Result<(), TransportError> {
         for (layer, lp) in delta.layers.iter().enumerate() {
             let g = meta.layer_group[layer];
             let mut tx = Vec::with_capacity(21 + lp.n_bytes() + 12);
@@ -188,7 +556,14 @@ impl ClientIo {
             wire::put_u32(&mut tx, layer as u32);
             wire::put_layer(&mut tx, lp);
             wire::end_frame(&mut tx, mark);
-            self.send(g, &tx)?;
+            if self.window.is_some() {
+                self.enqueue(g, &tx, Pending::ExpectOk)?;
+            } else {
+                self.send(g, &tx)?;
+            }
+        }
+        if self.window.is_some() {
+            return Ok(());
         }
         for (g, range) in meta.ranges.iter().enumerate() {
             for _ in range.clone() {
@@ -197,6 +572,73 @@ impl ClientIo {
             }
         }
         Ok(())
+    }
+
+    /// Block until `worker` may proceed. Shared mode: one WAIT parked
+    /// on group 0 (its server sees every shard). Exclusive mode: WAIT
+    /// fans out to every endpoint — each can only vouch for its own
+    /// shards' read guarantee — and the replies are collected in
+    /// order; since readiness is monotone between a worker's own
+    /// commits (peers only advance), all conditions hold simultaneously
+    /// once the last OK arrives.
+    fn wait(&mut self, meta: &Meta, worker: usize) -> Result<(), TransportError> {
+        self.settle()?;
+        let targets = if meta.exclusive { self.conns.len() } else { 1 };
+        let bytes = wire::frame(op::WAIT, &(worker as u32).to_le_bytes());
+        for g in 0..targets {
+            self.send(g, &bytes)?;
+        }
+        for g in 0..targets {
+            self.drain(g)?;
+            let f = self.recv(g)?;
+            expect_op(&f, op::OK)?;
+        }
+        Ok(())
+    }
+
+    /// Eq. 5's read guarantee. Exclusive mode ANDs the group-scoped
+    /// answers (the predicate is a conjunction over (layer, worker)
+    /// pairs, and the groups partition the layers).
+    fn read_ready(&mut self, meta: &Meta, worker: usize) -> Result<bool, TransportError> {
+        self.settle()?;
+        if !meta.exclusive {
+            return self.rpc_bool_on(0, op::READ_READY, worker as u32);
+        }
+        let bytes = wire::frame(op::READ_READY, &(worker as u32).to_le_bytes());
+        for g in 0..self.conns.len() {
+            self.send(g, &bytes)?;
+        }
+        let mut all = true;
+        for g in 0..self.conns.len() {
+            self.drain(g)?;
+            let f = self.recv(g)?;
+            expect_op(&f, op::BOOL)?;
+            let mut r = wire::Reader::new(&f.payload);
+            all &= r.u8()? != 0;
+            r.done()?;
+        }
+        Ok(all)
+    }
+
+    /// The (layer, worker) version-vector entry, from the endpoint
+    /// that owns the layer — the only process whose vector moves for it
+    /// in exclusive mode (and an equally valid answer in shared mode).
+    fn applied(
+        &mut self,
+        meta: &Meta,
+        layer: usize,
+        worker: usize,
+    ) -> Result<u64, TransportError> {
+        let g = meta.layer_group[layer];
+        let mut payload = Vec::with_capacity(8);
+        wire::put_u32(&mut payload, layer as u32);
+        wire::put_u32(&mut payload, worker as u32);
+        let f = self.rpc(g, &wire::frame(op::APPLIED, &payload))?;
+        expect_op(&f, op::U64)?;
+        let mut r = wire::Reader::new(&f.payload);
+        let v = r.u64()?;
+        r.done()?;
+        Ok(v)
     }
 
     /// Version-gated read fan-out: one pipelined FETCH per endpoint
@@ -211,7 +653,10 @@ impl ClientIo {
         last_seen: &mut [u64],
         own: &mut Vec<u64>,
         use_gate: bool,
-    ) -> Result<(ReadStats, FetchStats), String> {
+    ) -> Result<(ReadStats, FetchStats), TransportError> {
+        // shared-mode ε statistics read the clock table, which pending
+        // pipelined COMMITs on other connections may still be moving
+        self.settle()?;
         for (g, range) in meta.ranges.iter().enumerate() {
             let mut tx = Vec::with_capacity(9 + 4 + 8 * range.len());
             let mark = wire::begin_frame(&mut tx, op::FETCH);
@@ -226,6 +671,7 @@ impl ClientIo {
         let mut fs = FetchStats::default();
         own.clear();
         for (g, range) in meta.ranges.iter().enumerate() {
+            self.drain(g)?;
             let f = self.recv(g)?;
             expect_op(&f, op::FETCH_OK)?;
             let mut r = wire::Reader::new(&f.payload);
@@ -258,7 +704,7 @@ impl ClientIo {
         buf: &mut ParamSet,
         last_seen: &mut [u64],
         use_gate: bool,
-    ) -> Result<FetchStats, String> {
+    ) -> Result<FetchStats, TransportError> {
         for (g, range) in meta.ranges.iter().enumerate() {
             let mut tx = Vec::with_capacity(9 + 8 * range.len());
             let mark = wire::begin_frame(&mut tx, op::SNAPSHOT);
@@ -270,6 +716,7 @@ impl ClientIo {
         }
         let mut fs = FetchStats::default();
         for (g, range) in meta.ranges.iter().enumerate() {
+            self.drain(g)?;
             let f = self.recv(g)?;
             expect_op(&f, op::SNAP_OK)?;
             let mut r = wire::Reader::new(&f.payload);
@@ -290,9 +737,12 @@ impl ClientIo {
     }
 }
 
-fn expect_op(f: &Frame, want: u8) -> Result<(), String> {
+fn expect_op(f: &Frame, want: u8) -> Result<(), TransportError> {
     if f.op != want {
-        return Err(format!("unexpected reply opcode {} (want {want})", f.op));
+        return Err(TransportError::protocol(format!(
+            "unexpected reply opcode {} (want {want})",
+            f.op
+        )));
     }
     Ok(())
 }
@@ -306,6 +756,7 @@ struct Hello {
     range: std::ops::Range<usize>,
     policy: Policy,
     init_digest: u64,
+    exclusive: bool,
     shapes: Vec<(usize, usize, usize)>,
 }
 
@@ -318,6 +769,8 @@ fn handshake(addr: &SocketAddr) -> Result<(Conn, Hello), String> {
     let mut conn = Conn {
         stream,
         dec: FrameDecoder::default(),
+        writer: None,
+        pending: VecDeque::new(),
     };
     let hello = wire::frame(op::HELLO, &wire::WIRE_VERSION.to_le_bytes());
     std::io::Write::write_all(&mut conn.stream, &hello)
@@ -334,31 +787,32 @@ fn handshake(addr: &SocketAddr) -> Result<(Conn, Hello), String> {
     }
     expect_op(&f, op::HELLO_OK)?;
     let mut r = wire::Reader::new(&f.payload);
-    let version = r.u32()?;
+    let version = r.u32().map_err(String::from)?;
     if version != wire::WIRE_VERSION {
         return Err(format!(
             "wire version {version} != {}",
             wire::WIRE_VERSION
         ));
     }
-    let workers = r.u32()? as usize;
-    let n_layers = r.u32()? as usize;
-    let groups = r.u32()? as usize;
-    let group = r.u32()? as usize;
-    let start = r.u32()? as usize;
-    let len = r.u32()? as usize;
-    let tag = r.u8()?;
-    let staleness = r.u64()?;
+    let workers = r.u32().map_err(String::from)? as usize;
+    let n_layers = r.u32().map_err(String::from)? as usize;
+    let groups = r.u32().map_err(String::from)? as usize;
+    let group = r.u32().map_err(String::from)? as usize;
+    let start = r.u32().map_err(String::from)? as usize;
+    let len = r.u32().map_err(String::from)? as usize;
+    let tag = r.u8().map_err(String::from)?;
+    let staleness = r.u64().map_err(String::from)?;
     let policy = policy_decode(tag, staleness)?;
-    let init_digest = r.u64()?;
+    let init_digest = r.u64().map_err(String::from)?;
+    let exclusive = r.u8().map_err(String::from)? != 0;
     let mut shapes = Vec::with_capacity(n_layers);
     for _ in 0..n_layers {
-        let rows = r.u32()? as usize;
-        let cols = r.u32()? as usize;
-        let blen = r.u32()? as usize;
+        let rows = r.u32().map_err(String::from)? as usize;
+        let cols = r.u32().map_err(String::from)? as usize;
+        let blen = r.u32().map_err(String::from)? as usize;
         shapes.push((rows, cols, blen));
     }
-    r.done()?;
+    r.done().map_err(String::from)?;
     if group >= groups || start + len > n_layers {
         return Err("inconsistent handshake geometry".into());
     }
@@ -372,6 +826,7 @@ fn handshake(addr: &SocketAddr) -> Result<(Conn, Hello), String> {
             range: start..start + len,
             policy,
             init_digest,
+            exclusive,
             shapes,
         },
     ))
@@ -403,6 +858,18 @@ impl RemoteClient {
         Self::assemble(pairs)
     }
 
+    /// [`RemoteClient::connect`] from `host:port` strings — the config
+    /// path for an explicit `transport.group_addrs` endpoint list (one
+    /// per shard group, any order; bracketed IPv6 accepted).
+    pub fn connect_hosts(addrs: &[String]) -> Result<RemoteClient, String> {
+        let mut resolved = Vec::with_capacity(addrs.len());
+        for a in addrs {
+            let (host, port) = super::service::split_addr(a)?;
+            resolved.push(resolve(host, port)?);
+        }
+        Self::connect(&resolved)
+    }
+
     /// Connect to a base address and discover the sibling group
     /// endpoints by the CLI port convention (group `g` on `port + g`).
     pub fn connect_base(addr: &str) -> Result<RemoteClient, String> {
@@ -431,6 +898,7 @@ impl RemoteClient {
         let (workers, n_layers, groups, policy) =
             (first.workers, first.n_layers, first.groups, first.policy);
         let init_digest = first.init_digest;
+        let exclusive = first.exclusive;
         let shapes = first.shapes.clone();
         if pairs.len() != groups {
             return Err(format!(
@@ -451,6 +919,13 @@ impl RemoteClient {
                 || h.shapes != shapes
             {
                 return Err("endpoints disagree about the server".into());
+            }
+            if h.exclusive != exclusive {
+                return Err(
+                    "endpoints mix exclusive (multi-process) and shared \
+                     serving modes"
+                        .into(),
+                );
             }
             if ranges[h.group].is_some() {
                 return Err(format!("group {} connected twice", h.group));
@@ -496,19 +971,22 @@ impl RemoteClient {
                 ranges,
                 layer_group,
                 init_digest,
+                exclusive,
                 gated: true,
             },
             inner: Mutex::new(Inner {
                 io: ClientIo {
                     conns,
                     wire: WireStats::default(),
+                    window: None,
+                    commits: vec![None; workers],
                 },
                 mirror,
                 mirror_seen: vec![u64::MAX; n_layers],
                 reads: 0,
                 copy_totals: FetchStats::default(),
             }),
-            service: None,
+            services: Vec::new(),
         })
     }
 
@@ -519,24 +997,101 @@ impl RemoteClient {
         self
     }
 
-    /// Adopt a loopback service so it lives (and shuts down) with this
-    /// client — the tests' single-process harness.
-    pub(super) fn attach_service(&mut self, svc: ShardService) {
-        self.service = Some(svc);
+    /// Switch commits to the pipelined path: every connection gets a
+    /// dedicated writer thread, and UPDATE/COMMIT frames are enqueued
+    /// with at most `window` unread acknowledgements in flight per
+    /// connection (the bound keeps the unread-reply backlog finite;
+    /// acknowledgements are a few bytes, so even a generous window
+    /// cannot back-pressure the server's response writes). `window >=
+    /// 1`. See the module docs for why the observable protocol stays
+    /// bitwise identical to the synchronous path.
+    pub fn with_pipeline(mut self, window: usize) -> Result<RemoteClient, String> {
+        if window == 0 {
+            return Err("pipeline window must be >= 1".into());
+        }
+        let inner = self
+            .inner
+            .get_mut()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        for (g, conn) in inner.io.conns.iter_mut().enumerate() {
+            let stream = conn
+                .stream
+                .try_clone()
+                .map_err(|e| format!("clone stream (group {g}): {e}"))?;
+            conn.writer = Some(Writer::spawn(stream));
+        }
+        inner.io.window = Some(window);
+        Ok(self)
     }
 
-    /// The attached loopback service, if any.
-    pub fn service(&self) -> Option<&ShardService> {
-        self.service.as_ref()
+    /// Commits ride the pipelined (writer-thread, in-flight-window)
+    /// path rather than blocking per acknowledgement.
+    pub fn pipelined(&self) -> bool {
+        self.lock().io.window.is_some()
+    }
+
+    /// Adopt a loopback service so it lives (and shuts down) with this
+    /// client — the tests' single-process harness. May be called once
+    /// per served process (the multi-process split harness owns one
+    /// service per shard group).
+    pub(super) fn attach_service(&mut self, svc: ShardService) {
+        self.services.push(svc);
+    }
+
+    /// The attached loopback services, if any.
+    pub fn services(&self) -> &[ShardService] {
+        &self.services
     }
 
     pub fn groups(&self) -> usize {
         self.meta.ranges.len()
     }
 
+    /// Every endpoint is its own server process (see module docs).
+    pub fn exclusive(&self) -> bool {
+        self.meta.exclusive
+    }
+
     /// Client-side transport accounting (frames/bytes both directions).
     pub fn wire_stats(&self) -> WireStats {
         self.lock().io.wire
+    }
+
+    /// Drain every in-flight acknowledgement (pipelined mode; a no-op
+    /// when nothing is pending). Returns the first failure while still
+    /// consuming every outstanding reply, so the window stays aligned
+    /// and the connections stay usable after a server-side rejection.
+    pub fn flush(&self) -> Result<(), TransportError> {
+        self.lock().io.flush_all()
+    }
+
+    /// [`ParamServer::apply_arrival`] with a typed error instead of a
+    /// panic. Synchronous mode reports a rejection immediately; in
+    /// pipelined mode the frame is enqueued and a rejection surfaces at
+    /// the next drain ([`RemoteClient::flush`] or any blocking read on
+    /// that connection).
+    pub fn try_apply_arrival(
+        &self,
+        msg: &UpdateMsg,
+    ) -> Result<(), TransportError> {
+        self.lock()
+            .io
+            .update(&self.meta, msg.from, msg.clock, msg.layer, &msg.delta)
+    }
+
+    /// [`WorkerPort::apply_commit`] with a typed error instead of a
+    /// panic (same deferred-surfacing rule as
+    /// [`RemoteClient::try_apply_arrival`]).
+    pub fn try_apply_commit(
+        &self,
+        worker: usize,
+        clock: u64,
+        delta: &GradSet,
+    ) -> Result<(), TransportError> {
+        assert_eq!(delta.layers.len(), self.meta.n_layers, "commit layers");
+        self.lock()
+            .io
+            .commit_updates(&self.meta, worker, clock, delta)
     }
 
     /// Assert the remote server matches what a local run assumes —
@@ -578,14 +1133,15 @@ impl RemoteClient {
     /// Block until `worker` may start its next clock — the remote
     /// sibling of `ShardedServer::wait_until_ready` (the server parks
     /// this connection on its barrier condvar; other workers' clients
-    /// are unaffected because each has its own connections).
+    /// are unaffected because each has its own connections). In
+    /// exclusive mode the wait fans out to every endpoint; any
+    /// pipelined commit backlog drains first, which is exactly the
+    /// "drain only when the staleness gate requires it" rule.
     pub fn wait_until_ready(&self, worker: usize) {
-        let mut inner = self.lock();
-        let f = inner
+        self.lock()
             .io
-            .rpc(0, &wire::frame(op::WAIT, &(worker as u32).to_le_bytes()))
+            .wait(&self.meta, worker)
             .unwrap_or_else(|e| panic!("ssp transport: {e}"));
-        expect_op(&f, op::OK).unwrap_or_else(|e| panic!("ssp transport: {e}"));
     }
 
     /// Version-gated evaluation snapshot — the remote sibling of
@@ -608,6 +1164,21 @@ impl RemoteClient {
     }
 }
 
+impl Drop for RemoteClient {
+    /// Flush the in-flight window before the sockets close: the last
+    /// clock's pipelined UPDATEs must be applied (acknowledged) before
+    /// any *other* connection — e.g. the threaded runner's final
+    /// master-snapshot port — can observe the server, and dropping the
+    /// worker's port is exactly the runner's ordering point for that.
+    fn drop(&mut self) {
+        let inner = self
+            .inner
+            .get_mut()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let _ = inner.io.flush_all();
+    }
+}
+
 impl ParamServer for RemoteClient {
     fn policy(&self) -> Policy {
         self.meta.policy
@@ -624,35 +1195,33 @@ impl ParamServer for RemoteClient {
     fn clock(&self, worker: usize) -> u64 {
         self.lock()
             .io
-            .rpc_u64(op::CLOCK, worker as u32)
+            .rpc_u64_on(0, op::CLOCK, worker as u32)
             .unwrap_or_else(|e| panic!("ssp transport: {e}"))
     }
 
     fn commit(&mut self, worker: usize) -> u64 {
         self.lock()
             .io
-            .rpc_u64(op::COMMIT, worker as u32)
+            .commit(&self.meta, worker)
             .unwrap_or_else(|e| panic!("ssp transport: {e}"))
     }
 
     fn apply_arrival(&mut self, msg: &UpdateMsg) {
-        self.lock()
-            .io
-            .update(&self.meta, msg.from, msg.clock, msg.layer, &msg.delta)
+        self.try_apply_arrival(msg)
             .unwrap_or_else(|e| panic!("ssp transport: {e}"));
     }
 
     fn must_wait(&self, worker: usize) -> bool {
         self.lock()
             .io
-            .rpc_bool(op::MUST_WAIT, worker as u32)
+            .rpc_bool_on(0, op::MUST_WAIT, worker as u32)
             .unwrap_or_else(|e| panic!("ssp transport: {e}"))
     }
 
     fn read_ready(&self, worker: usize) -> bool {
         self.lock()
             .io
-            .rpc_bool(op::READ_READY, worker as u32)
+            .read_ready(&self.meta, worker)
             .unwrap_or_else(|e| panic!("ssp transport: {e}"))
     }
 
@@ -732,19 +1301,10 @@ impl ParamServer for RemoteClient {
 
     fn applied(&self, layer: usize, worker: usize) -> u64 {
         assert!(layer < self.meta.n_layers, "layer out of range");
-        let mut payload = Vec::with_capacity(8);
-        wire::put_u32(&mut payload, layer as u32);
-        wire::put_u32(&mut payload, worker as u32);
-        let mut inner = self.lock();
-        let f = inner
+        self.lock()
             .io
-            .rpc(0, &wire::frame(op::APPLIED, &payload))
-            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
-        expect_op(&f, op::U64).unwrap_or_else(|e| panic!("ssp transport: {e}"));
-        let mut r = wire::Reader::new(&f.payload);
-        let v = r.u64().unwrap_or_else(|e| panic!("ssp transport: {e}"));
-        r.done().unwrap_or_else(|e| panic!("ssp transport: {e}"));
-        v
+            .applied(&self.meta, layer, worker)
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"))
     }
 
     fn reads(&self) -> u64 {
@@ -754,7 +1314,7 @@ impl ParamServer for RemoteClient {
 
 /// The per-worker connection set as a threaded-runner port: the same
 /// hot-path sequence `run_threaded` drives in shared memory, each step
-/// one (batched) message exchange.
+/// one (batched or pipelined) message exchange.
 impl WorkerPort for RemoteClient {
     fn wait_until_ready(&mut self, worker: usize) {
         RemoteClient::wait_until_ready(self, worker)
@@ -775,10 +1335,7 @@ impl WorkerPort for RemoteClient {
     }
 
     fn apply_commit(&mut self, worker: usize, clock: u64, delta: &GradSet) {
-        assert_eq!(delta.layers.len(), self.meta.n_layers, "commit layers");
-        self.lock()
-            .io
-            .commit_updates(&self.meta, worker, clock, delta)
+        self.try_apply_commit(worker, clock, delta)
             .unwrap_or_else(|e| panic!("ssp transport: {e}"));
     }
 

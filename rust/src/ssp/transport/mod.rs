@@ -23,11 +23,27 @@
 //!   property suite run against a remote server unchanged, bitwise
 //!   equal to the in-process backings on any fixed schedule.
 //!
-//! Deployment: `sspdnn serve` hosts a config's server (one process),
-//! `sspdnn train --server host:port` drives it (another process); the
-//! `[transport]` TOML table / CLI flags pick the address, the shard
-//! group count and whether delta fetches are gated. Tests and benches
-//! run the same stack over loopback in-process via [`loopback`].
+//! Two deployment shapes:
+//!
+//! * **Shared tier** — `sspdnn serve` hosts a config's whole server in
+//!   one process; every shard-group endpoint wraps the same
+//!   [`ShardedServer`](crate::ssp::ShardedServer).
+//! * **Exclusive tier** — one `sspdnn serve --group <i>` *process per
+//!   shard group* ([`ShardService::bind_group`]): each process owns a
+//!   private clock/version table for its shards, and the client keeps
+//!   the tables identical by broadcasting COMMITs and fanning the
+//!   barrier/readiness queries out (the cross-group barrier protocol —
+//!   see the [`client`] docs for why the answers compose exactly).
+//!
+//! Orthogonally, [`RemoteClient::with_pipeline`] switches commits from
+//! blocking request/response to a per-connection writer thread with a
+//! bounded in-flight acknowledgement window — communication hiding
+//! that leaves the observable protocol bitwise identical.
+//!
+//! `sspdnn train --server host:port` drives either tier; the
+//! `[transport]` TOML table / CLI flags pick addresses, shard group
+//! count, gating and pipelining. Tests and benches run the same stacks
+//! over loopback in-process via [`loopback`] / [`loopback_split`].
 
 mod client;
 mod service;
@@ -39,7 +55,9 @@ use crate::nn::ParamSet;
 
 use super::{Policy, ShardedServer};
 
-pub use client::{RemoteClient, WireStats};
+pub use client::{
+    RemoteClient, TransportError, TransportErrorKind, WireStats,
+};
 pub use service::{group_ranges, split_addr, ShardService};
 
 /// Order-sensitive FNV-1a digest over every parameter's f32 bit
@@ -97,6 +115,57 @@ pub fn loopback(
     groups: usize,
 ) -> RemoteClient {
     serve_local(Arc::new(ShardedServer::new(init, workers, policy)), groups)
+}
+
+/// Multi-process harness in one process: `groups` *independent*
+/// [`ShardedServer`]s — each constructed from the same init, exactly as
+/// `sspdnn serve --group i` processes construct theirs from the same
+/// config — each behind its own exclusive loopback endpoint
+/// ([`ShardService::bind_group`]), assembled by one client. Every
+/// cross-group protocol path (COMMIT broadcast, barrier fan-out,
+/// per-group ε statistics) is exercised for real; only the process
+/// boundary is simulated.
+pub fn serve_split(
+    init: ParamSet,
+    workers: usize,
+    policy: Policy,
+    groups: usize,
+) -> RemoteClient {
+    let n_groups = group_ranges(init.n_layers(), groups).len();
+    let mut services = Vec::with_capacity(n_groups);
+    let mut addrs = Vec::with_capacity(n_groups);
+    for g in 0..n_groups {
+        let server =
+            Arc::new(ShardedServer::new(init.clone(), workers, policy));
+        let svc = ShardService::bind_group(server, "127.0.0.1:0", groups, g)
+            .expect("bind exclusive shard service");
+        addrs.extend_from_slice(svc.addrs());
+        services.push(svc);
+    }
+    let mut client =
+        RemoteClient::connect(&addrs).expect("connect split client");
+    for svc in services {
+        client.attach_service(svc);
+    }
+    client
+}
+
+/// [`serve_split`] under the property suite's `make_server` signature —
+/// a pipelined exclusive multi-process backing is one closure away:
+/// `|i, w, p| transport::loopback_split(i, w, p, groups, window)`
+/// (`window: None` keeps commits synchronous).
+pub fn loopback_split(
+    init: ParamSet,
+    workers: usize,
+    policy: Policy,
+    groups: usize,
+    window: Option<usize>,
+) -> RemoteClient {
+    let client = serve_split(init, workers, policy, groups);
+    match window {
+        None => client,
+        Some(w) => client.with_pipeline(w).expect("enable pipeline"),
+    }
 }
 
 #[cfg(test)]
@@ -239,6 +308,52 @@ mod tests {
         // the connection survives the ERR: a legal update still lands
         client.apply_arrival(&msg(0, 0, 0, 0.2));
         assert_eq!(client.applied(0, 0), 1);
+    }
+
+    #[test]
+    fn split_exclusive_pipelined_roundtrip() {
+        let init = ParamSet::zeros(&dims());
+        let mut client =
+            loopback_split(init.clone(), 2, Policy::Async, 2, Some(4));
+        assert!(client.exclusive());
+        assert!(client.pipelined());
+        assert_eq!(client.groups(), 2);
+        // first pipelined commit runs the synchronous agreement round
+        assert_eq!(ParamServer::commit(&mut client, 0), 1);
+        client.apply_arrival(&msg(0, 0, 0, 0.5));
+        client.apply_arrival(&msg(0, 0, 1, 0.25));
+        client.flush().expect("drain in-flight window");
+        assert_eq!(client.applied(0, 0), 1);
+        assert_eq!(client.applied(1, 0), 1);
+        assert_eq!(client.clock(0), 1);
+        // steady-state pipelined commit: locally tracked count
+        assert_eq!(ParamServer::commit(&mut client, 0), 2);
+        client.flush().expect("drain commit acks");
+        assert_eq!(client.clock(0), 2);
+        let (snap, own, _stats) = client.fetch(1);
+        assert_eq!(own, vec![0, 0], "worker 1 wrote nothing");
+        assert!((snap.layers[0].w.at(0, 0) - 0.5).abs() < 1e-7);
+        assert!((snap.layers[1].b[0] - 0.25).abs() < 1e-7);
+    }
+
+    #[test]
+    fn split_exclusive_barrier_fans_out() {
+        let init = ParamSet::zeros(&dims());
+        // worker 0 commits; under BSP it must wait for worker 1, and
+        // the release requires *both* group processes to observe
+        // worker 1's progress — the cross-group barrier path
+        let mut a = loopback_split(init, 2, Policy::Bsp, 2, None);
+        ParamServer::commit(&mut a, 0);
+        a.apply_arrival(&msg(0, 0, 0, 0.1));
+        a.apply_arrival(&msg(0, 0, 1, 0.1));
+        assert!(a.must_wait(0));
+        assert!(!a.read_ready(0), "worker 1's clock-0 update missing");
+        ParamServer::commit(&mut a, 1);
+        a.apply_arrival(&msg(1, 0, 0, 0.1));
+        a.apply_arrival(&msg(1, 0, 1, 0.1));
+        assert!(!a.must_wait(0));
+        assert!(a.read_ready(0));
+        a.wait_until_ready(0); // returns immediately now
     }
 
     #[test]

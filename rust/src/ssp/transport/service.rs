@@ -17,7 +17,9 @@
 //! wrong skip. Across server *restarts* the client must invalidate its
 //! gate (`WorkerCache::reset_gate`).
 
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{
+    IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream,
+};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -73,6 +75,11 @@ struct EndpointInfo {
     /// Digest of the served master at bind time (the init parameters)
     /// — shipped in HELLO_OK for `RemoteClient::check_run`.
     init_digest: u64,
+    /// This endpoint's process hosts *only* its group's shards
+    /// (`ShardService::bind_group`, one OS process per shard group):
+    /// readiness answers are group-scoped and the client keeps the
+    /// per-process clock tables in sync by broadcasting COMMITs.
+    exclusive: bool,
 }
 
 /// A running shard service: `groups` listener threads plus one thread
@@ -102,11 +109,7 @@ impl ShardService {
         // the master at bind time IS the init: serve binds before any
         // worker can commit
         let init_digest = super::param_digest(&server.snapshot());
-        let stop = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> =
-            Arc::new(Mutex::new(Vec::new()));
-        let mut addrs = Vec::with_capacity(ranges.len());
-        let mut listeners = Vec::with_capacity(ranges.len());
+        let mut svc = ShardService::empty();
         for (g, range) in ranges.iter().enumerate() {
             let bind_port = if port == 0 {
                 0
@@ -114,49 +117,108 @@ impl ShardService {
                 port.checked_add(g as u16)
                     .ok_or_else(|| format!("group {g} port overflows u16"))?
             };
-            let listener = TcpListener::bind((host, bind_port))
-                .map_err(|e| format!("bind {host}:{bind_port}: {e}"))?;
-            addrs.push(
-                listener
-                    .local_addr()
-                    .map_err(|e| format!("local_addr: {e}"))?,
-            );
             let info = EndpointInfo {
                 group: g,
                 groups: ranges.len(),
                 range: range.clone(),
                 init_digest,
+                exclusive: false,
             };
-            let server = Arc::clone(&server);
-            let stop = Arc::clone(&stop);
-            let conns = Arc::clone(&conns);
-            listeners.push(std::thread::spawn(move || {
-                for stream in listener.incoming() {
-                    if stop.load(Ordering::Acquire) {
-                        break;
-                    }
-                    let Ok(stream) = stream else { continue };
-                    let _ = stream.set_nodelay(true);
-                    let server = Arc::clone(&server);
-                    let info = info.clone();
-                    let conn_stop = Arc::clone(&stop);
-                    let handle = std::thread::spawn(move || {
-                        serve_conn(&server, &info, &conn_stop, stream)
-                    });
-                    let mut conns = conns.lock().unwrap();
-                    // reap finished connections so a long-lived serve
-                    // process doesn't accumulate JoinHandles forever
-                    conns.retain(|h| !h.is_finished());
-                    conns.push(handle);
-                }
-            }));
+            svc.listen(Arc::clone(&server), host, bind_port, info)?;
         }
-        Ok(ShardService {
-            addrs,
-            stop,
-            listeners,
-            conns,
-        })
+        Ok(svc)
+    }
+
+    /// Serve **one** shard group of an `groups`-way partition from this
+    /// process — the multi-process server tier (`sspdnn serve --group
+    /// i`, one process per machine). `server` must be the *full* model
+    /// built from the shared config (shapes and the init digest come
+    /// from it, and they must agree across every process), but only
+    /// this group's shards ever receive UPDATEs here; the endpoint
+    /// answers readiness questions scoped to its own range and relies
+    /// on clients broadcasting every COMMIT so its private clock table
+    /// tracks its siblings'.
+    pub fn bind_group(
+        server: Arc<ShardedServer>,
+        addr: &str,
+        groups: usize,
+        group: usize,
+    ) -> Result<ShardService, String> {
+        let (host, port) = split_addr(addr)?;
+        let ranges = group_ranges(server.n_layers(), groups);
+        if group >= ranges.len() {
+            return Err(format!(
+                "group {group} out of range: {} layer shards partition \
+                 into {} group(s)",
+                server.n_layers(),
+                ranges.len()
+            ));
+        }
+        let init_digest = super::param_digest(&server.snapshot());
+        let info = EndpointInfo {
+            group,
+            groups: ranges.len(),
+            range: ranges[group].clone(),
+            init_digest,
+            exclusive: true,
+        };
+        let mut svc = ShardService::empty();
+        svc.listen(server, host, port, info)?;
+        Ok(svc)
+    }
+
+    fn empty() -> ShardService {
+        ShardService {
+            addrs: Vec::new(),
+            stop: Arc::new(AtomicBool::new(false)),
+            listeners: Vec::new(),
+            conns: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Bind one endpoint and spawn its accept loop.
+    fn listen(
+        &mut self,
+        server: Arc<ShardedServer>,
+        host: &str,
+        port: u16,
+        info: EndpointInfo,
+    ) -> Result<(), String> {
+        let listener = TcpListener::bind((host, port))
+            .map_err(|e| format!("bind {host}:{port}: {e}"))?;
+        self.addrs.push(
+            listener
+                .local_addr()
+                .map_err(|e| format!("local_addr: {e}"))?,
+        );
+        let stop = Arc::clone(&self.stop);
+        let conns = Arc::clone(&self.conns);
+        self.listeners.push(std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let _ = stream.set_nodelay(true);
+                let server = Arc::clone(&server);
+                let info = info.clone();
+                let conn_stop = Arc::clone(&stop);
+                let handle = std::thread::spawn(move || {
+                    serve_conn(&server, &info, &conn_stop, stream)
+                });
+                // recover from poisoning: a panicked connection thread
+                // must not take the accept loop (and with it the whole
+                // service tier) down with it
+                let mut conns = conns
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner());
+                // reap finished connections so a long-lived serve
+                // process doesn't accumulate JoinHandles forever
+                conns.retain(|h| !h.is_finished());
+                conns.push(handle);
+            }
+        }));
+        Ok(())
     }
 
     /// The bound endpoint addresses, indexed by shard group.
@@ -181,18 +243,45 @@ impl ShardService {
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Release);
         for addr in &self.addrs {
-            // unblock a parked accept; the listener re-checks `stop`
-            let _ = TcpStream::connect(addr);
+            // unblock a parked accept; the listener re-checks `stop`.
+            // A wildcard bind (`0.0.0.0` / `::`) is not a connectable
+            // destination on every platform, so aim the wake-up at the
+            // loopback of the same family instead — and bound it, so
+            // shutdown can never hang on a dead route.
+            let _ = TcpStream::connect_timeout(
+                &wake_addr(addr),
+                std::time::Duration::from_millis(500),
+            );
         }
         for l in self.listeners.drain(..) {
             let _ = l.join();
         }
-        let handles: Vec<JoinHandle<()>> =
-            self.conns.lock().unwrap().drain(..).collect();
+        // recover from poisoning (a panicked connection thread) — the
+        // remaining healthy threads still deserve a join
+        let handles: Vec<JoinHandle<()>> = self
+            .conns
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+            .collect();
         for h in handles {
             let _ = h.join();
         }
     }
+}
+
+/// Where to connect to wake a listener parked in `accept` on `addr`:
+/// `addr` itself for a concrete bind, the same-family loopback (same
+/// port) for a wildcard bind.
+fn wake_addr(addr: &SocketAddr) -> SocketAddr {
+    if !addr.ip().is_unspecified() {
+        return *addr;
+    }
+    let loopback = match addr.ip() {
+        IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+        IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+    };
+    SocketAddr::new(loopback, addr.port())
 }
 
 impl Drop for ShardService {
@@ -201,14 +290,34 @@ impl Drop for ShardService {
     }
 }
 
-/// Split a `host:port` address (IPv4 / hostname form). The single
-/// parser shared by `TransportConfig::validate`, `ShardService::bind`
-/// and `RemoteClient::connect_base` so the three agree on what an
-/// address is.
+/// Split a `host:port` address: IPv4 / hostname form, or a bracketed
+/// IPv6 literal `[::1]:7070` (the returned host has the brackets
+/// stripped, which is what `ToSocketAddrs`/`TcpListener::bind` take).
+/// An *unbracketed* IPv6 literal is ambiguous — every `:` is a
+/// candidate split — and is rejected with the bracketed spelling in
+/// the error instead of mis-parsing into a confusing connect failure.
+/// The single parser shared by `TransportConfig::validate`,
+/// `ShardService::bind` and `RemoteClient::connect_base` so they all
+/// agree on what an address is.
 pub fn split_addr(addr: &str) -> Result<(&str, u16), String> {
+    if let Some(rest) = addr.strip_prefix('[') {
+        let (host, port) = rest.split_once("]:").ok_or_else(|| {
+            format!("address {addr:?} is not [ipv6]:port")
+        })?;
+        let port = port
+            .parse::<u16>()
+            .map_err(|_| format!("bad port in address {addr:?}"))?;
+        return Ok((host, port));
+    }
     let (host, port) = addr
         .rsplit_once(':')
         .ok_or_else(|| format!("address {addr:?} is not host:port"))?;
+    if host.contains(':') {
+        return Err(format!(
+            "address {addr:?} looks like an unbracketed IPv6 literal — \
+             write it as \"[{host}]:{port}\""
+        ));
+    }
     let port = port
         .parse::<u16>()
         .map_err(|_| format!("bad port in address {addr:?}"))?;
@@ -291,6 +400,7 @@ fn handle(
             wire::put_u8(out, tag);
             wire::put_u64(out, staleness);
             wire::put_u64(out, info.init_digest);
+            wire::put_u8(out, u8::from(info.exclusive));
             for l in 0..server.n_layers() {
                 let (rows, cols, blen) = server.layer_shape(l);
                 wire::put_u32(out, rows as u32);
@@ -321,7 +431,15 @@ fn handle(
             let w = r.u32()? as usize;
             r.done()?;
             check_worker(server, w)?;
-            reply_bool(out, server.read_ready(w));
+            // an exclusive endpoint can only vouch for its own shards
+            // (the others live in sibling processes); the client ANDs
+            // the group-scoped answers
+            let ready = if info.exclusive {
+                server.read_ready_group(w, info.range.clone())
+            } else {
+                server.read_ready(w)
+            };
+            reply_bool(out, ready);
         }
         op::WAIT => {
             let w = r.u32()? as usize;
@@ -330,10 +448,16 @@ fn handle(
             // park in bounded slices so a service shutdown interrupts a
             // barrier wait whose releasing commit will never arrive
             loop {
-                let ready = server.wait_ready_timeout(
-                    w,
-                    std::time::Duration::from_millis(50),
-                );
+                let slice = std::time::Duration::from_millis(50);
+                let ready = if info.exclusive {
+                    server.wait_ready_group_timeout(
+                        w,
+                        info.range.clone(),
+                        slice,
+                    )
+                } else {
+                    server.wait_ready_timeout(w, slice)
+                };
                 if ready {
                     break;
                 }
@@ -350,6 +474,15 @@ fn handle(
             check_worker(server, w)?;
             if layer >= server.n_layers() {
                 return Err(format!("layer {layer} >= {}", server.n_layers()));
+            }
+            // only the owning process's version vector moves in
+            // exclusive mode — answering for a foreign layer would be
+            // silently wrong (forever zero), so refuse
+            if info.exclusive && !info.range.contains(&layer) {
+                return Err(format!(
+                    "layer {layer} outside exclusive group {} ({:?})",
+                    info.group, info.range
+                ));
             }
             reply_u64(out, server.applied(layer, w));
         }
@@ -493,5 +626,36 @@ mod tests {
         assert_eq!(split_addr("localhost:7070").unwrap(), ("localhost", 7070));
         assert!(split_addr("nope").is_err());
         assert!(split_addr("host:notaport").is_err());
+    }
+
+    #[test]
+    fn split_addr_handles_ipv6() {
+        // bracketed literals parse, brackets stripped (the form
+        // ToSocketAddrs / TcpListener::bind take)
+        assert_eq!(split_addr("[::1]:7070").unwrap(), ("::1", 7070));
+        assert_eq!(split_addr("[::]:0").unwrap(), ("::", 0));
+        assert_eq!(
+            split_addr("[fe80::1]:9000").unwrap(),
+            ("fe80::1", 9000)
+        );
+        // malformed bracket forms are rejected, not mis-split
+        assert!(split_addr("[::1]7070").is_err());
+        assert!(split_addr("[::1:7070").is_err());
+        assert!(split_addr("[::1]:").is_err());
+        assert!(split_addr("[::1]:nope").is_err());
+        // an unbracketed IPv6 literal gets a clear error that names the
+        // bracketed spelling instead of a confusing connect failure
+        let err = split_addr("::1:7070").unwrap_err();
+        assert!(err.contains("[::1]:7070"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn wake_addr_resolves_wildcard_binds_to_loopback() {
+        let v4: SocketAddr = "0.0.0.0:7070".parse().unwrap();
+        assert_eq!(wake_addr(&v4), "127.0.0.1:7070".parse().unwrap());
+        let v6: SocketAddr = "[::]:7070".parse().unwrap();
+        assert_eq!(wake_addr(&v6), "[::1]:7070".parse().unwrap());
+        let concrete: SocketAddr = "10.1.2.3:7070".parse().unwrap();
+        assert_eq!(wake_addr(&concrete), concrete);
     }
 }

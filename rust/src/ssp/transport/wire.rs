@@ -25,8 +25,11 @@ use crate::nn::LayerParams;
 use crate::tensor::Matrix;
 
 /// Protocol version, exchanged in the HELLO handshake; mismatches are
-/// rejected before any state flows.
-pub const WIRE_VERSION: u32 = 1;
+/// rejected before any state flows. Version 2 added the `exclusive`
+/// byte to HELLO_OK (multi-process server tier: an endpoint that hosts
+/// *only* its group's shards, with its own clock table kept in sync by
+/// client-side COMMIT broadcast).
+pub const WIRE_VERSION: u32 = 2;
 
 /// Upper bound on a single frame — a corrupt length prefix fails fast
 /// instead of asking the decoder to buffer gigabytes.
@@ -64,10 +67,16 @@ pub mod op {
     pub const OK: u8 = 100;
     /// `{ version:u32, workers:u32, n_layers:u32, groups:u32,
     ///    group:u32, group_start:u32, group_len:u32,
-    ///    policy_tag:u8, staleness:u64, init_digest:u64,
+    ///    policy_tag:u8, staleness:u64, init_digest:u64, exclusive:u8,
     ///    (rows:u32, cols:u32, blen:u32) × n_layers }`.
     /// `init_digest` is `transport::param_digest` of the served master
-    /// at bind time — the client's seed-mismatch tripwire.
+    /// at bind time — the client's seed-mismatch tripwire. `exclusive`
+    /// is 1 when this endpoint's process hosts *only* its group's
+    /// shards (one `sspdnn serve --group i` per process): the client
+    /// must then broadcast COMMITs to every endpoint, AND the
+    /// group-scoped READ_READY answers, and route APPLIED to the
+    /// owning group. 0 is the shared single-process tier (every
+    /// endpoint wraps the same server).
     pub const HELLO_OK: u8 = 101;
     /// `{ value:u64 }`.
     pub const U64: u8 = 102;

@@ -13,14 +13,17 @@
 //!      its view
 //!  P5  ε accounting: included + missed = committed − guaranteed, rate ∈ [0,1]
 //!
-//! Every server-side invariant runs against **all three** backings of
+//! Every server-side invariant runs against **all four** backings of
 //! `ParamServer` — the single-lock reference `Server`, the sharded
-//! per-layer `ShardedServer`, and `transport::RemoteClient` speaking the
-//! framed wire protocol to a loopback-TCP `ShardService` (the remote
-//! trials use fewer seeds: each one stands up a real socket stack) —
-//! and oracle-equivalence properties drive pairs of backings through
-//! identical random schedules asserting bitwise-equal masters,
-//! own-version vectors and ε statistics at every read.
+//! per-layer `ShardedServer`, `transport::RemoteClient` speaking the
+//! framed wire protocol to a loopback-TCP `ShardService`, and the same
+//! client against the *split* tier (one independent per-group server
+//! process' worth of state, commits pipelined through a bounded
+//! in-flight window). The remote trials use fewer seeds: each one
+//! stands up a real socket stack. Oracle-equivalence properties drive
+//! pairs of backings through identical random schedules asserting
+//! bitwise-equal masters, own-version vectors and ε statistics at
+//! every read.
 //!
 //! Every read additionally runs through the **version-gated zero-copy
 //! path** (`fetch_into`): each worker keeps one reusable snapshot buffer
@@ -66,6 +69,19 @@ fn make_sharded(init: ParamSet, workers: usize, policy: Policy) -> ShardedServer
 /// routing, own/stat reassembly) is exercised.
 fn make_remote(init: ParamSet, workers: usize, policy: Policy) -> RemoteClient {
     transport::loopback(init, workers, policy, 2)
+}
+
+/// The fourth backing: the exclusive multi-process tier — one
+/// independent full server per shard group, each serving only its own
+/// range (what two `sspdnn serve --group` processes hold) — with
+/// commits *pipelined* through a deliberately small in-flight window,
+/// so window-full drains happen constantly under the random schedules.
+fn make_remote_split(
+    init: ParamSet,
+    workers: usize,
+    policy: Policy,
+) -> RemoteClient {
+    transport::loopback_split(init, workers, policy, 2, Some(4))
 }
 
 /// Drive a random but protocol-legal schedule against the server:
@@ -186,6 +202,16 @@ fn p1_p2_p5_hold_over_random_schedules_remote() {
         let workers = 2 + (seed as usize % 5);
         let staleness = seed % 7;
         random_schedule(make_remote, seed, workers, staleness, 60);
+    }
+}
+
+#[test]
+fn p1_p2_p5_hold_over_random_schedules_remote_split_pipelined() {
+    // fewer still: each trial stands up one socket stack per shard group
+    for seed in 0..6 {
+        let workers = 2 + (seed as usize % 5);
+        let staleness = seed % 7;
+        random_schedule(make_remote_split, seed, workers, staleness, 60);
     }
 }
 
@@ -328,6 +354,19 @@ fn remote_client_is_bitwise_equivalent_to_reference() {
     }
 }
 
+/// The split tier with pipelined commits against the single-lock
+/// oracle: COMMIT broadcast keeps N private clock tables in lockstep,
+/// group-scoped readiness ANDs back to the global predicate, ε
+/// statistics reassemble exactly, and the in-flight window drains
+/// whenever the staleness gate needs an answer — all of it
+/// observation-equivalent to shared memory, bit for bit.
+#[test]
+fn split_pipelined_client_is_bitwise_equivalent_to_reference() {
+    for seed in 0..6u64 {
+        equivalence_schedule(make_reference, make_remote_split, seed, 80);
+    }
+}
+
 fn p3_guaranteed_visibility<S: ParamServer>(
     make: fn(ParamSet, usize, Policy) -> S,
 ) {
@@ -389,6 +428,11 @@ fn p3_guaranteed_visibility_enforced_by_read_ready_sharded() {
 #[test]
 fn p3_guaranteed_visibility_enforced_by_read_ready_remote() {
     p3_guaranteed_visibility(make_remote);
+}
+
+#[test]
+fn p3_guaranteed_visibility_enforced_by_read_ready_remote_split() {
+    p3_guaranteed_visibility(make_remote_split);
 }
 
 #[test]

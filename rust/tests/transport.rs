@@ -3,9 +3,12 @@
 //! bitwise-equal final weights on simulated figures, identical sweep
 //! reports, identical threaded runs at one machine — and the version
 //! gate must provably skip unchanged layers **on the wire** (byte
-//! counts, not just FetchStats). Reconnect semantics for stale revision
-//! vectors round out the protocol edge cases (torn-read framing lives
-//! in `ssp::transport::wire`'s unit tests).
+//! counts, not just FetchStats). Both serving tiers are pinned — the
+//! shared single-process endpoints and the exclusive one-process-per-
+//! group split — with commits synchronous and pipelined, plus the
+//! protocol edge cases: reconnects with stale revision vectors, typed
+//! ERR replies that leave the in-flight window aligned, wildcard-bind
+//! shutdown, and frame reassembly across 1-byte server writes.
 
 use std::sync::Arc;
 
@@ -17,7 +20,9 @@ use sspdnn::coordinator::{
 };
 use sspdnn::metrics;
 use sspdnn::nn::{LayerParams, ParamSet};
-use sspdnn::ssp::transport::{self, RemoteClient, ShardService};
+use sspdnn::ssp::transport::{
+    self, RemoteClient, ShardService, TransportErrorKind,
+};
 use sspdnn::ssp::{ParamServer, Policy, ShardedServer, UpdateMsg, WorkerCache};
 use sspdnn::tensor::Matrix;
 
@@ -301,4 +306,225 @@ fn server_restart_requires_gate_reset() {
     let (_, fs) = c.fetch_into(0, buf, seen, own);
     assert_eq!(fs.layers_copied, 2, "reset gate recopies every layer");
     assert_eq!(*cache.view(), ParamServer::snapshot(&c));
+}
+
+/// The multi-process tier's acceptance pin: the same simulated figure
+/// run against (a) N *independent* per-group server processes with
+/// synchronous commits, (b) the same split tier with pipelined commits,
+/// and (c) the shared single-process tier with pipelined commits — all
+/// three must reproduce the in-process `ShardedServer` run **bitwise**.
+#[test]
+fn split_driver_matches_sharded_bitwise_sync_and_pipelined() {
+    let cfg = tiny_cfg();
+    let ds = build_dataset(&cfg);
+    let a = run_experiment_with(&cfg, fast_opts(), &ds, ShardedServer::new);
+    let split_sync =
+        run_experiment_with(&cfg, fast_opts(), &ds, |init, workers, policy| {
+            transport::loopback_split(init, workers, policy, 2, None)
+        });
+    let split_pipe =
+        run_experiment_with(&cfg, fast_opts(), &ds, |init, workers, policy| {
+            transport::loopback_split(init, workers, policy, 2, Some(16))
+        });
+    let shared_pipe =
+        run_experiment_with(&cfg, fast_opts(), &ds, |init, workers, policy| {
+            transport::loopback(init, workers, policy, 2)
+                .with_pipeline(8)
+                .expect("enable pipeline")
+        });
+    for (name, r) in [
+        ("split+sync", &split_sync),
+        ("split+pipelined", &split_pipe),
+        ("shared+pipelined", &shared_pipe),
+    ] {
+        assert_eq!(
+            a.final_params, r.final_params,
+            "{name}: final weights diverged"
+        );
+        assert_eq!(a.final_objective, r.final_objective, "{name}");
+        assert_eq!(a.total_vtime, r.total_vtime, "{name}");
+        assert_eq!(a.steps, r.steps, "{name}");
+        assert_eq!(a.reads, r.reads, "{name}");
+        let a_curve: Vec<(u64, f64)> =
+            a.evals.iter().map(|e| (e.clock, e.objective)).collect();
+        let r_curve: Vec<(u64, f64)> =
+            r.evals.iter().map(|e| (e.clock, e.objective)).collect();
+        assert_eq!(a_curve, r_curve, "{name}: objective curves diverged");
+    }
+}
+
+/// The threaded runner over the *split* tier with pipelined ports: each
+/// shard group is an independent full server (exactly what two `sspdnn
+/// serve --group` processes hold), every worker port broadcasts its
+/// COMMITs and overlaps them with compute, and at one machine the run
+/// must still be value-identical to the in-process `run_threaded`.
+#[test]
+fn split_pipelined_threaded_matches_inprocess_at_one_machine() {
+    let mut cfg = tiny_cfg();
+    cfg.train.clocks = 8;
+    let ds = build_dataset(&cfg);
+    let opts = |_: ()| ThreadedOptions {
+        machines: 1,
+        engine_factory: native_factory(&cfg),
+        eta: EtaSchedule::Fixed(cfg.train.eta),
+        eval_every: 2,
+        eval_samples: 64,
+    };
+    let a = run_threaded(&cfg, &ds, opts(()));
+
+    // one independent per-group server process' worth of state per
+    // group, each serving only its own shard range
+    let init = coordinator::init_params(&cfg);
+    let mut services = Vec::new();
+    let mut addrs = Vec::new();
+    for g in 0..2 {
+        let server =
+            Arc::new(ShardedServer::new(init.clone(), 1, cfg.ssp.policy));
+        let svc =
+            ShardService::bind_group(server, "127.0.0.1:0", 2, g).unwrap();
+        addrs.extend_from_slice(svc.addrs());
+        services.push(svc);
+    }
+    let b = run_threaded_on(&cfg, &ds, opts(()), |_p| {
+        let port = RemoteClient::connect(&addrs).expect("connect worker port");
+        assert!(port.exclusive(), "split endpoints must handshake exclusive");
+        port.with_pipeline(16).expect("enable pipeline")
+    });
+
+    assert_eq!(a.final_params, b.final_params, "final weights diverged");
+    assert_eq!(a.final_objective, b.final_objective);
+    assert_eq!(a.steps, b.steps);
+    let a_curve: Vec<(u64, f64)> =
+        a.evals.iter().map(|e| (e.0, e.2)).collect();
+    let b_curve: Vec<(u64, f64)> =
+        b.evals.iter().map(|e| (e.0, e.2)).collect();
+    assert_eq!(a_curve, b_curve, "eval curves diverged");
+    drop(services);
+}
+
+/// Shutdown's accept-loop wake-up self-connects; with a wildcard bind
+/// (`0.0.0.0` / `::`) the listen address is not a connectable
+/// destination, which used to leave `shutdown` hanging on a parked
+/// accept. Pin that dropping a wildcard-bound service completes.
+#[test]
+fn shutdown_completes_when_bound_to_wildcard_address() {
+    let init = ParamSet::zeros(&dims());
+    let server = Arc::new(ShardedServer::new(init, 1, Policy::Async));
+    let svc = ShardService::bind(server, "0.0.0.0:0", 2).unwrap();
+    assert_eq!(svc.groups(), 2);
+    let done = std::thread::spawn(move || drop(svc));
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while !done.is_finished() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "shutdown hung on a wildcard-bound listener"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    done.join().unwrap();
+}
+
+/// A server-side rejection (the FIFO pre-check answering ERR) must
+/// surface as a *typed* error — `TransportErrorKind::Server` — and, on
+/// a pipelined connection, consume exactly its own in-flight window
+/// slot: later acknowledgements still match their entries and the
+/// connection stays usable. Both the synchronous and pipelined paths.
+#[test]
+fn err_reply_is_typed_and_pipeline_window_stays_aligned() {
+    let init = ParamSet::zeros(&dims());
+
+    // synchronous: the rejection surfaces on the offending call
+    let sync = transport::loopback(init.clone(), 1, Policy::Async, 2);
+    let e = sync
+        .try_apply_arrival(&msg(0, 5, 0, 0.1))
+        .expect_err("clock-5 update skips clocks 0..5");
+    assert_eq!(e.kind, TransportErrorKind::Server);
+    assert!(
+        e.to_string().contains("out-of-order"),
+        "unhelpful error: {e}"
+    );
+    sync.try_apply_arrival(&msg(0, 0, 0, 0.2)).unwrap();
+    assert_eq!(sync.applied(0, 0), 1, "connection survived the ERR");
+
+    // pipelined: good, bad, good enqueued on one connection — the
+    // rejection surfaces at flush, the later update still applied
+    let pipe = transport::loopback(init, 1, Policy::Async, 2)
+        .with_pipeline(8)
+        .expect("enable pipeline");
+    pipe.try_apply_arrival(&msg(0, 0, 0, 0.1)).unwrap();
+    pipe.try_apply_arrival(&msg(0, 7, 0, 0.1)).unwrap(); // rejected later
+    pipe.try_apply_arrival(&msg(0, 1, 0, 0.1)).unwrap();
+    let e = pipe.flush().expect_err("the enqueued rejection drains here");
+    assert_eq!(e.kind, TransportErrorKind::Server);
+    // no desync: the ERR consumed exactly its own window slot, so the
+    // update behind it was acknowledged and applied...
+    assert_eq!(pipe.applied(0, 0), 2, "update behind the ERR still landed");
+    // ...and the connection keeps working
+    pipe.try_apply_arrival(&msg(0, 2, 0, 0.3)).unwrap();
+    pipe.flush().unwrap();
+    assert_eq!(pipe.applied(0, 0), 3);
+}
+
+/// The client must reassemble frames across arbitrarily torn reads: a
+/// fake server dribbles its HELLO_OK and a U64 reply one byte per
+/// `write`, and the handshake plus a CLOCK round-trip must still work.
+#[test]
+fn client_reassembles_one_byte_server_writes() {
+    use std::io::Write;
+
+    use sspdnn::ssp::transport::wire::{self, op};
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        s.set_nodelay(true).unwrap();
+        let dribble = |s: &mut std::net::TcpStream, out: &[u8]| {
+            for b in out {
+                s.write_all(std::slice::from_ref(b)).unwrap();
+                s.flush().unwrap();
+            }
+        };
+        let mut dec = wire::FrameDecoder::default();
+        let mut bytes_in = 0u64;
+        let hello = wire::read_frame(&mut s, &mut dec, &mut bytes_in)
+            .unwrap()
+            .expect("client opens with HELLO");
+        assert_eq!(hello.op, op::HELLO);
+        // HELLO_OK for a 1-worker, 1-layer, 1-group shared async server
+        let mut out = Vec::new();
+        let mark = wire::begin_frame(&mut out, op::HELLO_OK);
+        wire::put_u32(&mut out, wire::WIRE_VERSION);
+        wire::put_u32(&mut out, 1); // workers
+        wire::put_u32(&mut out, 1); // n_layers
+        wire::put_u32(&mut out, 1); // groups
+        wire::put_u32(&mut out, 0); // group
+        wire::put_u32(&mut out, 0); // group start
+        wire::put_u32(&mut out, 1); // group len
+        wire::put_u8(&mut out, 2); // policy tag: async
+        wire::put_u64(&mut out, 0); // staleness
+        wire::put_u64(&mut out, 0); // init digest (check_run not used)
+        wire::put_u8(&mut out, 0); // shared endpoint
+        wire::put_u32(&mut out, 1); // rows
+        wire::put_u32(&mut out, 1); // cols
+        wire::put_u32(&mut out, 1); // blen
+        wire::end_frame(&mut out, mark);
+        dribble(&mut s, &out);
+        let clock = wire::read_frame(&mut s, &mut dec, &mut bytes_in)
+            .unwrap()
+            .expect("client asks for the clock");
+        assert_eq!(clock.op, op::CLOCK);
+        let mut out = Vec::new();
+        let mark = wire::begin_frame(&mut out, op::U64);
+        wire::put_u64(&mut out, 7);
+        wire::end_frame(&mut out, mark);
+        dribble(&mut s, &out);
+    });
+
+    let client =
+        RemoteClient::connect(&[addr]).expect("handshake across torn writes");
+    assert_eq!(client.clock(0), 7, "reply reassembled from 1-byte chunks");
+    drop(client);
+    server.join().unwrap();
 }
