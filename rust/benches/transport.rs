@@ -169,6 +169,44 @@ fn main() {
                 .with_pipeline(WINDOW)
                 .expect("enable pipeline")
         });
+    // supervision armed but never exercised: the price of the
+    // reconnect machinery on the happy path (per-op resume
+    // bookkeeping; should be within noise of the unsupervised run)
+    let commits_1_supervised = bench_commits(
+        "pipelined+supervised, 1 shared endpoint",
+        &init,
+        || {
+            transport::loopback(init.clone(), 1, Policy::Async, 1)
+                .with_faults(transport::FaultPolicy {
+                    connect_timeout: std::time::Duration::from_secs(5),
+                    io_timeout: Some(std::time::Duration::from_secs(30)),
+                    max_retries: 10,
+                    backoff_base: std::time::Duration::from_millis(5),
+                })
+                .expect("arm supervision")
+                .with_pipeline(WINDOW)
+                .expect("enable pipeline")
+        },
+    );
+    // recovery cost: the same cycle absorbing two scripted connection
+    // kills mid-run (reconnect + handshake revalidation + revision
+    // probe + window resync, twice) — the amortized rate quantifies
+    // what a fault costs, not just that it is survived
+    let commits_1_chaos = bench_commits(
+        "pipelined+supervised, 2 scripted kills",
+        &init,
+        || {
+            transport::loopback_chaos(
+                init.clone(),
+                1,
+                Policy::Async,
+                1,
+                Some(WINDOW),
+                "kill@update:50;kill@update:150",
+                42,
+            )
+        },
+    );
     let commits_n =
         bench_commits("sync, per-layer shared endpoints", &init, || {
             transport::loopback(init.clone(), 1, Policy::Async, n_layers)
@@ -231,6 +269,14 @@ fn main() {
             (
                 "commits_per_s_1_endpoint_pipelined",
                 Json::num(commits_1_pipe),
+            ),
+            (
+                "commits_per_s_1_endpoint_pipelined_supervised",
+                Json::num(commits_1_supervised),
+            ),
+            (
+                "commits_per_s_1_endpoint_pipelined_2_scripted_kills",
+                Json::num(commits_1_chaos),
             ),
             (
                 "commits_per_s_per_layer_endpoints",

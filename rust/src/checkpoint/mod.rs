@@ -3,14 +3,30 @@
 //! Format (little-endian):
 //!   magic "SSPD" | u32 version | u32 n_dims | u64 dims... |
 //!   f32 data in `ParamSet::flatten` order | u64 fnv1a checksum
+//!
+//! A second format dumps a whole `ShardedServer` for shard-process
+//! warm restarts (`save_state` / `load_state`):
+//!   magic "SSPS" | u32 version | u8 policy_tag | u64 staleness |
+//!   u32 workers | u32 n_layers | u64 clocks × workers |
+//!   per layer { u32 rows | u32 cols | u32 blen | f32 w × rows·cols |
+//!               f32 b × blen | u64 versions × workers | u64 rev } |
+//!   u64 fnv1a checksum
+//! Both formats end in the same checksum; `save_state` writes through a
+//! `.tmp` sibling + rename so a crash mid-dump never leaves a torn file
+//! where a restart would look for its state.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
-use crate::nn::ParamSet;
+use crate::nn::{LayerParams, ParamSet};
+use crate::ssp::{LayerState, Policy, ServerState};
+use crate::tensor::Matrix;
 
 const MAGIC: &[u8; 4] = b"SSPD";
 const VERSION: u32 = 1;
+
+const STATE_MAGIC: &[u8; 4] = b"SSPS";
+const STATE_VERSION: u32 = 1;
 
 #[derive(Debug)]
 pub enum CheckpointError {
@@ -116,6 +132,162 @@ pub fn load(path: impl AsRef<Path>) -> Result<(Vec<usize>, ParamSet), Checkpoint
     Ok((dims.clone(), ParamSet::unflatten(&dims, &flat)))
 }
 
+fn state_policy_code(p: Policy) -> (u8, u64) {
+    match p {
+        Policy::Bsp => (0, 0),
+        Policy::Ssp { staleness } => (1, staleness),
+        Policy::Async => (2, 0),
+    }
+}
+
+fn state_policy_decode(tag: u8, staleness: u64) -> Result<Policy, CheckpointError> {
+    match tag {
+        0 => Ok(Policy::Bsp),
+        1 => Ok(Policy::Ssp { staleness }),
+        2 => Ok(Policy::Async),
+        _ => Err(CheckpointError::Corrupt),
+    }
+}
+
+/// Dump a `ShardedServer::export_state` to disk (format in the module
+/// docs). Writes a `.tmp` sibling first and renames it into place so a
+/// crash mid-write never leaves a torn state file.
+pub fn save_state(
+    path: impl AsRef<Path>,
+    state: &ServerState,
+) -> Result<(), CheckpointError> {
+    let (tag, staleness) = state_policy_code(state.policy);
+    let mut buf = Vec::new();
+    buf.extend_from_slice(STATE_MAGIC);
+    buf.extend_from_slice(&STATE_VERSION.to_le_bytes());
+    buf.push(tag);
+    buf.extend_from_slice(&staleness.to_le_bytes());
+    buf.extend_from_slice(&(state.workers as u32).to_le_bytes());
+    buf.extend_from_slice(&(state.layers.len() as u32).to_le_bytes());
+    for &c in &state.clocks {
+        buf.extend_from_slice(&c.to_le_bytes());
+    }
+    for layer in &state.layers {
+        buf.extend_from_slice(&(layer.params.w.rows() as u32).to_le_bytes());
+        buf.extend_from_slice(&(layer.params.w.cols() as u32).to_le_bytes());
+        buf.extend_from_slice(&(layer.params.b.len() as u32).to_le_bytes());
+        for v in layer.params.w.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &layer.params.b {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &layer.versions {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(&layer.rev.to_le_bytes());
+    }
+    let sum = fnv1a(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a server-state dump written by [`save_state`].
+pub fn load_state(path: impl AsRef<Path>) -> Result<ServerState, CheckpointError> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut buf)?;
+    if buf.len() < 33 || &buf[..4] != STATE_MAGIC {
+        return Err(CheckpointError::BadMagic);
+    }
+    let body_len = buf.len() - 8;
+    let stored = u64::from_le_bytes(buf[body_len..].try_into().unwrap());
+    if fnv1a(&buf[..body_len]) != stored {
+        return Err(CheckpointError::Corrupt);
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if version != STATE_VERSION {
+        return Err(CheckpointError::BadVersion(version));
+    }
+    fn take<'a>(
+        body: &'a [u8],
+        off: &mut usize,
+        n: usize,
+    ) -> Result<&'a [u8], CheckpointError> {
+        if body.len() - *off < n {
+            return Err(CheckpointError::Corrupt);
+        }
+        let s = &body[*off..*off + n];
+        *off += n;
+        Ok(s)
+    }
+    let body = &buf[..body_len];
+    let mut off = 8usize;
+    let tag = take(body, &mut off, 1)?[0];
+    let staleness =
+        u64::from_le_bytes(take(body, &mut off, 8)?.try_into().unwrap());
+    let policy = state_policy_decode(tag, staleness)?;
+    let workers =
+        u32::from_le_bytes(take(body, &mut off, 4)?.try_into().unwrap()) as usize;
+    let n_layers =
+        u32::from_le_bytes(take(body, &mut off, 4)?.try_into().unwrap()) as usize;
+    if workers == 0 || n_layers == 0 {
+        return Err(CheckpointError::Corrupt);
+    }
+    let mut clocks = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        clocks.push(u64::from_le_bytes(
+            take(body, &mut off, 8)?.try_into().unwrap(),
+        ));
+    }
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let rows = u32::from_le_bytes(
+            take(body, &mut off, 4)?.try_into().unwrap(),
+        ) as usize;
+        let cols = u32::from_le_bytes(
+            take(body, &mut off, 4)?.try_into().unwrap(),
+        ) as usize;
+        let blen = u32::from_le_bytes(
+            take(body, &mut off, 4)?.try_into().unwrap(),
+        ) as usize;
+        let mut w = Matrix::zeros(rows, cols);
+        let w_bytes = take(body, &mut off, rows * cols * 4)?;
+        for (d, c) in w.data_mut().iter_mut().zip(w_bytes.chunks_exact(4)) {
+            *d = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        let mut b = vec![0.0f32; blen];
+        let b_bytes = take(body, &mut off, blen * 4)?;
+        for (d, c) in b.iter_mut().zip(b_bytes.chunks_exact(4)) {
+            *d = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        let mut versions = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            versions.push(u64::from_le_bytes(
+                take(body, &mut off, 8)?.try_into().unwrap(),
+            ));
+        }
+        let rev =
+            u64::from_le_bytes(take(body, &mut off, 8)?.try_into().unwrap());
+        layers.push(LayerState {
+            params: LayerParams { w, b },
+            versions,
+            rev,
+        });
+    }
+    if off != body.len() {
+        return Err(CheckpointError::Corrupt);
+    }
+    Ok(ServerState { policy, workers, clocks, layers })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +325,60 @@ mod tests {
         let path = std::env::temp_dir().join("sspdnn_ckpt_magic.bin");
         std::fs::write(&path, b"NOPE....").unwrap();
         assert!(matches!(load(&path), Err(CheckpointError::BadMagic)));
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn sample_state() -> ServerState {
+        let dims = vec![3, 4, 2];
+        let mut rng = Pcg64::new(5);
+        let p = ParamSet::glorot(&dims, &mut rng);
+        ServerState {
+            policy: Policy::Ssp { staleness: 3 },
+            workers: 2,
+            clocks: vec![4, 3],
+            layers: p
+                .layers
+                .into_iter()
+                .enumerate()
+                .map(|(l, lp)| LayerState {
+                    params: lp,
+                    versions: vec![4, 3],
+                    rev: 7 + l as u64,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn server_state_roundtrips_bitwise() {
+        let state = sample_state();
+        let path = std::env::temp_dir().join("sspdnn_state_test.bin");
+        save_state(&path, &state).unwrap();
+        let got = load_state(&path).unwrap();
+        assert_eq!(got, state);
+        // no .tmp sibling left behind by the atomic-rename write
+        assert!(!path.with_extension("tmp").exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn server_state_corruption_and_truncation_detected() {
+        let state = sample_state();
+        let path = std::env::temp_dir().join("sspdnn_state_corrupt.bin");
+        save_state(&path, &state).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0xFF;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(matches!(load_state(&path), Err(CheckpointError::Corrupt)));
+
+        std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+        assert!(load_state(&path).is_err(), "truncated dump must not load");
+
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(matches!(load_state(&path), Err(CheckpointError::BadMagic)));
         std::fs::remove_file(&path).ok();
     }
 }

@@ -156,6 +156,26 @@ mod tests {
     }
 
     #[test]
+    fn fault_flag_shapes() {
+        // the robustness flags also ride the generic parser; pin the
+        // shapes cmd_train/cmd_serve/cmd_chaos read back out
+        let t = parse("train --server 127.0.0.1:7171 --retries 10 --lease-ms 3000");
+        assert_eq!(t.get_u64("retries").unwrap(), Some(10));
+        assert_eq!(t.get_u64("lease-ms").unwrap(), Some(3000));
+        let s = parse("serve --state dump.ssps --state-out dump.ssps --state-every-ms 250");
+        assert_eq!(s.get("state"), Some("dump.ssps"));
+        assert_eq!(s.get("state-out"), Some("dump.ssps"));
+        assert_eq!(s.get_u64("state-every-ms").unwrap(), Some(250));
+        // a chaos script holds ';'/':'/'@' — none of which the parser
+        // may split on — and survives the equals form too
+        let c = parse(
+            "chaos --target 127.0.0.1:7070 --script=kill@update:40;delay:25@fetch:3 --seed 9",
+        );
+        assert_eq!(c.get("script"), Some("kill@update:40;delay:25@fetch:3"));
+        assert_eq!(c.get_u64("seed").unwrap(), Some(9));
+    }
+
+    #[test]
     fn duplicate_flag_rejected() {
         let e = Args::parse(
             ["x", "--a", "1", "--a", "2"].iter().map(|s| s.to_string()),

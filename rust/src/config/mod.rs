@@ -573,6 +573,29 @@ pub struct TransportConfig {
     /// `port + g` convention. When set, the length must equal
     /// `shard_groups`.
     pub group_addrs: Vec<String>,
+    /// Bound on every TCP connect, initial and reconnect (ms).
+    pub connect_timeout_ms: u64,
+    /// Socket read timeout for request/response exchanges (ms); 0
+    /// blocks forever. WAIT is always exempt (a barrier legitimately
+    /// outlasts any bound).
+    pub io_timeout_ms: u64,
+    /// Reconnect attempts per supervised operation before the client
+    /// declares the server tier lost. 0 disables supervision: every
+    /// socket fault surfaces immediately.
+    pub max_retries: u32,
+    /// First reconnect backoff delay (ms); doubles per attempt, capped
+    /// at 2 s.
+    pub backoff_base_ms: u64,
+    /// Worker lease duration granted by each heartbeat (ms); 0
+    /// disables heartbeating entirely. An expired lease makes the
+    /// server release barrier waits parked on the dead worker.
+    pub lease_ms: u64,
+    /// Heartbeat renewal interval (ms); must undercut `lease_ms` when
+    /// leases are on.
+    pub heartbeat_ms: u64,
+    /// How long the service's shutdown path waits for its wake-up
+    /// connects to the group listeners (ms).
+    pub wake_timeout_ms: u64,
 }
 
 impl Default for TransportConfig {
@@ -584,6 +607,13 @@ impl Default for TransportConfig {
             pipeline: true,
             window: 32,
             group_addrs: Vec::new(),
+            connect_timeout_ms: 5000,
+            io_timeout_ms: 30_000,
+            max_retries: 5,
+            backoff_base_ms: 50,
+            lease_ms: 10_000,
+            heartbeat_ms: 2500,
+            wake_timeout_ms: 500,
         }
     }
 }
@@ -621,6 +651,62 @@ impl TransportConfig {
                 ("group_addrs", IntArray(v)) if v.is_empty() => {
                     self.group_addrs = Vec::new()
                 }
+                ("connect_timeout_ms", Int(n)) => {
+                    if *n < 1 {
+                        return Err(format!(
+                            "transport.connect_timeout_ms must be >= 1, got {n}"
+                        ));
+                    }
+                    self.connect_timeout_ms = *n as u64
+                }
+                ("io_timeout_ms", Int(n)) => {
+                    if *n < 0 {
+                        return Err(format!(
+                            "transport.io_timeout_ms must be >= 0, got {n}"
+                        ));
+                    }
+                    self.io_timeout_ms = *n as u64
+                }
+                ("max_retries", Int(n)) => {
+                    if *n < 0 || *n > u32::MAX as i64 {
+                        return Err(format!(
+                            "transport.max_retries out of range: {n}"
+                        ));
+                    }
+                    self.max_retries = *n as u32
+                }
+                ("backoff_base_ms", Int(n)) => {
+                    if *n < 1 {
+                        return Err(format!(
+                            "transport.backoff_base_ms must be >= 1, got {n}"
+                        ));
+                    }
+                    self.backoff_base_ms = *n as u64
+                }
+                ("lease_ms", Int(n)) => {
+                    if *n < 0 {
+                        return Err(format!(
+                            "transport.lease_ms must be >= 0, got {n}"
+                        ));
+                    }
+                    self.lease_ms = *n as u64
+                }
+                ("heartbeat_ms", Int(n)) => {
+                    if *n < 1 {
+                        return Err(format!(
+                            "transport.heartbeat_ms must be >= 1, got {n}"
+                        ));
+                    }
+                    self.heartbeat_ms = *n as u64
+                }
+                ("wake_timeout_ms", Int(n)) => {
+                    if *n < 1 {
+                        return Err(format!(
+                            "transport.wake_timeout_ms must be >= 1, got {n}"
+                        ));
+                    }
+                    self.wake_timeout_ms = *n as u64
+                }
                 (k, _) => {
                     return Err(format!("unknown config key [transport] {k}"))
                 }
@@ -640,9 +726,22 @@ impl TransportConfig {
             .join(", ");
         format!(
             "[transport]\naddr = \"{}\"\nshard_groups = {}\ngated = {}\n\
-             pipeline = {}\nwindow = {}\ngroup_addrs = [{addrs}]\n",
-            self.addr, self.shard_groups, self.gated, self.pipeline,
+             pipeline = {}\nwindow = {}\ngroup_addrs = [{addrs}]\n\
+             connect_timeout_ms = {}\nio_timeout_ms = {}\n\
+             max_retries = {}\nbackoff_base_ms = {}\nlease_ms = {}\n\
+             heartbeat_ms = {}\nwake_timeout_ms = {}\n",
+            self.addr,
+            self.shard_groups,
+            self.gated,
+            self.pipeline,
             self.window,
+            self.connect_timeout_ms,
+            self.io_timeout_ms,
+            self.max_retries,
+            self.backoff_base_ms,
+            self.lease_ms,
+            self.heartbeat_ms,
+            self.wake_timeout_ms,
         )
     }
 
@@ -670,7 +769,56 @@ impl TransportConfig {
             crate::ssp::transport::split_addr(a)
                 .map_err(|e| format!("transport.group_addrs: {e}"))?;
         }
+        if self.connect_timeout_ms == 0 {
+            return Err("transport.connect_timeout_ms must be >= 1".into());
+        }
+        if self.backoff_base_ms == 0 {
+            return Err("transport.backoff_base_ms must be >= 1".into());
+        }
+        if self.lease_ms > 0 && self.heartbeat_ms >= self.lease_ms {
+            return Err(format!(
+                "transport.heartbeat_ms ({}) must undercut lease_ms ({})",
+                self.heartbeat_ms, self.lease_ms
+            ));
+        }
+        if self.wake_timeout_ms == 0 {
+            return Err("transport.wake_timeout_ms must be >= 1".into());
+        }
         Ok(())
+    }
+
+    /// The client-side connection supervisor knobs, single-sourced from
+    /// this table.
+    pub fn fault_policy(&self) -> crate::ssp::transport::FaultPolicy {
+        crate::ssp::transport::FaultPolicy {
+            connect_timeout: std::time::Duration::from_millis(
+                self.connect_timeout_ms,
+            ),
+            io_timeout: if self.io_timeout_ms == 0 {
+                None
+            } else {
+                Some(std::time::Duration::from_millis(self.io_timeout_ms))
+            },
+            max_retries: self.max_retries,
+            backoff_base: std::time::Duration::from_millis(
+                self.backoff_base_ms,
+            ),
+        }
+    }
+
+    /// The server-side service knobs, single-sourced from this table.
+    /// `init_digest` lets a warm-restarted `serve` advertise the
+    /// config-derived digest instead of hashing its restored state.
+    pub fn service_options(
+        &self,
+        init_digest: Option<u64>,
+    ) -> crate::ssp::transport::ServiceOptions {
+        crate::ssp::transport::ServiceOptions {
+            wake_timeout: std::time::Duration::from_millis(
+                self.wake_timeout_ms,
+            ),
+            init_digest,
+        }
     }
 
     /// Group `g`'s endpoint address: the explicit `group_addrs` entry
@@ -887,6 +1035,13 @@ mod tests {
                 pipeline: false,
                 window: 1,
                 group_addrs: Vec::new(),
+                connect_timeout_ms: 1200,
+                io_timeout_ms: 0,
+                max_retries: 9,
+                backoff_base_ms: 25,
+                lease_ms: 0,
+                heartbeat_ms: 1000,
+                wake_timeout_ms: 250,
             },
             TransportConfig {
                 addr: "localhost:0".into(),
@@ -963,6 +1118,73 @@ mod tests {
         };
         v6.validate().unwrap();
         assert_eq!(v6.group_addr(1).unwrap(), "[::1]:7071");
+    }
+
+    #[test]
+    fn transport_fault_knobs_parse_validate_and_map() {
+        let doc = parse_toml(
+            "[transport]\nconnect_timeout_ms = 250\nio_timeout_ms = 0\n\
+             max_retries = 3\nbackoff_base_ms = 10\nlease_ms = 400\n\
+             heartbeat_ms = 100\nwake_timeout_ms = 50\n",
+        )
+        .unwrap();
+        let mut t = TransportConfig::default();
+        t.apply_toml(&doc).unwrap();
+        assert_eq!(t.connect_timeout_ms, 250);
+        assert_eq!(t.io_timeout_ms, 0);
+        assert_eq!(t.max_retries, 3);
+        assert_eq!(t.backoff_base_ms, 10);
+        assert_eq!(t.lease_ms, 400);
+        assert_eq!(t.heartbeat_ms, 100);
+        assert_eq!(t.wake_timeout_ms, 50);
+
+        // single-sourcing: the [transport] table maps onto the client
+        // supervisor's FaultPolicy and the service's options
+        let fp = t.fault_policy();
+        assert_eq!(fp.connect_timeout.as_millis(), 250);
+        assert_eq!(fp.io_timeout, None, "0 means block forever");
+        assert_eq!(fp.max_retries, 3);
+        assert_eq!(fp.backoff_base.as_millis(), 10);
+        let t2 = TransportConfig {
+            io_timeout_ms: 1500,
+            ..TransportConfig::default()
+        };
+        assert_eq!(
+            t2.fault_policy().io_timeout,
+            Some(std::time::Duration::from_millis(1500))
+        );
+        let so = t.service_options(Some(0xDEAD));
+        assert_eq!(so.wake_timeout.as_millis(), 50);
+        assert_eq!(so.init_digest, Some(0xDEAD));
+
+        // a heartbeat that cannot keep the lease alive is a config
+        // error — unless leases are off entirely (lease_ms = 0)
+        let stale = parse_toml(
+            "[transport]\nlease_ms = 100\nheartbeat_ms = 100\n",
+        )
+        .unwrap();
+        assert!(TransportConfig::default().apply_toml(&stale).is_err());
+        let off = parse_toml(
+            "[transport]\nlease_ms = 0\nheartbeat_ms = 60000\n",
+        )
+        .unwrap();
+        TransportConfig::default().apply_toml(&off).unwrap();
+
+        for bad in [
+            "[transport]\nconnect_timeout_ms = 0\n",
+            "[transport]\nbackoff_base_ms = 0\n",
+            "[transport]\nheartbeat_ms = 0\n",
+            "[transport]\nwake_timeout_ms = 0\n",
+            "[transport]\nmax_retries = -1\n",
+            "[transport]\nio_timeout_ms = -5\n",
+            "[transport]\nlease_ms = -1\n",
+        ] {
+            let doc = parse_toml(bad).unwrap();
+            assert!(
+                TransportConfig::default().apply_toml(&doc).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
     }
 
     #[test]

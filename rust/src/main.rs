@@ -36,6 +36,7 @@ fn main() {
     let code = match args.command.as_str() {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "chaos" => cmd_chaos(&args),
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
         "speedup" => cmd_speedup(&args),
@@ -65,6 +66,9 @@ COMMANDS:
   serve      host a config's sharded SSP parameter server over TCP
              (one endpoint per shard group; workers attach with
              `train --server`)
+  chaos      deterministic fault-injection TCP proxy in front of one
+             serve endpoint: drops, delays, duplicates, or tears
+             frames at scripted protocol boundaries
   simulate   traced protocol run: per-worker staleness/blocking/delay stats
   sweep      parallel deterministic grid sweep over (machines, staleness,
              policy, eta) cells; consolidated SweepReport JSON/CSV
@@ -98,12 +102,35 @@ FLAGS (transport; also settable via the [transport] TOML table):
                               (disable the pipelined commit path)
   --window N                  train: max in-flight unacked frames per
                               connection when pipelining (default 32)
+  --retries N                 train: reconnect budget per supervised op
+                              (overrides [transport] max_retries; 0 =
+                              fail fast, no supervision)
+  --lease-ms N                train: heartbeat lease duration in ms; an
+                              expired lease releases the dead worker's
+                              barrier waiters server-side (0 = off)
   --addr host:port            serve: base listen address (group g binds
                               port+g; default 127.0.0.1:7070)
   --shard-groups N            serve: endpoint count (clamped to layers)
   --group N                   serve: host ONLY shard group N in this
                               process (exclusive tier: run one such
                               process per group, same config each)
+  --state <file>              serve: warm-restart from a server-state
+                              dump (clock table + trained weights; the
+                              handshake still advertises the config's
+                              init digest, so workers re-attach)
+  --state-out <file>          serve: periodically dump server state to
+                              <file> (atomic tmp+rename) for warm
+                              restarts
+  --state-every-ms N          serve: dump cadence for --state-out
+                              (default 1000)
+
+FLAGS (chaos):
+  --target host:port          the serve endpoint to relay to (required)
+  --listen host:port          proxy listen address (default 127.0.0.1:0)
+  --script S                  fault script: action[:arg]@op:n items
+                              joined by ';' — e.g.
+                              'kill@update:40;delay:25@fetch:3;torn@commit:7'
+  --seed N                    torn-write length RNG seed (default 1)
 
 FLAGS (sweep; grid also settable via the [sweep] TOML table):
   --grid-machines 1,2,4       machine counts to sweep
@@ -222,6 +249,13 @@ fn transport_config(
     if let Some(s) = args.get("group-addrs") {
         tcfg.group_addrs = parse_list("group-addrs", s)?;
     }
+    if let Some(r) = args.get_u64("retries").map_err(|e| e.to_string())? {
+        tcfg.max_retries = u32::try_from(r)
+            .map_err(|_| format!("--retries {r} out of range"))?;
+    }
+    if let Some(l) = args.get_u64("lease-ms").map_err(|e| e.to_string())? {
+        tcfg.lease_ms = l;
+    }
     tcfg.validate()?;
     Ok(tcfg)
 }
@@ -247,10 +281,11 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             // `sspdnn serve` process (shared tier) or one `serve
             // --group g` process per shard group (exclusive tier)
             let tcfg = transport_config(args, doc.as_ref())?;
+            let faults = tcfg.fault_policy();
             let client = if tcfg.group_addrs.is_empty() {
-                RemoteClient::connect_base(addr)?
+                RemoteClient::connect_base_with(addr, faults)?
             } else {
-                RemoteClient::connect_hosts(&tcfg.group_addrs)?
+                RemoteClient::connect_hosts_with(&tcfg.group_addrs, faults)?
             };
             let client = client.with_gate(tcfg.gated);
             let client = if tcfg.pipeline {
@@ -258,9 +293,19 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             } else {
                 client
             };
+            // heartbeat lease: the server drops this run's barrier
+            // waits if the trainer dies without saying goodbye
+            let client = if tcfg.lease_ms > 0 {
+                client.with_lease(
+                    std::time::Duration::from_millis(tcfg.lease_ms),
+                    std::time::Duration::from_millis(tcfg.heartbeat_ms),
+                )?
+            } else {
+                client
+            };
             println!(
                 "remote parameter server: {addr} ({} {} endpoints, gate {}, \
-                 commits {})",
+                 commits {}, retries {}, lease {})",
                 client.groups(),
                 if client.exclusive() { "exclusive" } else { "shared" },
                 if tcfg.gated { "on" } else { "off" },
@@ -268,6 +313,12 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                     format!("pipelined (window {})", tcfg.window)
                 } else {
                     "synchronous".to_string()
+                },
+                tcfg.max_retries,
+                if tcfg.lease_ms > 0 {
+                    format!("{}ms / beat {}ms", tcfg.lease_ms, tcfg.heartbeat_ms)
+                } else {
+                    "off".to_string()
                 },
             );
             run_experiment_with(&cfg, opts, &dataset, move |init, workers, policy| {
@@ -322,12 +373,81 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // from the shared config seed — the gated-fetch premise
     let init = init_params(&cfg);
     let workers = cfg.cluster.machines;
-    let server =
-        std::sync::Arc::new(ShardedServer::new(init, workers, cfg.ssp.policy));
+    let n_layers = cfg.model.dims.len() - 1;
+    let (server, warm_digest) = match args.get("state") {
+        None => (
+            std::sync::Arc::new(ShardedServer::new(init, workers, cfg.ssp.policy)),
+            None,
+        ),
+        // warm restart: resume a crashed/retired shard process from a
+        // quiescent state dump — trained weights, revision counters,
+        // and the clock table all continue where they left off, so a
+        // supervised client's reconnect probe sees no rev regression
+        Some(path) => {
+            let state = sspdnn::checkpoint::load_state(path)
+                .map_err(|e| format!("--state {path}: {e}"))?;
+            if state.workers != workers {
+                return Err(format!(
+                    "--state {path} has {} workers but the config says {workers}",
+                    state.workers
+                ));
+            }
+            if state.layers.len() != n_layers {
+                return Err(format!(
+                    "--state {path} has {} layers but the config model has {n_layers}",
+                    state.layers.len()
+                ));
+            }
+            if state.policy != cfg.ssp.policy {
+                return Err(format!(
+                    "--state {path} policy {:?} differs from the config's {:?}",
+                    state.policy, cfg.ssp.policy
+                ));
+            }
+            println!(
+                "warm restart from {path} (clocks {:?})",
+                state.clocks
+            );
+            // clients validate the config-derived *init* digest on
+            // every handshake; the restarted master holds trained bits,
+            // so advertise the init digest explicitly
+            let digest = sspdnn::ssp::transport::param_digest(&init);
+            (
+                std::sync::Arc::new(ShardedServer::from_state(state)),
+                Some(digest),
+            )
+        }
+    };
+    if let Some(out) = args.get("state-out") {
+        let every = args
+            .get_u64("state-every-ms")
+            .map_err(|e| e.to_string())?
+            .unwrap_or(1000)
+            .max(1);
+        let dump = server.clone();
+        let out = out.to_string();
+        println!("state dumps: {out} every {every}ms");
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_millis(every));
+            // tmp + rename so a kill mid-dump never truncates the last
+            // good dump (load_state also checksums against torn writes)
+            let state = dump.export_state();
+            let tmp = format!("{out}.tmp");
+            if sspdnn::checkpoint::save_state(&tmp, &state).is_ok() {
+                let _ = std::fs::rename(&tmp, &out);
+            }
+        });
+    }
+    let opts = tcfg.service_options(warm_digest);
     let group = args.get_usize("group").map_err(|e| e.to_string())?;
     let svc = match group {
         // shared tier: this one process hosts every shard group
-        None => ShardService::bind(server, &tcfg.addr, tcfg.shard_groups)?,
+        None => ShardService::bind_with(
+            server,
+            &tcfg.addr,
+            tcfg.shard_groups,
+            opts,
+        )?,
         // exclusive tier: this process hosts ONLY group g's shards and
         // its private clock table; its siblings run as separate `serve
         // --group <j>` processes (same config — the cross-process
@@ -335,7 +455,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         // client's handshake digest check enforces)
         Some(g) => {
             let addr = tcfg.group_addr(g)?;
-            ShardService::bind_group(server, &addr, tcfg.shard_groups, g)?
+            ShardService::bind_group_with(
+                server,
+                &addr,
+                tcfg.shard_groups,
+                g,
+                opts,
+            )?
         }
     };
     match group {
@@ -383,6 +509,46 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     svc.join();
     Ok(())
+}
+
+/// `sspdnn chaos --listen A --target B --script S [--seed N]` — a
+/// standalone fault-injection relay for multi-process drills: park it
+/// between a trainer and one `serve` endpoint and the scripted faults
+/// fire at exact protocol frame counts, deterministically.
+fn cmd_chaos(args: &Args) -> Result<(), String> {
+    use std::net::ToSocketAddrs;
+    let target = args.get("target").ok_or("chaos needs --target host:port")?;
+    let target_addr = target
+        .to_socket_addrs()
+        .map_err(|e| format!("bad --target {target:?}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("--target {target:?} resolved to no address"))?;
+    let script_text = args
+        .get("script")
+        .ok_or("chaos needs --script (e.g. 'kill@update:40')")?;
+    let script = sspdnn::ssp::transport::chaos::parse_script(script_text)?;
+    let n_events = script.len();
+    let seed = args.get_u64("seed").map_err(|e| e.to_string())?.unwrap_or(1);
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0");
+    let proxy = sspdnn::ssp::transport::ChaosProxy::spawn_on(
+        listen,
+        target_addr,
+        script,
+        seed,
+    )?;
+    println!(
+        "chaos proxy: {} -> {target} ({n_events} scripted faults, seed {seed})",
+        proxy.addr()
+    );
+    println!(
+        "attach the trainer here, e.g. --server {} or --group-addrs {}",
+        proxy.addr(),
+        proxy.addr()
+    );
+    // relay until killed; the proxy threads own all the work
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {

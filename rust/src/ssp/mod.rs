@@ -37,7 +37,7 @@ pub mod transport;
 pub use client::WorkerCache;
 pub use clock::ClockTable;
 pub use server::{FetchStats, ReadStats, Server};
-pub use sharded::{AtomicClockTable, ShardedServer};
+pub use sharded::{AtomicClockTable, LayerState, ServerState, ShardedServer};
 pub use table::{ParamTable, VersionVector};
 pub use transport::{RemoteClient, ShardService};
 

@@ -1,0 +1,487 @@
+//! Deterministic fault-injection proxy — the transport's adversary.
+//!
+//! A [`ChaosProxy`] is a TCP relay that sits between a [`RemoteClient`]
+//! (connect the client to [`ChaosProxy::addr`]) and a real
+//! [`ShardService`] endpoint. The server→client direction is copied
+//! verbatim; the client→server direction is *reframed*: each frame is
+//! decoded with the wire [`FrameDecoder`] and re-encoded byte-
+//! identically, which gives the proxy exact frame boundaries to inject
+//! faults at. Faults are **scripted, not sampled**: a script is an
+//! ordered list of [`ChaosEvent`]s, each matching the n-th
+//! client→server frame of a given opcode (counted globally across all
+//! of the proxy's connections), so a failing run replays exactly —
+//! the property the fault-injection tests' bitwise pins depend on.
+//! The only randomness is the torn-write prefix length when the script
+//! doesn't fix it, and that is drawn from a seeded [`Pcg64`].
+//!
+//! Supported faults ([`ChaosAction`]): drop the connection cold
+//! (`Kill`), hold a frame back (`Delay`), forward a frame twice and
+//! then kill (`DuplicateThenKill` — exercising the server's FIFO
+//! pre-check as the duplicate filter), and write only a prefix of a
+//! frame's bytes before killing (`TornWriteThenKill` — the mid-frame
+//! disconnect). [`ChaosProxy::retarget`] points live fault injection
+//! at a *restarted* server (the warm-restart drill), and
+//! [`ChaosProxy::kill_connections`] force-drops every proxied
+//! connection — a whole-tier crash, from the client's point of view.
+//!
+//! `sspdnn chaos --listen A --target B --script S --seed N` runs the
+//! same relay as a process for the CI chaos-smoke drill.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::wire::{self, FrameDecoder};
+use crate::util::Pcg64;
+
+/// What to do to the matched client→server frame (and its connection).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// Swallow the frame and drop the connection — the request
+    /// vanishes mid-flight, landed-ness unknown to the client.
+    Kill,
+    /// Hold the frame for the duration, then forward it intact.
+    Delay(Duration),
+    /// Forward the frame twice, then drop the connection. Aimed at
+    /// UPDATE: the server's FIFO pre-check rejects the duplicate with
+    /// an ERR, proving at-most-once application.
+    DuplicateThenKill,
+    /// Forward only a prefix of the frame's bytes, then drop the
+    /// connection — the torn write / mid-frame disconnect. `keep:
+    /// None` draws a prefix length in `1..len` from the seeded rng.
+    TornWriteThenKill { keep: Option<usize> },
+}
+
+/// One scripted fault: fire `action` on the `nth` (1-based)
+/// client→server frame with opcode `op`. Counts are global across the
+/// proxy's connections and never reset; events fire strictly in script
+/// order (an event whose count was already passed when it becomes
+/// `next` can no longer fire — order scripts the way traffic flows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosEvent {
+    pub op: u8,
+    pub nth: u64,
+    pub action: ChaosAction,
+}
+
+struct Script {
+    events: Vec<ChaosEvent>,
+    /// Index of the next unfired event.
+    next: usize,
+    /// Client→server frames seen so far, per opcode.
+    counts: [u64; 256],
+}
+
+struct Shared {
+    target: Mutex<SocketAddr>,
+    script: Mutex<Script>,
+    fired: AtomicU64,
+    stop: AtomicBool,
+    /// Clones of every live proxied stream, for `kill_connections`.
+    conns: Mutex<Vec<TcpStream>>,
+    /// Relay thread handles, joined at proxy drop.
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    rng: Mutex<Pcg64>,
+}
+
+impl Shared {
+    /// Count the frame; fire (and consume) the next scripted event if
+    /// it matches.
+    fn on_frame(&self, op: u8) -> Option<ChaosAction> {
+        let mut s = self.script.lock().unwrap();
+        s.counts[op as usize] += 1;
+        let ev = *s.events.get(s.next)?;
+        if ev.op == op && s.counts[op as usize] == ev.nth {
+            s.next += 1;
+            self.fired.fetch_add(1, Ordering::Relaxed);
+            return Some(ev.action);
+        }
+        None
+    }
+}
+
+/// The proxy: listener + accept thread + two relay threads per proxied
+/// connection. Dropping it kills every connection and joins everything.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Listen on an ephemeral loopback port, relaying to `target`
+    /// under `script`.
+    pub fn spawn(
+        target: SocketAddr,
+        script: Vec<ChaosEvent>,
+        seed: u64,
+    ) -> Result<ChaosProxy, String> {
+        Self::spawn_on("127.0.0.1:0", target, script, seed)
+    }
+
+    /// [`ChaosProxy::spawn`] on an explicit listen address (the CLI).
+    pub fn spawn_on(
+        listen: &str,
+        target: SocketAddr,
+        script: Vec<ChaosEvent>,
+        seed: u64,
+    ) -> Result<ChaosProxy, String> {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| format!("chaos bind {listen}: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("chaos local addr: {e}"))?;
+        let shared = Arc::new(Shared {
+            target: Mutex::new(target),
+            script: Mutex::new(Script {
+                events: script,
+                next: 0,
+                counts: [0u64; 256],
+            }),
+            fired: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+            threads: Mutex::new(Vec::new()),
+            rng: Mutex::new(Pcg64::new(seed)),
+        });
+        let shared2 = Arc::clone(&shared);
+        let accept = std::thread::spawn(move || {
+            for incoming in listener.incoming() {
+                if shared2.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let client = match incoming {
+                    Ok(c) => c,
+                    Err(_) => continue,
+                };
+                let target = *shared2.target.lock().unwrap();
+                let server = match TcpStream::connect_timeout(
+                    &target,
+                    Duration::from_secs(5),
+                ) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        // no server behind the proxy right now: the
+                        // client sees EOF and (if supervised) retries
+                        let _ = client.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                };
+                let _ = client.set_nodelay(true);
+                let _ = server.set_nodelay(true);
+                let (c2, s2) = match (client.try_clone(), server.try_clone())
+                {
+                    (Ok(c), Ok(s)) => (c, s),
+                    _ => {
+                        let _ = client.shutdown(Shutdown::Both);
+                        let _ = server.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                };
+                {
+                    let mut conns = shared2.conns.lock().unwrap();
+                    if let (Ok(c), Ok(s)) =
+                        (client.try_clone(), server.try_clone())
+                    {
+                        conns.push(c);
+                        conns.push(s);
+                    }
+                }
+                let sh_a = Arc::clone(&shared2);
+                let a = std::thread::spawn(move || {
+                    relay_c2s(client, server, &sh_a);
+                });
+                let b = std::thread::spawn(move || {
+                    relay_s2c(s2, c2);
+                });
+                let mut threads = shared2.threads.lock().unwrap();
+                threads.push(a);
+                threads.push(b);
+            }
+        });
+        Ok(ChaosProxy { addr, shared, accept: Some(accept) })
+    }
+
+    /// Where clients connect.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Point *future* connections at a different server — the
+    /// warm-restart drill (existing connections keep their old target;
+    /// combine with [`ChaosProxy::kill_connections`]).
+    pub fn retarget(&self, target: SocketAddr) {
+        *self.shared.target.lock().unwrap() = target;
+    }
+
+    /// Force-drop every proxied connection — a whole-tier crash from
+    /// the client's perspective.
+    pub fn kill_connections(&self) {
+        let mut conns = self.shared.conns.lock().unwrap();
+        for s in conns.drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Scripted events fired so far.
+    pub fn events_fired(&self) -> u64 {
+        self.shared.fired.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.kill_connections();
+        // wake the accept loop (same pattern as ShardService::shutdown)
+        let wake = SocketAddr::new(
+            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            self.addr.port(),
+        );
+        let _ =
+            TcpStream::connect_timeout(&wake, Duration::from_millis(500));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> =
+            self.shared.threads.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Client→server relay: decode frames, consult the script, re-encode
+/// byte-identically (`len | op | payload` is a deterministic layout).
+fn relay_c2s(mut client: TcpStream, mut server: TcpStream, shared: &Shared) {
+    let mut dec = FrameDecoder::default();
+    let mut bytes_in = 0u64;
+    loop {
+        let frame =
+            match wire::read_frame(&mut client, &mut dec, &mut bytes_in) {
+                Ok(Some(f)) => f,
+                Ok(None) | Err(_) => break, // client done or undecodable
+            };
+        let bytes = wire::frame(frame.op, &frame.payload);
+        match shared.on_frame(frame.op) {
+            None => {
+                if server.write_all(&bytes).is_err() {
+                    break;
+                }
+            }
+            Some(ChaosAction::Delay(d)) => {
+                std::thread::sleep(d);
+                if server.write_all(&bytes).is_err() {
+                    break;
+                }
+            }
+            Some(ChaosAction::Kill) => break,
+            Some(ChaosAction::DuplicateThenKill) => {
+                let _ = server.write_all(&bytes);
+                let _ = server.write_all(&bytes);
+                let _ = server.flush();
+                // give the duplicate a moment to be *processed* before
+                // the teardown races it through the kernel buffers
+                std::thread::sleep(Duration::from_millis(20));
+                break;
+            }
+            Some(ChaosAction::TornWriteThenKill { keep }) => {
+                let k = match keep {
+                    Some(k) => k.min(bytes.len().saturating_sub(1)).max(1),
+                    None => {
+                        let mut rng = shared.rng.lock().unwrap();
+                        1 + rng.below(bytes.len().saturating_sub(1).max(1))
+                    }
+                };
+                let _ = server.write_all(&bytes[..k]);
+                let _ = server.flush();
+                break;
+            }
+        }
+    }
+    let _ = client.shutdown(Shutdown::Both);
+    let _ = server.shutdown(Shutdown::Both);
+}
+
+/// Server→client relay: a raw byte copy (faults are injected on the
+/// request path only — replies either arrive intact or the connection
+/// is already dead).
+fn relay_s2c(mut server: TcpStream, mut client: TcpStream) {
+    let mut buf = [0u8; 4096];
+    loop {
+        match server.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                if client.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = server.shutdown(Shutdown::Both);
+    let _ = client.shutdown(Shutdown::Both);
+}
+
+/// Parse a fault script: events separated by `;` or `,`, each
+/// `action[:arg]@opname:n` — e.g. `kill@update:7`, `delay:50@fetch:2`
+/// (ms), `dup@update:5`, `torn@fetch:1`, `torn:9@update:3` (keep 9
+/// bytes). Opnames: hello, clock, commit, must_wait, read_ready, wait,
+/// update, fetch, snapshot, applied, heartbeat.
+pub fn parse_script(s: &str) -> Result<Vec<ChaosEvent>, String> {
+    let mut events = Vec::new();
+    for part in s.split(|c| c == ';' || c == ',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (action_s, at) = part
+            .split_once('@')
+            .ok_or_else(|| format!("chaos event `{part}`: missing `@`"))?;
+        let (op_s, nth_s) = at.split_once(':').ok_or_else(|| {
+            format!("chaos event `{part}`: missing `:n` after opname")
+        })?;
+        let op = opcode(op_s.trim())?;
+        let nth: u64 = nth_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("chaos event `{part}`: bad count"))?;
+        if nth == 0 {
+            return Err(format!("chaos event `{part}`: count is 1-based"));
+        }
+        let (name, arg) = match action_s.split_once(':') {
+            Some((n, a)) => (n.trim(), Some(a.trim())),
+            None => (action_s.trim(), None),
+        };
+        let action = match (name, arg) {
+            ("kill", None) => ChaosAction::Kill,
+            ("delay", Some(ms)) => {
+                let ms: u64 = ms.parse().map_err(|_| {
+                    format!("chaos event `{part}`: bad delay ms")
+                })?;
+                ChaosAction::Delay(Duration::from_millis(ms))
+            }
+            ("dup", None) => ChaosAction::DuplicateThenKill,
+            ("torn", None) => ChaosAction::TornWriteThenKill { keep: None },
+            ("torn", Some(k)) => {
+                let k: usize = k.parse().map_err(|_| {
+                    format!("chaos event `{part}`: bad torn prefix")
+                })?;
+                if k == 0 {
+                    return Err(format!(
+                        "chaos event `{part}`: torn prefix must be >= 1"
+                    ));
+                }
+                ChaosAction::TornWriteThenKill { keep: Some(k) }
+            }
+            _ => {
+                return Err(format!(
+                    "chaos event `{part}`: unknown action `{action_s}` \
+                     (kill, delay:<ms>, dup, torn[:bytes])"
+                ))
+            }
+        };
+        events.push(ChaosEvent { op, nth, action });
+    }
+    if events.is_empty() {
+        return Err("empty chaos script".into());
+    }
+    Ok(events)
+}
+
+fn opcode(name: &str) -> Result<u8, String> {
+    use super::wire::op;
+    Ok(match name {
+        "hello" => op::HELLO,
+        "clock" => op::CLOCK,
+        "commit" => op::COMMIT,
+        "must_wait" => op::MUST_WAIT,
+        "read_ready" => op::READ_READY,
+        "wait" => op::WAIT,
+        "update" => op::UPDATE,
+        "fetch" => op::FETCH,
+        "snapshot" => op::SNAPSHOT,
+        "applied" => op::APPLIED,
+        "heartbeat" => op::HEARTBEAT,
+        _ => return Err(format!("unknown opcode name `{name}`")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssp::transport::wire::op;
+
+    #[test]
+    fn script_grammar_round_trips() {
+        let evs = parse_script(
+            "kill@update:7; delay:50@fetch:2, dup@update:9; \
+             torn@commit:1; torn:9@update:3",
+        )
+        .unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                ChaosEvent { op: op::UPDATE, nth: 7, action: ChaosAction::Kill },
+                ChaosEvent {
+                    op: op::FETCH,
+                    nth: 2,
+                    action: ChaosAction::Delay(Duration::from_millis(50)),
+                },
+                ChaosEvent {
+                    op: op::UPDATE,
+                    nth: 9,
+                    action: ChaosAction::DuplicateThenKill,
+                },
+                ChaosEvent {
+                    op: op::COMMIT,
+                    nth: 1,
+                    action: ChaosAction::TornWriteThenKill { keep: None },
+                },
+                ChaosEvent {
+                    op: op::UPDATE,
+                    nth: 3,
+                    action: ChaosAction::TornWriteThenKill { keep: Some(9) },
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn script_grammar_rejects_garbage() {
+        assert!(parse_script("").is_err());
+        assert!(parse_script("kill@update").is_err(), "missing count");
+        assert!(parse_script("kill@update:0").is_err(), "0 is not 1-based");
+        assert!(parse_script("kill@nosuch:1").is_err(), "unknown opcode");
+        assert!(parse_script("explode@update:1").is_err(), "unknown action");
+        assert!(parse_script("delay@update:1").is_err(), "delay needs ms");
+        assert!(parse_script("torn:0@update:1").is_err(), "empty prefix");
+        assert!(parse_script("update:3").is_err(), "missing @");
+    }
+
+    #[test]
+    fn events_fire_in_script_order_with_global_counts() {
+        let shared = Shared {
+            target: Mutex::new("127.0.0.1:1".parse().unwrap()),
+            script: Mutex::new(Script {
+                events: parse_script("kill@update:2;kill@commit:2").unwrap(),
+                next: 0,
+                counts: [0u64; 256],
+            }),
+            fired: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+            threads: Mutex::new(Vec::new()),
+            rng: Mutex::new(Pcg64::new(7)),
+        };
+        // commit #1 passes while the update event is still pending
+        assert_eq!(shared.on_frame(op::COMMIT), None);
+        assert_eq!(shared.on_frame(op::UPDATE), None);
+        assert_eq!(shared.on_frame(op::UPDATE), Some(ChaosAction::Kill));
+        // now the commit event is next; its count is already 1
+        assert_eq!(shared.on_frame(op::UPDATE), None, "script advanced past");
+        assert_eq!(shared.on_frame(op::COMMIT), Some(ChaosAction::Kill));
+        assert_eq!(shared.fired.load(Ordering::Relaxed), 2);
+    }
+}

@@ -43,6 +43,23 @@
 //!   (the window never desyncs) and surfaces as a typed
 //!   [`TransportError`].
 //!
+//! **Fault tolerance.** Every operation runs under a connection
+//! supervisor parameterized by a [`FaultPolicy`]: an `Io` failure
+//! triggers reconnect of every endpoint with exponential backoff, the
+//! fresh handshakes are validated against the original, a revision
+//! probe rules out a server that cold-restarted without its state, and
+//! the in-flight pipeline window is resynchronized — TCP's FIFO
+//! guarantee means the server applied a *prefix* of each connection's
+//! frames, so per-entry point queries (APPLIED / CLOCK) decide exactly
+//! which suffix to replay. A successful recovery is bitwise invisible
+//! to the SSP gate. When the retry budget runs out the window is
+//! abandoned (`in_flight` drops to 0) and a typed
+//! [`TransportErrorKind::Lost`] surfaces. The default policy is
+//! [`FaultPolicy::none`] — supervision off, every fault surfaces
+//! immediately, the pre-fault behavior. Liveness is covered from the
+//! other side by heartbeat leases ([`RemoteClient::with_lease`]): the
+//! server releases barrier waits parked on workers whose lease lapsed.
+//!
 //! Reads are **version-gated on the wire**: `fetch_into` ships the
 //! caller's per-layer last-seen revision vector and receives only the
 //! layers whose revision advanced (the endpoint's gate skip is a skip
@@ -95,6 +112,10 @@ pub enum TransportErrorKind {
     /// unexpected reply opcode, short payload, or a pipelined COMMIT
     /// acknowledgement disagreeing with the client's clock bookkeeping.
     Protocol,
+    /// The connection supervisor exhausted its reconnect budget
+    /// ([`FaultPolicy::max_retries`]): the server tier is gone, not
+    /// glitching. The in-flight window has been abandoned.
+    Lost,
 }
 
 /// A typed transport failure. Converts into the `String` errors the
@@ -118,6 +139,10 @@ impl TransportError {
     fn protocol(msg: impl Into<String>) -> TransportError {
         TransportError { kind: TransportErrorKind::Protocol, msg: msg.into() }
     }
+
+    fn lost(msg: impl Into<String>) -> TransportError {
+        TransportError { kind: TransportErrorKind::Lost, msg: msg.into() }
+    }
 }
 
 impl std::fmt::Display for TransportError {
@@ -126,6 +151,7 @@ impl std::fmt::Display for TransportError {
             TransportErrorKind::Server => "server error",
             TransportErrorKind::Io => "transport io",
             TransportErrorKind::Protocol => "transport protocol",
+            TransportErrorKind::Lost => "transport lost",
         };
         write!(f, "{kind}: {}", self.msg)
     }
@@ -142,6 +168,56 @@ impl From<TransportError> for String {
 impl From<WireError> for TransportError {
     fn from(e: WireError) -> TransportError {
         TransportError::protocol(e.to_string())
+    }
+}
+
+/// How the client treats a faulty server tier — the connection
+/// supervisor's knobs, single-sourced from the `[transport]` config
+/// section (`connect_timeout_ms` / `io_timeout_ms` / `max_retries` /
+/// `backoff_base_ms`). The default is [`FaultPolicy::none`]:
+/// supervision off, every socket failure surfaces immediately — the
+/// pre-fault behavior, and what every test that *pins* failure modes
+/// wants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPolicy {
+    /// Bound on every TCP connect (initial and reconnect).
+    pub connect_timeout: std::time::Duration,
+    /// Socket read timeout for request/response exchanges; `None`
+    /// blocks forever. WAIT is exempt (a barrier legitimately outlasts
+    /// any timeout — dead peers are the server lease table's job).
+    pub io_timeout: Option<std::time::Duration>,
+    /// Reconnect attempts per supervised operation before the client
+    /// declares the tier [`TransportErrorKind::Lost`]. `0` disables
+    /// supervision entirely.
+    pub max_retries: u32,
+    /// First reconnect delay; doubles per attempt (capped at 2 s).
+    pub backoff_base: std::time::Duration,
+}
+
+impl FaultPolicy {
+    /// Supervision off: connect bounded at 5 s, reads block forever,
+    /// no retries. Every fault surfaces as a typed error immediately.
+    pub fn none() -> FaultPolicy {
+        FaultPolicy {
+            connect_timeout: std::time::Duration::from_secs(5),
+            io_timeout: None,
+            max_retries: 0,
+            backoff_base: std::time::Duration::from_millis(50),
+        }
+    }
+
+    /// Delay before reconnect `attempt` (1-based): `backoff_base ×
+    /// 2^(attempt−1)`, capped at 2 s so a long budget degrades into
+    /// steady polling rather than unbounded sleeps.
+    fn backoff(&self, attempt: u32) -> std::time::Duration {
+        let factor = 1u32 << attempt.saturating_sub(1).min(6);
+        (self.backoff_base * factor).min(std::time::Duration::from_secs(2))
+    }
+}
+
+impl Default for FaultPolicy {
+    fn default() -> FaultPolicy {
+        FaultPolicy::none()
     }
 }
 
@@ -170,14 +246,26 @@ struct Meta {
 }
 
 /// One expected-but-unread acknowledgement on a pipelined connection,
-/// in FIFO order with the server's replies.
-#[derive(Clone, Copy, Debug)]
+/// in FIFO order with the server's replies. Each entry carries enough
+/// to *replay* the request after a reconnect: TCP guarantees the
+/// server applied a prefix of the connection's frames, so the
+/// un-acknowledged entries are a suffix of which any individual entry
+/// may or may not have landed — a point query (APPLIED / CLOCK)
+/// decides, and the frame is resent only if it didn't.
+#[derive(Clone, Debug)]
 enum Pending {
-    /// An UPDATE's OK.
-    ExpectOk,
-    /// A COMMIT's U64 reply; must equal the client's locally tracked
-    /// committed count (it advances only through this client).
-    ExpectU64(u64),
+    /// An UPDATE awaiting its OK. `frame` is the encoded bytes as
+    /// sent; `(from, clock, layer)` keys the landed-check.
+    Update {
+        from: u32,
+        clock: u64,
+        layer: u32,
+        frame: Vec<u8>,
+    },
+    /// A COMMIT awaiting its U64 reply, which must equal `expected` —
+    /// the client's locally tracked committed count (it advances only
+    /// through this client).
+    Commit { worker: u32, expected: u64 },
 }
 
 /// The dedicated writer thread of one pipelined connection: everything
@@ -225,6 +313,8 @@ impl Drop for Writer {
 }
 
 struct Conn {
+    /// Where this connection dialed — the supervisor redials it here.
+    addr: SocketAddr,
     stream: TcpStream,
     dec: FrameDecoder,
     /// `Some` in pipelined mode; owns a `try_clone` of `stream`.
@@ -244,6 +334,20 @@ struct ClientIo {
     /// the first pipelined commit for that worker runs one synchronous
     /// round to learn the server's count — the reconnect case).
     commits: Vec<Option<u64>>,
+    /// The connection supervisor's retry/timeout/backoff knobs.
+    faults: FaultPolicy,
+    /// Per group: in-flight entries parked by a reconnect, awaiting
+    /// resync (kept outside `Conn` so a failed reconnect attempt
+    /// cannot lose them). Cleared by a successful resync or `abandon`.
+    replay: Vec<VecDeque<Pending>>,
+    /// Highest per-layer revision ever observed on the wire. Within
+    /// one server lifetime revisions only grow, so a reconnect probe
+    /// seeing a *smaller* revision proves the server cold-restarted —
+    /// the one fault reconnect cannot transparently absorb.
+    rev_floor: Vec<u64>,
+    /// Completed reconnect-and-resync cycles (`RemoteClient::
+    /// reconnects`).
+    recovered: u64,
 }
 
 struct Inner {
@@ -261,9 +365,18 @@ struct Inner {
 pub struct RemoteClient {
     meta: Meta,
     inner: Mutex<Inner>,
+    /// Background heartbeat thread ([`RemoteClient::with_lease`]).
+    /// Declared after `inner` and before `services` so on drop the
+    /// main sockets close first, then the keeper joins (its own
+    /// connections close with it), and only then do any loopback
+    /// services join their connection threads.
+    lease: Option<LeaseKeeper>,
+    /// Fault-injection proxies owned by this client (the chaos test
+    /// harness); torn down after the sockets, before the services.
+    chaos: Vec<super::chaos::ChaosProxy>,
     /// Loopback services owned by this client (tests/bench): declared
-    /// after `inner` so the sockets close before the services join
-    /// their threads on drop.
+    /// last so every socket closes before the services join their
+    /// threads on drop.
     services: Vec<ShardService>,
 }
 
@@ -308,25 +421,32 @@ impl ClientIo {
     /// Consume one outstanding acknowledgement from `g`'s pending
     /// queue. The entry is popped *before* the reply is read, so a
     /// server ERR (which answers exactly that request) leaves the
-    /// window aligned — the error is surfaced, not a desync.
+    /// window aligned — the error is surfaced, not a desync. An Io
+    /// failure pushes the entry back instead: whether it landed is
+    /// unknown, and the supervisor's resync needs it to find out.
     fn drain_one(&mut self, g: usize) -> Result<(), TransportError> {
         let expect = self.conns[g]
             .pending
             .pop_front()
             .expect("drain_one on an empty pending queue");
-        let f = self.recv(g)?;
+        let f = match self.recv(g) {
+            Ok(f) => f,
+            Err(e) => {
+                if e.kind == TransportErrorKind::Io {
+                    self.conns[g].pending.push_front(expect);
+                }
+                return Err(e);
+            }
+        };
         match expect {
-            Pending::ExpectOk => expect_op(&f, op::OK),
-            Pending::ExpectU64(want) => {
-                expect_op(&f, op::U64)?;
-                let mut r = wire::Reader::new(&f.payload);
-                let got = r.u64()?;
-                r.done()?;
-                if got != want {
+            Pending::Update { .. } => expect_op(&f, op::OK),
+            Pending::Commit { expected, .. } => {
+                let got = u64_reply(&f)?;
+                if got != expected {
                     return Err(TransportError::protocol(format!(
                         "pipelined COMMIT ack {got} != locally tracked \
-                         {want} (group {g}) — another client committed \
-                         for this worker?"
+                         {expected} (group {g}) — another client \
+                         committed for this worker?"
                     )));
                 }
                 Ok(())
@@ -345,9 +465,10 @@ impl ClientIo {
     }
 
     /// Drain everything on every connection, reporting the first error
-    /// but consuming every outstanding acknowledgement regardless (a
-    /// server ERR consumes its entry; an io/protocol failure abandons
-    /// that connection's queue — nothing more will arrive on it).
+    /// but consuming every acknowledgement a live connection still
+    /// owes (a server ERR consumes its entry and draining continues; a
+    /// fatal failure stops that connection's drain — an Io fault keeps
+    /// its entry queued for the supervisor's resync).
     fn flush_all(&mut self) -> Result<(), TransportError> {
         let mut first: Option<TransportError> = None;
         for g in 0..self.conns.len() {
@@ -360,7 +481,6 @@ impl ClientIo {
                             first = Some(e);
                         }
                         if fatal {
-                            self.conns[g].pending.clear();
                             break;
                         }
                     }
@@ -401,15 +521,19 @@ impl ClientIo {
         Ok(())
     }
 
-    /// Enqueue a frame expecting an acknowledgement later (pipelined
-    /// fire-and-account path).
-    fn enqueue(
-        &mut self,
-        g: usize,
-        frame_bytes: &[u8],
-        expect: Pending,
-    ) -> Result<(), TransportError> {
+    /// Enqueue a request expecting an acknowledgement later (pipelined
+    /// fire-and-account path). The entry itself carries (or rebuilds)
+    /// the frame bytes, so the in-flight window stays replayable.
+    fn enqueue(&mut self, g: usize, expect: Pending) -> Result<(), TransportError> {
         self.make_room(g)?;
+        let commit_frame;
+        let frame_bytes: &[u8] = match &expect {
+            Pending::Update { frame, .. } => frame,
+            Pending::Commit { worker, .. } => {
+                commit_frame = wire::frame(op::COMMIT, &worker.to_le_bytes());
+                &commit_frame
+            }
+        };
         self.send(g, frame_bytes)?;
         self.conns[g].pending.push_back(expect);
         Ok(())
@@ -464,33 +588,53 @@ impl ClientIo {
         }
     }
 
-    /// Advance `worker`'s clock. Synchronous mode (or the first
-    /// pipelined commit for this worker — the count is still unknown,
-    /// e.g. right after a reconnect): a blocking COMMIT round,
-    /// asserting every exclusive endpoint agrees. Pipelined steady
-    /// state: the COMMIT frames enter the send FIFOs with an expected
-    /// acknowledgement queued, and the locally tracked count is
-    /// returned immediately — no round trip on the worker's hot path.
+    /// Advance `worker`'s clock. Pipelined steady state: the COMMIT
+    /// frames enter the send FIFOs with an expected acknowledgement
+    /// queued, and the locally tracked count is returned immediately —
+    /// no round trip on the worker's hot path. Synchronous mode (or
+    /// the first pipelined commit, count still unknown): a blocking
+    /// COMMIT round. Under supervision the round runs against a
+    /// *predetermined* target clock (learned up front), so a reconnect
+    /// mid-broadcast can tell which endpoints the commit reached;
+    /// without supervision it is the pre-fault agreement round,
+    /// byte-for-byte.
     fn commit(&mut self, meta: &Meta, worker: usize) -> Result<u64, TransportError> {
-        let targets = self.commit_targets(meta);
-        let bytes = wire::frame(op::COMMIT, &(worker as u32).to_le_bytes());
         if self.window.is_some() {
             if let Some(known) = self.commits[worker] {
                 let expected = known + 1;
-                for g in targets {
-                    self.enqueue(g, &bytes, Pending::ExpectU64(expected))?;
-                }
+                self.supervised(meta, |io, resume| {
+                    io.commit_pipelined_round(meta, worker, expected, resume)
+                })?;
                 self.commits[worker] = Some(expected);
                 return Ok(expected);
             }
         }
+        if self.faults.max_retries > 0 {
+            if self.commits[worker].is_none() {
+                let base = self.learn_clock(meta, worker)?;
+                self.commits[worker] = Some(base);
+            }
+            let expected = self.commits[worker].expect("just learned") + 1;
+            self.supervised(meta, |io, resume| {
+                io.commit_known(meta, worker, expected, resume)
+            })?;
+            self.commits[worker] = Some(expected);
+            return Ok(expected);
+        }
+        let v = self.commit_agree(meta, worker)?;
+        self.commits[worker] = Some(v);
+        Ok(v)
+    }
+
+    /// The unsupervised blocking COMMIT round: every target must
+    /// return the same new count (exclusive endpoints advance in
+    /// lockstep or something is deeply wrong).
+    fn commit_agree(&mut self, meta: &Meta, worker: usize) -> Result<u64, TransportError> {
+        let bytes = wire::frame(op::COMMIT, &(worker as u32).to_le_bytes());
         let mut agreed: Option<u64> = None;
-        for g in targets {
+        for g in self.commit_targets(meta) {
             let f = self.rpc(g, &bytes)?;
-            expect_op(&f, op::U64)?;
-            let mut r = wire::Reader::new(&f.payload);
-            let v = r.u64()?;
-            r.done()?;
+            let v = u64_reply(&f)?;
             match agreed {
                 None => agreed = Some(v),
                 Some(prev) if prev != v => {
@@ -502,13 +646,107 @@ impl ClientIo {
                 Some(_) => {}
             }
         }
-        let v = agreed.expect("at least one commit target");
-        self.commits[worker] = Some(v);
-        Ok(v)
+        Ok(agreed.expect("at least one commit target"))
+    }
+
+    /// Blocking COMMIT round toward a predetermined target count. On a
+    /// resumed attempt (post-reconnect) each endpoint's clock is
+    /// queried first: targets the original broadcast (or the resync
+    /// replay) already reached are skipped, so the commit lands
+    /// exactly once everywhere.
+    fn commit_known(
+        &mut self,
+        meta: &Meta,
+        worker: usize,
+        expected: u64,
+        resume: bool,
+    ) -> Result<(), TransportError> {
+        let bytes = wire::frame(op::COMMIT, &(worker as u32).to_le_bytes());
+        for g in self.commit_targets(meta) {
+            if resume {
+                let c = self.rpc_u64_on(g, op::CLOCK, worker as u32)?;
+                if c == expected {
+                    continue; // landed before the fault (or via resync)
+                }
+                if c + 1 != expected {
+                    return Err(TransportError::protocol(format!(
+                        "resumed commit for worker {worker} found group \
+                         {g} at clock {c}, target {expected}"
+                    )));
+                }
+            }
+            let f = self.rpc(g, &bytes)?;
+            let got = u64_reply(&f)?;
+            if got != expected {
+                return Err(TransportError::protocol(format!(
+                    "COMMIT for worker {worker} returned {got}, locally \
+                     tracked target {expected} (group {g}) — another \
+                     client committed for this worker?"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Pipelined COMMIT broadcast. A resumed attempt finishes the
+    /// round synchronously: the replay queue has already resynced
+    /// whatever was enqueued before the fault, and `commit_known`
+    /// skips the targets it reached.
+    fn commit_pipelined_round(
+        &mut self,
+        meta: &Meta,
+        worker: usize,
+        expected: u64,
+        resume: bool,
+    ) -> Result<(), TransportError> {
+        if resume {
+            return self.commit_known(meta, worker, expected, true);
+        }
+        for g in self.commit_targets(meta) {
+            self.enqueue(
+                g,
+                Pending::Commit { worker: worker as u32, expected },
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Learn `worker`'s committed count from the server tier, repairing
+    /// any lagging exclusive endpoint up to the maximum — the aftermath
+    /// of a crash mid-COMMIT-broadcast. Idempotent (repair rounds
+    /// verify each +1), so it runs under supervision itself.
+    fn learn_clock(&mut self, meta: &Meta, worker: usize) -> Result<u64, TransportError> {
+        self.supervised(meta, |io, _resume| {
+            let targets = io.commit_targets(meta);
+            let mut clocks = Vec::with_capacity(targets.len());
+            for g in targets.clone() {
+                clocks.push(io.rpc_u64_on(g, op::CLOCK, worker as u32)?);
+            }
+            let goal = *clocks.iter().max().expect("at least one target");
+            let bytes = wire::frame(op::COMMIT, &(worker as u32).to_le_bytes());
+            for (g, mut c) in targets.zip(clocks) {
+                while c < goal {
+                    let f = io.rpc(g, &bytes)?;
+                    let got = u64_reply(&f)?;
+                    if got != c + 1 {
+                        return Err(TransportError::protocol(format!(
+                            "clock repair for worker {worker} expected \
+                             {}, got {got} (group {g})",
+                            c + 1
+                        )));
+                    }
+                    c = got;
+                }
+            }
+            Ok(goal)
+        })
     }
 
     /// Ship one per-layer additive update to its owning endpoint —
-    /// synchronously, or into the pipeline's in-flight window.
+    /// synchronously, or into the pipeline's in-flight window. On a
+    /// resumed attempt (post-reconnect) the server's version vector is
+    /// consulted first, so an update that landed before the fault is
+    /// never double-applied.
     fn update(
         &mut self,
         meta: &Meta,
@@ -516,7 +754,20 @@ impl ClientIo {
         clock: u64,
         layer: usize,
         delta: &LayerParams,
+        resume: bool,
     ) -> Result<(), TransportError> {
+        if resume {
+            let landed = self.applied(meta, layer, from)?;
+            if landed > clock {
+                return Ok(());
+            }
+            if landed < clock {
+                return Err(TransportError::protocol(format!(
+                    "resumed update found layer {layer} at applied \
+                     {landed} < clock {clock} — the server lost state"
+                )));
+            }
+        }
         let g = meta.layer_group[layer];
         let mut tx = Vec::with_capacity(21 + delta.n_bytes() + 12);
         let mark = wire::begin_frame(&mut tx, op::UPDATE);
@@ -526,7 +777,15 @@ impl ClientIo {
         wire::put_layer(&mut tx, delta);
         wire::end_frame(&mut tx, mark);
         if self.window.is_some() {
-            return self.enqueue(g, &tx, Pending::ExpectOk);
+            return self.enqueue(
+                g,
+                Pending::Update {
+                    from: from as u32,
+                    clock,
+                    layer: layer as u32,
+                    frame: tx,
+                },
+            );
         }
         let f = self.rpc(g, &tx)?;
         expect_op(&f, op::OK)
@@ -546,7 +805,16 @@ impl ClientIo {
         worker: usize,
         clock: u64,
         delta: &crate::nn::GradSet,
+        resume: bool,
     ) -> Result<(), TransportError> {
+        if resume {
+            // recovery path: per-layer query-and-skip, one at a time —
+            // rare enough that clarity beats batching
+            for (layer, lp) in delta.layers.iter().enumerate() {
+                self.update(meta, worker, clock, layer, lp, true)?;
+            }
+            return Ok(());
+        }
         for (layer, lp) in delta.layers.iter().enumerate() {
             let g = meta.layer_group[layer];
             let mut tx = Vec::with_capacity(21 + lp.n_bytes() + 12);
@@ -557,7 +825,15 @@ impl ClientIo {
             wire::put_layer(&mut tx, lp);
             wire::end_frame(&mut tx, mark);
             if self.window.is_some() {
-                self.enqueue(g, &tx, Pending::ExpectOk)?;
+                self.enqueue(
+                    g,
+                    Pending::Update {
+                        from: worker as u32,
+                        clock,
+                        layer: layer as u32,
+                        frame: tx,
+                    },
+                )?;
             } else {
                 self.send(g, &tx)?;
             }
@@ -584,6 +860,36 @@ impl ClientIo {
     fn wait(&mut self, meta: &Meta, worker: usize) -> Result<(), TransportError> {
         self.settle()?;
         let targets = if meta.exclusive { self.conns.len() } else { 1 };
+        // WAIT is exempt from the io timeout: a barrier legitimately
+        // outlasts any bound (it opens only when *other* workers
+        // commit). A dead peer is the server lease table's job — it
+        // fails the wait with a typed ERR — and a killed server still
+        // surfaces instantly as EOF. A frozen-but-connected server
+        // during WAIT therefore hangs; that is the documented gap.
+        for g in 0..targets {
+            self.conns[g]
+                .stream
+                .set_read_timeout(None)
+                .map_err(|e| {
+                    TransportError::io(format!("read timeout (group {g}): {e}"))
+                })?;
+        }
+        let result = self.wait_exchange(worker, targets);
+        for g in 0..targets {
+            // best-effort restore; a dead socket is replaced (with the
+            // timeout re-armed) by the supervisor anyway
+            let _ = self.conns[g]
+                .stream
+                .set_read_timeout(self.faults.io_timeout);
+        }
+        result
+    }
+
+    fn wait_exchange(
+        &mut self,
+        worker: usize,
+        targets: usize,
+    ) -> Result<(), TransportError> {
         let bytes = wire::frame(op::WAIT, &(worker as u32).to_le_bytes());
         for g in 0..targets {
             self.send(g, &bytes)?;
@@ -686,6 +992,9 @@ impl ClientIo {
                     let rev = r.u64()?;
                     r.layer_into(&mut buf.layers[l])?;
                     last_seen[l] = rev;
+                    if rev > self.rev_floor[l] {
+                        self.rev_floor[l] = rev;
+                    }
                     fs.layers_copied += 1;
                     fs.bytes_copied += buf.layers[l].n_bytes() as u64;
                 } else {
@@ -725,6 +1034,9 @@ impl ClientIo {
                     let rev = r.u64()?;
                     r.layer_into(&mut buf.layers[l])?;
                     last_seen[l] = rev;
+                    if rev > self.rev_floor[l] {
+                        self.rev_floor[l] = rev;
+                    }
                     fs.layers_copied += 1;
                     fs.bytes_copied += buf.layers[l].n_bytes() as u64;
                 } else {
@@ -735,6 +1047,219 @@ impl ClientIo {
         }
         Ok(fs)
     }
+
+    // ---------------- connection supervision ----------------
+
+    /// Run `op` under the connection supervisor. An `Io` failure
+    /// triggers reconnect-and-resync of **every** endpoint (a
+    /// healthy-looking sibling connection may still hold an unread
+    /// reply from before the fault, so partial reconnection is
+    /// unsound) with exponential backoff, then retries `op` with
+    /// `resume = true` so it can skip work that landed before the
+    /// fault. Non-Io failures (server rejections, protocol divergence)
+    /// propagate immediately — retrying cannot help them. When the
+    /// retry budget is exhausted (or zero — supervision off) the
+    /// in-flight window is abandoned, so the caller observes a drained
+    /// pipeline, and the original error (or a typed `Lost`) surfaces.
+    fn supervised<T>(
+        &mut self,
+        meta: &Meta,
+        mut op: impl FnMut(&mut ClientIo, bool) -> Result<T, TransportError>,
+    ) -> Result<T, TransportError> {
+        let mut resume = false;
+        let mut attempts = 0u32;
+        loop {
+            let err = match op(self, resume) {
+                Ok(v) => return Ok(v),
+                Err(e) if e.kind != TransportErrorKind::Io => return Err(e),
+                Err(e) => e,
+            };
+            loop {
+                attempts += 1;
+                if attempts > self.faults.max_retries {
+                    self.abandon();
+                    if self.faults.max_retries == 0 {
+                        return Err(err); // supervision off: surface as-is
+                    }
+                    return Err(TransportError::lost(format!(
+                        "retry budget exhausted after {} reconnect \
+                         attempt(s): {}",
+                        self.faults.max_retries, err.msg
+                    )));
+                }
+                std::thread::sleep(self.faults.backoff(attempts));
+                match self.recover(meta) {
+                    Ok(()) => break,
+                    Err(e) if e.kind == TransportErrorKind::Io => continue,
+                    Err(e) => {
+                        self.abandon();
+                        return Err(e);
+                    }
+                }
+            }
+            resume = true;
+        }
+    }
+
+    /// Reconnect every endpoint and make the fault invisible:
+    /// re-handshake (validated against the original), probe the
+    /// revision floor (detecting a server that restarted *without* its
+    /// state — the one unabsorbable fault), then replay the un-landed
+    /// suffix of the in-flight window in FIFO order.
+    fn recover(&mut self, meta: &Meta) -> Result<(), TransportError> {
+        self.recovered += 1;
+        // park the in-flight window where a failed attempt cannot
+        // lose it (between attempts nothing new is enqueued, so plain
+        // append preserves FIFO order)
+        for g in 0..self.conns.len() {
+            let pending = std::mem::take(&mut self.conns[g].pending);
+            self.replay[g].extend(pending);
+        }
+        let faults = self.faults;
+        for g in 0..self.conns.len() {
+            let addr = self.conns[g].addr;
+            let (mut conn, hello) = handshake(&addr, &faults)?;
+            validate_hello(meta, g, &hello)?;
+            if self.window.is_some() {
+                let stream = conn.stream.try_clone().map_err(|e| {
+                    TransportError::io(format!("clone stream (group {g}): {e}"))
+                })?;
+                conn.writer = Some(Writer::spawn(stream));
+            }
+            self.conns[g] = conn;
+        }
+        for g in 0..self.conns.len() {
+            self.probe_gate(meta, g)?;
+            self.resync_pending(meta, g)?;
+        }
+        Ok(())
+    }
+
+    /// Cold-restart tripwire: ask the fresh connection for every
+    /// layer's revision (a gated SNAPSHOT against `last_seen = 0` —
+    /// the gate copies exactly the layers whose revision differs from
+    /// 0) and compare against the highest revisions this client ever
+    /// saw. Within one server lifetime revisions only grow; any
+    /// regression proves the tier restarted without its state, which
+    /// reconnection must *not* paper over — the version-gate premise
+    /// (and the clock tables) would silently break.
+    fn probe_gate(&mut self, meta: &Meta, g: usize) -> Result<(), TransportError> {
+        let range = meta.ranges[g].clone();
+        let mut tx = Vec::with_capacity(9 + 8 * range.len());
+        let mark = wire::begin_frame(&mut tx, op::SNAPSHOT);
+        for _ in range.clone() {
+            wire::put_u64(&mut tx, 0);
+        }
+        wire::end_frame(&mut tx, mark);
+        let f = self.rpc(g, &tx)?;
+        expect_op(&f, op::SNAP_OK)?;
+        let mut r = wire::Reader::new(&f.payload);
+        for l in range {
+            if r.u8()? == 1 {
+                let (rows, cols, blen) = meta.shapes[l];
+                let rev = r.u64()?;
+                let _ = r.layer(rows, cols, blen)?; // payload discarded
+                if rev < self.rev_floor[l] {
+                    return Err(TransportError::protocol(format!(
+                        "layer {l} revision went backwards across the \
+                         reconnect ({rev} < {}): the server restarted \
+                         without its state — restart the run, or \
+                         warm-restart the server from a state dump",
+                        self.rev_floor[l]
+                    )));
+                }
+                self.rev_floor[l] = rev;
+            } else if self.rev_floor[l] != 0 {
+                return Err(TransportError::protocol(format!(
+                    "layer {l} revision reset to 0 across the reconnect \
+                     (was ≥ {}): the server restarted without its state",
+                    self.rev_floor[l]
+                )));
+            }
+        }
+        r.done()?;
+        Ok(())
+    }
+
+    /// Replay `g`'s parked in-flight entries in FIFO order. The server
+    /// applied a *prefix* of the old connection's frames (TCP), so per
+    /// entry a point query decides landed-or-not: an UPDATE is landed
+    /// iff its (layer, worker) applied count moved past its clock, a
+    /// COMMIT iff the endpoint's clock reached its target. Entries are
+    /// popped only after they are settled, so a fault mid-resync
+    /// resumes exactly where it stopped.
+    fn resync_pending(&mut self, meta: &Meta, g: usize) -> Result<(), TransportError> {
+        while let Some(entry) = self.replay[g].front().cloned() {
+            match &entry {
+                Pending::Update { from, clock, layer, frame } => {
+                    let landed =
+                        self.applied(meta, *layer as usize, *from as usize)?;
+                    if landed == *clock {
+                        let frame = frame.clone();
+                        let f = self.rpc(g, &frame)?;
+                        expect_op(&f, op::OK)?;
+                    } else if landed < *clock {
+                        return Err(TransportError::protocol(format!(
+                            "resync found layer {layer} at applied \
+                             {landed} < in-flight clock {clock}: the \
+                             server lost applied state"
+                        )));
+                    }
+                }
+                Pending::Commit { worker, expected } => {
+                    let mut c = self.rpc_u64_on(g, op::CLOCK, *worker)?;
+                    let bytes =
+                        wire::frame(op::COMMIT, &worker.to_le_bytes());
+                    while c < *expected {
+                        let f = self.rpc(g, &bytes)?;
+                        let got = u64_reply(&f)?;
+                        if got != c + 1 {
+                            return Err(TransportError::protocol(format!(
+                                "resync COMMIT for worker {worker} \
+                                 expected {}, got {got} (group {g})",
+                                c + 1
+                            )));
+                        }
+                        c = got;
+                    }
+                }
+            }
+            self.replay[g].pop_front();
+        }
+        Ok(())
+    }
+
+    /// Give up on the in-flight window and the local clock knowledge —
+    /// the terminal-failure path. The pipeline reports drained
+    /// (`in_flight == 0`), and any later commit on a recovered
+    /// connection re-learns the server's count instead of trusting a
+    /// number the lost frames may have falsified.
+    fn abandon(&mut self) {
+        for conn in &mut self.conns {
+            conn.pending.clear();
+        }
+        for q in &mut self.replay {
+            q.clear();
+        }
+        for c in &mut self.commits {
+            *c = None;
+        }
+    }
+
+    /// Outstanding un-acknowledged requests: the live window plus any
+    /// entries parked for resync.
+    fn in_flight(&self) -> usize {
+        self.conns.iter().map(|c| c.pending.len()).sum::<usize>()
+            + self.replay.iter().map(|q| q.len()).sum::<usize>()
+    }
+}
+
+fn u64_reply(f: &Frame) -> Result<u64, TransportError> {
+    expect_op(f, op::U64)?;
+    let mut r = wire::Reader::new(&f.payload);
+    let v = r.u64()?;
+    r.done()?;
+    Ok(v)
 }
 
 fn expect_op(f: &Frame, want: u8) -> Result<(), TransportError> {
@@ -760,13 +1285,20 @@ struct Hello {
     shapes: Vec<(usize, usize, usize)>,
 }
 
-fn handshake(addr: &SocketAddr) -> Result<(Conn, Hello), String> {
-    let stream = TcpStream::connect(addr)
-        .map_err(|e| format!("connect {addr}: {e}"))?;
+fn handshake(
+    addr: &SocketAddr,
+    faults: &FaultPolicy,
+) -> Result<(Conn, Hello), TransportError> {
+    let stream = TcpStream::connect_timeout(addr, faults.connect_timeout)
+        .map_err(|e| TransportError::io(format!("connect {addr}: {e}")))?;
     stream
         .set_nodelay(true)
-        .map_err(|e| format!("nodelay: {e}"))?;
+        .map_err(|e| TransportError::io(format!("nodelay: {e}")))?;
+    stream
+        .set_read_timeout(faults.io_timeout)
+        .map_err(|e| TransportError::io(format!("read timeout: {e}")))?;
     let mut conn = Conn {
+        addr: *addr,
         stream,
         dec: FrameDecoder::default(),
         writer: None,
@@ -774,47 +1306,49 @@ fn handshake(addr: &SocketAddr) -> Result<(Conn, Hello), String> {
     };
     let hello = wire::frame(op::HELLO, &wire::WIRE_VERSION.to_le_bytes());
     std::io::Write::write_all(&mut conn.stream, &hello)
-        .map_err(|e| format!("hello: {e}"))?;
+        .map_err(|e| TransportError::io(format!("hello: {e}")))?;
     let mut bytes_in = 0u64;
     let f = wire::read_frame(&mut conn.stream, &mut conn.dec, &mut bytes_in)
-        .map_err(String::from)?
-        .ok_or("server closed during handshake")?;
+        .map_err(|e| TransportError::io(e.to_string()))?
+        .ok_or_else(|| TransportError::io("server closed during handshake"))?;
     if f.op == op::ERR {
-        return Err(format!(
+        return Err(TransportError::protocol(format!(
             "handshake rejected: {}",
             String::from_utf8_lossy(&f.payload)
-        ));
+        )));
     }
     expect_op(&f, op::HELLO_OK)?;
     let mut r = wire::Reader::new(&f.payload);
-    let version = r.u32().map_err(String::from)?;
+    let version = r.u32()?;
     if version != wire::WIRE_VERSION {
-        return Err(format!(
+        return Err(TransportError::protocol(format!(
             "wire version {version} != {}",
             wire::WIRE_VERSION
-        ));
+        )));
     }
-    let workers = r.u32().map_err(String::from)? as usize;
-    let n_layers = r.u32().map_err(String::from)? as usize;
-    let groups = r.u32().map_err(String::from)? as usize;
-    let group = r.u32().map_err(String::from)? as usize;
-    let start = r.u32().map_err(String::from)? as usize;
-    let len = r.u32().map_err(String::from)? as usize;
-    let tag = r.u8().map_err(String::from)?;
-    let staleness = r.u64().map_err(String::from)?;
-    let policy = policy_decode(tag, staleness)?;
-    let init_digest = r.u64().map_err(String::from)?;
-    let exclusive = r.u8().map_err(String::from)? != 0;
+    let workers = r.u32()? as usize;
+    let n_layers = r.u32()? as usize;
+    let groups = r.u32()? as usize;
+    let group = r.u32()? as usize;
+    let start = r.u32()? as usize;
+    let len = r.u32()? as usize;
+    let tag = r.u8()?;
+    let staleness = r.u64()?;
+    let policy = policy_decode(tag, staleness).map_err(TransportError::protocol)?;
+    let init_digest = r.u64()?;
+    let exclusive = r.u8()? != 0;
     let mut shapes = Vec::with_capacity(n_layers);
     for _ in 0..n_layers {
-        let rows = r.u32().map_err(String::from)? as usize;
-        let cols = r.u32().map_err(String::from)? as usize;
-        let blen = r.u32().map_err(String::from)? as usize;
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        let blen = r.u32()? as usize;
         shapes.push((rows, cols, blen));
     }
-    r.done().map_err(String::from)?;
+    r.done()?;
     if group >= groups || start + len > n_layers {
-        return Err("inconsistent handshake geometry".into());
+        return Err(TransportError::protocol(
+            "inconsistent handshake geometry",
+        ));
     }
     Ok((
         conn,
@@ -832,6 +1366,122 @@ fn handshake(addr: &SocketAddr) -> Result<(Conn, Hello), String> {
     ))
 }
 
+/// A reconnected endpoint must still be the same logical server: every
+/// handshake fact is checked against what the original connection
+/// learned. `init_digest` deliberately included — a warm-restarted
+/// server advertises its configured digest (`ServiceOptions::
+/// init_digest`), so a matching digest plus a non-regressed revision
+/// floor is exactly "same run, state intact".
+fn validate_hello(meta: &Meta, g: usize, h: &Hello) -> Result<(), TransportError> {
+    if h.workers != meta.workers
+        || h.n_layers != meta.n_layers
+        || h.groups != meta.ranges.len()
+        || h.group != g
+        || h.range != meta.ranges[g]
+        || h.policy != meta.policy
+        || h.init_digest != meta.init_digest
+        || h.exclusive != meta.exclusive
+        || h.shapes != meta.shapes
+    {
+        return Err(TransportError::protocol(format!(
+            "reconnected endpoint (group {g}) no longer matches the \
+             original handshake — different server?"
+        )));
+    }
+    Ok(())
+}
+
+/// Background heartbeat thread: renews every worker's lease on every
+/// endpoint each interval over its *own* connections (HELLO +
+/// HEARTBEAT only — the main connections' frame ordering, and with it
+/// the pipelined window accounting, is untouched). A failed endpoint
+/// is redialed next round; heartbeating is best-effort by design —
+/// missing renewals is precisely how a dead client is *supposed* to
+/// present to the server's lease table.
+struct LeaseKeeper {
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl LeaseKeeper {
+    fn spawn(
+        addrs: Vec<SocketAddr>,
+        workers: usize,
+        lease: std::time::Duration,
+        every: std::time::Duration,
+        faults: FaultPolicy,
+    ) -> LeaseKeeper {
+        use std::sync::atomic::Ordering;
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = std::sync::Arc::clone(&stop);
+        let lease_ms = lease.as_millis().max(1) as u64;
+        let handle = std::thread::spawn(move || {
+            let mut conns: Vec<Option<Conn>> = addrs.iter().map(|_| None).collect();
+            while !stop2.load(Ordering::Relaxed) {
+                for (i, addr) in addrs.iter().enumerate() {
+                    if conns[i].is_none() {
+                        conns[i] = handshake(addr, &faults).ok().map(|(c, _)| c);
+                    }
+                    if let Some(conn) = &mut conns[i] {
+                        if heartbeat_all(conn, workers, lease_ms).is_err() {
+                            conns[i] = None; // redial next round
+                        }
+                    }
+                }
+                // sliced sleep so drop() never waits a full interval
+                let mut left = every;
+                let slice = std::time::Duration::from_millis(25);
+                while left > std::time::Duration::ZERO
+                    && !stop2.load(Ordering::Relaxed)
+                {
+                    let d = left.min(slice);
+                    std::thread::sleep(d);
+                    left -= d;
+                }
+            }
+        });
+        LeaseKeeper { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for LeaseKeeper {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One HEARTBEAT round: renew every worker's lease on `conn`.
+fn heartbeat_all(
+    conn: &mut Conn,
+    workers: usize,
+    lease_ms: u64,
+) -> Result<(), TransportError> {
+    for w in 0..workers {
+        let mut payload = Vec::with_capacity(12);
+        wire::put_u32(&mut payload, w as u32);
+        wire::put_u64(&mut payload, lease_ms);
+        let tx = wire::frame(op::HEARTBEAT, &payload);
+        std::io::Write::write_all(&mut conn.stream, &tx)
+            .map_err(|e| TransportError::io(format!("heartbeat: {e}")))?;
+        let mut bytes_in = 0u64;
+        let f = wire::read_frame(&mut conn.stream, &mut conn.dec, &mut bytes_in)
+            .map_err(|e| TransportError::io(e.to_string()))?
+            .ok_or_else(|| {
+                TransportError::io("server closed during heartbeat")
+            })?;
+        if f.op == op::ERR {
+            return Err(TransportError::server(
+                String::from_utf8_lossy(&f.payload).into_owned(),
+            ));
+        }
+        expect_op(&f, op::OK)?;
+    }
+    Ok(())
+}
+
 impl RemoteClient {
     /// Lock the connection state, recovering from poisoning: transport
     /// failures panic *between* request/response cycles (never with a
@@ -846,36 +1496,63 @@ impl RemoteClient {
 
     /// Connect to explicit group endpoints (any order; each connection
     /// reports which group it serves). Tests pass
-    /// [`ShardService::addrs`] straight through.
+    /// [`ShardService::addrs`] straight through. Supervision off
+    /// ([`FaultPolicy::none`]); see [`RemoteClient::connect_with`].
     pub fn connect(addrs: &[SocketAddr]) -> Result<RemoteClient, String> {
+        Self::connect_with(addrs, FaultPolicy::none())
+    }
+
+    /// [`RemoteClient::connect`] under a [`FaultPolicy`]: connects are
+    /// bounded, sockets get the io timeout, and every subsequent
+    /// operation runs under the connection supervisor.
+    pub fn connect_with(
+        addrs: &[SocketAddr],
+        faults: FaultPolicy,
+    ) -> Result<RemoteClient, String> {
         if addrs.is_empty() {
             return Err("no endpoint addresses".into());
         }
         let mut pairs = Vec::with_capacity(addrs.len());
         for addr in addrs {
-            pairs.push(handshake(addr)?);
+            pairs.push(handshake(addr, &faults).map_err(String::from)?);
         }
-        Self::assemble(pairs)
+        Self::assemble(pairs, faults)
     }
 
     /// [`RemoteClient::connect`] from `host:port` strings — the config
     /// path for an explicit `transport.group_addrs` endpoint list (one
     /// per shard group, any order; bracketed IPv6 accepted).
     pub fn connect_hosts(addrs: &[String]) -> Result<RemoteClient, String> {
+        Self::connect_hosts_with(addrs, FaultPolicy::none())
+    }
+
+    /// [`RemoteClient::connect_hosts`] under a [`FaultPolicy`].
+    pub fn connect_hosts_with(
+        addrs: &[String],
+        faults: FaultPolicy,
+    ) -> Result<RemoteClient, String> {
         let mut resolved = Vec::with_capacity(addrs.len());
         for a in addrs {
             let (host, port) = super::service::split_addr(a)?;
             resolved.push(resolve(host, port)?);
         }
-        Self::connect(&resolved)
+        Self::connect_with(&resolved, faults)
     }
 
     /// Connect to a base address and discover the sibling group
     /// endpoints by the CLI port convention (group `g` on `port + g`).
     pub fn connect_base(addr: &str) -> Result<RemoteClient, String> {
+        Self::connect_base_with(addr, FaultPolicy::none())
+    }
+
+    /// [`RemoteClient::connect_base`] under a [`FaultPolicy`].
+    pub fn connect_base_with(
+        addr: &str,
+        faults: FaultPolicy,
+    ) -> Result<RemoteClient, String> {
         let (host, port) = super::service::split_addr(addr)?;
         let first: SocketAddr = resolve(host, port)?;
-        let (conn, hello) = handshake(&first)?;
+        let (conn, hello) = handshake(&first, &faults).map_err(String::from)?;
         let groups = hello.groups;
         if hello.group != 0 {
             return Err(format!(
@@ -888,12 +1565,17 @@ impl RemoteClient {
             let p = port
                 .checked_add(g as u16)
                 .ok_or_else(|| format!("group {g} port overflows u16"))?;
-            pairs.push(handshake(&resolve(host, p)?)?);
+            pairs.push(
+                handshake(&resolve(host, p)?, &faults).map_err(String::from)?,
+            );
         }
-        Self::assemble(pairs)
+        Self::assemble(pairs, faults)
     }
 
-    fn assemble(pairs: Vec<(Conn, Hello)>) -> Result<RemoteClient, String> {
+    fn assemble(
+        pairs: Vec<(Conn, Hello)>,
+        faults: FaultPolicy,
+    ) -> Result<RemoteClient, String> {
         let first = &pairs[0].1;
         let (workers, n_layers, groups, policy) =
             (first.workers, first.n_layers, first.groups, first.policy);
@@ -980,14 +1662,101 @@ impl RemoteClient {
                     wire: WireStats::default(),
                     window: None,
                     commits: vec![None; workers],
+                    faults,
+                    replay: (0..groups).map(|_| VecDeque::new()).collect(),
+                    rev_floor: vec![0u64; n_layers],
+                    recovered: 0,
                 },
                 mirror,
                 mirror_seen: vec![u64::MAX; n_layers],
                 reads: 0,
                 copy_totals: FetchStats::default(),
             }),
+            lease: None,
+            chaos: Vec::new(),
             services: Vec::new(),
         })
+    }
+
+    /// Replace the connection supervisor's knobs after construction
+    /// (the loopback test path: connect plain, then arm supervision).
+    /// Re-arms every socket's read timeout to match.
+    pub fn with_faults(mut self, faults: FaultPolicy) -> Result<RemoteClient, String> {
+        let inner = self
+            .inner
+            .get_mut()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        inner.io.faults = faults;
+        for (g, conn) in inner.io.conns.iter().enumerate() {
+            conn.stream
+                .set_read_timeout(faults.io_timeout)
+                .map_err(|e| format!("read timeout (group {g}): {e}"))?;
+        }
+        Ok(self)
+    }
+
+    /// Start the background lease keeper: a dedicated thread renews
+    /// every worker's lease on every endpoint each `every` interval
+    /// (`every` must undercut `lease`, or the lease would lapse between
+    /// renewals under zero jitter). The server side drops barrier waits
+    /// for lease-expired workers — see `LeaseTable`.
+    pub fn with_lease(
+        mut self,
+        lease: std::time::Duration,
+        every: std::time::Duration,
+    ) -> Result<RemoteClient, String> {
+        if lease.is_zero() || every.is_zero() {
+            return Err("lease and heartbeat intervals must be > 0".into());
+        }
+        if every >= lease {
+            return Err(format!(
+                "heartbeat interval {every:?} must undercut the lease \
+                 {lease:?}"
+            ));
+        }
+        let workers = self.meta.workers;
+        let inner = self
+            .inner
+            .get_mut()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let addrs: Vec<SocketAddr> =
+            inner.io.conns.iter().map(|c| c.addr).collect();
+        let faults = inner.io.faults;
+        self.lease = Some(LeaseKeeper::spawn(addrs, workers, lease, every, faults));
+        Ok(self)
+    }
+
+    /// One synchronous lease renewal for `worker` on every endpoint —
+    /// the test/CLI path (the background keeper uses its own
+    /// connections).
+    pub fn heartbeat(
+        &self,
+        worker: usize,
+        lease: std::time::Duration,
+    ) -> Result<(), TransportError> {
+        let lease_ms = lease.as_millis().max(1) as u64;
+        let mut inner = self.lock();
+        let mut payload = Vec::with_capacity(12);
+        wire::put_u32(&mut payload, worker as u32);
+        wire::put_u64(&mut payload, lease_ms);
+        let tx = wire::frame(op::HEARTBEAT, &payload);
+        for g in 0..inner.io.conns.len() {
+            let f = inner.io.rpc(g, &tx)?;
+            expect_op(&f, op::OK)?;
+        }
+        Ok(())
+    }
+
+    /// Completed reconnect-and-resync cycles since construction.
+    pub fn reconnects(&self) -> u64 {
+        self.lock().io.recovered
+    }
+
+    /// Outstanding un-acknowledged pipelined requests (live window +
+    /// entries parked for resync). `0` after any terminal failure — the
+    /// drained-window guarantee.
+    pub fn in_flight(&self) -> usize {
+        self.lock().io.in_flight()
     }
 
     /// Disable/enable on-wire version gating (config `transport.gated`;
@@ -1038,6 +1807,17 @@ impl RemoteClient {
         self.services.push(svc);
     }
 
+    /// Adopt a fault-injection proxy so it lives (and tears down) with
+    /// this client — the chaos harness (`transport::loopback_chaos`).
+    pub fn attach_chaos(&mut self, proxy: super::chaos::ChaosProxy) {
+        self.chaos.push(proxy);
+    }
+
+    /// The attached fault-injection proxies, if any.
+    pub fn chaos_proxies(&self) -> &[super::chaos::ChaosProxy] {
+        &self.chaos
+    }
+
     /// The attached loopback services, if any.
     pub fn services(&self) -> &[ShardService] {
         &self.services
@@ -1062,7 +1842,8 @@ impl RemoteClient {
     /// consuming every outstanding reply, so the window stays aligned
     /// and the connections stay usable after a server-side rejection.
     pub fn flush(&self) -> Result<(), TransportError> {
-        self.lock().io.flush_all()
+        let meta = &self.meta;
+        self.lock().io.supervised(meta, |io, _resume| io.flush_all())
     }
 
     /// [`ParamServer::apply_arrival`] with a typed error instead of a
@@ -1074,9 +1855,10 @@ impl RemoteClient {
         &self,
         msg: &UpdateMsg,
     ) -> Result<(), TransportError> {
-        self.lock()
-            .io
-            .update(&self.meta, msg.from, msg.clock, msg.layer, &msg.delta)
+        let meta = &self.meta;
+        self.lock().io.supervised(meta, |io, resume| {
+            io.update(meta, msg.from, msg.clock, msg.layer, &msg.delta, resume)
+        })
     }
 
     /// [`WorkerPort::apply_commit`] with a typed error instead of a
@@ -1089,9 +1871,10 @@ impl RemoteClient {
         delta: &GradSet,
     ) -> Result<(), TransportError> {
         assert_eq!(delta.layers.len(), self.meta.n_layers, "commit layers");
-        self.lock()
-            .io
-            .commit_updates(&self.meta, worker, clock, delta)
+        let meta = &self.meta;
+        self.lock().io.supervised(meta, |io, resume| {
+            io.commit_updates(meta, worker, clock, delta, resume)
+        })
     }
 
     /// Assert the remote server matches what a local run assumes —
@@ -1138,10 +1921,18 @@ impl RemoteClient {
     /// pipelined commit backlog drains first, which is exactly the
     /// "drain only when the staleness gate requires it" rule.
     pub fn wait_until_ready(&self, worker: usize) {
+        self.try_wait_until_ready(worker)
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+    }
+
+    /// [`RemoteClient::wait_until_ready`] with a typed error instead of
+    /// a panic — e.g. the lease table failing the wait because a peer's
+    /// lease expired surfaces as `TransportErrorKind::Server`.
+    pub fn try_wait_until_ready(&self, worker: usize) -> Result<(), TransportError> {
+        let meta = &self.meta;
         self.lock()
             .io
-            .wait(&self.meta, worker)
-            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+            .supervised(meta, |io, _resume| io.wait(meta, worker))
     }
 
     /// Version-gated evaluation snapshot — the remote sibling of
@@ -1153,14 +1944,39 @@ impl RemoteClient {
     ) -> FetchStats {
         assert_eq!(buf.layers.len(), self.meta.n_layers, "snapshot buffer");
         assert_eq!(last_seen.len(), self.meta.n_layers, "snapshot last_seen");
+        let meta = &self.meta;
         let mut inner = self.lock();
         let inner = &mut *inner;
         let fs = inner
             .io
-            .gated_snapshot(&self.meta, buf, last_seen, self.meta.gated)
+            .supervised(meta, |io, _resume| {
+                io.gated_snapshot(meta, buf, last_seen, meta.gated)
+            })
             .unwrap_or_else(|e| panic!("ssp transport: {e}"));
         inner.copy_totals.absorb(&fs);
         fs
+    }
+
+    /// [`ParamServer::fetch_into`] with a typed error instead of a
+    /// panic — the fault-injection tests' entry point.
+    pub fn try_fetch_into(
+        &self,
+        worker: usize,
+        buf: &mut ParamSet,
+        last_seen: &mut [u64],
+        own: &mut Vec<u64>,
+    ) -> Result<(ReadStats, FetchStats), TransportError> {
+        assert_eq!(buf.layers.len(), self.meta.n_layers, "fetch_into buffer");
+        assert_eq!(last_seen.len(), self.meta.n_layers, "fetch_into last_seen");
+        let meta = &self.meta;
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        inner.reads += 1;
+        let (stats, fs) = inner.io.supervised(meta, |io, _resume| {
+            io.gated_fetch(meta, worker, buf, last_seen, own, meta.gated)
+        })?;
+        inner.copy_totals.absorb(&fs);
+        Ok((stats, fs))
     }
 }
 
@@ -1171,11 +1987,11 @@ impl Drop for RemoteClient {
     /// master-snapshot port — can observe the server, and dropping the
     /// worker's port is exactly the runner's ordering point for that.
     fn drop(&mut self) {
-        let inner = self
-            .inner
+        let RemoteClient { meta, inner, .. } = self;
+        let inner = inner
             .get_mut()
             .unwrap_or_else(|poisoned| poisoned.into_inner());
-        let _ = inner.io.flush_all();
+        let _ = inner.io.supervised(meta, |io, _resume| io.flush_all());
     }
 }
 
@@ -1193,9 +2009,12 @@ impl ParamServer for RemoteClient {
     }
 
     fn clock(&self, worker: usize) -> u64 {
+        let meta = &self.meta;
         self.lock()
             .io
-            .rpc_u64_on(0, op::CLOCK, worker as u32)
+            .supervised(meta, |io, _resume| {
+                io.rpc_u64_on(0, op::CLOCK, worker as u32)
+            })
             .unwrap_or_else(|e| panic!("ssp transport: {e}"))
     }
 
@@ -1212,34 +2031,34 @@ impl ParamServer for RemoteClient {
     }
 
     fn must_wait(&self, worker: usize) -> bool {
+        let meta = &self.meta;
         self.lock()
             .io
-            .rpc_bool_on(0, op::MUST_WAIT, worker as u32)
+            .supervised(meta, |io, _resume| {
+                io.rpc_bool_on(0, op::MUST_WAIT, worker as u32)
+            })
             .unwrap_or_else(|e| panic!("ssp transport: {e}"))
     }
 
     fn read_ready(&self, worker: usize) -> bool {
+        let meta = &self.meta;
         self.lock()
             .io
-            .read_ready(&self.meta, worker)
+            .supervised(meta, |io, _resume| io.read_ready(meta, worker))
             .unwrap_or_else(|e| panic!("ssp transport: {e}"))
     }
 
     fn fetch(&mut self, worker: usize) -> (ParamSet, Vec<u64>, ReadStats) {
+        let meta = &self.meta;
         let mut inner = self.lock();
         let inner = &mut *inner;
         inner.reads += 1;
-        let mut own = Vec::with_capacity(self.meta.n_layers);
-        let (stats, _fs) = inner
-            .io
-            .gated_fetch(
-                &self.meta,
-                worker,
-                &mut inner.mirror,
-                &mut inner.mirror_seen,
-                &mut own,
-                self.meta.gated,
-            )
+        let mut own = Vec::with_capacity(meta.n_layers);
+        let Inner { io, mirror, mirror_seen, .. } = &mut *inner;
+        let (stats, _fs) = io
+            .supervised(meta, |io, _resume| {
+                io.gated_fetch(meta, worker, mirror, mirror_seen, &mut own, meta.gated)
+            })
             .unwrap_or_else(|e| panic!("ssp transport: {e}"));
         (inner.mirror.clone(), own, stats)
     }
@@ -1253,45 +2072,42 @@ impl ParamServer for RemoteClient {
     ) -> (ReadStats, FetchStats) {
         assert_eq!(buf.layers.len(), self.meta.n_layers, "fetch_into buffer");
         assert_eq!(last_seen.len(), self.meta.n_layers, "fetch_into last_seen");
+        let meta = &self.meta;
         let mut inner = self.lock();
         let inner = &mut *inner;
         inner.reads += 1;
         let (stats, fs) = inner
             .io
-            .gated_fetch(&self.meta, worker, buf, last_seen, own, self.meta.gated)
+            .supervised(meta, |io, _resume| {
+                io.gated_fetch(meta, worker, buf, last_seen, own, meta.gated)
+            })
             .unwrap_or_else(|e| panic!("ssp transport: {e}"));
         inner.copy_totals.absorb(&fs);
         (stats, fs)
     }
 
     fn snapshot(&self) -> ParamSet {
+        let meta = &self.meta;
         let mut inner = self.lock();
         let inner = &mut *inner;
-        inner
-            .io
-            .gated_snapshot(
-                &self.meta,
-                &mut inner.mirror,
-                &mut inner.mirror_seen,
-                self.meta.gated,
-            )
-            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        let Inner { io, mirror, mirror_seen, .. } = &mut *inner;
+        io.supervised(meta, |io, _resume| {
+            io.gated_snapshot(meta, mirror, mirror_seen, meta.gated)
+        })
+        .unwrap_or_else(|e| panic!("ssp transport: {e}"));
         inner.mirror.clone()
     }
 
     fn snapshot_into(&self, buf: &mut ParamSet) {
         assert_eq!(buf.layers.len(), self.meta.n_layers, "snapshot buffer");
+        let meta = &self.meta;
         let mut inner = self.lock();
         let inner = &mut *inner;
-        inner
-            .io
-            .gated_snapshot(
-                &self.meta,
-                &mut inner.mirror,
-                &mut inner.mirror_seen,
-                self.meta.gated,
-            )
-            .unwrap_or_else(|e| panic!("ssp transport: {e}"));
+        let Inner { io, mirror, mirror_seen, .. } = &mut *inner;
+        io.supervised(meta, |io, _resume| {
+            io.gated_snapshot(meta, mirror, mirror_seen, meta.gated)
+        })
+        .unwrap_or_else(|e| panic!("ssp transport: {e}"));
         buf.copy_from(&inner.mirror);
     }
 
@@ -1301,9 +2117,10 @@ impl ParamServer for RemoteClient {
 
     fn applied(&self, layer: usize, worker: usize) -> u64 {
         assert!(layer < self.meta.n_layers, "layer out of range");
+        let meta = &self.meta;
         self.lock()
             .io
-            .applied(&self.meta, layer, worker)
+            .supervised(meta, |io, _resume| io.applied(meta, layer, worker))
             .unwrap_or_else(|e| panic!("ssp transport: {e}"))
     }
 

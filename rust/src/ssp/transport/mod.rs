@@ -45,6 +45,7 @@
 //! count, gating and pipelining. Tests and benches run the same stacks
 //! over loopback in-process via [`loopback`] / [`loopback_split`].
 
+pub mod chaos;
 mod client;
 mod service;
 pub mod wire;
@@ -55,10 +56,11 @@ use crate::nn::ParamSet;
 
 use super::{Policy, ShardedServer};
 
+pub use chaos::{ChaosAction, ChaosEvent, ChaosProxy};
 pub use client::{
-    RemoteClient, TransportError, TransportErrorKind, WireStats,
+    FaultPolicy, RemoteClient, TransportError, TransportErrorKind, WireStats,
 };
-pub use service::{group_ranges, split_addr, ShardService};
+pub use service::{group_ranges, split_addr, ServiceOptions, ShardService};
 
 /// Order-sensitive FNV-1a digest over every parameter's f32 bit
 /// pattern. The HELLO handshake carries the served master's digest *at
@@ -166,6 +168,53 @@ pub fn loopback_split(
         None => client,
         Some(w) => client.with_pipeline(w).expect("enable pipeline"),
     }
+}
+
+/// [`loopback`] with every endpoint behind its own fault-injection
+/// [`chaos::ChaosProxy`] running `script` (each proxy counts its own
+/// frames — see [`chaos::ChaosEvent`]), and the client supervised so
+/// the scripted faults are absorbed by reconnect-and-resync. The
+/// proxies and the service live (and tear down) with the client.
+/// `window: Some(w)` additionally pipelines commits — faults then land
+/// inside a non-empty in-flight window.
+pub fn loopback_chaos(
+    init: ParamSet,
+    workers: usize,
+    policy: Policy,
+    groups: usize,
+    window: Option<usize>,
+    script: &str,
+    seed: u64,
+) -> RemoteClient {
+    let server = Arc::new(ShardedServer::new(init, workers, policy));
+    let svc = ShardService::bind(server, "127.0.0.1:0", groups)
+        .expect("bind loopback shard service");
+    let events = chaos::parse_script(script).expect("chaos script");
+    let mut proxies = Vec::with_capacity(svc.addrs().len());
+    let mut addrs = Vec::with_capacity(svc.addrs().len());
+    for (i, addr) in svc.addrs().iter().enumerate() {
+        let proxy =
+            chaos::ChaosProxy::spawn(*addr, events.clone(), seed ^ i as u64)
+                .expect("spawn chaos proxy");
+        addrs.push(proxy.addr());
+        proxies.push(proxy);
+    }
+    let faults = FaultPolicy {
+        connect_timeout: std::time::Duration::from_secs(5),
+        io_timeout: None,
+        max_retries: 10,
+        backoff_base: std::time::Duration::from_millis(5),
+    };
+    let mut client = RemoteClient::connect_with(&addrs, faults)
+        .expect("connect chaos client");
+    if let Some(w) = window {
+        client = client.with_pipeline(w).expect("enable pipeline");
+    }
+    for proxy in proxies {
+        client.attach_chaos(proxy);
+    }
+    client.attach_service(svc);
+    client
 }
 
 #[cfg(test)]

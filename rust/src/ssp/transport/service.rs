@@ -66,20 +66,87 @@ pub(super) fn policy_decode(tag: u8, staleness: u64) -> Result<Policy, String> {
     }
 }
 
+/// Tunables of a running service, single-sourced from the
+/// `[transport]` config section by the CLI (`TransportConfig::
+/// service_options`). Everything has a safe default, so library users
+/// keep calling [`ShardService::bind`] unchanged.
+#[derive(Clone, Debug)]
+pub struct ServiceOptions {
+    /// Bound on the shutdown path's self-connect that wakes a parked
+    /// accept loop (`[transport] wake_timeout_ms`).
+    pub wake_timeout: std::time::Duration,
+    /// Advertise this digest in HELLO_OK instead of digesting the
+    /// served master at bind time. A warm-restarted shard process
+    /// (`serve --state`) serves *trained* parameters, but its clients
+    /// validate the config-derived **init** digest on every handshake —
+    /// the restart path passes the original digest here.
+    pub init_digest: Option<u64>,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> ServiceOptions {
+        ServiceOptions {
+            wake_timeout: std::time::Duration::from_millis(500),
+            init_digest: None,
+        }
+    }
+}
+
+/// Per-worker liveness leases, granted and renewed by HEARTBEAT
+/// frames. A worker that has never heartbeat holds no lease and is
+/// never declared dead (pre-lease clients keep working unchanged); a
+/// worker whose granted lease lapses is presumed dead, and every
+/// parked barrier WAIT on this service fails with a typed ERR within
+/// one poll slice instead of hanging forever on a commit that will
+/// never arrive.
+#[derive(Debug)]
+struct LeaseTable {
+    deadlines: Vec<Mutex<Option<std::time::Instant>>>,
+}
+
+impl LeaseTable {
+    fn new(workers: usize) -> LeaseTable {
+        LeaseTable {
+            deadlines: (0..workers).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    fn renew(&self, w: usize, lease: std::time::Duration) {
+        *self.deadlines[w].lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(std::time::Instant::now() + lease);
+    }
+
+    /// First worker whose granted lease has lapsed, if any.
+    fn expired(&self) -> Option<usize> {
+        let now = std::time::Instant::now();
+        self.deadlines.iter().position(|d| {
+            matches!(
+                *d.lock().unwrap_or_else(|e| e.into_inner()),
+                Some(t) if t < now
+            )
+        })
+    }
+}
+
 /// What a connection needs to know about its endpoint.
 #[derive(Clone, Debug)]
 struct EndpointInfo {
     group: usize,
     groups: usize,
     range: std::ops::Range<usize>,
-    /// Digest of the served master at bind time (the init parameters)
-    /// — shipped in HELLO_OK for `RemoteClient::check_run`.
+    /// Digest advertised in HELLO_OK for `RemoteClient::check_run` —
+    /// the served master at bind time (the init parameters), or
+    /// `ServiceOptions::init_digest` on a warm restart.
     init_digest: u64,
     /// This endpoint's process hosts *only* its group's shards
     /// (`ShardService::bind_group`, one OS process per shard group):
     /// readiness answers are group-scoped and the client keeps the
     /// per-process clock tables in sync by broadcasting COMMITs.
     exclusive: bool,
+    /// Worker liveness leases, shared by every endpoint of this
+    /// process (a worker is alive or dead for the whole service, not
+    /// per shard group).
+    leases: Arc<LeaseTable>,
 }
 
 /// A running shard service: `groups` listener threads plus one thread
@@ -89,6 +156,11 @@ struct EndpointInfo {
 pub struct ShardService {
     addrs: Vec<SocketAddr>,
     stop: Arc<AtomicBool>,
+    opts: ServiceOptions,
+    /// The served state, kept so shutdown can pulse parked barrier
+    /// waiters (they re-check the stop flag immediately instead of
+    /// sleeping out their current poll slice).
+    servers: Vec<Arc<ShardedServer>>,
     listeners: Vec<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
@@ -104,12 +176,25 @@ impl ShardService {
         addr: &str,
         groups: usize,
     ) -> Result<ShardService, String> {
+        ShardService::bind_with(server, addr, groups, ServiceOptions::default())
+    }
+
+    /// [`ShardService::bind`] with explicit [`ServiceOptions`].
+    pub fn bind_with(
+        server: Arc<ShardedServer>,
+        addr: &str,
+        groups: usize,
+        opts: ServiceOptions,
+    ) -> Result<ShardService, String> {
         let (host, port) = split_addr(addr)?;
         let ranges = group_ranges(server.n_layers(), groups);
         // the master at bind time IS the init: serve binds before any
-        // worker can commit
-        let init_digest = super::param_digest(&server.snapshot());
-        let mut svc = ShardService::empty();
+        // worker can commit (a warm restart overrides via the options)
+        let init_digest = opts
+            .init_digest
+            .unwrap_or_else(|| super::param_digest(&server.snapshot()));
+        let leases = Arc::new(LeaseTable::new(server.workers()));
+        let mut svc = ShardService::empty(opts);
         for (g, range) in ranges.iter().enumerate() {
             let bind_port = if port == 0 {
                 0
@@ -123,6 +208,7 @@ impl ShardService {
                 range: range.clone(),
                 init_digest,
                 exclusive: false,
+                leases: Arc::clone(&leases),
             };
             svc.listen(Arc::clone(&server), host, bind_port, info)?;
         }
@@ -144,6 +230,25 @@ impl ShardService {
         groups: usize,
         group: usize,
     ) -> Result<ShardService, String> {
+        ShardService::bind_group_with(
+            server,
+            addr,
+            groups,
+            group,
+            ServiceOptions::default(),
+        )
+    }
+
+    /// [`ShardService::bind_group`] with explicit [`ServiceOptions`] —
+    /// the warm-restart path passes the original init digest here so
+    /// reconnecting clients still validate against their config.
+    pub fn bind_group_with(
+        server: Arc<ShardedServer>,
+        addr: &str,
+        groups: usize,
+        group: usize,
+        opts: ServiceOptions,
+    ) -> Result<ShardService, String> {
         let (host, port) = split_addr(addr)?;
         let ranges = group_ranges(server.n_layers(), groups);
         if group >= ranges.len() {
@@ -154,23 +259,28 @@ impl ShardService {
                 ranges.len()
             ));
         }
-        let init_digest = super::param_digest(&server.snapshot());
+        let init_digest = opts
+            .init_digest
+            .unwrap_or_else(|| super::param_digest(&server.snapshot()));
         let info = EndpointInfo {
             group,
             groups: ranges.len(),
             range: ranges[group].clone(),
             init_digest,
             exclusive: true,
+            leases: Arc::new(LeaseTable::new(server.workers())),
         };
-        let mut svc = ShardService::empty();
+        let mut svc = ShardService::empty(opts);
         svc.listen(server, host, port, info)?;
         Ok(svc)
     }
 
-    fn empty() -> ShardService {
+    fn empty(opts: ServiceOptions) -> ShardService {
         ShardService {
             addrs: Vec::new(),
             stop: Arc::new(AtomicBool::new(false)),
+            opts,
+            servers: Vec::new(),
             listeners: Vec::new(),
             conns: Arc::new(Mutex::new(Vec::new())),
         }
@@ -191,6 +301,7 @@ impl ShardService {
                 .local_addr()
                 .map_err(|e| format!("local_addr: {e}"))?,
         );
+        self.servers.push(Arc::clone(&server));
         let stop = Arc::clone(&self.stop);
         let conns = Arc::clone(&self.conns);
         self.listeners.push(std::thread::spawn(move || {
@@ -242,16 +353,30 @@ impl ShardService {
     /// connection thread (their peers must have disconnected first).
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Release);
+        // pulse the barrier condvars so parked WAIT handlers re-check
+        // the stop flag now instead of sleeping out their poll slice
+        for server in &self.servers {
+            server.wake_all();
+        }
         for addr in &self.addrs {
             // unblock a parked accept; the listener re-checks `stop`.
             // A wildcard bind (`0.0.0.0` / `::`) is not a connectable
             // destination on every platform, so aim the wake-up at the
             // loopback of the same family instead — and bound it, so
-            // shutdown can never hang on a dead route.
-            let _ = TcpStream::connect_timeout(
+            // shutdown can never hang on a dead route. A failed wake is
+            // a join that may hang until the next real connection, so
+            // it must be visible, not swallowed.
+            if let Err(e) = TcpStream::connect_timeout(
                 &wake_addr(addr),
-                std::time::Duration::from_millis(500),
-            );
+                self.opts.wake_timeout,
+            ) {
+                crate::warn_!(
+                    "shutdown wake-up connect to {} failed ({e}); the \
+                     group's listener will only exit on its next \
+                     accepted connection",
+                    wake_addr(addr)
+                );
+            }
         }
         for l in self.listeners.drain(..) {
             let _ = l.join();
@@ -464,7 +589,27 @@ fn handle(
                 if stop.load(Ordering::Acquire) {
                     return Err("server shutting down".into());
                 }
+                // a dead peer's commit never arrives: fail the barrier
+                // wait (typed ERR) instead of parking forever
+                if let Some(q) = info.leases.expired() {
+                    return Err(format!(
+                        "worker {q} lease expired: releasing worker \
+                         {w}'s barrier wait (peer presumed dead)"
+                    ));
+                }
             }
+            reply_ok(out);
+        }
+        op::HEARTBEAT => {
+            let w = r.u32()? as usize;
+            let lease_ms = r.u64()?;
+            r.done()?;
+            check_worker(server, w)?;
+            if lease_ms == 0 {
+                return Err("heartbeat lease must be > 0 ms".into());
+            }
+            info.leases
+                .renew(w, std::time::Duration::from_millis(lease_ms));
             reply_ok(out);
         }
         op::APPLIED => {

@@ -28,8 +28,10 @@ use crate::tensor::Matrix;
 /// rejected before any state flows. Version 2 added the `exclusive`
 /// byte to HELLO_OK (multi-process server tier: an endpoint that hosts
 /// *only* its group's shards, with its own clock table kept in sync by
-/// client-side COMMIT broadcast).
-pub const WIRE_VERSION: u32 = 2;
+/// client-side COMMIT broadcast). Version 3 added the HEARTBEAT
+/// opcode (worker liveness leases: an expired lease releases the dead
+/// worker's barrier waiters instead of hanging them forever).
+pub const WIRE_VERSION: u32 = 3;
 
 /// Upper bound on a single frame — a corrupt length prefix fails fast
 /// instead of asking the decoder to buffer gigabytes.
@@ -62,6 +64,13 @@ pub mod op {
     pub const SNAPSHOT: u8 = 9;
     /// `{ layer:u32, worker:u32 }` → U64: the version vector entry.
     pub const APPLIED: u8 = 10;
+    /// `{ worker:u32, lease_ms:u64 }` → OK. Grants/renews the worker's
+    /// liveness lease: once a worker has heartbeat at least once, the
+    /// service treats a lapsed lease as worker death and fails any
+    /// barrier WAIT that depends on it (typed ERR) instead of parking
+    /// forever. Workers that never heartbeat never hold a lease and are
+    /// never declared dead — the pre-lease flows are unchanged.
+    pub const HEARTBEAT: u8 = 11;
 
     /// Empty acknowledgement.
     pub const OK: u8 = 100;

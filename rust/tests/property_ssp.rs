@@ -84,6 +84,34 @@ fn make_remote_split(
     transport::loopback_split(init, workers, policy, 2, Some(4))
 }
 
+/// The fifth backing: the shared loopback tier with **every endpoint
+/// behind a deterministic fault-injection proxy** and the client
+/// supervised (10 reconnect attempts, 5ms backoff). The script tears a
+/// FETCH request mid-frame and kills connections at fixed UPDATE
+/// frame counts, so every trial exercises reconnect + handshake
+/// revalidation + in-flight-window resync — and the invariants (and
+/// bitwise oracle equivalence) must hold exactly as if the faults
+/// never happened. Kill drops the matched frame before the teardown
+/// and a torn frame never parses server-side, so no request is ever
+/// double-applied or double-counted. The script stays on one opcode
+/// (UPDATE, the most frequent frame) so its events fire in order on
+/// every random schedule regardless of how the other ops interleave.
+fn make_remote_chaos(
+    init: ParamSet,
+    workers: usize,
+    policy: Policy,
+) -> RemoteClient {
+    transport::loopback_chaos(
+        init,
+        workers,
+        policy,
+        2,
+        Some(4),
+        "kill@update:3;torn@update:8;kill@update:14",
+        0xC4A05,
+    )
+}
+
 /// Drive a random but protocol-legal schedule against the server:
 /// each step, a random non-blocked worker commits a clock; its per-layer
 /// updates arrive after a random backlog of earlier arrivals drains.
@@ -212,6 +240,17 @@ fn p1_p2_p5_hold_over_random_schedules_remote_split_pipelined() {
         let workers = 2 + (seed as usize % 5);
         let staleness = seed % 7;
         random_schedule(make_remote_split, seed, workers, staleness, 60);
+    }
+}
+
+#[test]
+fn p1_p2_p5_hold_over_random_schedules_under_scripted_faults() {
+    // fewest: each trial stands up sockets *plus* one chaos proxy per
+    // endpoint, and absorbs several scripted connection kills
+    for seed in 0..4 {
+        let workers = 2 + (seed as usize % 5);
+        let staleness = seed % 7;
+        random_schedule(make_remote_chaos, seed, workers, staleness, 60);
     }
 }
 
@@ -364,6 +403,20 @@ fn remote_client_is_bitwise_equivalent_to_reference() {
 fn split_pipelined_client_is_bitwise_equivalent_to_reference() {
     for seed in 0..6u64 {
         equivalence_schedule(make_reference, make_remote_split, seed, 80);
+    }
+}
+
+/// The tentpole acceptance pin: a supervised client whose connections
+/// are scripted to die mid-schedule — torn frames, dropped frames,
+/// reconnects with a non-empty in-flight window — must still be
+/// **bitwise** indistinguishable from the shared-memory oracle at
+/// every read: same master bits, same own-version vectors, same ε
+/// statistics, same read counters. Recovery is invisible or it is
+/// wrong.
+#[test]
+fn chaos_faulted_client_is_bitwise_equivalent_to_reference() {
+    for seed in 0..4u64 {
+        equivalence_schedule(make_reference, make_remote_chaos, seed, 80);
     }
 }
 

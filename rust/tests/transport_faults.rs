@@ -1,0 +1,362 @@
+//! Fault-tolerance tests of the supervised SSP transport: scripted
+//! connection kills, torn frames, heartbeat leases, and warm restarts
+//! from state dumps. The contract under test is the tentpole's — a
+//! recovered fault is **bitwise invisible** (same final weights, same
+//! protocol observables as a never-faulted run), and an unrecoverable
+//! one is **loud and typed** (`Io` with the window drained when
+//! supervision is off, `Protocol` when the server lost its state,
+//! `Server` when a peer's lease lapses) — never a hang, never a
+//! silent desync.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sspdnn::checkpoint;
+use sspdnn::nn::{LayerParams, ParamSet};
+use sspdnn::ssp::transport::{
+    self, ChaosProxy, FaultPolicy, RemoteClient, ServiceOptions,
+    ShardService, TransportErrorKind,
+};
+use sspdnn::ssp::{ParamServer, Policy, ShardedServer, UpdateMsg};
+use sspdnn::tensor::Matrix;
+
+fn dims() -> Vec<usize> {
+    vec![3, 4, 2]
+}
+
+fn msg(from: usize, clock: u64, layer: usize, v: f32) -> UpdateMsg {
+    let d = dims();
+    UpdateMsg::new(
+        from,
+        clock,
+        layer,
+        LayerParams {
+            w: Matrix::from_fn(d[layer], d[layer + 1], |_, _| v),
+            b: vec![v; d[layer + 1]],
+        },
+    )
+}
+
+/// The supervised policy every recovery test uses: generous retry
+/// budget, tight backoff (loopback reconnects are instant).
+fn supervised() -> FaultPolicy {
+    FaultPolicy {
+        connect_timeout: Duration::from_secs(5),
+        io_timeout: None,
+        max_retries: 10,
+        backoff_base: Duration::from_millis(5),
+    }
+}
+
+/// One deterministic protocol schedule, identical for every backing:
+/// per clock, every worker ships one delta per layer and commits, then
+/// one worker takes a gated read. Distinct float per (clock, worker,
+/// layer) so any dropped/duplicated/reordered update changes the final
+/// bits.
+fn drive<S: ParamServer>(
+    s: &mut S,
+    buf: &mut ParamSet,
+    seen: &mut [u64],
+    own: &mut Vec<u64>,
+    workers: usize,
+    clocks: std::ops::Range<u64>,
+) {
+    let d = dims();
+    for c in clocks {
+        for w in 0..workers {
+            for l in 0..d.len() - 1 {
+                let v = (c as f32 + 1.0) * 0.01
+                    + (w as f32) * 0.001
+                    + (l as f32) * 0.0001;
+                s.apply_arrival(&msg(w, c, l, v));
+            }
+            s.commit(w);
+        }
+        let _ = s.fetch_into((c as usize) % workers, buf, seen, own);
+    }
+}
+
+fn fresh_read_state(init: &ParamSet) -> (ParamSet, Vec<u64>, Vec<u64>) {
+    (init.clone(), vec![0u64; init.n_layers()], Vec::new())
+}
+
+/// Satellite (c): a mid-frame disconnect while a FETCH is on the wire
+/// — the proxy writes a torn prefix of the request and kills the
+/// connection — must surface as a typed `Io` error with the pipeline
+/// window drained, when supervision is off (`max_retries = 0`). No
+/// panic, no desync, and the failure is sticky (the client is dead,
+/// not confused).
+#[test]
+fn mid_frame_disconnect_during_fetch_surfaces_typed_io_error() {
+    let init = ParamSet::zeros(&dims());
+    let server = Arc::new(ShardedServer::new(init.clone(), 1, Policy::Async));
+    let svc = ShardService::bind(Arc::clone(&server), "127.0.0.1:0", 1)
+        .expect("bind service");
+    let script =
+        transport::chaos::parse_script("torn@fetch:1").expect("script");
+    let proxy =
+        ChaosProxy::spawn(svc.addrs()[0], script, 7).expect("spawn proxy");
+
+    let no_supervision = FaultPolicy {
+        max_retries: 0,
+        ..supervised()
+    };
+    let mut client =
+        RemoteClient::connect_with(&[proxy.addr()], no_supervision)
+            .expect("connect through proxy")
+            .with_pipeline(4)
+            .expect("enable pipeline");
+
+    // a non-empty in-flight window when the fault hits: the fetch
+    // settles these two acks first (unfaulted), then its own request
+    // frame is torn mid-write and the connection dies
+    client.try_apply_arrival(&msg(0, 0, 0, 0.25)).unwrap();
+    client.try_apply_arrival(&msg(0, 0, 1, 0.25)).unwrap();
+    let (mut buf, mut seen, mut own) = fresh_read_state(&init);
+    let e = client
+        .try_fetch_into(0, &mut buf, &mut seen, &mut own)
+        .expect_err("torn FETCH must fail");
+    assert_eq!(e.kind, TransportErrorKind::Io, "typed Io, got: {e}");
+    assert_eq!(proxy.events_fired(), 1, "the scripted tear fired");
+    assert_eq!(client.in_flight(), 0, "window drained, not leaked");
+    assert_eq!(client.reconnects(), 0, "supervision off: no redial");
+
+    // sticky: the connection is gone and every later round-trip says
+    // so (the write itself may still land in the dead socket's buffer)
+    let e2 = client
+        .try_apply_arrival(&msg(0, 0, 0, 0.5))
+        .and_then(|_| client.flush())
+        .expect_err("dead connection stays dead");
+    assert_eq!(e2.kind, TransportErrorKind::Io);
+    // the torn frame never parsed server-side: both settled updates
+    // landed, the dead fetch applied nothing
+    assert_eq!(server.applied(0, 0), 1);
+    assert_eq!(server.applied(1, 0), 1);
+    drop(client);
+    drop(proxy);
+    drop(svc);
+}
+
+/// Satellite (d): kill the connections mid-run with a non-empty
+/// pipelined window — twice on UPDATE frames, once on a FETCH — and
+/// the supervised client must reconnect, resync the window
+/// exactly-once, and finish with final weights **bitwise equal** to a
+/// never-faulted in-process run of the same schedule.
+#[test]
+fn reconnect_under_pipelining_is_bitwise_invisible() {
+    let d = dims();
+    let init = ParamSet::zeros(&d);
+    let workers = 2;
+
+    // the never-faulted oracle
+    let mut oracle = ShardedServer::new(init.clone(), workers, Policy::Async);
+    let (mut buf_a, mut seen_a, mut own_a) = fresh_read_state(&init);
+    drive(&mut oracle, &mut buf_a, &mut seen_a, &mut own_a, workers, 0..8);
+
+    // same schedule through proxied endpoints that die three times.
+    // Counts are per-proxy and monotone (+1 per frame), so each event
+    // fires exactly once on both endpoints: replayed UPDATEs after a
+    // recovery only shift *when* the later kills land, never whether.
+    let mut faulted = transport::loopback_chaos(
+        init.clone(),
+        workers,
+        Policy::Async,
+        2,
+        Some(4),
+        "kill@update:5;kill@update:11;kill@fetch:6",
+        0xFA017,
+    );
+    let (mut buf_b, mut seen_b, mut own_b) = fresh_read_state(&init);
+    drive(&mut faulted, &mut buf_b, &mut seen_b, &mut own_b, workers, 0..8);
+
+    for proxy in faulted.chaos_proxies() {
+        assert_eq!(proxy.events_fired(), 3, "every scripted fault fired");
+    }
+    assert!(
+        faulted.reconnects() >= 3,
+        "three kills need at least three recoveries, saw {}",
+        faulted.reconnects()
+    );
+    // recovery is invisible: same master bits, same gated views
+    assert_eq!(
+        ParamServer::snapshot(&faulted),
+        oracle.snapshot(),
+        "final weights diverged across recoveries"
+    );
+    assert_eq!(buf_a, buf_b, "gated views diverged");
+    assert_eq!(seen_a, seen_b, "gate vectors diverged");
+    assert_eq!(own_a, own_b, "own-version vectors diverged");
+    assert_eq!(faulted.in_flight(), 0, "window fully drained");
+}
+
+/// Tentpole lease acceptance: a worker heartbeats once with a short
+/// lease and goes silent; a peer parked on the BSP barrier must be
+/// *released* with a typed Server error naming the expired lease —
+/// within roughly one lease interval plus one 50ms poll slice, not at
+/// some distant io timeout, and never hanging.
+#[test]
+fn expired_lease_releases_parked_barrier_waiters() {
+    let init = ParamSet::zeros(&dims());
+    let server = Arc::new(ShardedServer::new(init, 2, Policy::Bsp));
+    let svc = ShardService::bind(Arc::clone(&server), "127.0.0.1:0", 2)
+        .expect("bind service");
+    let mut client =
+        RemoteClient::connect(&svc.addrs().to_vec()).expect("connect");
+
+    // worker 1 announces liveness with an 80ms lease, then "dies"
+    client.heartbeat(1, Duration::from_millis(80)).expect("heartbeat");
+    // worker 0 finishes clock 0 and parks on the barrier: under BSP it
+    // needs worker 1's commit, which will never come
+    client.commit(0);
+    let t0 = Instant::now();
+    let e = client
+        .try_wait_until_ready(0)
+        .expect_err("the dead peer's lease must release this wait");
+    let waited = t0.elapsed();
+    assert_eq!(e.kind, TransportErrorKind::Server, "typed ERR, got: {e}");
+    let text = e.to_string();
+    assert!(
+        text.contains("lease expired"),
+        "error should name the expired lease: {text}"
+    );
+    assert!(
+        waited < Duration::from_secs(5),
+        "released promptly, not at an io timeout ({waited:?})"
+    );
+
+    // the connection survived the ERR: the same worker can keep going
+    // once the dead peer is accounted for out of band
+    assert_eq!(client.clock(0), 1);
+    drop(client);
+    drop(svc);
+}
+
+/// Warm restart: quiesce, dump `ServerState`, kill the whole tier,
+/// restart a *new* service from the dump on a new port (advertising
+/// the original init digest), and point the same supervised client at
+/// it. The client's reconnect probe must accept the resumed revision
+/// counters and the combined run must be bitwise equal to a
+/// never-faulted one.
+#[test]
+fn warm_restart_from_state_dump_is_bitwise_invisible() {
+    let d = dims();
+    let init = ParamSet::zeros(&d);
+    let workers = 2;
+
+    let mut oracle = ShardedServer::new(init.clone(), workers, Policy::Async);
+    let (mut buf_a, mut seen_a, mut own_a) = fresh_read_state(&init);
+    drive(&mut oracle, &mut buf_a, &mut seen_a, &mut own_a, workers, 0..8);
+
+    // lifetime 1: service behind a pass-through proxy (no scripted
+    // faults — the "fault" here is the whole tier going away)
+    let server1 = Arc::new(ShardedServer::new(init.clone(), workers, Policy::Async));
+    let svc1 = ShardService::bind(Arc::clone(&server1), "127.0.0.1:0", 1)
+        .expect("bind service 1");
+    let proxy = ChaosProxy::spawn(svc1.addrs()[0], Vec::new(), 1)
+        .expect("spawn proxy");
+    let mut client = RemoteClient::connect_with(&[proxy.addr()], supervised())
+        .expect("connect")
+        .with_pipeline(4)
+        .expect("enable pipeline");
+
+    let (mut buf_b, mut seen_b, mut own_b) = fresh_read_state(&init);
+    drive(&mut client, &mut buf_b, &mut seen_b, &mut own_b, workers, 0..4);
+    client.flush().expect("quiesce the in-flight window");
+
+    // operator runbook: quiescent dump, then the process goes away
+    let state = server1.export_state();
+    let path = std::env::temp_dir()
+        .join(format!("sspdnn_warm_restart_{}.ssps", std::process::id()));
+    checkpoint::save_state(&path, &state).expect("save state dump");
+    proxy.kill_connections();
+    drop(svc1);
+    drop(server1);
+
+    // lifetime 2: a fresh process resumes from the dump — trained
+    // weights, revision counters, clock table — and advertises the
+    // *config-derived init* digest exactly like `serve --state`
+    let restored = checkpoint::load_state(&path).expect("load state dump");
+    let server2 = Arc::new(ShardedServer::from_state(restored));
+    let svc2 = ShardService::bind_with(
+        Arc::clone(&server2),
+        "127.0.0.1:0",
+        1,
+        ServiceOptions {
+            init_digest: Some(transport::param_digest(&init)),
+            ..ServiceOptions::default()
+        },
+    )
+    .expect("bind service 2");
+    proxy.retarget(svc2.addrs()[0]);
+
+    // the next op hits the dead connection; the supervisor redials
+    // through the retargeted proxy, revalidates the handshake, probes
+    // the revision floor, and the run continues as if nothing happened
+    drive(&mut client, &mut buf_b, &mut seen_b, &mut own_b, workers, 4..8);
+    assert!(client.reconnects() >= 1, "the restart forced a reconnect");
+    assert_eq!(
+        ParamServer::snapshot(&client),
+        oracle.snapshot(),
+        "final weights diverged across the warm restart"
+    );
+    assert_eq!(buf_a, buf_b, "gated views diverged");
+    assert_eq!(seen_a, seen_b, "gate vectors diverged");
+    assert_eq!(own_a, own_b, "own-version vectors diverged");
+
+    drop(client);
+    drop(svc2);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The one unabsorbable fault must be *loud*: a server that restarts
+/// cold (fresh state, same config/init) hands the reconnect probe
+/// regressed revision counters, and the client fails with a typed
+/// `Protocol` error telling the operator to warm-restart from a dump
+/// — instead of silently gate-skipping against bits it never held.
+#[test]
+fn cold_restart_is_detected_and_refused() {
+    let d = dims();
+    let init = ParamSet::zeros(&d);
+    let workers = 2;
+
+    let server1 = Arc::new(ShardedServer::new(init.clone(), workers, Policy::Async));
+    let svc1 = ShardService::bind(Arc::clone(&server1), "127.0.0.1:0", 1)
+        .expect("bind service 1");
+    let proxy = ChaosProxy::spawn(svc1.addrs()[0], Vec::new(), 1)
+        .expect("spawn proxy");
+    let mut client = RemoteClient::connect_with(&[proxy.addr()], supervised())
+        .expect("connect")
+        .with_pipeline(4)
+        .expect("enable pipeline");
+
+    // traffic raises the layer revisions and, through the gated reads,
+    // the client's revision floor
+    let (mut buf, mut seen, mut own) = fresh_read_state(&init);
+    drive(&mut client, &mut buf, &mut seen, &mut own, workers, 0..4);
+    client.flush().expect("quiesce");
+
+    // the tier dies and comes back COLD: same init (handshake digest
+    // matches!), but every revision and clock reset
+    proxy.kill_connections();
+    drop(svc1);
+    drop(server1);
+    let server2 = Arc::new(ShardedServer::new(init.clone(), workers, Policy::Async));
+    let svc2 = ShardService::bind(Arc::clone(&server2), "127.0.0.1:0", 1)
+        .expect("bind service 2");
+    proxy.retarget(svc2.addrs()[0]);
+
+    // a pipelined write may land in the dead socket's buffer and
+    // enqueue successfully; the flush forces the round-trip either way
+    let e = client
+        .try_apply_arrival(&msg(0, 4, 0, 0.5))
+        .and_then(|_| client.flush())
+        .expect_err("regressed revisions must be refused");
+    assert_eq!(e.kind, TransportErrorKind::Protocol, "typed, got: {e}");
+    assert!(
+        e.to_string().contains("restarted without its state"),
+        "error should diagnose the cold restart: {e}"
+    );
+    drop(client);
+    drop(svc2);
+    drop(proxy);
+}
