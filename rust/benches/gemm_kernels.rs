@@ -14,7 +14,11 @@
 
 mod support;
 
-use sspdnn::tensor::{gemm_ep, gemm_nt_ep, gemm_tn_ep, Epilogue, GemmPool, Matrix, Unary};
+use sspdnn::tensor::dispatch::{self, Selection};
+use sspdnn::tensor::{
+    gemm_ep, gemm_nt_ep, gemm_tn_ep, par_min_flops_for, Epilogue, GemmPool,
+    Matrix, Unary,
+};
 use sspdnn::util::json::Json;
 use sspdnn::util::{Pcg64, Stopwatch};
 
@@ -243,6 +247,101 @@ fn main() {
         println!();
     }
 
+    // ---- per-dispatch-path microkernels (§Perf pass 7) ----
+    // Same packed driver, every microkernel path the host supports,
+    // forced via the scoped dispatch override; scalar is the oracle the
+    // simd_speedup columns are relative to. The bf16 column packs both
+    // operand panels as bf16 (f32 compute) on the best path.
+    let paths = dispatch::available();
+    for &(m, k, n, key) in shapes {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut c = Matrix::zeros(m, n);
+        let mut scalar_g = 0.0f64;
+        print!("path    {m:>4}x{k:>4}x{n:>4} ");
+        for &path in paths {
+            let sel = Selection::new(path, false);
+            let dt = time(iters, || {
+                dispatch::with_selection(sel, || {
+                    gemm_ep(&a, &b, &mut c, Epilogue::Overwrite);
+                });
+            });
+            let g = gflops(m, k, n, dt);
+            print!(" {} {g:7.2}", path.as_str());
+            entries.push((
+                format!("gemm_{key}_{}_gflops", path.as_str()),
+                Json::num(g),
+            ));
+            if path == dispatch::KernelPath::Scalar {
+                scalar_g = g;
+            } else {
+                entries.push((
+                    format!("gemm_{key}_{}_speedup_vs_scalar", path.as_str()),
+                    Json::num(g / scalar_g),
+                ));
+            }
+        }
+        let bsel = Selection::new(dispatch::best(), true);
+        let dt = time(iters, || {
+            dispatch::with_selection(bsel, || {
+                gemm_ep(&a, &b, &mut c, Epilogue::Overwrite);
+            });
+        });
+        let g = gflops(m, k, n, dt);
+        print!("  {bsel} {g:7.2}");
+        entries.push((format!("gemm_{key}_bf16_gflops"), Json::num(g)));
+        entries.push((
+            format!("gemm_{key}_bf16_speedup_vs_scalar"),
+            Json::num(g / scalar_g),
+        ));
+        println!("  GFLOP/s");
+    }
+    println!();
+
+    // ---- per-path serial threshold (GemmPool::with_par_min_flops) ----
+    // 2mkn FLOPs per call: 128^3 ~ 4.2 MFLOP sits right at the scalar
+    // threshold, 256^3 ~ 33.5 MFLOP clears the SIMD one. Forcing the
+    // threshold to 0 (always band) vs MAX (always serial) shows where
+    // fan-out pays per path — the data behind PAR_MIN_FLOPS{,_SIMD}.
+    for &(dim, key) in &[(128usize, "128"), (256usize, "256")] {
+        if support::scale() == "quick" && key == "256" {
+            continue;
+        }
+        let a = Matrix::randn(dim, dim, 1.0, &mut rng);
+        let b = Matrix::randn(dim, dim, 1.0, &mut rng);
+        let mut c = Matrix::zeros(dim, dim);
+        for &path in paths {
+            let sel = Selection::new(path, false);
+            let mut serial = GemmPool::new(4)
+                .with_kernel(Some(sel))
+                .with_par_min_flops(Some(usize::MAX));
+            let dt_s =
+                time(iters, || serial.gemm(&a, &b, &mut c, Epilogue::Overwrite));
+            let mut banded = GemmPool::new(4)
+                .with_kernel(Some(sel))
+                .with_par_min_flops(Some(0));
+            let dt_b =
+                time(iters, || banded.gemm(&a, &b, &mut c, Epilogue::Overwrite));
+            let (gs, gb) =
+                (gflops(dim, dim, dim, dt_s), gflops(dim, dim, dim, dt_b));
+            println!(
+                "par_min {dim}^3 {:>6}: serial {gs:7.2}  banded(t4) {gb:7.2} \
+                 GFLOP/s  (default threshold {} MFLOP)",
+                path.as_str(),
+                par_min_flops_for(path) / 1_000_000
+            );
+            entries.push((
+                format!("par_sweep_{key}_{}_serial_gflops", path.as_str()),
+                Json::num(gs),
+            ));
+            entries.push((
+                format!("par_sweep_{key}_{}_banded_gflops", path.as_str()),
+                Json::num(gb),
+            ));
+        }
+        println!();
+    }
+
     // ---- fused epilogue vs unfused two extra passes ----
     {
         let (m, k, n) = (100usize, 256usize, 256usize);
@@ -316,6 +415,11 @@ fn main() {
         .collect();
     json.extend(entry_refs);
     json.push(("scale", Json::str(support::scale())));
+    // host/dispatch metadata so artifacts from different runners stay
+    // comparable (§Perf pass 7 satellite)
+    json.push(("cpu_features", Json::str(dispatch::detected_features())));
+    json.push(("dispatch_path", Json::str(dispatch::current().to_string())));
+    json.push(("available_paths", Json::str(dispatch::available_names())));
     let path = "bench_results/BENCH_gemm.json";
     match sspdnn::metrics::write_file(path, &Json::obj(json).to_string()) {
         Ok(()) => println!("\nwrote {path}"),

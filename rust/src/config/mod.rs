@@ -13,6 +13,7 @@ pub use toml::{parse_toml, TomlDoc, TomlValue};
 
 use crate::nn::{Activation, Loss};
 use crate::ssp::Policy;
+use crate::tensor::dispatch::{GemmKernel, Selection};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelConfig {
@@ -110,6 +111,24 @@ pub struct TrainConfig {
     /// `train.intra_op_threads`). Thread count never changes values
     /// (the packed backend is bitwise split-invariant).
     pub intra_op_threads: usize,
+    /// GEMM microkernel selection (`tensor::dispatch`): `auto` takes
+    /// the best path runtime CPU-feature detection finds; `scalar`
+    /// forces the bitwise oracle; `avx2`/`avx512`/`neon` pin a SIMD
+    /// path (rejected by `validate` if this host lacks the feature).
+    /// TOML `train.gemm_kernel`, CLI `--gemm-kernel`.
+    pub gemm_kernel: GemmKernel,
+    /// bf16 pack storage / f32 compute for the GEMM pack buffers:
+    /// halves pack memory traffic at one round-to-nearest-even per
+    /// operand read. TOML `train.gemm_bf16`, CLI `--gemm-bf16`.
+    pub gemm_bf16: bool,
+}
+
+impl TrainConfig {
+    /// Resolve the configured kernel choice against this host into the
+    /// concrete selection the engines run.
+    pub fn gemm_selection(&self) -> Result<Selection, String> {
+        Ok(Selection::new(self.gemm_kernel.resolve()?, self.gemm_bf16))
+    }
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -154,6 +173,8 @@ impl ExperimentConfig {
                 engine: Engine::Native,
                 artifact: Some("timit_scaled".into()),
                 intra_op_threads: 1,
+                gemm_kernel: GemmKernel::Auto,
+                gemm_bf16: false,
             },
         }
     }
@@ -198,6 +219,8 @@ impl ExperimentConfig {
                 engine: Engine::Native,
                 artifact: Some("imagenet_scaled".into()),
                 intra_op_threads: 1,
+                gemm_kernel: GemmKernel::Auto,
+                gemm_bf16: false,
             },
         }
     }
@@ -246,6 +269,8 @@ impl ExperimentConfig {
                 engine: Engine::Native,
                 artifact: Some("tiny".into()),
                 intra_op_threads: 1,
+                gemm_kernel: GemmKernel::Auto,
+                gemm_bf16: false,
             },
         }
     }
@@ -359,6 +384,15 @@ impl ExperimentConfig {
                     }
                     self.train.intra_op_threads = *n as usize
                 }
+                ("train", "gemm_kernel", Str(s)) => {
+                    self.train.gemm_kernel = GemmKernel::parse(s).ok_or_else(|| {
+                        format!(
+                            "bad train.gemm_kernel {s} \
+                             (auto|scalar|avx2|avx512|neon)"
+                        )
+                    })?
+                }
+                ("train", "gemm_bf16", Bool(b)) => self.train.gemm_bf16 = *b,
                 // the [sweep] table belongs to SweepConfig::apply_toml
                 // (the sweep harness) and [transport] to
                 // TransportConfig::apply_toml (the serve/--server
@@ -411,6 +445,9 @@ impl ExperimentConfig {
         }
         if self.train.intra_op_threads == 0 {
             return Err("train.intra_op_threads must be >= 1".into());
+        }
+        if let Err(e) = self.train.gemm_kernel.resolve() {
+            return Err(format!("train.gemm_kernel: {e}"));
         }
         if self.cluster.machines == 0 {
             return Err("need >= 1 machine".into());

@@ -398,7 +398,8 @@ pub fn run_experiment_with<S: ParamServer>(
         cfg.model.activation,
         cfg.model.loss,
     )
-    .with_intra_op_threads(cfg.train.intra_op_threads);
+    .with_intra_op_threads(cfg.train.intra_op_threads)
+    .with_gemm(cfg.train.gemm_selection().ok());
     let mut engine = opts
         .engine
         .take()
@@ -858,7 +859,8 @@ pub fn run_experiment_alloc_with<S: ParamServer>(
         cfg.model.activation,
         cfg.model.loss,
     )
-    .with_intra_op_threads(cfg.train.intra_op_threads);
+    .with_intra_op_threads(cfg.train.intra_op_threads)
+    .with_gemm(cfg.train.gemm_selection().ok());
     let mut engine = opts
         .engine
         .take()

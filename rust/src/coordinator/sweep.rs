@@ -228,7 +228,8 @@ fn calibrate(cfg: &ExperimentConfig, dataset: &Dataset) -> f64 {
         cfg.model.activation,
         cfg.model.loss,
     )
-    .with_intra_op_threads(cfg.train.intra_op_threads);
+    .with_intra_op_threads(cfg.train.intra_op_threads)
+    .with_gemm(cfg.train.gemm_selection().ok());
     let mut engine = EngineKind::Native(NativeEngine::new(mlp));
     let init = super::init_params(cfg);
     let idx: Vec<usize> =

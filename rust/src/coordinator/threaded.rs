@@ -438,7 +438,8 @@ pub fn native_factory(
         cfg.model.activation,
         cfg.model.loss,
     )
-    .with_intra_op_threads(cfg.train.intra_op_threads);
+    .with_intra_op_threads(cfg.train.intra_op_threads)
+    .with_gemm(cfg.train.gemm_selection().ok());
     Box::new(move |_p| {
         EngineKind::Native(super::engine::NativeEngine::new(mlp.clone()))
     })

@@ -22,6 +22,7 @@ use sspdnn::metrics;
 use sspdnn::runtime::{Manifest, PjrtEngine};
 use sspdnn::ssp::transport::{RemoteClient, ShardService};
 use sspdnn::ssp::{Policy, ShardedServer};
+use sspdnn::tensor::dispatch::{self, GemmKernel};
 use sspdnn::theory;
 use sspdnn::util::timer::fmt_duration;
 
@@ -86,6 +87,11 @@ FLAGS (train/speedup/theory):
   --policy <ssp|bsp|async>
   --clocks N  --eta F  --batch N  --samples N
   --threads T                 intra-op GEMM threads per worker (default 1)
+  --gemm-kernel <auto|scalar|avx2|avx512|neon>
+                              GEMM microkernel dispatch path (default auto:
+                              best available; env SSPDNN_GEMM_KERNEL also
+                              honoured when no flag/config is given)
+  --gemm-bf16                 pack GEMM operand panels as bf16 (f32 compute)
   --engine <native|pjrt>      gradient engine (pjrt needs artifacts/)
   --out <dir>                 write curve CSV + run JSON
 
@@ -199,7 +205,20 @@ fn build_config_with(
     if let Some(t) = args.get_usize("threads").map_err(|e| e.to_string())? {
         cfg.train.intra_op_threads = t;
     }
+    if let Some(k) = args.get("gemm-kernel") {
+        cfg.train.gemm_kernel = GemmKernel::parse(k).ok_or_else(|| {
+            format!("bad --gemm-kernel {k:?} (auto|scalar|avx2|avx512|neon)")
+        })?;
+    }
+    if args.get_bool("gemm-bf16") {
+        cfg.train.gemm_bf16 = true;
+    }
     cfg.validate()?;
+    // every GEMM that doesn't carry an explicit pool selection (serial
+    // free functions, ad-hoc pools in sweeps/theory) follows the config
+    if let Ok(sel) = cfg.train.gemm_selection() {
+        dispatch::set_default(sel);
+    }
     Ok(cfg)
 }
 
@@ -272,6 +291,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         cfg.model.n_params(),
         if args.get("engine") == Some("pjrt") { "pjrt" } else { "native" },
     );
+    println!("gemm: {}", dispatch::describe(dispatch::current()));
     let dataset = build_dataset(&cfg);
     let run = match args.get("server") {
         None => run_experiment_on(&cfg, opts, &dataset),
@@ -483,6 +503,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             cfg.model.dims.len() - 1,
         ),
     }
+    println!("gemm: {}", dispatch::describe(dispatch::current()));
     for (g, a) in svc.addrs().iter().enumerate() {
         match group {
             None => println!("  group {g}: {a}"),

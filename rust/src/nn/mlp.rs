@@ -8,6 +8,7 @@
 //! on the backward delta, and the 1/B scaling on the weight gradient.
 //! None of those cost a separate pass over the matrices anymore.
 
+use crate::tensor::dispatch::Selection;
 use crate::tensor::{Epilogue, GemmPool, Matrix, Unary};
 
 use super::loss::{loss_value, output_delta_into};
@@ -26,6 +27,11 @@ pub struct Mlp {
     /// worker-level parallelism owns the cores unless the run says
     /// otherwise). Applied to workspaces built by this model.
     pub intra_op_threads: usize,
+    /// GEMM microkernel selection pinned onto this model's pools
+    /// (`None` = follow `tensor::dispatch::current()` per call). Set
+    /// from `TrainConfig::gemm_selection()` by the coordinator layers
+    /// so one resolve covers the whole run.
+    pub gemm: Option<Selection>,
 }
 
 /// Reusable per-batch buffers: activations z_1..z_M (the minibatch input
@@ -57,6 +63,7 @@ impl Mlp {
             activation,
             loss,
             intra_op_threads: 1,
+            gemm: None,
         }
     }
 
@@ -65,6 +72,13 @@ impl Mlp {
     /// backend is bitwise identical for every split.
     pub fn with_intra_op_threads(mut self, threads: usize) -> Mlp {
         self.intra_op_threads = threads.max(1);
+        self
+    }
+
+    /// Builder: pin the GEMM microkernel selection for this model's
+    /// pools (`None` = follow the process-wide dispatch per call).
+    pub fn with_gemm(mut self, gemm: Option<Selection>) -> Mlp {
+        self.gemm = gemm;
         self
     }
 
@@ -83,8 +97,8 @@ impl Mlp {
         // compare against the clamped value GemmPool::new will report, so
         // a hand-built Mlp with intra_op_threads = 0 can't force a pool
         // rebuild (and its cold pack buffers) on every call
-        if ws.gemm.threads() != self.intra_op_threads.max(1) {
-            ws.gemm = GemmPool::new(self.intra_op_threads);
+        if ws.gemm.threads() != self.intra_op_threads.max(1) || ws.gemm.kernel() != self.gemm {
+            ws.gemm = GemmPool::new(self.intra_op_threads).with_kernel(self.gemm);
         }
         if ws.batch == batch
             && ws.acts.len() == self.dims.len() - 1

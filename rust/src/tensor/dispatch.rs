@@ -1,0 +1,408 @@
+//! Runtime CPU-feature dispatch for the GEMM microkernels (§Perf pass 7).
+//!
+//! The blocked driver in `ops.rs` is kernel-agnostic: every microkernel
+//! consumes the same packed micro-panels (`pack.rs`) and fills the same
+//! accumulator tile, so *which* body runs — the portable scalar kernel
+//! (the bitwise oracle, unchanged since §Perf pass 5) or an explicit
+//! `std::arch` SIMD kernel (`kernels_x86.rs` / `kernels_neon.rs`) — is a
+//! per-call [`Selection`] resolved here from one-time runtime feature
+//! detection plus overrides.
+//!
+//! Precedence, innermost wins:
+//!
+//! 1. [`with_selection`] — scoped thread-local override; the property
+//!    suite uses it to pit every path against the scalar oracle inside
+//!    one process;
+//! 2. [`set_default`] — process-wide selection installed by the CLI /
+//!    config plumbing (`train.gemm_kernel`, `--gemm-kernel`,
+//!    `train.gemm_bf16`, `--gemm-bf16`);
+//! 3. `SSPDNN_GEMM_KERNEL` / `SSPDNN_GEMM_BF16` environment variables
+//!    (the CI test matrix runs the whole suite under `scalar` and
+//!    `auto` this way);
+//! 4. the best path the host supports ([`best`]).
+//!
+//! Forcing `scalar` reproduces the pre-dispatch engine bit for bit;
+//! SIMD paths change numerics only through FMA contraction (documented
+//! tolerance: `rust/EXPERIMENTS.md` §Perf pass 7).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// A concrete microkernel implementation the blocked driver can run.
+/// Register layouts (MR×NR per path) are documented in the kernel
+/// modules and `rust/EXPERIMENTS.md` §Perf pass 7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Portable 8×8 kernel — the bitwise oracle (§Perf pass 5 code).
+    Scalar,
+    /// AVX2/FMA 8×8: eight 256-bit row accumulators.
+    Avx2,
+    /// AVX-512F 8×16: eight 512-bit row accumulators (16-wide panels).
+    Avx512,
+    /// AArch64 NEON 8×8: sixteen 128-bit accumulators (two per row).
+    Neon,
+}
+
+impl KernelPath {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Avx512 => "avx512",
+            KernelPath::Neon => "neon",
+        }
+    }
+
+    /// B micro-panel width this path packs and consumes: the AVX-512
+    /// kernel runs a 16-wide register tile, everything else 8. Widening
+    /// NR never reorders any C element's k-accumulation, so panel width
+    /// is value-neutral (only KC blocking touches summation order).
+    pub(crate) fn nr(self) -> usize {
+        match self {
+            KernelPath::Avx512 => 16,
+            _ => 8,
+        }
+    }
+}
+
+/// What the driver actually runs: a microkernel path plus the pack
+/// storage mode (f32, or bf16-storage/f32-compute which halves pack
+/// buffer traffic at a rounding cost — see `pack.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Selection {
+    pub path: KernelPath,
+    pub bf16: bool,
+}
+
+impl Selection {
+    pub fn new(path: KernelPath, bf16: bool) -> Selection {
+        Selection { path, bf16 }
+    }
+}
+
+impl std::fmt::Display for Selection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.path.as_str())?;
+        if self.bf16 {
+            write!(f, "+bf16")?;
+        }
+        Ok(())
+    }
+}
+
+/// Config-facing kernel choice (`train.gemm_kernel`, `--gemm-kernel`,
+/// `SSPDNN_GEMM_KERNEL`): `auto` defers to env-then-detection, anything
+/// else pins a path (rejected at resolve time if the host lacks it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKernel {
+    Auto,
+    Force(KernelPath),
+}
+
+impl GemmKernel {
+    pub fn parse(s: &str) -> Option<GemmKernel> {
+        match s {
+            "auto" => Some(GemmKernel::Auto),
+            "scalar" => Some(GemmKernel::Force(KernelPath::Scalar)),
+            "avx2" => Some(GemmKernel::Force(KernelPath::Avx2)),
+            "avx512" => Some(GemmKernel::Force(KernelPath::Avx512)),
+            "neon" => Some(GemmKernel::Force(KernelPath::Neon)),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GemmKernel::Auto => "auto",
+            GemmKernel::Force(p) => p.as_str(),
+        }
+    }
+
+    /// Resolve against this host: `Auto` follows the env override then
+    /// the best detected path; a forced path must be available.
+    pub fn resolve(self) -> Result<KernelPath, String> {
+        match self {
+            GemmKernel::Auto => Ok(env_default().path),
+            GemmKernel::Force(p) => {
+                if available().contains(&p) {
+                    Ok(p)
+                } else {
+                    Err(format!(
+                        "gemm kernel {:?} is not supported on this host \
+                         (available: {})",
+                        p.as_str(),
+                        available_names()
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// Every microkernel path this host can run, scalar first, fastest
+/// last. Detection runs once per process.
+pub fn available() -> &'static [KernelPath] {
+    static AVAIL: OnceLock<Vec<KernelPath>> = OnceLock::new();
+    AVAIL.get_or_init(|| {
+        let mut v = vec![KernelPath::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                v.push(KernelPath::Avx2);
+            }
+            if is_x86_feature_detected!("avx512f") {
+                v.push(KernelPath::Avx512);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                v.push(KernelPath::Neon);
+            }
+        }
+        v
+    })
+}
+
+/// Comma-joined [`available`] names (bench metadata / error messages).
+pub fn available_names() -> String {
+    available()
+        .iter()
+        .map(|p| p.as_str())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// The fastest path this host supports.
+pub fn best() -> KernelPath {
+    *available().last().expect("scalar is always available")
+}
+
+/// The host's relevant detected CPU features, comma-joined — recorded
+/// in BENCH_gemm.json and the startup log so artifacts from different
+/// hosts stay comparable.
+pub fn detected_features() -> &'static str {
+    static FEATS: OnceLock<String> = OnceLock::new();
+    FEATS.get_or_init(|| {
+        let mut f: Vec<&str> = Vec::new();
+        #[cfg(target_arch = "x86_64")]
+        {
+            for (name, on) in [
+                ("sse2", is_x86_feature_detected!("sse2")),
+                ("avx", is_x86_feature_detected!("avx")),
+                ("avx2", is_x86_feature_detected!("avx2")),
+                ("fma", is_x86_feature_detected!("fma")),
+                ("avx512f", is_x86_feature_detected!("avx512f")),
+                ("avx512bw", is_x86_feature_detected!("avx512bw")),
+                ("avx512vl", is_x86_feature_detected!("avx512vl")),
+            ] {
+                if on {
+                    f.push(name);
+                }
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                f.push("neon");
+            }
+        }
+        if f.is_empty() {
+            f.push("none");
+        }
+        f.join(",")
+    })
+}
+
+// --- selection state -------------------------------------------------------
+//
+// One AtomicU8 holds the process-wide default (0 = unset; otherwise
+// 1 + path index, bit 4 = bf16); a thread-local Cell with the same
+// encoding carries the scoped test override. Encoding keeps the hot
+// `current()` read a single atomic load.
+
+const BF16_BIT: u8 = 0x10;
+
+fn encode(sel: Selection) -> u8 {
+    let p = match sel.path {
+        KernelPath::Scalar => 1,
+        KernelPath::Avx2 => 2,
+        KernelPath::Avx512 => 3,
+        KernelPath::Neon => 4,
+    };
+    p | if sel.bf16 { BF16_BIT } else { 0 }
+}
+
+fn decode(v: u8) -> Option<Selection> {
+    let path = match v & 0xF {
+        1 => KernelPath::Scalar,
+        2 => KernelPath::Avx2,
+        3 => KernelPath::Avx512,
+        4 => KernelPath::Neon,
+        _ => return None,
+    };
+    Some(Selection {
+        path,
+        bf16: v & BF16_BIT != 0,
+    })
+}
+
+static DEFAULT: AtomicU8 = AtomicU8::new(0);
+
+thread_local! {
+    static TLS_OVERRIDE: Cell<u8> = const { Cell::new(0) };
+}
+
+/// The env-var layer: `SSPDNN_GEMM_KERNEL` (auto|scalar|avx2|avx512|
+/// neon) and `SSPDNN_GEMM_BF16` (1/true). Unknown or host-unsupported
+/// values fall back to detection with a one-time warning rather than
+/// aborting — a bench script must not die on a stale env.
+fn env_default() -> Selection {
+    static ENV: OnceLock<Selection> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        let path = match std::env::var("SSPDNN_GEMM_KERNEL") {
+            Ok(s) => match GemmKernel::parse(&s) {
+                Some(GemmKernel::Auto) | None => {
+                    if GemmKernel::parse(&s).is_none() {
+                        eprintln!(
+                            "warning: SSPDNN_GEMM_KERNEL={s:?} not recognised; \
+                             using auto"
+                        );
+                    }
+                    best()
+                }
+                Some(GemmKernel::Force(p)) => {
+                    if available().contains(&p) {
+                        p
+                    } else {
+                        eprintln!(
+                            "warning: SSPDNN_GEMM_KERNEL={s:?} unavailable on \
+                             this host (available: {}); using {}",
+                            available_names(),
+                            best().as_str()
+                        );
+                        best()
+                    }
+                }
+            },
+            Err(_) => best(),
+        };
+        let bf16 = matches!(
+            std::env::var("SSPDNN_GEMM_BF16").as_deref(),
+            Ok("1") | Ok("true") | Ok("yes")
+        );
+        Selection { path, bf16 }
+    })
+}
+
+/// Install the process-wide default selection (CLI / config plumbing).
+pub fn set_default(sel: Selection) {
+    DEFAULT.store(encode(sel), Ordering::Relaxed);
+}
+
+/// The selection a GEMM entered right now would run: thread-local
+/// override, else process default, else env/auto.
+pub fn current() -> Selection {
+    if let Some(sel) = decode(TLS_OVERRIDE.with(|c| c.get())) {
+        return sel;
+    }
+    if let Some(sel) = decode(DEFAULT.load(Ordering::Relaxed)) {
+        return sel;
+    }
+    env_default()
+}
+
+/// Run `f` with `sel` forced for GEMMs entered **on this thread** (the
+/// pool's band workers inherit the entry point's resolved selection, so
+/// pooled calls made inside `f` are covered too). Restores the previous
+/// override on exit; used by the property suite to compare paths.
+pub fn with_selection<R>(sel: Selection, f: impl FnOnce() -> R) -> R {
+    TLS_OVERRIDE.with(|c| {
+        let prev = c.replace(encode(sel));
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
+/// One-line dispatch summary for startup logs and bench metadata, e.g.
+/// `avx512 (bf16 off) | host features sse2,avx,avx2,fma,avx512f | available scalar,avx2,avx512`.
+pub fn describe(sel: Selection) -> String {
+    format!(
+        "{} (bf16 {}) | host features {} | available {}",
+        sel.path.as_str(),
+        if sel.bf16 { "on" } else { "off" },
+        detected_features(),
+        available_names(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_available_and_first() {
+        assert_eq!(available()[0], KernelPath::Scalar);
+        assert!(available().contains(&best()));
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for name in ["auto", "scalar", "avx2", "avx512", "neon"] {
+            let k = GemmKernel::parse(name).unwrap();
+            assert_eq!(k.as_str(), name);
+        }
+        assert!(GemmKernel::parse("sse9").is_none());
+    }
+
+    #[test]
+    fn forced_scalar_resolves_everywhere() {
+        assert_eq!(
+            GemmKernel::Force(KernelPath::Scalar).resolve().unwrap(),
+            KernelPath::Scalar
+        );
+        // auto resolves to something the host supports
+        let auto = GemmKernel::Auto.resolve().unwrap();
+        assert!(available().contains(&auto));
+    }
+
+    #[test]
+    fn tls_override_scopes_and_restores() {
+        let outer = current();
+        let forced = Selection::new(KernelPath::Scalar, true);
+        let seen = with_selection(forced, current);
+        assert_eq!(seen, forced);
+        assert_eq!(current(), outer, "override must not leak");
+        // nested override wins, then unwinds
+        with_selection(forced, || {
+            let inner = Selection::new(KernelPath::Scalar, false);
+            assert_eq!(with_selection(inner, current), inner);
+            assert_eq!(current(), forced);
+        });
+    }
+
+    #[test]
+    fn encoding_round_trips() {
+        for path in [
+            KernelPath::Scalar,
+            KernelPath::Avx2,
+            KernelPath::Avx512,
+            KernelPath::Neon,
+        ] {
+            for bf16 in [false, true] {
+                let sel = Selection::new(path, bf16);
+                assert_eq!(decode(encode(sel)), Some(sel));
+            }
+        }
+        assert_eq!(decode(0), None);
+    }
+
+    #[test]
+    fn describe_mentions_path_and_features() {
+        let s = describe(Selection::new(KernelPath::Scalar, false));
+        assert!(s.contains("scalar"), "{s}");
+        assert!(s.contains("available"), "{s}");
+    }
+}

@@ -1,0 +1,170 @@
+//! AArch64 NEON GEMM microkernels (§Perf pass 7).
+//!
+//! Register layout: **8×8 with sixteen 128-bit q-register accumulators**
+//! — each tile row is a low/high pair of `float32x4_t`; per k-step: two
+//! 128-bit loads of the B slice and eight `fmla`-by-scalar pairs
+//! (`vfmaq_n_f32`) against broadcast A elements.
+//!
+//! bf16 variants widen the 16-bit storage lanes with `ushll`-equivalent
+//! moves (`vmovl_u16` + 16-bit left shift — exact) and accumulate in
+//! f32. Same pack layout and numerics contract as `kernels_x86.rs`:
+//! fused multiply-adds differ from the scalar oracle only by skipped
+//! intermediate roundings; summation order per C element is identical.
+//!
+//! Every function is `unsafe fn` + `#[target_feature]`: callers must
+//! have verified NEON via `tensor::dispatch` before taking these paths.
+
+use std::arch::aarch64::*;
+
+use super::ops::Acc;
+use super::pack::{MR, NR};
+
+/// Dense NEON 8×8 microkernel. Overwrites the 8-wide prefix of each
+/// `acc` row (the accumulator tile is freshly zeroed by the driver).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn mk_f32_neon(kc: usize, ap: &[f32], bp: &[f32], acc: &mut Acc) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut lo = [vdupq_n_f32(0.0); MR];
+    let mut hi = [vdupq_n_f32(0.0); MR];
+    for p in 0..kc {
+        let b0 = vld1q_f32(b.add(p * NR));
+        let b1 = vld1q_f32(b.add(p * NR + 4));
+        let ar = a.add(p * MR);
+        for r in 0..MR {
+            let av = *ar.add(r);
+            lo[r] = vfmaq_n_f32(lo[r], b0, av);
+            hi[r] = vfmaq_n_f32(hi[r], b1, av);
+        }
+    }
+    store(acc, &lo, &hi);
+}
+
+/// Sparse NEON 8×8 microkernel: visits only the k-slices in `idx`.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn mk_f32_sparse_neon(idx: &[u32], ap: &[f32], bp: &[f32], acc: &mut Acc) {
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut lo = [vdupq_n_f32(0.0); MR];
+    let mut hi = [vdupq_n_f32(0.0); MR];
+    for &p in idx {
+        let p = p as usize;
+        let b0 = vld1q_f32(b.add(p * NR));
+        let b1 = vld1q_f32(b.add(p * NR + 4));
+        let ar = a.add(p * MR);
+        for r in 0..MR {
+            let av = *ar.add(r);
+            lo[r] = vfmaq_n_f32(lo[r], b0, av);
+            hi[r] = vfmaq_n_f32(hi[r], b1, av);
+        }
+    }
+    store(acc, &lo, &hi);
+}
+
+/// Dense NEON 8×8 over bf16-packed panels (widen-on-load, f32 compute).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn mk_bf16_neon(kc: usize, ap: &[u16], bp: &[u16], acc: &mut Acc) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut lo = [vdupq_n_f32(0.0); MR];
+    let mut hi = [vdupq_n_f32(0.0); MR];
+    for p in 0..kc {
+        let h = vld1q_u16(b.add(p * NR));
+        let b0 = widen4(vget_low_u16(h));
+        let b1 = widen4(vget_high_u16(h));
+        let ar = a.add(p * MR);
+        for r in 0..MR {
+            let av = f32::from_bits((*ar.add(r) as u32) << 16);
+            lo[r] = vfmaq_n_f32(lo[r], b0, av);
+            hi[r] = vfmaq_n_f32(hi[r], b1, av);
+        }
+    }
+    store(acc, &lo, &hi);
+}
+
+/// Sparse NEON 8×8 over bf16-packed panels.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn mk_bf16_sparse_neon(idx: &[u32], ap: &[u16], bp: &[u16], acc: &mut Acc) {
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut lo = [vdupq_n_f32(0.0); MR];
+    let mut hi = [vdupq_n_f32(0.0); MR];
+    for &p in idx {
+        let p = p as usize;
+        let h = vld1q_u16(b.add(p * NR));
+        let b0 = widen4(vget_low_u16(h));
+        let b1 = widen4(vget_high_u16(h));
+        let ar = a.add(p * MR);
+        for r in 0..MR {
+            let av = f32::from_bits((*ar.add(r) as u32) << 16);
+            lo[r] = vfmaq_n_f32(lo[r], b0, av);
+            hi[r] = vfmaq_n_f32(hi[r], b1, av);
+        }
+    }
+    store(acc, &lo, &hi);
+}
+
+/// Widen 4 bf16 storage lanes to f32: zero-extend u16→u32, shift into
+/// the high half. Exact.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn widen4(h: uint16x4_t) -> float32x4_t {
+    vreinterpretq_f32_u32(vshlq_n_u32::<16>(vmovl_u16(h)))
+}
+
+/// Store the low/high accumulator pairs into the (64-byte-aligned,
+/// `NR_MAX`-pitched) accumulator tile.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn store(acc: &mut Acc, lo: &[float32x4_t; MR], hi: &[float32x4_t; MR]) {
+    for r in 0..MR {
+        vst1q_f32(acc.0[r].as_mut_ptr(), lo[r]);
+        vst1q_f32(acc.0[r].as_mut_ptr().add(4), hi[r]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::pack::{pack_a, pack_b, PackBuf, View};
+
+    #[test]
+    fn neon_dense_matches_scalar_reference() {
+        if !std::arch::is_aarch64_feature_detected!("neon") {
+            return;
+        }
+        let kc = 23;
+        let am: Vec<f32> = (0..MR * kc).map(|x| ((x * 37 % 97) as f32 - 48.0) * 0.03).collect();
+        let bm: Vec<f32> = (0..kc * NR).map(|x| ((x * 53 % 89) as f32 - 44.0) * 0.05).collect();
+        let mut buf = PackBuf::new();
+        pack_a(
+            View { data: &am, rs: kc, cs: 1 },
+            0,
+            MR,
+            0,
+            kc,
+            &mut buf,
+            false,
+            false,
+        );
+        pack_b(View { data: &bm, rs: NR, cs: 1 }, 0, kc, 0, NR, NR, &mut buf, false);
+        let mut acc = Acc::new();
+        unsafe { mk_f32_neon(kc, buf.a.f32(), buf.b.f32(), &mut acc) };
+        for r in 0..MR {
+            for c in 0..NR {
+                let mut want = 0.0f32;
+                for p in 0..kc {
+                    want += buf.a.f32()[p * MR + r] * buf.b.f32()[p * NR + c];
+                }
+                let tol = f32::EPSILON * (kc as f32).sqrt() * want.abs().max(1.0) * 8.0;
+                assert!(
+                    (acc.0[r][c] - want).abs() <= tol,
+                    "({r},{c}): {} vs {want}",
+                    acc.0[r][c]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,560 @@
+//! x86-64 GEMM microkernels (§Perf pass 7): explicit AVX2/FMA and
+//! AVX-512F bodies behind the dispatch seam in `ops.rs`.
+//!
+//! Register layouts (see `rust/EXPERIMENTS.md` §Perf pass 7):
+//!
+//! * **AVX2/FMA 8×8** — eight ymm accumulators, one 8-wide f32 vector
+//!   per tile row; per k-step: one aligned 256-bit load of the B slice,
+//!   eight scalar broadcasts of the A slice, eight `vfmadd231ps`.
+//! * **AVX-512F 8×16** — eight zmm accumulators over 16-wide B panels
+//!   (`NR_MAX`); same shape with 512-bit loads and broadcasts.
+//!
+//! All kernels assume the §Perf pass 7 pack layout: 64-byte-aligned
+//! buffers whose micro-panel k-slices sit at multiples of the vector
+//! width, so every B load is aligned. A-panel values are consumed via
+//! broadcasts (no alignment requirement beyond the element).
+//!
+//! bf16 variants widen the 16-bit storage lanes to f32 on load
+//! (`vpmovzxwd` + 16-bit left shift — exact) and accumulate in f32, so
+//! the only accuracy loss is the round-to-nearest-even at pack time.
+//!
+//! Numerics: the FMA contraction skips the intermediate rounding of the
+//! scalar oracle's `mul`+`add`, so results differ from scalar within
+//! the ULP envelope documented in `tests/property_gemm.rs`. Summation
+//! *order* per C element is identical (p ascending within each k-block).
+//!
+//! Every function is `unsafe fn` + `#[target_feature]`: callers must
+//! have verified the feature via `tensor::dispatch` (one-time runtime
+//! detection) before taking these paths.
+
+use std::arch::x86_64::*;
+
+use super::ops::Acc;
+use super::pack::{MR, NR, NR_MAX};
+
+/// Dense AVX2/FMA 8×8 microkernel: full `kc`-deep accumulation over one
+/// packed A micro-panel (`kc·MR` f32) and one packed B micro-panel
+/// (`kc·NR` f32). Overwrites the 8-wide prefix of each `acc` row (the
+/// accumulator tile must be freshly zeroed, as the driver guarantees).
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn mk_f32_avx2(kc: usize, ap: &[f32], bp: &[f32], acc: &mut Acc) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut c0 = _mm256_setzero_ps();
+    let mut c1 = _mm256_setzero_ps();
+    let mut c2 = _mm256_setzero_ps();
+    let mut c3 = _mm256_setzero_ps();
+    let mut c4 = _mm256_setzero_ps();
+    let mut c5 = _mm256_setzero_ps();
+    let mut c6 = _mm256_setzero_ps();
+    let mut c7 = _mm256_setzero_ps();
+    for p in 0..kc {
+        let bv = _mm256_load_ps(b.add(p * NR));
+        let ar = a.add(p * MR);
+        c0 = _mm256_fmadd_ps(_mm256_set1_ps(*ar), bv, c0);
+        c1 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(1)), bv, c1);
+        c2 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(2)), bv, c2);
+        c3 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(3)), bv, c3);
+        c4 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(4)), bv, c4);
+        c5 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(5)), bv, c5);
+        c6 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(6)), bv, c6);
+        c7 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(7)), bv, c7);
+    }
+    store8(acc, [c0, c1, c2, c3, c4, c5, c6, c7]);
+}
+
+/// Sparse AVX2/FMA 8×8 microkernel: visits only the k-slices in `idx`
+/// (the packing-time panel plan). Skipped terms are exact zeros.
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn mk_f32_sparse_avx2(idx: &[u32], ap: &[f32], bp: &[f32], acc: &mut Acc) {
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut c0 = _mm256_setzero_ps();
+    let mut c1 = _mm256_setzero_ps();
+    let mut c2 = _mm256_setzero_ps();
+    let mut c3 = _mm256_setzero_ps();
+    let mut c4 = _mm256_setzero_ps();
+    let mut c5 = _mm256_setzero_ps();
+    let mut c6 = _mm256_setzero_ps();
+    let mut c7 = _mm256_setzero_ps();
+    for &p in idx {
+        let p = p as usize;
+        let bv = _mm256_load_ps(b.add(p * NR));
+        let ar = a.add(p * MR);
+        c0 = _mm256_fmadd_ps(_mm256_set1_ps(*ar), bv, c0);
+        c1 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(1)), bv, c1);
+        c2 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(2)), bv, c2);
+        c3 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(3)), bv, c3);
+        c4 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(4)), bv, c4);
+        c5 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(5)), bv, c5);
+        c6 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(6)), bv, c6);
+        c7 = _mm256_fmadd_ps(_mm256_set1_ps(*ar.add(7)), bv, c7);
+    }
+    store8(acc, [c0, c1, c2, c3, c4, c5, c6, c7]);
+}
+
+/// Dense AVX2/FMA 8×8 over bf16-packed panels: widen each 8-lane u16
+/// slice of B to f32 (`vpmovzxwd` + `<<16` — exact) and broadcast each
+/// A element through the same bit path; accumulate in f32.
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn mk_bf16_avx2(kc: usize, ap: &[u16], bp: &[u16], acc: &mut Acc) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut c0 = _mm256_setzero_ps();
+    let mut c1 = _mm256_setzero_ps();
+    let mut c2 = _mm256_setzero_ps();
+    let mut c3 = _mm256_setzero_ps();
+    let mut c4 = _mm256_setzero_ps();
+    let mut c5 = _mm256_setzero_ps();
+    let mut c6 = _mm256_setzero_ps();
+    let mut c7 = _mm256_setzero_ps();
+    for p in 0..kc {
+        let bv = widen8(b.add(p * NR));
+        let ar = a.add(p * MR);
+        c0 = _mm256_fmadd_ps(bset1(*ar), bv, c0);
+        c1 = _mm256_fmadd_ps(bset1(*ar.add(1)), bv, c1);
+        c2 = _mm256_fmadd_ps(bset1(*ar.add(2)), bv, c2);
+        c3 = _mm256_fmadd_ps(bset1(*ar.add(3)), bv, c3);
+        c4 = _mm256_fmadd_ps(bset1(*ar.add(4)), bv, c4);
+        c5 = _mm256_fmadd_ps(bset1(*ar.add(5)), bv, c5);
+        c6 = _mm256_fmadd_ps(bset1(*ar.add(6)), bv, c6);
+        c7 = _mm256_fmadd_ps(bset1(*ar.add(7)), bv, c7);
+    }
+    store8(acc, [c0, c1, c2, c3, c4, c5, c6, c7]);
+}
+
+/// Sparse AVX2/FMA 8×8 over bf16-packed panels.
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn mk_bf16_sparse_avx2(idx: &[u32], ap: &[u16], bp: &[u16], acc: &mut Acc) {
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut c0 = _mm256_setzero_ps();
+    let mut c1 = _mm256_setzero_ps();
+    let mut c2 = _mm256_setzero_ps();
+    let mut c3 = _mm256_setzero_ps();
+    let mut c4 = _mm256_setzero_ps();
+    let mut c5 = _mm256_setzero_ps();
+    let mut c6 = _mm256_setzero_ps();
+    let mut c7 = _mm256_setzero_ps();
+    for &p in idx {
+        let p = p as usize;
+        let bv = widen8(b.add(p * NR));
+        let ar = a.add(p * MR);
+        c0 = _mm256_fmadd_ps(bset1(*ar), bv, c0);
+        c1 = _mm256_fmadd_ps(bset1(*ar.add(1)), bv, c1);
+        c2 = _mm256_fmadd_ps(bset1(*ar.add(2)), bv, c2);
+        c3 = _mm256_fmadd_ps(bset1(*ar.add(3)), bv, c3);
+        c4 = _mm256_fmadd_ps(bset1(*ar.add(4)), bv, c4);
+        c5 = _mm256_fmadd_ps(bset1(*ar.add(5)), bv, c5);
+        c6 = _mm256_fmadd_ps(bset1(*ar.add(6)), bv, c6);
+        c7 = _mm256_fmadd_ps(bset1(*ar.add(7)), bv, c7);
+    }
+    store8(acc, [c0, c1, c2, c3, c4, c5, c6, c7]);
+}
+
+/// Dense AVX-512F 8×16 microkernel over 16-wide (`NR_MAX`) B panels:
+/// eight zmm accumulators, one aligned 512-bit B load per k-step.
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn mk_f32_avx512(kc: usize, ap: &[f32], bp: &[f32], acc: &mut Acc) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR_MAX);
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut c0 = _mm512_setzero_ps();
+    let mut c1 = _mm512_setzero_ps();
+    let mut c2 = _mm512_setzero_ps();
+    let mut c3 = _mm512_setzero_ps();
+    let mut c4 = _mm512_setzero_ps();
+    let mut c5 = _mm512_setzero_ps();
+    let mut c6 = _mm512_setzero_ps();
+    let mut c7 = _mm512_setzero_ps();
+    for p in 0..kc {
+        let bv = _mm512_load_ps(b.add(p * NR_MAX));
+        let ar = a.add(p * MR);
+        c0 = _mm512_fmadd_ps(_mm512_set1_ps(*ar), bv, c0);
+        c1 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(1)), bv, c1);
+        c2 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(2)), bv, c2);
+        c3 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(3)), bv, c3);
+        c4 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(4)), bv, c4);
+        c5 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(5)), bv, c5);
+        c6 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(6)), bv, c6);
+        c7 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(7)), bv, c7);
+    }
+    store16(acc, [c0, c1, c2, c3, c4, c5, c6, c7]);
+}
+
+/// Sparse AVX-512F 8×16 microkernel.
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn mk_f32_sparse_avx512(idx: &[u32], ap: &[f32], bp: &[f32], acc: &mut Acc) {
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut c0 = _mm512_setzero_ps();
+    let mut c1 = _mm512_setzero_ps();
+    let mut c2 = _mm512_setzero_ps();
+    let mut c3 = _mm512_setzero_ps();
+    let mut c4 = _mm512_setzero_ps();
+    let mut c5 = _mm512_setzero_ps();
+    let mut c6 = _mm512_setzero_ps();
+    let mut c7 = _mm512_setzero_ps();
+    for &p in idx {
+        let p = p as usize;
+        let bv = _mm512_load_ps(b.add(p * NR_MAX));
+        let ar = a.add(p * MR);
+        c0 = _mm512_fmadd_ps(_mm512_set1_ps(*ar), bv, c0);
+        c1 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(1)), bv, c1);
+        c2 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(2)), bv, c2);
+        c3 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(3)), bv, c3);
+        c4 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(4)), bv, c4);
+        c5 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(5)), bv, c5);
+        c6 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(6)), bv, c6);
+        c7 = _mm512_fmadd_ps(_mm512_set1_ps(*ar.add(7)), bv, c7);
+    }
+    store16(acc, [c0, c1, c2, c3, c4, c5, c6, c7]);
+}
+
+/// Dense AVX-512F 8×16 over bf16-packed panels.
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn mk_bf16_avx512(kc: usize, ap: &[u16], bp: &[u16], acc: &mut Acc) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR_MAX);
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut c0 = _mm512_setzero_ps();
+    let mut c1 = _mm512_setzero_ps();
+    let mut c2 = _mm512_setzero_ps();
+    let mut c3 = _mm512_setzero_ps();
+    let mut c4 = _mm512_setzero_ps();
+    let mut c5 = _mm512_setzero_ps();
+    let mut c6 = _mm512_setzero_ps();
+    let mut c7 = _mm512_setzero_ps();
+    for p in 0..kc {
+        let bv = widen16(b.add(p * NR_MAX));
+        let ar = a.add(p * MR);
+        c0 = _mm512_fmadd_ps(bset1_512(*ar), bv, c0);
+        c1 = _mm512_fmadd_ps(bset1_512(*ar.add(1)), bv, c1);
+        c2 = _mm512_fmadd_ps(bset1_512(*ar.add(2)), bv, c2);
+        c3 = _mm512_fmadd_ps(bset1_512(*ar.add(3)), bv, c3);
+        c4 = _mm512_fmadd_ps(bset1_512(*ar.add(4)), bv, c4);
+        c5 = _mm512_fmadd_ps(bset1_512(*ar.add(5)), bv, c5);
+        c6 = _mm512_fmadd_ps(bset1_512(*ar.add(6)), bv, c6);
+        c7 = _mm512_fmadd_ps(bset1_512(*ar.add(7)), bv, c7);
+    }
+    store16(acc, [c0, c1, c2, c3, c4, c5, c6, c7]);
+}
+
+/// Sparse AVX-512F 8×16 over bf16-packed panels.
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn mk_bf16_sparse_avx512(idx: &[u32], ap: &[u16], bp: &[u16], acc: &mut Acc) {
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut c0 = _mm512_setzero_ps();
+    let mut c1 = _mm512_setzero_ps();
+    let mut c2 = _mm512_setzero_ps();
+    let mut c3 = _mm512_setzero_ps();
+    let mut c4 = _mm512_setzero_ps();
+    let mut c5 = _mm512_setzero_ps();
+    let mut c6 = _mm512_setzero_ps();
+    let mut c7 = _mm512_setzero_ps();
+    for &p in idx {
+        let p = p as usize;
+        let bv = widen16(b.add(p * NR_MAX));
+        let ar = a.add(p * MR);
+        c0 = _mm512_fmadd_ps(bset1_512(*ar), bv, c0);
+        c1 = _mm512_fmadd_ps(bset1_512(*ar.add(1)), bv, c1);
+        c2 = _mm512_fmadd_ps(bset1_512(*ar.add(2)), bv, c2);
+        c3 = _mm512_fmadd_ps(bset1_512(*ar.add(3)), bv, c3);
+        c4 = _mm512_fmadd_ps(bset1_512(*ar.add(4)), bv, c4);
+        c5 = _mm512_fmadd_ps(bset1_512(*ar.add(5)), bv, c5);
+        c6 = _mm512_fmadd_ps(bset1_512(*ar.add(6)), bv, c6);
+        c7 = _mm512_fmadd_ps(bset1_512(*ar.add(7)), bv, c7);
+    }
+    store16(acc, [c0, c1, c2, c3, c4, c5, c6, c7]);
+}
+
+/// Vectorized `dst[c] += src[c]` for the tile store's k-block folding.
+/// Elementwise IEEE adds — bitwise identical to the scalar loop.
+#[target_feature(enable = "avx")]
+pub(crate) unsafe fn row_add(dst: &mut [f32], src: &[f32]) {
+    debug_assert!(src.len() >= dst.len());
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut c = 0;
+    while c + 8 <= n {
+        let v = _mm256_add_ps(_mm256_loadu_ps(d.add(c)), _mm256_loadu_ps(s.add(c)));
+        _mm256_storeu_ps(d.add(c), v);
+        c += 8;
+    }
+    while c < n {
+        *d.add(c) += *s.add(c);
+        c += 1;
+    }
+}
+
+/// Vectorized `dst[c] *= alpha` for the `Scale` epilogue. Elementwise
+/// IEEE multiplies — bitwise identical to the scalar loop.
+#[target_feature(enable = "avx")]
+pub(crate) unsafe fn row_scale(dst: &mut [f32], alpha: f32) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let av = _mm256_set1_ps(alpha);
+    let mut c = 0;
+    while c + 8 <= n {
+        _mm256_storeu_ps(d.add(c), _mm256_mul_ps(_mm256_loadu_ps(d.add(c)), av));
+        c += 8;
+    }
+    while c < n {
+        *d.add(c) *= alpha;
+        c += 1;
+    }
+}
+
+// --- lane helpers ----------------------------------------------------------
+
+/// Widen 8 bf16 storage lanes (16-byte-aligned) to an f32 vector: zero-
+/// extend u16→u32, shift into the high half. Exact.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn widen8(p: *const u16) -> __m256 {
+    let h = _mm_load_si128(p.cast::<__m128i>());
+    _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h)))
+}
+
+/// Widen 16 bf16 storage lanes (32-byte-aligned) to an f32 zmm vector.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn widen16(p: *const u16) -> __m512 {
+    let h = _mm256_load_si256(p.cast::<__m256i>());
+    _mm512_castsi512_ps(_mm512_slli_epi32::<16>(_mm512_cvtepu16_epi32(h)))
+}
+
+/// Broadcast one bf16 storage value as f32 (scalar widen, then set1).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn bset1(h: u16) -> __m256 {
+    _mm256_set1_ps(f32::from_bits((h as u32) << 16))
+}
+
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn bset1_512(h: u16) -> __m512 {
+    _mm512_set1_ps(f32::from_bits((h as u32) << 16))
+}
+
+/// Store eight 8-wide row accumulators into the (64-byte-aligned,
+/// `NR_MAX`-pitched) accumulator tile.
+#[inline]
+#[target_feature(enable = "avx")]
+unsafe fn store8(acc: &mut Acc, rows: [__m256; MR]) {
+    for (r, v) in rows.into_iter().enumerate() {
+        _mm256_store_ps(acc.0[r].as_mut_ptr(), v);
+    }
+}
+
+/// Store eight 16-wide row accumulators into the accumulator tile.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn store16(acc: &mut Acc, rows: [__m512; MR]) {
+    for (r, v) in rows.into_iter().enumerate() {
+        _mm512_store_ps(acc.0[r].as_mut_ptr(), v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::pack::{pack_a, pack_b, PackBuf, View};
+
+    /// Scalar reference over the same packed panels (mul+add order as
+    /// the oracle kernel; the FMA kernels are compared under tolerance).
+    fn reference(kc: usize, ap: &[f32], bp: &[f32], nr_w: usize) -> Vec<Vec<f32>> {
+        let mut want = vec![vec![0.0f32; nr_w]; MR];
+        for p in 0..kc {
+            for (r, row) in want.iter_mut().enumerate() {
+                for (c, w) in row.iter_mut().enumerate() {
+                    *w += ap[p * MR + r] * bp[p * nr_w + c];
+                }
+            }
+        }
+        want
+    }
+
+    fn close(got: f32, want: f32, k: usize) -> bool {
+        let tol = f32::EPSILON * (k as f32).sqrt().max(1.0) * want.abs().max(1.0) * 8.0;
+        (got - want).abs() <= tol
+    }
+
+    #[test]
+    fn avx2_dense_matches_scalar_reference() {
+        if !(is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")) {
+            return;
+        }
+        let kc = 37;
+        let am: Vec<f32> = (0..MR * kc).map(|x| ((x * 37 % 97) as f32 - 48.0) * 0.03).collect();
+        let bm: Vec<f32> = (0..kc * NR).map(|x| ((x * 53 % 89) as f32 - 44.0) * 0.05).collect();
+        let mut buf = PackBuf::new();
+        pack_a(
+            View { data: &am, rs: kc, cs: 1 },
+            0,
+            MR,
+            0,
+            kc,
+            &mut buf,
+            false,
+            false,
+        );
+        pack_b(View { data: &bm, rs: NR, cs: 1 }, 0, kc, 0, NR, NR, &mut buf, false);
+        let mut acc = Acc::new();
+        unsafe { mk_f32_avx2(kc, buf.a.f32(), buf.b.f32(), &mut acc) };
+        let want = reference(kc, buf.a.f32(), buf.b.f32(), NR);
+        for r in 0..MR {
+            for c in 0..NR {
+                assert!(
+                    close(acc.0[r][c], want[r][c], kc),
+                    "({r},{c}): {} vs {}",
+                    acc.0[r][c],
+                    want[r][c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn avx512_dense_matches_scalar_reference() {
+        if !is_x86_feature_detected!("avx512f") {
+            return;
+        }
+        let kc = 29;
+        let am: Vec<f32> = (0..MR * kc).map(|x| ((x * 31 % 83) as f32 - 41.0) * 0.04).collect();
+        let bm: Vec<f32> = (0..kc * NR_MAX)
+            .map(|x| ((x * 41 % 79) as f32 - 39.0) * 0.06)
+            .collect();
+        let mut buf = PackBuf::new();
+        pack_a(
+            View { data: &am, rs: kc, cs: 1 },
+            0,
+            MR,
+            0,
+            kc,
+            &mut buf,
+            false,
+            false,
+        );
+        pack_b(
+            View { data: &bm, rs: NR_MAX, cs: 1 },
+            0,
+            kc,
+            0,
+            NR_MAX,
+            NR_MAX,
+            &mut buf,
+            false,
+        );
+        let mut acc = Acc::new();
+        unsafe { mk_f32_avx512(kc, buf.a.f32(), buf.b.f32(), &mut acc) };
+        let want = reference(kc, buf.a.f32(), buf.b.f32(), NR_MAX);
+        for r in 0..MR {
+            for c in 0..NR_MAX {
+                assert!(
+                    close(acc.0[r][c], want[r][c], kc),
+                    "({r},{c}): {} vs {}",
+                    acc.0[r][c],
+                    want[r][c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_widen_is_exact_on_bf16_values() {
+        if !(is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")) {
+            return;
+        }
+        // operands already representable in bf16 ⇒ pack rounding is a
+        // no-op and the bf16 kernel must match the f32 kernel exactly
+        let kc = 16;
+        let am: Vec<f32> = (0..MR * kc).map(|x| (x % 13) as f32 - 6.0).collect();
+        let bm: Vec<f32> = (0..kc * NR).map(|x| (x % 9) as f32 * 0.25 - 1.0).collect();
+        let av = View { data: &am, rs: kc, cs: 1 };
+        let bv = View { data: &bm, rs: NR, cs: 1 };
+        let mut f32buf = PackBuf::new();
+        pack_a(av, 0, MR, 0, kc, &mut f32buf, false, false);
+        pack_b(bv, 0, kc, 0, NR, NR, &mut f32buf, false);
+        let mut bfbuf = PackBuf::new();
+        pack_a(av, 0, MR, 0, kc, &mut bfbuf, false, true);
+        pack_b(bv, 0, kc, 0, NR, NR, &mut bfbuf, true);
+        let mut acc_f = Acc::new();
+        let mut acc_b = Acc::new();
+        unsafe {
+            mk_f32_avx2(kc, f32buf.a.f32(), f32buf.b.f32(), &mut acc_f);
+            mk_bf16_avx2(kc, bfbuf.a.bf16(), bfbuf.b.bf16(), &mut acc_b);
+        }
+        for r in 0..MR {
+            assert_eq!(&acc_f.0[r][..NR], &acc_b.0[r][..NR], "row {r}");
+        }
+    }
+
+    #[test]
+    fn sparse_kernel_matches_dense_on_plan() {
+        if !(is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")) {
+            return;
+        }
+        // A block with 75% zero k-slices: the sparse walk hits the same
+        // nonzero terms in the same order ⇒ bitwise-equal accumulators
+        let kc = 32;
+        let mut am = vec![0.0f32; MR * kc];
+        for r in 0..MR {
+            for p in 0..kc {
+                if p % 4 == 0 {
+                    am[r * kc + p] = (r * kc + p) as f32 * 0.01 + 0.1;
+                }
+            }
+        }
+        let bm: Vec<f32> = (0..kc * NR).map(|x| ((x % 23) as f32 - 11.0) * 0.07).collect();
+        let mut buf = PackBuf::new();
+        pack_a(
+            View { data: &am, rs: kc, cs: 1 },
+            0,
+            MR,
+            0,
+            kc,
+            &mut buf,
+            true,
+            false,
+        );
+        pack_b(View { data: &bm, rs: NR, cs: 1 }, 0, kc, 0, NR, NR, &mut buf, false);
+        let idx: Vec<u32> = (0..kc as u32).filter(|p| p % 4 == 0).collect();
+        assert_eq!(buf.idx, idx, "pack plan");
+        let mut dense = Acc::new();
+        let mut sparse = Acc::new();
+        unsafe {
+            mk_f32_avx2(kc, buf.a.f32(), buf.b.f32(), &mut dense);
+            mk_f32_sparse_avx2(&buf.idx, buf.a.f32(), buf.b.f32(), &mut sparse);
+        }
+        for r in 0..MR {
+            assert_eq!(&dense.0[r][..NR], &sparse.0[r][..NR], "row {r}");
+        }
+    }
+
+    #[test]
+    fn row_helpers_are_bitwise_scalar() {
+        if !is_x86_feature_detected!("avx") {
+            return;
+        }
+        for n in [1usize, 7, 8, 9, 16, 19] {
+            let src: Vec<f32> = (0..n).map(|x| (x as f32).cos() * 3.7).collect();
+            let mut va: Vec<f32> = (0..n).map(|x| (x as f32).sin() * 2.9).collect();
+            let mut vs = va.clone();
+            unsafe { row_add(&mut va, &src) };
+            for (v, s) in vs.iter_mut().zip(&src) {
+                *v += s;
+            }
+            assert_eq!(va, vs, "row_add n={n}");
+            unsafe { row_scale(&mut va, 0.33) };
+            for v in vs.iter_mut() {
+                *v *= 0.33;
+            }
+            assert_eq!(va, vs, "row_scale n={n}");
+        }
+    }
+}

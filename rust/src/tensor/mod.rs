@@ -6,10 +6,22 @@
 //! intra-op thread pool (`pool.rs`, `GemmPool`). The transposed variants
 //! used by backprop (`gemm_nt` for `delta @ W^T`, `gemm_tn` for
 //! `z^T @ delta`) read through strided views at packing time and never
-//! materialize a transpose. Methodology and before/after records:
-//! `rust/EXPERIMENTS.md`; baselines re-runnable via
-//! `benches/gemm_kernels.rs`.
+//! materialize a transpose.
+//!
+//! §Perf pass 7 put explicit SIMD microkernels behind the same seam:
+//! `dispatch` does one-time runtime CPU-feature detection (override:
+//! `train.gemm_kernel` / `--gemm-kernel` / `SSPDNN_GEMM_KERNEL`) and
+//! selects between the portable scalar oracle and the AVX2/FMA,
+//! AVX-512F (`kernels_x86.rs`) or NEON (`kernels_neon.rs`) bodies, with
+//! an optional bf16-storage/f32-compute pack mode. Methodology and
+//! before/after records: `rust/EXPERIMENTS.md`; baselines re-runnable
+//! via `benches/gemm_kernels.rs`.
 
+pub mod dispatch;
+#[cfg(target_arch = "aarch64")]
+mod kernels_neon;
+#[cfg(target_arch = "x86_64")]
+mod kernels_x86;
 mod matrix;
 mod ops;
 mod pack;
@@ -17,4 +29,4 @@ mod pool;
 
 pub use matrix::Matrix;
 pub use ops::{gemm, gemm_ep, gemm_nt, gemm_nt_ep, gemm_tn, gemm_tn_ep, Epilogue, Unary};
-pub use pool::{GemmPool, PAR_MIN_FLOPS};
+pub use pool::{par_min_flops_for, GemmPool, PAR_MIN_FLOPS, PAR_MIN_FLOPS_SIMD};

@@ -1,4 +1,5 @@
-//! GEMM kernels — the native engine's hot path (§Perf pass 5).
+//! GEMM kernels — the native engine's hot path (§Perf pass 5; SIMD
+//! dispatch + bf16 pack storage: §Perf pass 7).
 //!
 //! Three orientations cover everything backprop needs (Eq. 6/7):
 //!
@@ -8,13 +9,23 @@
 //!
 //! All three are one blocked, packed BLIS-style driver: cache blocks of
 //! A and B are repacked into microkernel order (`pack.rs`), an explicit
-//! MR×NR register-blocked microkernel with an unrolled k-loop does the
-//! flops, and an [`Epilogue`] is applied to each output tile while it is
-//! still cache-hot — bias add + activation on the forward path, the
+//! MR×NR register-blocked microkernel does the flops, and an
+//! [`Epilogue`] is applied to each output tile while it is still
+//! cache-hot — bias add + activation on the forward path, the
 //! activation-derivative mask on the backward path, and the 1/B gradient
 //! scaling, none of which cost an extra pass over C anymore. Transposed
 //! operands are handled by the packing routines reading through strided
 //! views, so `gemm_nt`/`gemm_tn` never materialize a transpose.
+//!
+//! The microkernel body is selected per call by `tensor::dispatch`
+//! ([`run_micro`]): the portable scalar 8×8 kernel below is the bitwise
+//! oracle (unchanged math since §Perf pass 5), and `kernels_x86.rs` /
+//! `kernels_neon.rs` provide explicit AVX2/FMA 8×8, AVX-512F 8×16 and
+//! NEON 8×8 bodies over the same packed panels — plus bf16-storage
+//! variants that widen on load. Panel width (`KernelPath::nr`) never
+//! reorders any C element's k-accumulation, so kernel choice changes
+//! numerics only through FMA contraction / bf16 pack rounding, both
+//! bounded in `tests/property_gemm.rs`.
 //!
 //! The multi-threaded entry points (M split across an intra-op pool of
 //! scoped threads, per-thread pack workspaces) live in `pool.rs`; the
@@ -25,7 +36,8 @@
 
 use std::cell::RefCell;
 
-use super::pack::{pack_a, pack_b, PackBuf, PanelSkip, View, KC, MC, MR, NC, NR};
+use super::dispatch::{self, KernelPath, Selection};
+use super::pack::{bf16_to_f32, pack_a, pack_b, PackBuf, PanelSkip, View, KC, MC, MR, NC, NR, NR_MAX};
 use super::Matrix;
 
 /// Elementwise unary maps the GEMM epilogue can fuse. Mirrors
@@ -121,9 +133,22 @@ pub(crate) fn band_ep<'a>(ep: &Epilogue<'a>, row0: usize, n: usize) -> BandEp<'a
     }
 }
 
-/// One microkernel k-step: `acc[r][·] += a[r] * b[·]` for the full tile.
+/// One MR×NR_MAX accumulator tile, 64-byte aligned so SIMD kernels can
+/// use aligned stores (each row starts on a cache line: the row pitch
+/// is NR_MAX·4 = 64 bytes). Paths with nr < NR_MAX use the row prefix.
+#[repr(C, align(64))]
+pub(crate) struct Acc(pub(crate) [[f32; NR_MAX]; MR]);
+
+impl Acc {
+    #[inline]
+    pub(crate) fn new() -> Acc {
+        Acc([[0.0; NR_MAX]; MR])
+    }
+}
+
+/// One scalar microkernel k-step: `acc[r][..NR] += a[r] * b[..NR]`.
 #[inline(always)]
-fn mk_step(a: &[f32], b: &[f32], acc: &mut [[f32; NR]; MR]) {
+fn mk_step(a: &[f32], b: &[f32], acc: &mut Acc) {
     // fixed-size chunk views let LLVM drop every bounds check and keep
     // the 8 accumulator rows in vector registers
     let b: &[f32; NR] = b[..NR].try_into().unwrap();
@@ -131,17 +156,18 @@ fn mk_step(a: &[f32], b: &[f32], acc: &mut [[f32; NR]; MR]) {
     for r in 0..MR {
         let ar = a[r];
         for c in 0..NR {
-            acc[r][c] += ar * b[c];
+            acc.0[r][c] += ar * b[c];
         }
     }
 }
 
-/// Dense microkernel: full `kc`-deep accumulation over one packed A
-/// micro-panel (`kc·MR`) and one packed B micro-panel (`kc·NR`), k-loop
-/// unrolled 4× (branch-free: the per-element zero test of the old
-/// kernels is gone — sparsity is a packing-time plan now).
+/// Dense scalar microkernel: full `kc`-deep accumulation over one packed
+/// A micro-panel (`kc·MR`) and one packed B micro-panel (`kc·NR`),
+/// k-loop unrolled 4× (branch-free: the per-element zero test of the old
+/// kernels is gone — sparsity is a packing-time plan now). This is the
+/// bitwise oracle every SIMD path is measured against.
 #[inline]
-fn microkernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+fn microkernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut Acc) {
     let mut p = 0;
     while p + 4 <= kc {
         mk_step(&ap[p * MR..], &bp[p * NR..], acc);
@@ -156,21 +182,190 @@ fn microkernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
     }
 }
 
-/// Sparse microkernel: visits only the k-slices the packing-time panel
-/// filter found nonzero. Skipped terms are exact zeros, so the partial
-/// sums match the dense kernel's on every nonzero term, in order.
+/// Sparse scalar microkernel: visits only the k-slices the packing-time
+/// panel filter found nonzero. Skipped terms are exact zeros, so the
+/// partial sums match the dense kernel's on every nonzero term, in order.
 #[inline]
-fn microkernel_sparse(idx: &[u32], ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+fn microkernel_sparse(idx: &[u32], ap: &[f32], bp: &[f32], acc: &mut Acc) {
     for &p in idx {
         let p = p as usize;
         mk_step(&ap[p * MR..], &bp[p * NR..], acc);
     }
 }
 
-/// Write an accumulated MR×NR tile into C at (i0, j0), honouring the
+/// One scalar bf16 k-step: widen both operands (exact) and accumulate
+/// in f32 — the mul+add order matches [`mk_step`] exactly, so scalar
+/// bf16 differs from scalar f32 only by the pack-time rounding.
+#[inline(always)]
+fn mk_step_bf16(a: &[u16], b: &[u16], acc: &mut Acc) {
+    let b: &[u16; NR] = b[..NR].try_into().unwrap();
+    let a: &[u16; MR] = a[..MR].try_into().unwrap();
+    for r in 0..MR {
+        let ar = bf16_to_f32(a[r]);
+        for c in 0..NR {
+            acc.0[r][c] += ar * bf16_to_f32(b[c]);
+        }
+    }
+}
+
+/// Dense scalar microkernel over bf16-packed panels.
+#[inline]
+fn microkernel_bf16(kc: usize, ap: &[u16], bp: &[u16], acc: &mut Acc) {
+    for p in 0..kc {
+        mk_step_bf16(&ap[p * MR..], &bp[p * NR..], acc);
+    }
+}
+
+/// Sparse scalar microkernel over bf16-packed panels.
+#[inline]
+fn microkernel_bf16_sparse(idx: &[u32], ap: &[u16], bp: &[u16], acc: &mut Acc) {
+    for &p in idx {
+        let p = p as usize;
+        mk_step_bf16(&ap[p * MR..], &bp[p * NR..], acc);
+    }
+}
+
+/// The dispatch seam: run the selected microkernel body over packed
+/// micro-panel `pi` of A and `pj` of B (panel width `nr_w`), filling a
+/// freshly zeroed accumulator tile. All bodies consume the identical
+/// pack layout and accumulate each C element over p ascending, so the
+/// k-summation order is selection-invariant.
+#[allow(clippy::too_many_arguments)]
+fn run_micro(
+    sel: Selection,
+    kc: usize,
+    skip: PanelSkip,
+    buf: &PackBuf,
+    pi: usize,
+    pj: usize,
+    nr_w: usize,
+    acc: &mut Acc,
+) {
+    let (a0, a1) = (pi * kc * MR, (pi + 1) * kc * MR);
+    let (b0, b1) = (pj * kc * nr_w, (pj + 1) * kc * nr_w);
+    let idx = match skip {
+        PanelSkip::Dense => None,
+        PanelSkip::Sparse { start, len } => {
+            Some(&buf.idx[start as usize..(start + len) as usize])
+        }
+    };
+    match sel.path {
+        KernelPath::Scalar => {
+            if sel.bf16 {
+                let (ap, bp) = (&buf.a.bf16()[a0..a1], &buf.b.bf16()[b0..b1]);
+                match idx {
+                    None => microkernel_bf16(kc, ap, bp, acc),
+                    Some(idx) => microkernel_bf16_sparse(idx, ap, bp, acc),
+                }
+            } else {
+                let (ap, bp) = (&buf.a.f32()[a0..a1], &buf.b.f32()[b0..b1]);
+                match idx {
+                    None => microkernel(kc, ap, bp, acc),
+                    Some(idx) => microkernel_sparse(idx, ap, bp, acc),
+                }
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: dispatch admits these paths only after one-time
+        // runtime detection of avx2+fma / avx512f on this host.
+        KernelPath::Avx2 => unsafe {
+            use super::kernels_x86 as kx;
+            if sel.bf16 {
+                let (ap, bp) = (&buf.a.bf16()[a0..a1], &buf.b.bf16()[b0..b1]);
+                match idx {
+                    None => kx::mk_bf16_avx2(kc, ap, bp, acc),
+                    Some(idx) => kx::mk_bf16_sparse_avx2(idx, ap, bp, acc),
+                }
+            } else {
+                let (ap, bp) = (&buf.a.f32()[a0..a1], &buf.b.f32()[b0..b1]);
+                match idx {
+                    None => kx::mk_f32_avx2(kc, ap, bp, acc),
+                    Some(idx) => kx::mk_f32_sparse_avx2(idx, ap, bp, acc),
+                }
+            }
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx512 => unsafe {
+            use super::kernels_x86 as kx;
+            if sel.bf16 {
+                let (ap, bp) = (&buf.a.bf16()[a0..a1], &buf.b.bf16()[b0..b1]);
+                match idx {
+                    None => kx::mk_bf16_avx512(kc, ap, bp, acc),
+                    Some(idx) => kx::mk_bf16_sparse_avx512(idx, ap, bp, acc),
+                }
+            } else {
+                let (ap, bp) = (&buf.a.f32()[a0..a1], &buf.b.f32()[b0..b1]);
+                match idx {
+                    None => kx::mk_f32_avx512(kc, ap, bp, acc),
+                    Some(idx) => kx::mk_f32_sparse_avx512(idx, ap, bp, acc),
+                }
+            }
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: dispatch admits this path only after runtime NEON
+        // detection.
+        KernelPath::Neon => unsafe {
+            use super::kernels_neon as kn;
+            if sel.bf16 {
+                let (ap, bp) = (&buf.a.bf16()[a0..a1], &buf.b.bf16()[b0..b1]);
+                match idx {
+                    None => kn::mk_bf16_neon(kc, ap, bp, acc),
+                    Some(idx) => kn::mk_bf16_sparse_neon(idx, ap, bp, acc),
+                }
+            } else {
+                let (ap, bp) = (&buf.a.f32()[a0..a1], &buf.b.f32()[b0..b1]);
+                match idx {
+                    None => kn::mk_f32_neon(kc, ap, bp, acc),
+                    Some(idx) => kn::mk_f32_sparse_neon(idx, ap, bp, acc),
+                }
+            }
+        },
+        #[allow(unreachable_patterns)]
+        other => unreachable!(
+            "dispatch selected {:?}, which this build cannot run",
+            other
+        ),
+    }
+}
+
+/// `dst[c] += src[c]` — vectorized on non-scalar x86 paths (elementwise
+/// IEEE adds, bitwise identical to the scalar loop either way).
+#[inline]
+fn row_fold(dst: &mut [f32], src: &[f32], path: KernelPath) {
+    #[cfg(target_arch = "x86_64")]
+    if path != KernelPath::Scalar {
+        // SAFETY: every non-scalar x86 path implies AVX2 ⊇ AVX
+        unsafe { super::kernels_x86::row_add(dst, src) };
+        return;
+    }
+    let _ = path;
+    for (v, s) in dst.iter_mut().zip(src) {
+        *v += s;
+    }
+}
+
+/// `dst[c] *= alpha` — vectorized on non-scalar x86 paths.
+#[inline]
+fn row_scale(dst: &mut [f32], alpha: f32, path: KernelPath) {
+    #[cfg(target_arch = "x86_64")]
+    if path != KernelPath::Scalar {
+        // SAFETY: as in `row_fold`
+        unsafe { super::kernels_x86::row_scale(dst, alpha) };
+        return;
+    }
+    let _ = path;
+    for v in dst.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Write an accumulated MR×nr tile into C at (i0, j0), honouring the
 /// k-block position (`first` overwrites or folds into prior C, later
 /// blocks accumulate partials) and applying the epilogue transform once
 /// the final k-block (`last`) has landed — while the tile is cache-hot.
+/// The fold/copy/scale row ops are vectorized where the dispatch path
+/// allows; the transcendental epilogues (`Bias`, `Mask`) stay scalar so
+/// fused remains bit-identical to unfused on every path.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn store_tile(
@@ -180,30 +375,23 @@ fn store_tile(
     j0: usize,
     mr: usize,
     nr: usize,
-    acc: &[[f32; NR]; MR],
+    acc: &Acc,
     first: bool,
     last: bool,
     ep: &BandEp,
+    path: KernelPath,
 ) {
     for r in 0..mr {
         let row = &mut cd[(i0 + r) * n + j0..(i0 + r) * n + j0 + nr];
-        let arow = &acc[r];
+        let arow = &acc.0[r];
         if first {
             match ep {
                 // legacy contract: fold the tile into the existing C
-                BandEp::Accumulate => {
-                    for (c, v) in row.iter_mut().enumerate() {
-                        *v += arow[c];
-                    }
-                }
-                _ => {
-                    row.copy_from_slice(&arow[..nr]);
-                }
+                BandEp::Accumulate => row_fold(row, &arow[..nr], path),
+                _ => row.copy_from_slice(&arow[..nr]),
             }
         } else {
-            for (c, v) in row.iter_mut().enumerate() {
-                *v += arow[c];
-            }
+            row_fold(row, &arow[..nr], path);
         }
     }
     if !last {
@@ -214,9 +402,7 @@ fn store_tile(
         BandEp::Scale(alpha) => {
             for r in 0..mr {
                 let row = &mut cd[(i0 + r) * n + j0..(i0 + r) * n + j0 + nr];
-                for v in row.iter_mut() {
-                    *v *= alpha;
-                }
+                row_scale(row, alpha, path);
             }
         }
         BandEp::Bias { bias, f } => {
@@ -244,7 +430,10 @@ fn store_tile(
 /// with `A` read as an `m × k` strided view, `B` as `k × n`, `C` a
 /// row-major `m × n` slice. `filter_a` enables the packing-time sparse
 /// panel plan (the sparse-input first layer; dense panels are
-/// unaffected). This is the unit the intra-op pool parallelizes over.
+/// unaffected). `sel` is the resolved microkernel selection — callers
+/// resolve once per GEMM (before any band split), so every band of one
+/// call runs the same body. This is the unit the intra-op pool
+/// parallelizes over.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_band(
     a: View,
@@ -256,11 +445,13 @@ pub(crate) fn gemm_band(
     ep: &BandEp,
     filter_a: bool,
     buf: &mut PackBuf,
+    sel: Selection,
 ) {
     debug_assert_eq!(cd.len(), m * n, "band C size");
     if m == 0 || n == 0 {
         return;
     }
+    let nr_w = sel.path.nr();
     // k == 0 still runs one (empty) k-block so the store phase writes
     // C = epilogue(0) — e.g. Overwrite zeroes, BiasUnary gives f(bias)
     let kb = if k == 0 { 1 } else { k.div_ceil(KC) };
@@ -272,41 +463,32 @@ pub(crate) fn gemm_band(
             let kc = (k - p0).min(KC);
             let first = pc == 0;
             let last = pc == kb - 1;
-            pack_b(b, p0, kc, jc0, ncb, buf);
+            pack_b(b, p0, kc, jc0, ncb, nr_w, buf, sel.bf16);
             let mut ic0 = 0;
             while ic0 < m {
                 let mcb = (m - ic0).min(MC);
-                pack_a(a, ic0, mcb, p0, kc, buf, filter_a);
+                pack_a(a, ic0, mcb, p0, kc, buf, filter_a, sel.bf16);
                 let np_a = mcb.div_ceil(MR);
-                let np_b = ncb.div_ceil(NR);
+                let np_b = ncb.div_ceil(nr_w);
                 for pi in 0..np_a {
                     let mr = (mcb - pi * MR).min(MR);
-                    let ap = &buf.a[pi * kc * MR..(pi + 1) * kc * MR];
                     let skip = buf.panels[pi];
                     for pj in 0..np_b {
-                        let nr = (ncb - pj * NR).min(NR);
-                        let bp = &buf.b[pj * kc * NR..(pj + 1) * kc * NR];
-                        let mut acc = [[0.0f32; NR]; MR];
-                        match skip {
-                            PanelSkip::Dense => microkernel(kc, ap, bp, &mut acc),
-                            PanelSkip::Sparse { start, len } => microkernel_sparse(
-                                &buf.idx[start as usize..(start + len) as usize],
-                                ap,
-                                bp,
-                                &mut acc,
-                            ),
-                        }
+                        let nr = (ncb - pj * nr_w).min(nr_w);
+                        let mut acc = Acc::new();
+                        run_micro(sel, kc, skip, buf, pi, pj, nr_w, &mut acc);
                         store_tile(
                             cd,
                             n,
                             ic0 + pi * MR,
-                            jc0 + pj * NR,
+                            jc0 + pj * nr_w,
                             mr,
                             nr,
                             &acc,
                             first,
                             last,
                             ep,
+                            sel.path,
                         );
                     }
                 }
@@ -434,10 +616,11 @@ fn serial(
     ep: &Epilogue,
     filter_a: bool,
 ) {
+    let sel = dispatch::current();
     let bep = band_ep(ep, 0, n);
     TL_BUF.with(|buf| {
         let buf = &mut buf.borrow_mut();
-        gemm_band(a, m, k, b, n, c.data_mut(), &bep, filter_a, buf);
+        gemm_band(a, m, k, b, n, c.data_mut(), &bep, filter_a, buf, sel);
     });
 }
 
@@ -680,5 +863,32 @@ mod tests {
         let b = Matrix::zeros(4, 2);
         let mut c = Matrix::zeros(2, 2);
         gemm(&a, &b, &mut c);
+    }
+
+    #[test]
+    fn every_available_path_matches_naive() {
+        let mut rng = Pcg64::new(21);
+        let a = Matrix::randn(37, 70, 1.0, &mut rng);
+        let b = Matrix::randn(70, 29, 1.0, &mut rng);
+        let want = naive(&a, &b);
+        for &path in dispatch::available() {
+            for bf16 in [false, true] {
+                let sel = Selection::new(path, bf16);
+                let mut c = Matrix::zeros(37, 29);
+                dispatch::with_selection(sel, || {
+                    gemm_ep(&a, &b, &mut c, Epilogue::Overwrite);
+                });
+                // bf16 storage rounds each operand to 8 mantissa bits
+                let tol = if bf16 { 0.2 } else { 1e-3 };
+                assert_close(&c, &want, tol);
+            }
+        }
+    }
+
+    #[test]
+    fn acc_tile_is_cacheline_aligned() {
+        let acc = Acc::new();
+        assert_eq!(std::ptr::addr_of!(acc) as usize % 64, 0);
+        assert_eq!(std::mem::size_of::<Acc>(), MR * NR_MAX * 4);
     }
 }

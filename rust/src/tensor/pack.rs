@@ -1,4 +1,5 @@
-//! Panel packing for the blocked GEMM backend (§Perf pass 5).
+//! Panel packing for the blocked GEMM backend (§Perf pass 5; aligned +
+//! bf16 storage: §Perf pass 7).
 //!
 //! The macrokernel in `ops.rs` never reads `A`/`B` directly: each cache
 //! block is first repacked into a contiguous, microkernel-ordered buffer
@@ -12,24 +13,41 @@
 //! * packed A block (`mc × kc`): micro-panels of `MR` rows, each stored
 //!   k-major — `a_buf[panel*kc*MR + p*MR + r]`, short panels zero-padded
 //!   to `MR` so the microkernel is uniform;
-//! * packed B block (`kc × nc`): micro-panels of `NR` columns, stored
-//!   k-major — `b_buf[panel*kc*NR + p*NR + c]`, zero-padded to `NR`.
+//! * packed B block (`kc × nc`): micro-panels of `nr` columns (8, or 16
+//!   for the AVX-512 path — panel width never reorders any C element's
+//!   k-accumulation, so it is value-neutral), stored k-major —
+//!   `b_buf[panel*kc*nr + p*nr + c]`, zero-padded to `nr`.
 //!
-//! The packing pass is also where the sparse-input skip lives now: the
-//! old kernels branched on `a == 0.0` per element *inside* the inner
-//! loop, which pessimizes dense workloads. Here, while packing an A
-//! micro-panel (data already in hand), we count k-slices whose `MR`
-//! values are all zero; if at least [`SPARSE_MIN_ZERO_FRAC`] of the
-//! panel's slices are zero — the sparse-LLC-features first layer — we
-//! record the index list of nonzero slices and the microkernel walks
-//! only those. Dense panels take a branch-free inner loop.
+//! Pack storage is 64-byte aligned ([`AlignedBuf`]): every micro-panel
+//! slice offset is a multiple of `nr·4` bytes (f32) or `nr·2` (bf16),
+//! so from a 64-byte base the SIMD kernels may use aligned vector loads
+//! throughout. Debug builds assert the alignment on every access.
+//!
+//! Each buffer can alternatively be packed as **bf16 storage / f32
+//! compute**: values are rounded to bfloat16 (round-to-nearest-even,
+//! [`f32_to_bf16`]) while packing and widened back to f32 inside the
+//! microkernel (a 16-bit left shift — exact). This halves pack-buffer
+//! memory traffic at a one-rounding-per-operand accuracy cost; see
+//! `rust/EXPERIMENTS.md` §Perf pass 7 for the error model.
+//!
+//! The packing pass is also where the sparse-input skip lives: while
+//! packing an A micro-panel (data already in hand), we count k-slices
+//! whose `MR` values are all zero; if at least
+//! `SPARSE_MIN_ZERO_NUM/SPARSE_MIN_ZERO_DEN` of the panel's slices are
+//! zero — the sparse-LLC-features first layer — we record the index
+//! list of nonzero slices and the microkernel walks only those. Dense
+//! panels take a branch-free inner loop.
 
 /// Microkernel tile rows. 8×8 f32 accumulators fill eight 256-bit
 /// vector registers (one per tile row), leaving registers for the B
 /// row vector and A broadcasts — see `rust/EXPERIMENTS.md` §Perf pass 5.
 pub(crate) const MR: usize = 8;
-/// Microkernel tile columns (one 8-wide f32 vector per accumulator row).
+/// Scalar/AVX2/NEON microkernel tile columns (one 8-wide f32 vector per
+/// accumulator row). The AVX-512 path packs [`NR_MAX`]-wide panels.
 pub(crate) const NR: usize = 8;
+/// Widest B micro-panel any dispatch path packs (AVX-512: one 16-wide
+/// zmm accumulator per tile row). Accumulator tiles are sized for this.
+pub(crate) const NR_MAX: usize = 16;
 /// k extent of a cache block: an MR×KC packed A panel (8 KiB) plus an
 /// NR×KC packed B panel (8 KiB) live in L1 beside the C tile.
 pub(crate) const KC: usize = 256;
@@ -44,6 +62,26 @@ pub(crate) const NC: usize = 256;
 /// saves 2·MR·NR flops but costs an indexed load per slice.
 pub(crate) const SPARSE_MIN_ZERO_NUM: usize = 1;
 pub(crate) const SPARSE_MIN_ZERO_DEN: usize = 4;
+
+/// Round an f32 to bfloat16 storage bits, round-to-nearest-even:
+/// add `0x7FFF + (lsb of the kept half)` and truncate. NaNs keep their
+/// sign/payload top bits with the quiet bit forced (never collapse to
+/// inf); overflow saturates to ±inf through the same carry.
+#[inline]
+pub(crate) fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// Widen bfloat16 storage bits back to f32 — exact (bf16 ⊂ f32).
+#[inline]
+pub(crate) fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
 
 /// Strided read-only view of a matrix operand: element `(i, p)` is
 /// `data[i * rs + p * cs]`. A plain row-major matrix is `(cols, 1)`;
@@ -81,13 +119,82 @@ pub(crate) enum PanelSkip {
     Sparse { start: u32, len: u32 },
 }
 
+/// 64-byte-aligned growable buffer, viewable as f32 or as bf16 storage
+/// bits over the same bytes. Alignment comes from the element type, so
+/// it survives `Vec` reallocation and is asserted (debug builds) on
+/// every typed access.
+#[derive(Debug, Default)]
+pub(crate) struct AlignedBuf {
+    raw: Vec<Cacheline>,
+}
+
+/// One cache line of f32s; the `align(64)` here is what aligns the
+/// whole buffer.
+#[repr(C, align(64))]
+#[derive(Clone, Copy, Debug)]
+struct Cacheline([f32; 16]);
+
+impl AlignedBuf {
+    /// Grow to hold at least `len` f32 elements (bf16 views over the
+    /// same bytes then hold `2·len` values — same byte capacity).
+    fn ensure_f32(&mut self, len: usize) {
+        let lines = len.div_ceil(16);
+        if self.raw.len() < lines {
+            self.raw.resize(lines, Cacheline([0.0; 16]));
+        }
+    }
+
+    #[inline]
+    fn check_align(&self) {
+        debug_assert_eq!(
+            self.raw.as_ptr() as usize % 64,
+            0,
+            "pack buffer must be 64-byte aligned"
+        );
+    }
+
+    #[inline]
+    pub(crate) fn f32(&self) -> &[f32] {
+        self.check_align();
+        // SAFETY: Cacheline is repr(C) over [f32; 16]; the cast only
+        // reinterprets the same initialized f32 storage.
+        unsafe { std::slice::from_raw_parts(self.raw.as_ptr().cast::<f32>(), self.raw.len() * 16) }
+    }
+
+    #[inline]
+    pub(crate) fn f32_mut(&mut self) -> &mut [f32] {
+        self.check_align();
+        // SAFETY: as above, through a unique borrow.
+        unsafe {
+            std::slice::from_raw_parts_mut(self.raw.as_mut_ptr().cast::<f32>(), self.raw.len() * 16)
+        }
+    }
+
+    #[inline]
+    pub(crate) fn bf16(&self) -> &[u16] {
+        self.check_align();
+        // SAFETY: u16 has no invalid bit patterns; same bytes, half-width
+        // elements, so the element count doubles.
+        unsafe { std::slice::from_raw_parts(self.raw.as_ptr().cast::<u16>(), self.raw.len() * 32) }
+    }
+
+    #[inline]
+    pub(crate) fn bf16_mut(&mut self) -> &mut [u16] {
+        self.check_align();
+        // SAFETY: as above, through a unique borrow.
+        unsafe {
+            std::slice::from_raw_parts_mut(self.raw.as_mut_ptr().cast::<u16>(), self.raw.len() * 32)
+        }
+    }
+}
+
 /// One thread's reusable packing workspace. Buffers grow to the block
 /// sizes on first use and are reused for every subsequent call — the
 /// GEMM hot path allocates nothing at steady state (the PR 2 contract).
 #[derive(Debug, Default)]
 pub struct PackBuf {
-    pub(crate) a: Vec<f32>,
-    pub(crate) b: Vec<f32>,
+    pub(crate) a: AlignedBuf,
+    pub(crate) b: AlignedBuf,
     pub(crate) panels: Vec<PanelSkip>,
     pub(crate) idx: Vec<u32>,
 }
@@ -98,19 +205,22 @@ impl PackBuf {
     }
 
     fn ensure(&mut self) {
-        if self.a.len() < MC * KC {
-            self.a.resize(MC * KC, 0.0);
-        }
-        if self.b.len() < KC * NC {
-            self.b.resize(KC * NC, 0.0);
-        }
+        // Worst case over every dispatch path: nr ≤ NR_MAX divides NC,
+        // so a packed B block never exceeds KC·NC elements; bf16 mode
+        // halves the bytes and reuses the same allocation.
+        self.a.ensure_f32(MC * KC);
+        self.b.ensure_f32(KC * NC);
     }
 }
 
 /// Pack the `mcb × kc` block of `a` starting at (absolute) row `i0`,
 /// depth `p0` into `buf.a` as MR-row micro-panels; when `filter` is set,
 /// fill `buf.panels`/`buf.idx` with the sparse skip plan (otherwise
-/// every panel is marked dense).
+/// every panel is marked dense). `bf16` selects bf16 pack storage
+/// (values rounded with [`f32_to_bf16`]; the sparse plan is computed on
+/// the packed values, so the kernels skip exactly the slices that are
+/// zero *as stored*).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn pack_a(
     a: View,
     i0: usize,
@@ -119,6 +229,7 @@ pub(crate) fn pack_a(
     kc: usize,
     buf: &mut PackBuf,
     filter: bool,
+    bf16: bool,
 ) {
     buf.ensure();
     buf.panels.clear();
@@ -127,30 +238,58 @@ pub(crate) fn pack_a(
     for pi in 0..np {
         let r0 = pi * MR;
         let mr = (mcb - r0).min(MR);
-        let panel = &mut buf.a[pi * kc * MR..(pi + 1) * kc * MR];
         let mut zero_slices = 0usize;
-        for p in 0..kc {
-            let dst = &mut panel[p * MR..p * MR + MR];
-            let mut any = false;
-            for (r, d) in dst.iter_mut().enumerate().take(mr) {
-                let v = a.at(i0 + r0 + r, p0 + p);
-                any |= v != 0.0;
-                *d = v;
+        if bf16 {
+            let panel = &mut buf.a.bf16_mut()[pi * kc * MR..(pi + 1) * kc * MR];
+            for p in 0..kc {
+                let dst = &mut panel[p * MR..p * MR + MR];
+                let mut any = false;
+                for (r, d) in dst.iter_mut().enumerate().take(mr) {
+                    let h = f32_to_bf16(a.at(i0 + r0 + r, p0 + p));
+                    any |= bf16_to_f32(h) != 0.0;
+                    *d = h;
+                }
+                for d in dst.iter_mut().skip(mr) {
+                    *d = 0;
+                }
+                zero_slices += usize::from(!any);
             }
-            for d in dst.iter_mut().skip(mr) {
-                *d = 0.0;
+        } else {
+            let panel = &mut buf.a.f32_mut()[pi * kc * MR..(pi + 1) * kc * MR];
+            for p in 0..kc {
+                let dst = &mut panel[p * MR..p * MR + MR];
+                let mut any = false;
+                for (r, d) in dst.iter_mut().enumerate().take(mr) {
+                    let v = a.at(i0 + r0 + r, p0 + p);
+                    any |= v != 0.0;
+                    *d = v;
+                }
+                for d in dst.iter_mut().skip(mr) {
+                    *d = 0.0;
+                }
+                zero_slices += usize::from(!any);
             }
-            zero_slices += usize::from(!any);
         }
         let skip = if filter
             && kc > 0
             && zero_slices * SPARSE_MIN_ZERO_DEN >= kc * SPARSE_MIN_ZERO_NUM
         {
             let start = buf.idx.len() as u32;
-            for p in 0..kc {
-                let slice = &panel[p * MR..p * MR + MR];
-                if slice.iter().any(|&v| v != 0.0) {
-                    buf.idx.push(p as u32);
+            if bf16 {
+                let panel = &buf.a.bf16()[pi * kc * MR..(pi + 1) * kc * MR];
+                for p in 0..kc {
+                    let slice = &panel[p * MR..p * MR + MR];
+                    if slice.iter().any(|&h| bf16_to_f32(h) != 0.0) {
+                        buf.idx.push(p as u32);
+                    }
+                }
+            } else {
+                let panel = &buf.a.f32()[pi * kc * MR..(pi + 1) * kc * MR];
+                for p in 0..kc {
+                    let slice = &panel[p * MR..p * MR + MR];
+                    if slice.iter().any(|&v| v != 0.0) {
+                        buf.idx.push(p as u32);
+                    }
                 }
             }
             PanelSkip::Sparse {
@@ -165,21 +304,46 @@ pub(crate) fn pack_a(
 }
 
 /// Pack the `kc × ncb` block of `b` at depth `p0`, (absolute) column
-/// `j0` into `buf.b` as NR-column micro-panels.
-pub(crate) fn pack_b(b: View, p0: usize, kc: usize, j0: usize, ncb: usize, buf: &mut PackBuf) {
+/// `j0` into `buf.b` as `nr`-column micro-panels (`nr` is the dispatch
+/// path's panel width, ≤ [`NR_MAX`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pack_b(
+    b: View,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    ncb: usize,
+    nr_w: usize,
+    buf: &mut PackBuf,
+    bf16: bool,
+) {
+    debug_assert!(nr_w == NR || nr_w == NR_MAX, "unknown panel width {nr_w}");
     buf.ensure();
-    let np = ncb.div_ceil(NR);
+    let np = ncb.div_ceil(nr_w);
     for pj in 0..np {
-        let c0 = pj * NR;
-        let nr = (ncb - c0).min(NR);
-        let panel = &mut buf.b[pj * kc * NR..(pj + 1) * kc * NR];
-        for p in 0..kc {
-            let dst = &mut panel[p * NR..p * NR + NR];
-            for (c, d) in dst.iter_mut().enumerate().take(nr) {
-                *d = b.at(p0 + p, j0 + c0 + c);
+        let c0 = pj * nr_w;
+        let nr = (ncb - c0).min(nr_w);
+        if bf16 {
+            let panel = &mut buf.b.bf16_mut()[pj * kc * nr_w..(pj + 1) * kc * nr_w];
+            for p in 0..kc {
+                let dst = &mut panel[p * nr_w..p * nr_w + nr_w];
+                for (c, d) in dst.iter_mut().enumerate().take(nr) {
+                    *d = f32_to_bf16(b.at(p0 + p, j0 + c0 + c));
+                }
+                for d in dst.iter_mut().skip(nr) {
+                    *d = 0;
+                }
             }
-            for d in dst.iter_mut().skip(nr) {
-                *d = 0.0;
+        } else {
+            let panel = &mut buf.b.f32_mut()[pj * kc * nr_w..(pj + 1) * kc * nr_w];
+            for p in 0..kc {
+                let dst = &mut panel[p * nr_w..p * nr_w + nr_w];
+                for (c, d) in dst.iter_mut().enumerate().take(nr) {
+                    *d = b.at(p0 + p, j0 + c0 + c);
+                }
+                for d in dst.iter_mut().skip(nr) {
+                    *d = 0.0;
+                }
             }
         }
     }
@@ -199,10 +363,10 @@ mod tests {
             cs: 1,
         };
         let mut buf = PackBuf::new();
-        pack_a(v, 0, 3, 0, 4, &mut buf, false);
+        pack_a(v, 0, 3, 0, 4, &mut buf, false, false);
         assert_eq!(buf.panels, vec![PanelSkip::Dense]);
         for p in 0..4 {
-            let s = &buf.a[p * MR..p * MR + MR];
+            let s = &buf.a.f32()[p * MR..p * MR + MR];
             assert_eq!(s[0], data[p]); // row 0
             assert_eq!(s[1], data[4 + p]); // row 1
             assert_eq!(s[2], data[8 + p]); // row 2
@@ -221,10 +385,42 @@ mod tests {
             cs: k,
         }; // B'[p, j] = data[j*k + p]
         let mut buf = PackBuf::new();
-        pack_b(bt, 0, k, 0, n, &mut buf);
+        pack_b(bt, 0, k, 0, n, NR, &mut buf, false);
         for p in 0..k {
             for j in 0..n {
-                assert_eq!(buf.b[p * NR + j], data[j * k + p]);
+                assert_eq!(buf.b.f32()[p * NR + j], data[j * k + p]);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b_wide_panels_match_narrow_values() {
+        // the same block packed at nr = 8 and nr = 16 must hold the same
+        // values, just in different panel geometry
+        let (k, n) = (7usize, 21usize);
+        let data: Vec<f32> = (0..k * n).map(|x| (x as f32).sin()).collect();
+        let v = View {
+            data: &data,
+            rs: n,
+            cs: 1,
+        };
+        let mut narrow = PackBuf::new();
+        let mut wide = PackBuf::new();
+        pack_b(v, 0, k, 0, n, NR, &mut narrow, false);
+        pack_b(v, 0, k, 0, n, NR_MAX, &mut wide, false);
+        for p in 0..k {
+            for j in 0..n {
+                let nv = narrow.b.f32()[(j / NR) * k * NR + p * NR + (j % NR)];
+                let wv = wide.b.f32()[(j / NR_MAX) * k * NR_MAX + p * NR_MAX + (j % NR_MAX)];
+                assert_eq!(nv, wv);
+                assert_eq!(nv, data[p * n + j]);
+            }
+        }
+        // wide padding columns are zero
+        for p in 0..k {
+            for j in n..NR_MAX * (n.div_ceil(NR_MAX)) {
+                let wv = wide.b.f32()[(j / NR_MAX) * k * NR_MAX + p * NR_MAX + (j % NR_MAX)];
+                assert_eq!(wv, 0.0, "padding at p={p} j={j}");
             }
         }
     }
@@ -241,7 +437,7 @@ mod tests {
             cs: 1,
         };
         let mut buf = PackBuf::new();
-        pack_a(v, 0, 8, 0, 8, &mut buf, true);
+        pack_a(v, 0, 8, 0, 8, &mut buf, true, false);
         assert_eq!(buf.panels.len(), 1);
         match buf.panels[0] {
             PanelSkip::Sparse { start, len } => {
@@ -252,7 +448,75 @@ mod tests {
             PanelSkip::Dense => panic!("expected sparse plan"),
         }
         // same block without the filter: dense
-        pack_a(v, 0, 8, 0, 8, &mut buf, false);
+        pack_a(v, 0, 8, 0, 8, &mut buf, false, false);
         assert_eq!(buf.panels, vec![PanelSkip::Dense]);
+        // bf16 pack of the same block finds the same plan
+        pack_a(v, 0, 8, 0, 8, &mut buf, true, true);
+        assert_eq!(
+            buf.panels,
+            vec![PanelSkip::Sparse { start: 0, len: 2 }],
+            "bf16 sparse plan"
+        );
+        assert_eq!(&buf.idx[..2], &[2, 5]);
+    }
+
+    #[test]
+    fn pack_buffers_are_64_byte_aligned() {
+        let mut buf = PackBuf::new();
+        let data = vec![1.0f32; 64];
+        let v = View {
+            data: &data,
+            rs: 8,
+            cs: 1,
+        };
+        pack_a(v, 0, 8, 0, 8, &mut buf, false, false);
+        pack_b(v, 0, 8, 0, 8, NR, &mut buf, false);
+        assert_eq!(buf.a.f32().as_ptr() as usize % 64, 0);
+        assert_eq!(buf.b.f32().as_ptr() as usize % 64, 0);
+        assert_eq!(buf.a.bf16().as_ptr() as usize % 64, 0);
+        assert_eq!(buf.b.bf16().as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn bf16_round_to_nearest_even() {
+        // exact bf16 values pass through
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        assert_eq!(f32_to_bf16(-2.0), 0xC000);
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        // tie, kept half even → truncate
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // tie, kept half odd → round up to even
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // just above the tie → up; just below → down
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_7FFF)), 0x3F80);
+        // carry propagates across the exponent boundary: ~0.99999994 → 1.0
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F7F_FFFF)), 0x3F80);
+        // overflow saturates to inf through the same carry
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xFF80);
+        // NaN stays NaN (quiet bit forced, sign kept)
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert!(bf16_to_f32(f32_to_bf16(f32::from_bits(0xFF80_0001))).is_nan());
+    }
+
+    #[test]
+    fn bf16_pack_rounds_values() {
+        let data: Vec<f32> = (0..64).map(|x| x as f32 * 0.317 + 0.001).collect();
+        let v = View {
+            data: &data,
+            rs: 8,
+            cs: 1,
+        };
+        let mut buf = PackBuf::new();
+        pack_a(v, 0, 8, 0, 8, &mut buf, false, true);
+        for p in 0..8 {
+            for r in 0..8 {
+                let h = buf.a.bf16()[p * MR + r];
+                assert_eq!(h, f32_to_bf16(data[r * 8 + p]), "p={p} r={r}");
+            }
+        }
     }
 }

@@ -8,30 +8,56 @@
 //! so the split is safe (`split_at_mut`), each thread packs its own A
 //! band, and — because a band never subdivides a C element's
 //! k-accumulation — the result is **bitwise identical for every thread
-//! count**, which the property suite asserts.
+//! count**, which the property suite asserts per dispatch path.
+//!
+//! The microkernel selection (`tensor::dispatch`) is resolved **once per
+//! GEMM on the calling thread** — before any band split — and handed to
+//! every band worker, so scoped overrides apply to pooled calls and all
+//! bands of one call run the same body.
 //!
 //! Costs that shaped the design (records: `rust/EXPERIMENTS.md` §Perf
-//! pass 5): spawning a scoped thread is ~10–50 µs, so tiny GEMMs (under
-//! [`PAR_MIN_FLOPS`]) run on the calling thread; per-band B packing is
-//! duplicated across threads but is O(k·n) against O(m·k·n / T) compute,
-//! a few percent at the bench shapes. `N workers × T intra-op threads`
-//! is explicit end to end: the config's `train.intra_op_threads` (CLI
-//! `--threads`) reaches every engine's pool through `Mlp`.
+//! pass 5/7): spawning a scoped thread is ~10–50 µs, so tiny GEMMs run
+//! on the calling thread. The serial threshold is **per dispatch path**
+//! ([`par_min_flops_for`]): SIMD kernels retire flops several times
+//! faster than scalar, which moves the parallelism break-even point up
+//! by the same factor — splitting a GEMM that AVX-512 finishes in 100 µs
+//! across threads costs more in spawn latency than it saves. The
+//! threshold is overridable ([`GemmPool::with_par_min_flops`]) so the
+//! bench can sweep it. Per-band B packing is duplicated across threads
+//! but is O(k·n) against O(m·k·n / T) compute, a few percent at the
+//! bench shapes. `N workers × T intra-op threads` is explicit end to
+//! end: the config's `train.intra_op_threads` (CLI `--threads`) reaches
+//! every engine's pool through `Mlp`.
 
+use super::dispatch::{self, KernelPath, Selection};
 use super::ops::{band_ep, check_ep, gemm_band, nn_views, nt_views, tn_views, Epilogue};
 use super::pack::{PackBuf, View, MR};
 use super::Matrix;
 
-/// Below this many flops (2·m·k·n) a GEMM runs on the calling thread:
-/// thread spawn latency would eat the win. ~4 MFLOP ≈ 0.3–1 ms serial,
-/// an order of magnitude above spawn cost.
+/// Below this many flops (2·m·k·n) a **scalar-path** GEMM runs on the
+/// calling thread: thread spawn latency would eat the win. ~4 MFLOP
+/// ≈ 0.3–1 ms serial, an order of magnitude above spawn cost.
 pub const PAR_MIN_FLOPS: usize = 4_000_000;
+
+/// Serial threshold for the SIMD paths: their microkernels retire flops
+/// roughly 4× faster, so the break-even GEMM is correspondingly larger.
+pub const PAR_MIN_FLOPS_SIMD: usize = 16_000_000;
+
+/// The default serial/parallel break-even for a dispatch path.
+pub fn par_min_flops_for(path: KernelPath) -> usize {
+    match path {
+        KernelPath::Scalar => PAR_MIN_FLOPS,
+        _ => PAR_MIN_FLOPS_SIMD,
+    }
+}
 
 /// A configurable intra-op worker pool with per-thread pack workspaces.
 #[derive(Debug)]
 pub struct GemmPool {
     threads: usize,
     bufs: Vec<PackBuf>,
+    kernel: Option<Selection>,
+    par_min_flops: Option<usize>,
 }
 
 impl Default for GemmPool {
@@ -42,17 +68,40 @@ impl Default for GemmPool {
 
 impl GemmPool {
     /// A pool that splits GEMMs across `threads` intra-op threads
-    /// (clamped to ≥ 1; 1 = serial, the deterministic default).
+    /// (clamped to ≥ 1; 1 = serial, the deterministic default). The
+    /// microkernel follows `tensor::dispatch` per call unless pinned
+    /// with [`with_kernel`](GemmPool::with_kernel).
     pub fn new(threads: usize) -> GemmPool {
         let threads = threads.max(1);
         GemmPool {
             threads,
             bufs: (0..threads).map(|_| PackBuf::new()).collect(),
+            kernel: None,
+            par_min_flops: None,
         }
+    }
+
+    /// Pin this pool's microkernel selection (`None` = follow
+    /// `tensor::dispatch::current()` per call — the default).
+    pub fn with_kernel(mut self, kernel: Option<Selection>) -> GemmPool {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Override the serial/parallel flop threshold (`None` = the
+    /// per-path default, [`par_min_flops_for`]). The bench sweeps this.
+    pub fn with_par_min_flops(mut self, flops: Option<usize>) -> GemmPool {
+        self.par_min_flops = flops;
+        self
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The pinned selection, if any (`None` = per-call dispatch).
+    pub fn kernel(&self) -> Option<Selection> {
+        self.kernel
     }
 
     /// `C = epilogue(A · B)`; the packing-time sparse panel filter is on
@@ -89,11 +138,28 @@ impl GemmPool {
         ep: &Epilogue,
         filter_a: bool,
     ) {
+        // resolve once, on the entry thread (scoped overrides included),
+        // so every band of this call runs the same microkernel body
+        let sel = self.kernel.unwrap_or_else(dispatch::current);
+        let par_min = self
+            .par_min_flops
+            .unwrap_or_else(|| par_min_flops_for(sel.path));
         let panels = m.div_ceil(MR);
         let t = self.threads.min(panels);
-        if t <= 1 || 2 * m * k * n < PAR_MIN_FLOPS {
+        if t <= 1 || 2 * m * k * n < par_min {
             let bep = band_ep(ep, 0, n);
-            gemm_band(a, m, k, b, n, c.data_mut(), &bep, filter_a, &mut self.bufs[0]);
+            gemm_band(
+                a,
+                m,
+                k,
+                b,
+                n,
+                c.data_mut(),
+                &bep,
+                filter_a,
+                &mut self.bufs[0],
+                sel,
+            );
             return;
         }
         // micro-panel-aligned row bands: the first (panels % t) threads
@@ -113,7 +179,7 @@ impl GemmPool {
                 let bep = band_ep(ep, row0, n);
                 let a_band = a.offset_rows(row0);
                 scope.spawn(move || {
-                    gemm_band(a_band, band_rows, k, b, n, c_band, &bep, filter_a, buf);
+                    gemm_band(a_band, band_rows, k, b, n, c_band, &bep, filter_a, buf, sel);
                 });
                 row0 += band_rows;
             }
@@ -186,6 +252,61 @@ mod tests {
             pool.gemm(&a, &b, &mut c, Epilogue::Overwrite);
             GemmPool::new(1).gemm(&a, &b, &mut want, Epilogue::Overwrite);
             assert_eq!(c, want);
+        }
+    }
+
+    #[test]
+    fn per_path_serial_threshold() {
+        assert_eq!(par_min_flops_for(KernelPath::Scalar), PAR_MIN_FLOPS);
+        for p in [KernelPath::Avx2, KernelPath::Avx512, KernelPath::Neon] {
+            assert_eq!(par_min_flops_for(p), PAR_MIN_FLOPS_SIMD);
+        }
+    }
+
+    #[test]
+    fn pinned_kernel_and_threshold_match_dispatch() {
+        // pinning the scalar kernel on the pool must equal forcing it
+        // through the thread-local override, at both threshold extremes
+        let mut rng = Pcg64::new(15);
+        let (m, k, n) = (60usize, 120usize, 90usize);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let sel = Selection::new(KernelPath::Scalar, false);
+        let mut pinned = Matrix::zeros(m, n);
+        GemmPool::new(2)
+            .with_kernel(Some(sel))
+            .with_par_min_flops(Some(0)) // force the banded path
+            .gemm(&a, &b, &mut pinned, Epilogue::Overwrite);
+        let mut forced = Matrix::zeros(m, n);
+        dispatch::with_selection(sel, || {
+            GemmPool::new(2)
+                .with_par_min_flops(Some(usize::MAX)) // force serial
+                .gemm(&a, &b, &mut forced, Epilogue::Overwrite);
+        });
+        assert_eq!(pinned, forced, "band split must stay value-neutral");
+    }
+
+    #[test]
+    fn threaded_matches_serial_bitwise_on_every_path() {
+        let mut rng = Pcg64::new(16);
+        let (m, k, n) = (97usize, 200usize, 128usize);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        for &path in dispatch::available() {
+            for bf16 in [false, true] {
+                let sel = Selection::new(path, bf16);
+                let mut c1 = Matrix::zeros(m, n);
+                let mut c4 = Matrix::zeros(m, n);
+                GemmPool::new(1)
+                    .with_kernel(Some(sel))
+                    .with_par_min_flops(Some(0))
+                    .gemm(&a, &b, &mut c1, Epilogue::Overwrite);
+                GemmPool::new(4)
+                    .with_kernel(Some(sel))
+                    .with_par_min_flops(Some(0))
+                    .gemm(&a, &b, &mut c4, Epilogue::Overwrite);
+                assert_eq!(c1, c4, "path {sel} must be split-invariant");
+            }
         }
     }
 }

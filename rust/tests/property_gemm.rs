@@ -5,7 +5,18 @@
 //! microkernel's unroll width, shapes crossing every cache-block
 //! boundary — and the intra-op thread split is pinned to be bitwise
 //! invariant (1 thread vs T threads must agree to the last bit).
+//!
+//! §Perf pass 7 extends the suite across the microkernel dispatch seam:
+//! the full grid re-runs under **every** path the host supports (forced
+//! via the scoped `dispatch::with_selection` override, in both f32 and
+//! bf16 pack modes), each SIMD path is compared to the forced-scalar
+//! result under the documented FMA tolerance, and the thread split is
+//! pinned bitwise per path. The scalar path itself is textually the
+//! pass-5 kernel; CI additionally runs this whole suite (and the
+//! driver/transport equivalence stacks) with `SSPDNN_GEMM_KERNEL=scalar`
+//! so the scalar leg stays pinned to the pre-dispatch engine.
 
+use sspdnn::tensor::dispatch::{self, KernelPath, Selection};
 use sspdnn::tensor::{
     gemm_ep, gemm_nt_ep, gemm_tn_ep, Epilogue, GemmPool, Matrix, Unary,
 };
@@ -251,6 +262,186 @@ fn sparse_input_panels_match_dense_oracle() {
     let mut c4 = Matrix::zeros(m, n);
     GemmPool::new(4).gemm(&a, &b, &mut c4, Epilogue::Overwrite);
     assert_eq!(c, c4, "sparse thread split");
+}
+
+fn max_abs(m: &Matrix) -> f32 {
+    m.data().iter().fold(0.0f32, |acc, v| acc.max(v.abs()))
+}
+
+/// Tolerance for f32 SIMD paths vs scalar: the only numeric difference
+/// is FMA keeping the product unrounded before the add, bounded by
+/// `|Δ| ≤ 16·k·ε·‖A‖∞·‖B‖∞` (a loose form of the standard γ_k bound;
+/// observed differences sit orders of magnitude below it). Documented
+/// in `rust/EXPERIMENTS.md` §Perf pass 7.
+fn fma_tol(k: usize, amax: f32, bmax: f32) -> f32 {
+    (k as f32).max(1.0) * f32::EPSILON * amax.max(1.0) * bmax.max(1.0) * 16.0
+}
+
+/// Tolerance vs the f32 oracle when operand panels are stored as bf16:
+/// each pack rounds to 8 mantissa bits (≤2⁻⁸ relative per operand), so
+/// per-element error random-walks as ~2⁻⁷·√k on unit-variance data.
+fn bf16_tol(k: usize) -> f32 {
+    0.05 * (k as f32).max(1.0).sqrt() + 0.2
+}
+
+#[test]
+fn every_path_full_grid_matches_oracle_all_orientations() {
+    // the full adversarial grid, all three orientations, every dispatch
+    // path this host supports, in both pack storage modes
+    let mut rng = Pcg64::new(110);
+    for &(m, k, n) in SHAPES {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let bt = {
+            let mut t = Matrix::zeros(n, k);
+            b.transpose_into(&mut t);
+            t
+        };
+        let at = {
+            let mut t = Matrix::zeros(k, m);
+            a.transpose_into(&mut t);
+            t
+        };
+        let want = naive(&a, &b);
+        for &path in dispatch::available() {
+            for bf16 in [false, true] {
+                let sel = Selection::new(path, bf16);
+                let tol = if bf16 {
+                    bf16_tol(k)
+                } else {
+                    1e-4 * (k as f32).max(1.0).sqrt() * 4.0
+                };
+                let mut c = Matrix::zeros(m, n);
+                c.fill(f32::NAN);
+                dispatch::with_selection(sel, || {
+                    gemm_ep(&a, &b, &mut c, Epilogue::Overwrite);
+                });
+                assert_close(&c, &want, tol, &format!("gemm[{sel}] {m}x{k}x{n}"));
+                let mut c = Matrix::zeros(m, n);
+                c.fill(f32::NAN);
+                dispatch::with_selection(sel, || {
+                    gemm_nt_ep(&a, &bt, &mut c, Epilogue::Overwrite);
+                });
+                assert_close(&c, &want, tol, &format!("gemm_nt[{sel}] {m}x{k}x{n}"));
+                let mut c = Matrix::zeros(m, n);
+                c.fill(f32::NAN);
+                dispatch::with_selection(sel, || {
+                    gemm_tn_ep(&at, &b, &mut c, Epilogue::Overwrite);
+                });
+                assert_close(&c, &want, tol, &format!("gemm_tn[{sel}] {m}x{k}x{n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_paths_match_forced_scalar_within_fma_tolerance() {
+    // direct scalar-vs-SIMD comparison, tighter than the oracle check:
+    // the packed pipeline is shared, so only FMA contraction may differ
+    let scalar = Selection::new(KernelPath::Scalar, false);
+    for &path in dispatch::available() {
+        if path == KernelPath::Scalar {
+            continue;
+        }
+        let sel = Selection::new(path, false);
+        let mut rng = Pcg64::new(111);
+        for &(m, k, n) in
+            &[(9, 7, 17), (63, 64, 65), (64, 256, 64), (13, 513, 19), (70, 300, 130)]
+        {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut cs = Matrix::zeros(m, n);
+            dispatch::with_selection(scalar, || {
+                gemm_ep(&a, &b, &mut cs, Epilogue::Overwrite);
+            });
+            let mut cv = Matrix::zeros(m, n);
+            dispatch::with_selection(sel, || {
+                gemm_ep(&a, &b, &mut cv, Epilogue::Overwrite);
+            });
+            let tol = fma_tol(k, max_abs(&a), max_abs(&b));
+            assert_close(
+                &cv,
+                &cs,
+                tol,
+                &format!("{} vs scalar {m}x{k}x{n}", path.as_str()),
+            );
+        }
+    }
+}
+
+#[test]
+fn every_path_thread_split_bitwise_invariant() {
+    // the bitwise 1-vs-T pin must hold per dispatch path and pack mode:
+    // bands share packed B panels and never subdivide a k-accumulation
+    let mut rng = Pcg64::new(112);
+    let (m, k, n) = (97usize, 200usize, 128usize);
+    let a = Matrix::randn(m, k, 1.0, &mut rng);
+    let b = Matrix::randn(k, n, 1.0, &mut rng);
+    for &path in dispatch::available() {
+        for bf16 in [false, true] {
+            let sel = Selection::new(path, bf16);
+            let mut reference: Option<Matrix> = None;
+            for threads in [1usize, 4, 7] {
+                let mut pool = GemmPool::new(threads)
+                    .with_kernel(Some(sel))
+                    .with_par_min_flops(Some(0));
+                let mut c = Matrix::zeros(m, n);
+                pool.gemm(&a, &b, &mut c, Epilogue::Overwrite);
+                match &reference {
+                    None => reference = Some(c),
+                    Some(r) => assert_eq!(
+                        &c, r,
+                        "threads={threads} diverged on {sel} {m}x{k}x{n}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_epilogues_bitwise_match_unfused_on_every_path() {
+    // the SIMD epilogue helpers (row fold/copy/scale) are elementwise
+    // IEEE ops, so fused == unfused must stay *bitwise* per path
+    let mut rng = Pcg64::new(113);
+    let (m, k, n) = (63usize, 300usize, 65usize);
+    let a = Matrix::randn(m, k, 1.0, &mut rng);
+    let b = Matrix::randn(k, n, 1.0, &mut rng);
+    let bias: Vec<f32> = (0..n).map(|i| (i as f32) * 0.1 - 0.3).collect();
+    for &path in dispatch::available() {
+        for bf16 in [false, true] {
+            let sel = Selection::new(path, bf16);
+            dispatch::with_selection(sel, || {
+                let mut fused = Matrix::zeros(m, n);
+                let ep = Epilogue::BiasUnary {
+                    bias: &bias,
+                    f: Unary::Sigmoid,
+                };
+                gemm_ep(&a, &b, &mut fused, ep);
+                let mut want = Matrix::zeros(m, n);
+                gemm_ep(&a, &b, &mut want, Epilogue::Overwrite);
+                for r in 0..m {
+                    for (v, bv) in want.row_mut(r).iter_mut().zip(&bias) {
+                        *v = Unary::Sigmoid.apply(*v + bv);
+                    }
+                }
+                assert_eq!(fused, want, "bias+sigmoid fused on {sel}");
+
+                let mut acc = Matrix::from_fn(m, n, |r, s| (r + s) as f32 * 0.25);
+                let before = acc.clone();
+                gemm_ep(&a, &b, &mut acc, Epilogue::Accumulate);
+                let mut prod = Matrix::zeros(m, n);
+                gemm_ep(&a, &b, &mut prod, Epilogue::Overwrite);
+                for i in 0..m * n {
+                    assert_eq!(
+                        acc.data()[i],
+                        before.data()[i] + prod.data()[i],
+                        "accumulate on {sel} at flat index {i}"
+                    );
+                }
+            });
+        }
+    }
 }
 
 #[test]
