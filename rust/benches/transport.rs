@@ -16,6 +16,9 @@
 //!   one-layer-dirty, and with the gate disabled. Asserts the
 //!   acceptance criterion: the hot fetch keeps the whole model payload
 //!   off the wire.
+//! * **elastic_eviction** — commit throughput with 3 live workers vs
+//!   the 2 survivors after one is evicted via LEAVE, plus the wall
+//!   cost of the LEAVE round itself (PR 9's rebalance-cost column).
 //!
 //! Scale via SSPDNN_BENCH_SCALE ∈ {quick, default, full} as usual.
 
@@ -78,6 +81,68 @@ fn bench_commits(
         wire.bytes_sent as f64 / 1e6
     );
     rate
+}
+
+struct EvictionCost {
+    /// Commit cycles/second with all 3 workers live.
+    before: f64,
+    /// Commit cycles/second after worker 2 is evicted (2 survivors).
+    after: f64,
+    /// Wall cost of the LEAVE round itself, milliseconds.
+    evict_ms: f64,
+}
+
+/// Eviction/rebalance cost on an elastic endpoint: time a fixed
+/// commit/fetch loop spread over 3 live workers, LEAVE one of them,
+/// and time the same loop over the 2 survivors. The two rates bound
+/// what losing a worker costs the ones that keep going (epoch bump,
+/// live-mask refresh, smaller min-clock set) — survivors must not
+/// slow down just because the membership shrank.
+fn bench_eviction(init: &ParamSet) -> EvictionCost {
+    let mut client =
+        transport::loopback_elastic(init.clone(), 3, Policy::Async, 1);
+    let mut delta: GradSet = init.zeros_like();
+    for l in &mut delta.layers {
+        l.w.fill(1e-4);
+        l.b.fill(1e-4);
+    }
+    let clocks = commit_clocks();
+    // per-worker clock counters survive the eviction: the UPDATE
+    // timestamp must stay in lockstep with each worker's own clock row
+    let mut next = [0u64; 3];
+    let mut run = |client: &mut RemoteClient,
+                   live: &[usize],
+                   next: &mut [u64; 3]| {
+        let start = Instant::now();
+        for i in 0..clocks {
+            let w = live[i as usize % live.len()];
+            WorkerPort::commit_clock(client, w);
+            WorkerPort::apply_commit(client, w, next[w], &delta);
+            next[w] += 1;
+        }
+        clocks as f64 / start.elapsed().as_secs_f64()
+    };
+    let before = run(&mut client, &[0, 1, 2], &mut next);
+    let t = Instant::now();
+    let epoch = client.try_leave(2).expect("evict worker 2");
+    let evict_ms = t.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(epoch, 1, "first eviction must bump the membership epoch");
+    let (seen, mask) = WorkerPort::membership(&mut client);
+    assert_eq!(
+        (seen, mask),
+        (1, 0b011),
+        "survivors must observe epoch 1 with worker 2 out of the live set"
+    );
+    let after = run(&mut client, &[0, 1], &mut next);
+    eprintln!(
+        "  [bench] eviction: {before:.0} clocks/s at 3 live -> \
+         {after:.0} clocks/s at 2 live (LEAVE round {evict_ms:.2} ms)"
+    );
+    EvictionCost {
+        before,
+        after,
+        evict_ms,
+    }
 }
 
 struct FetchBytes {
@@ -246,6 +311,7 @@ fn main() {
     );
     let fetch_1 = bench_gated_fetch(&init, 1);
     let fetch_n = bench_gated_fetch(&init, n_layers);
+    let eviction = bench_eviction(&init);
 
     let fetch_json = |f: &FetchBytes| {
         Json::obj(vec![
@@ -292,6 +358,20 @@ fn main() {
             ),
             ("gated_fetch_1_endpoint", fetch_json(&fetch_1)),
             ("gated_fetch_per_layer_endpoints", fetch_json(&fetch_n)),
+            (
+                "elastic_eviction",
+                Json::obj(vec![
+                    (
+                        "commits_per_s_3_live",
+                        Json::num(eviction.before),
+                    ),
+                    (
+                        "commits_per_s_2_live_after_eviction",
+                        Json::num(eviction.after),
+                    ),
+                    ("leave_round_ms", Json::num(eviction.evict_ms)),
+                ]),
+            ),
         ]),
     );
     println!(

@@ -162,6 +162,10 @@ mod tests {
         let t = parse("train --server 127.0.0.1:7171 --retries 10 --lease-ms 3000");
         assert_eq!(t.get_u64("retries").unwrap(), Some(10));
         assert_eq!(t.get_u64("lease-ms").unwrap(), Some(3000));
+        // --elastic is a bare boolean even when followed by another flag
+        let e = parse("serve --elastic --lease-ms 500 --shard-groups 2");
+        assert!(e.get_bool("elastic"));
+        assert_eq!(e.get_u64("lease-ms").unwrap(), Some(500));
         let s = parse("serve --state dump.ssps --state-out dump.ssps --state-every-ms 250");
         assert_eq!(s.get("state"), Some("dump.ssps"));
         assert_eq!(s.get("state-out"), Some("dump.ssps"));

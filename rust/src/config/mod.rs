@@ -633,6 +633,13 @@ pub struct TransportConfig {
     /// How long the service's shutdown path waits for its wake-up
     /// connects to the group listeners (ms).
     pub wake_timeout_ms: u64,
+    /// Elastic membership: a lapsed worker lease **evicts** the worker
+    /// (survivors rebalance its data shard and keep converging) instead
+    /// of failing their barrier waits, and the ADMIT/LEAVE opcodes let
+    /// workers leave and rejoin. Off preserves the fail-fast lease
+    /// semantics exactly. Requires `lease_ms > 0` to ever trigger from
+    /// silence (a LEAVE still works without leases).
+    pub elastic: bool,
 }
 
 impl Default for TransportConfig {
@@ -651,6 +658,7 @@ impl Default for TransportConfig {
             lease_ms: 10_000,
             heartbeat_ms: 2500,
             wake_timeout_ms: 500,
+            elastic: false,
         }
     }
 }
@@ -744,6 +752,7 @@ impl TransportConfig {
                     }
                     self.wake_timeout_ms = *n as u64
                 }
+                ("elastic", Bool(b)) => self.elastic = *b,
                 (k, _) => {
                     return Err(format!("unknown config key [transport] {k}"))
                 }
@@ -766,7 +775,7 @@ impl TransportConfig {
              pipeline = {}\nwindow = {}\ngroup_addrs = [{addrs}]\n\
              connect_timeout_ms = {}\nio_timeout_ms = {}\n\
              max_retries = {}\nbackoff_base_ms = {}\nlease_ms = {}\n\
-             heartbeat_ms = {}\nwake_timeout_ms = {}\n",
+             heartbeat_ms = {}\nwake_timeout_ms = {}\nelastic = {}\n",
             self.addr,
             self.shard_groups,
             self.gated,
@@ -779,6 +788,7 @@ impl TransportConfig {
             self.lease_ms,
             self.heartbeat_ms,
             self.wake_timeout_ms,
+            self.elastic,
         )
     }
 
@@ -855,6 +865,7 @@ impl TransportConfig {
                 self.wake_timeout_ms,
             ),
             init_digest,
+            elastic: self.elastic,
         }
     }
 
@@ -1079,6 +1090,7 @@ mod tests {
                 lease_ms: 0,
                 heartbeat_ms: 1000,
                 wake_timeout_ms: 250,
+                elastic: true,
             },
             TransportConfig {
                 addr: "localhost:0".into(),

@@ -74,6 +74,12 @@ pub struct DriverOptions {
     /// monitored pool after arming counts into
     /// `RunResult::steady_reallocs`.
     pub warmup_clocks: u64,
+    /// Scripted membership transitions (zero-copy path only): the
+    /// simulated analogue of lease-expiry eviction and re-admission,
+    /// letting sweeps price "losing k of m workers at clock t" in
+    /// convergence terms. Empty = fixed membership, bitwise identical
+    /// to the pre-elastic driver.
+    pub membership: Vec<MembershipEvent>,
 }
 
 impl Default for DriverOptions {
@@ -91,8 +97,42 @@ impl Default for DriverOptions {
             weight_decay: 0.0,
             trace: false,
             warmup_clocks: 4,
+            membership: Vec::new(),
         }
     }
+}
+
+/// One scripted membership transition for the simulated driver.
+///
+/// A **leave** (`join == false`) fires at the victim's own commit
+/// boundary: the moment worker `worker` finishes its `at_clock`-th
+/// clock it is evicted — its committed history stays in the master,
+/// its still-in-flight update messages are dropped (they died with
+/// it, which is exactly the ε-accounting case the lease clamp covers),
+/// and the survivors re-shard deterministically from the bumped epoch.
+///
+/// A **join** (`join == true`) fires once the *live* minimum clock
+/// reaches `at_clock`: the worker is re-admitted at the live minimum
+/// (zero-delta fast-forward, master untouched), warm-starts its cache
+/// from its next gated fetch, and takes its slice of the new epoch's
+/// re-shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MembershipEvent {
+    pub at_clock: u64,
+    pub worker: usize,
+    pub join: bool,
+}
+
+/// One membership transition a run actually performed
+/// ([`RunResult::membership`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MembershipChange {
+    /// Virtual time of the transition.
+    pub vtime: f64,
+    /// Membership epoch after the transition.
+    pub epoch: u64,
+    pub worker: usize,
+    pub join: bool,
 }
 
 /// Outcome of one driver run.
@@ -132,6 +172,9 @@ pub struct RunResult {
     /// after the warmup audit armed. 0 at steady state; always 0 on the
     /// allocating oracle path, which is not audited.
     pub steady_reallocs: u64,
+    /// Membership transitions performed (scripted leaves/joins on the
+    /// zero-copy path; always empty on the allocating oracle).
+    pub membership: Vec<MembershipChange>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -488,6 +531,24 @@ pub fn run_experiment_with<S: ParamServer>(
     let mut reached_target = false;
     let mut audit = AllocAudit::new();
 
+    // scripted membership (the elastic-eviction sim). With no events the
+    // machinery below is inert — `alive` stays all-true, no arrival is
+    // ever dropped — and the run is bitwise identical to fixed
+    // membership.
+    let mut pending_members = std::mem::take(&mut opts.membership);
+    if !pending_members.is_empty() {
+        assert!(
+            machines <= 64,
+            "membership events support at most 64 workers (live-mask width)"
+        );
+    }
+    let mut alive = vec![true; machines];
+    // virtual time of each worker's latest eviction: arrivals it sent at
+    // or before that instant are its in-flight updates — they died with
+    // it and are dropped (exactly once) instead of applied
+    let mut drop_before = vec![f64::NEG_INFINITY; machines];
+    let mut membership_log: Vec<MembershipChange> = Vec::new();
+
     for p in 0..machines {
         queue.push(0.0, Payload::StartClock { worker: p });
     }
@@ -557,20 +618,50 @@ pub fn run_experiment_with<S: ParamServer>(
                     queue.push(t, Payload::Arrival { idx });
                 }
                 w.cache.finish_commit();
-                if w.clocks_done >= cfg.train.clocks as u64 || reached_target {
+                let leaving = pending_members.iter().position(|e| {
+                    !e.join && e.worker == worker && e.at_clock == w.clocks_done
+                });
+                if leaving.is_some()
+                    || w.clocks_done >= cfg.train.clocks as u64
+                    || reached_target
+                {
                     w.status = WorkerStatus::Done;
                 } else {
                     w.status = WorkerStatus::Ready;
                     queue.push(now, Payload::StartClock { worker });
                 }
-                // a commit can unblock barrier waiters
+                if let Some(i) = leaving {
+                    let e = pending_members.swap_remove(i);
+                    let epoch = server.evict_worker(e.worker);
+                    alive[e.worker] = false;
+                    drop_before[e.worker] = now;
+                    membership_log.push(MembershipChange {
+                        vtime: now,
+                        epoch,
+                        worker: e.worker,
+                        join: false,
+                    });
+                    rebalance_live(
+                        dataset,
+                        &mut workers,
+                        &alive,
+                        epoch,
+                        cfg.train.batch,
+                        cfg.train.seed,
+                    );
+                }
+                // a commit (or an eviction) can unblock barrier waiters
                 wake_blocked(&mut workers, &server, now, &mut queue, &mut barrier_wait, &mut read_wait, &mut block_start, trace.as_mut());
 
-                // evaluation at min-clock boundaries
-                let min_clock = (0..machines)
+                // evaluation at live min-clock boundaries (a frozen dead
+                // clock must not pin evaluation forever)
+                let Some(min_clock) = (0..machines)
+                    .filter(|&p| alive[p])
                     .map(|p| workers[p].clocks_done)
                     .min()
-                    .unwrap();
+                else {
+                    continue;
+                };
                 if min_clock as i64 > last_eval_clock
                     && min_clock % opts.eval_every == 0
                 {
@@ -601,8 +692,60 @@ pub fn run_experiment_with<S: ParamServer>(
                         workers.iter().map(|w| w.own_allocs).sum();
                     audit.arm(queue.capacity(), arrivals.allocs, own_allocs);
                 }
+
+                // joins fire once the live minimum reaches their clock:
+                // the rejoiner is admitted at the live min (zero-delta
+                // fast-forward), resumes its cache there, and everyone
+                // re-shards from the bumped epoch
+                while let Some(i) = pending_members
+                    .iter()
+                    .position(|e| e.join && min_clock >= e.at_clock)
+                {
+                    let e = pending_members.swap_remove(i);
+                    if alive[e.worker] {
+                        continue; // already a member: nothing to do
+                    }
+                    let epoch = server.admit_worker(e.worker);
+                    alive[e.worker] = true;
+                    let resume = server.clock(e.worker);
+                    let w = &mut workers[e.worker];
+                    w.cache.resume_at(resume);
+                    w.clocks_done = resume;
+                    // pre-crash commits died with the old incarnation:
+                    // nothing of theirs is still owed a refold
+                    while let Some((_, g)) = w.own_pending.pop_front() {
+                        w.own_pool.push(g);
+                    }
+                    w.status = WorkerStatus::Ready;
+                    membership_log.push(MembershipChange {
+                        vtime: now,
+                        epoch,
+                        worker: e.worker,
+                        join: true,
+                    });
+                    rebalance_live(
+                        dataset,
+                        &mut workers,
+                        &alive,
+                        epoch,
+                        cfg.train.batch,
+                        cfg.train.seed,
+                    );
+                    queue.push(now, Payload::StartClock { worker: e.worker });
+                }
             }
             Payload::Arrival { idx } => {
+                let (from, sent) =
+                    (arrivals.slots[idx].msg.from, arrivals.slots[idx].sent);
+                if sent <= drop_before[from] {
+                    // the sender was evicted with this update in flight:
+                    // it never reaches the master (its *applied* counts
+                    // freeze below its committed clock — the ε clamp's
+                    // case) and must not race a rejoin's fast-forwarded
+                    // version rows
+                    arrivals.release(idx);
+                    continue;
+                }
                 {
                     let slot = &arrivals.slots[idx];
                     server.apply_arrival(&slot.msg);
@@ -658,6 +801,34 @@ pub fn run_experiment_with<S: ParamServer>(
         final_params,
         trace,
         steady_reallocs,
+        membership: membership_log,
+    }
+}
+
+/// Deterministic post-transition re-shard: survivors re-derive their
+/// data shards and minibatch streams from `(epoch, seed)` alone — not
+/// from any live rng state — so a membership history replays
+/// bit-for-bit no matter when each transition was observed. Dead
+/// workers keep their (now empty) slots; indices stay worker-aligned.
+fn rebalance_live(
+    dataset: &Dataset,
+    workers: &mut [ZcWorker],
+    alive: &[bool],
+    epoch: u64,
+    batch: usize,
+    seed: u64,
+) {
+    let mask = alive
+        .iter()
+        .enumerate()
+        .fold(0u64, |m, (w, &a)| if a { m | (1u64 << (w & 63)) } else { m });
+    let shards = dataset.shard_elastic(workers.len(), mask, epoch, seed);
+    for sh in &shards {
+        let w = sh.worker();
+        if alive[w] {
+            workers[w].batches =
+                sh.minibatches(batch, super::elastic_batch_rng(seed, epoch, w));
+        }
     }
 }
 
@@ -1076,6 +1247,7 @@ pub fn run_experiment_alloc_with<S: ParamServer>(
         final_params,
         trace,
         steady_reallocs: 0,
+        membership: Vec::new(),
     }
 }
 
@@ -1344,6 +1516,98 @@ mod tests {
 
     // NOTE: zero-copy ≡ allocating-oracle equivalence (both server
     // backings, all policies, traces) lives in tests/property_driver.rs.
+
+    #[test]
+    fn scripted_eviction_completes_and_logs_epoch() {
+        use crate::ssp::ShardedServer;
+        let cfg = tiny_cfg();
+        let ds = build_dataset(&cfg);
+        let opts = DriverOptions {
+            membership: vec![MembershipEvent {
+                at_clock: 4,
+                worker: 2,
+                join: false,
+            }],
+            ..fast_opts()
+        };
+        let r = run_experiment_with(&cfg, opts, &ds, ShardedServer::new);
+        assert_eq!(r.membership.len(), 1);
+        assert_eq!(r.membership[0].epoch, 1);
+        assert_eq!(r.membership[0].worker, 2);
+        assert!(!r.membership[0].join);
+        assert!(r.final_objective.is_finite());
+        // victim stops after 4 clocks; the survivors run the horizon out
+        assert_eq!(r.steps, (4 + 12 + 12) * 2);
+        let first = r.evals.first().unwrap().objective;
+        assert!(
+            r.final_objective < first,
+            "run must keep converging past the eviction: {first} -> {}",
+            r.final_objective
+        );
+    }
+
+    #[test]
+    fn eviction_matches_between_server_backings() {
+        // the elastic predicates must stay oracle-disciplined: the
+        // single-lock reference and the sharded server walk the same
+        // membership schedule to bitwise-identical weights
+        use crate::ssp::ShardedServer;
+        let cfg = tiny_cfg();
+        let ds = build_dataset(&cfg);
+        let sched = vec![MembershipEvent {
+            at_clock: 3,
+            worker: 0,
+            join: false,
+        }];
+        let a = run_experiment_with(
+            &cfg,
+            DriverOptions { membership: sched.clone(), ..fast_opts() },
+            &ds,
+            Server::new,
+        );
+        let b = run_experiment_with(
+            &cfg,
+            DriverOptions { membership: sched, ..fast_opts() },
+            &ds,
+            ShardedServer::new,
+        );
+        assert_eq!(a.final_params, b.final_params);
+        assert_eq!(a.total_vtime, b.total_vtime);
+        assert_eq!(a.membership, b.membership);
+    }
+
+    #[test]
+    fn membership_schedule_replays_bitwise() {
+        // leave at clock 3, rejoin once the live min reaches 6: the
+        // identical schedule must reproduce identical final weights —
+        // the determinism the elastic re-shard's (epoch, seed) keying
+        // exists to provide
+        use crate::ssp::ShardedServer;
+        let cfg = tiny_cfg();
+        let ds = build_dataset(&cfg);
+        let sched = vec![
+            MembershipEvent { at_clock: 3, worker: 1, join: false },
+            MembershipEvent { at_clock: 6, worker: 1, join: true },
+        ];
+        let run = || {
+            run_experiment_with(
+                &cfg,
+                DriverOptions { membership: sched.clone(), ..fast_opts() },
+                &ds,
+                ShardedServer::new,
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.final_params, b.final_params);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.membership, b.membership);
+        assert_eq!(a.membership.len(), 2);
+        assert_eq!(a.membership[1].epoch, 2);
+        assert!(a.membership[1].join, "second transition is the rejoin");
+        // the rejoiner really trained again after re-admission
+        assert!(a.steps > (3 + 12 + 12) * 2, "rejoin must add steps");
+    }
 
     #[test]
     fn deterministic_given_config() {

@@ -28,7 +28,7 @@ mod tracker;
 pub use driver::{
     build_dataset, run_experiment, run_experiment_alloc_on,
     run_experiment_alloc_with, run_experiment_on, run_experiment_with,
-    DriverOptions, RunResult,
+    DriverOptions, MembershipChange, MembershipEvent, RunResult,
 };
 pub use sweep::{
     run_sweep, run_sweep_with, sweep_cells, CellResult, SweepCell,
@@ -55,6 +55,18 @@ use crate::util::Pcg64;
 pub fn init_params(cfg: &ExperimentConfig) -> ParamSet {
     let mut init_rng = Pcg64::new(cfg.train.seed ^ 0xD11);
     ParamSet::glorot(&cfg.model.dims, &mut init_rng)
+}
+
+/// The minibatch rng stream worker `worker` adopts after an elastic
+/// re-shard at membership `epoch`: a pure function of `(seed, epoch,
+/// worker)`, so every layer — the simulated driver, each surviving
+/// thread of the real runner, a rejoining process — derives the
+/// identical stream independently, without sharing rng state or
+/// agreeing on when the epoch was observed. (The splitmix-style odd
+/// constant matches `Dataset::shard_elastic`'s epoch mix.)
+pub fn elastic_batch_rng(seed: u64, epoch: u64, worker: usize) -> Pcg64 {
+    let mut root = Pcg64::new(seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    root.split(100 + worker as u64)
 }
 
 /// Learning-rate schedule. The paper's experiments use a fixed rate

@@ -247,6 +247,10 @@ fn run_threaded_ports<P: WorkerPort>(
                 let mut by =
                     Labels::Class(Vec::with_capacity(cfg.train.batch));
                 let mut steps: u64 = 0;
+                // membership epoch this worker last re-sharded at
+                // (fixed-membership ports report epoch 0 forever, so
+                // the elastic branch below never fires for them)
+                let mut epoch: u64 = 0;
                 for clock in 0..cfg.train.clocks as u64 {
                     // barrier + read guarantee: park on the server's
                     // condvar; no parameter state is locked while waiting
@@ -260,6 +264,32 @@ fn run_threaded_ports<P: WorkerPort>(
                     // read-my-writes re-fold.
                     let (buf, seen, own) = cache.refresh_target();
                     port.fetch_view(p, buf, seen, own);
+
+                    // elastic membership: the gated fetch piggybacks the
+                    // server's membership epoch; when it moves, re-derive
+                    // this worker's data shard from the new live set. The
+                    // deal is a pure function of (epoch, seed), so every
+                    // survivor lands on the same partition regardless of
+                    // which clock it noticed the transition at.
+                    let (cur, mask) = port.membership();
+                    if cur > epoch {
+                        epoch = cur;
+                        let shards = dataset.shard_elastic(
+                            machines,
+                            mask,
+                            epoch,
+                            cfg.train.seed,
+                        );
+                        batches = shards[p].minibatches(
+                            cfg.train.batch,
+                            super::elastic_batch_rng(cfg.train.seed, epoch, p),
+                        );
+                        crate::info!(
+                            "worker {p}: membership epoch {epoch} observed, \
+                             re-sharded to {} samples",
+                            shards[p].len()
+                        );
+                    }
 
                     // compute without holding anything
                     for _ in 0..cfg.train.batches_per_clock {

@@ -84,6 +84,47 @@ impl Dataset {
             .map(|(w, idx)| Shard::new(w, idx))
             .collect()
     }
+
+    /// Elastic re-shard after a membership change: deal the whole
+    /// dataset round-robin over the *live* workers only (bit `w` of
+    /// `live_mask` set = worker `w` live; workers ≥ 64 are always
+    /// treated as live, matching the wire mask's width). Dead workers
+    /// get empty shards so indices stay aligned with worker ids.
+    ///
+    /// The permutation is seeded by `seed` *mixed with the membership
+    /// epoch*, independent of any live rng state — so a membership
+    /// history replays bit-for-bit: the same `(p, live_mask, epoch,
+    /// seed)` always yields the same shards, no matter how many
+    /// transitions happened in between or in what order the survivors
+    /// observed them. Epoch 0 (nobody evicted yet) is not routed here;
+    /// the initial sharding stays [`Dataset::shard`].
+    pub fn shard_elastic(
+        &self,
+        p: usize,
+        live_mask: u64,
+        epoch: u64,
+        seed: u64,
+    ) -> Vec<Shard> {
+        let live: Vec<usize> = (0..p)
+            .filter(|&w| w >= 64 || (live_mask >> w) & 1 == 1)
+            .collect();
+        assert!(!live.is_empty(), "shard_elastic: no live workers");
+        // splitmix-style odd-constant mix keeps nearby epochs' streams
+        // unrelated without consuming state from the caller's rng
+        let mut rng = crate::util::Pcg64::new(
+            seed ^ (epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        );
+        let perm = rng.permutation(self.n_samples());
+        let mut shards: Vec<Vec<usize>> = vec![Vec::new(); p];
+        for (i, &s) in perm.iter().enumerate() {
+            shards[live[i % live.len()]].push(s);
+        }
+        shards
+            .into_iter()
+            .enumerate()
+            .map(|(w, idx)| Shard::new(w, idx))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -139,5 +180,41 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.indices(), y.indices());
         }
+    }
+
+    #[test]
+    fn elastic_shards_partition_over_live_workers_only() {
+        let ds = tiny_ds();
+        // workers 0 and 2 live, worker 1 evicted
+        let shards = ds.shard_elastic(3, 0b101, 1, 42);
+        assert_eq!(shards.len(), 3, "dead workers keep (empty) slots");
+        assert_eq!(shards[1].len(), 0, "evicted worker owns no samples");
+        let mut all: Vec<usize> = shards
+            .iter()
+            .flat_map(|s| s.indices().to_vec())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>(), "full partition");
+        assert!(
+            shards[0].len().abs_diff(shards[2].len()) <= 1,
+            "survivors balanced"
+        );
+    }
+
+    #[test]
+    fn elastic_sharding_replays_bit_for_bit() {
+        let ds = tiny_ds();
+        let a = ds.shard_elastic(4, 0b1011, 3, 7);
+        let b = ds.shard_elastic(4, 0b1011, 3, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices(), y.indices());
+        }
+        // a different epoch deals a different permutation: rejoining at
+        // epoch 5 must not silently reuse epoch 3's deal
+        let c = ds.shard_elastic(4, 0b1011, 5, 7);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.indices() != y.indices()),
+            "epoch must perturb the permutation"
+        );
     }
 }

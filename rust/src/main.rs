@@ -16,7 +16,7 @@ use sspdnn::cli::Args;
 use sspdnn::config::{ExperimentConfig, SweepConfig, TomlDoc, TransportConfig};
 use sspdnn::coordinator::{
     build_dataset, init_params, run_experiment_on, run_experiment_with,
-    run_sweep, DriverOptions, EtaSchedule, SweepOptions,
+    run_sweep, DriverOptions, EtaSchedule, MembershipEvent, SweepOptions,
 };
 use sspdnn::metrics;
 use sspdnn::runtime::{Manifest, PjrtEngine};
@@ -114,6 +114,20 @@ FLAGS (transport; also settable via the [transport] TOML table):
   --lease-ms N                train: heartbeat lease duration in ms; an
                               expired lease releases the dead worker's
                               barrier waiters server-side (0 = off)
+  --elastic                   serve: elastic membership — an expired
+                              lease EVICTS the worker (membership epoch
+                              bump; survivors re-shard over the live
+                              set and keep converging) instead of
+                              failing its barrier waits; an evicted
+                              worker may re-ADMIT and rejoin at the
+                              live minimum (at most 64 workers)
+  --leave w@c,...             train/simulate: membership schedule — each
+                              worker w dies after finishing clock c
+                              (evicted; its in-flight updates are lost,
+                              survivors rebalance its data shard)
+  --join w@c,...              train/simulate: worker w rejoins once the
+                              live min clock reaches c (re-admitted at
+                              the live minimum, takes a shard back)
   --addr host:port            serve: base listen address (group g binds
                               port+g; default 127.0.0.1:7070)
   --shard-groups N            serve: endpoint count (clamped to layers)
@@ -135,7 +149,9 @@ FLAGS (chaos):
   --listen host:port          proxy listen address (default 127.0.0.1:0)
   --script S                  fault script: action[:arg]@op:n items
                               joined by ';' — e.g.
-                              'kill@update:40;delay:25@fetch:3;torn@commit:7'
+                              'kill@update:40;delay:25@fetch:3;torn@commit:7;
+                               pause:500@heartbeat:2' (pause freezes the
+                              relay both ways, sockets kept open)
   --seed N                    torn-write length RNG seed (default 1)
 
 FLAGS (sweep; grid also settable via the [sweep] TOML table):
@@ -238,7 +254,34 @@ fn driver_opts(args: &Args, cfg: &ExperimentConfig) -> Result<DriverOptions, Str
         let engine = PjrtEngine::load(spec).map_err(|e| e.to_string())?;
         opts.engine = Some(sspdnn::coordinator::EngineKind::Boxed(Box::new(engine)));
     }
+    opts.membership = parse_membership(args)?;
     Ok(opts)
+}
+
+/// `--leave 2@5,0@9` / `--join 2@12`: comma-separated `worker@clock`
+/// membership events for the simulated driver (leaves fire when the
+/// worker finishes clock c, joins once the live min reaches c).
+fn parse_membership(args: &Args) -> Result<Vec<MembershipEvent>, String> {
+    let mut events = Vec::new();
+    for (flag, join) in [("leave", false), ("join", true)] {
+        let Some(spec) = args.get(flag) else { continue };
+        for item in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let item = item.trim();
+            let (w, c) = item
+                .split_once('@')
+                .ok_or_else(|| format!("--{flag}: want worker@clock, got {item:?}"))?;
+            events.push(MembershipEvent {
+                worker: w
+                    .parse()
+                    .map_err(|_| format!("--{flag}: bad worker in {item:?}"))?,
+                at_clock: c
+                    .parse()
+                    .map_err(|_| format!("--{flag}: bad clock in {item:?}"))?,
+                join,
+            });
+        }
+    }
+    Ok(events)
 }
 
 /// The `[transport]` table plus its CLI overrides.
@@ -274,6 +317,9 @@ fn transport_config(
     }
     if let Some(l) = args.get_u64("lease-ms").map_err(|e| e.to_string())? {
         tcfg.lease_ms = l;
+    }
+    if args.get_bool("elastic") {
+        tcfg.elastic = true;
     }
     tcfg.validate()?;
     Ok(tcfg)
@@ -369,6 +415,15 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     );
     let objs: Vec<f64> = run.evals.iter().map(|e| e.objective).collect();
     println!("objective curve: {}", metrics::sparkline(&objs));
+    for m in &run.membership {
+        println!(
+            "membership: worker {} {} at {} (epoch {})",
+            m.worker,
+            if m.join { "joined" } else { "evicted" },
+            fmt_duration(m.vtime),
+            m.epoch,
+        );
+    }
     if let Some(dir) = args.get("out") {
         metrics::write_file(
             &format!("{dir}/{}_curve.csv", cfg.name),
@@ -503,6 +558,16 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             cfg.model.dims.len() - 1,
         ),
     }
+    if tcfg.elastic {
+        println!(
+            "elastic membership: on (lease {})",
+            if tcfg.lease_ms > 0 {
+                format!("{}ms", tcfg.lease_ms)
+            } else {
+                "off — evictions only via LEAVE".to_string()
+            }
+        );
+    }
     println!("gemm: {}", dispatch::describe(dispatch::current()));
     for (g, a) in svc.addrs().iter().enumerate() {
         match group {
@@ -579,6 +644,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         &cfg,
         DriverOptions {
             trace: true,
+            membership: parse_membership(args)?,
             ..DriverOptions::default()
         },
         &dataset,

@@ -196,6 +196,22 @@ impl WorkerCache {
         self.touched.fill(false);
     }
 
+    /// Rejoin warm-start: adopt `clock` as the clock this worker will
+    /// compute next and discard any half-accumulated pending deltas —
+    /// a worker that was evicted and re-admitted resumes *at the live
+    /// minimum*, not where it crashed, because the server fast-forwarded
+    /// its clock row on admit and would reject commits timestamped in
+    /// the past. The version gate is invalidated too (the view's
+    /// provenance relative to the current server is unknown); the view
+    /// bits themselves are left for the follow-up snapshot/gated fetch
+    /// to overwrite.
+    pub fn resume_at(&mut self, clock: u64) {
+        self.pending.fill_zero();
+        self.pending_dirty = false;
+        self.clock = clock;
+        self.reset_gate();
+    }
+
     /// Install a fresh server snapshot (the message path: the snapshot
     /// may or may not include this worker's own recent commits).
     /// `own_missing` is the portion of our committed updates NOT yet in
@@ -391,6 +407,22 @@ mod tests {
         assert_eq!(c.clock(), 1, "reconnects never un-commit clocks");
         let got = c.view().layers[0].w.at(0, 0);
         assert!((got - 0.5).abs() < 1e-6, "view bits untouched by reset");
+    }
+
+    #[test]
+    fn resume_at_discards_pending_and_invalidates_gate() {
+        let init = ParamSet::zeros(&dims());
+        let mut c = WorkerCache::new(0, init.clone());
+        c.add_local_update(&unit_update(&dims(), 0.4));
+        // crash mid-clock 0, re-admitted with the live min at clock 6
+        c.resume_at(6);
+        assert_eq!(c.clock(), 6);
+        assert_eq!(c.pending().layers[0].w.norm_sq(), 0.0, "pending gone");
+        let (_, seen, _) = c.refresh_target(); // no mid-clock panic
+        assert!(
+            seen.iter().all(|&s| s == u64::MAX),
+            "view provenance unknown after rejoin"
+        );
     }
 
     #[test]

@@ -35,6 +35,14 @@ impl ClockTable {
         *self.clocks.iter().min().unwrap()
     }
 
+    /// Admit fast-forward: jump `p`'s committed count to `c`. Only the
+    /// elastic re-admission path does this — everything else advances
+    /// one commit at a time — and never backwards.
+    pub fn fast_forward(&mut self, p: usize, c: u64) {
+        assert!(c >= self.clocks[p], "clock fast-forward went backwards");
+        self.clocks[p] = c;
+    }
+
     pub fn max(&self) -> u64 {
         *self.clocks.iter().max().unwrap()
     }

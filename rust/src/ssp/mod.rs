@@ -96,6 +96,44 @@ pub trait ParamServer {
     fn applied(&self, layer: usize, worker: usize) -> u64;
     /// Total reads served.
     fn reads(&self) -> u64;
+
+    // ---- elastic membership ----
+    //
+    // The worker set the protocol's min-clock and ε accounting range
+    // over. Every implementation starts all-live at epoch 0; each
+    // successful evict/admit transition bumps the epoch exactly once,
+    // which is the signal workers rebalance their data shards on.
+
+    /// Current membership epoch (0 ⇔ the original worker set).
+    fn membership_epoch(&self) -> u64 {
+        0
+    }
+
+    /// Membership flag of `worker`.
+    fn is_live(&self, _worker: usize) -> bool {
+        true
+    }
+
+    /// Live set as a bitmask (bit `p` set ⇔ worker `p` live; meaningful
+    /// for ≤ 64 workers, which the transport enforces at its boundary).
+    fn live_mask(&self) -> u64 {
+        (0..self.workers().min(64))
+            .filter(|&p| self.is_live(p))
+            .fold(0u64, |m, p| m | (1u64 << p))
+    }
+
+    /// Remove `worker` from the membership: its applied history stays
+    /// in θ and in the ε totals, but it stops bounding the staleness
+    /// barrier, stops gating `read_ready`, and its never-applied window
+    /// contributions drop from future reads' ε stats. Idempotent;
+    /// returns the epoch after the call.
+    fn evict_worker(&mut self, worker: usize) -> u64;
+
+    /// Re-admit an evicted `worker`, fast-forwarding its clock and
+    /// version entries to the live min so it neither stalls the barrier
+    /// nor trips FIFO bookkeeping. Idempotent; returns the epoch after
+    /// the call.
+    fn admit_worker(&mut self, worker: usize) -> u64;
 }
 
 /// Per-worker handle onto a (possibly remote) SSP server for the
@@ -135,6 +173,14 @@ pub trait WorkerPort: Send {
     ) -> FetchStats;
     /// Full master snapshot (the end-of-run read).
     fn master_snapshot(&mut self) -> ParamSet;
+    /// Membership observation for the rebalance check: `(epoch, live
+    /// bitmask)`. Cheap — the shared-memory port reads the server's
+    /// counters, the remote port answers from the epoch piggybacked on
+    /// its latest gated read and only round-trips when it moved.
+    /// Fixed-membership ports report `(0, !0)`.
+    fn membership(&mut self) -> (u64, u64) {
+        (0, !0u64)
+    }
 }
 
 /// Consistency policy. `Bsp` ≡ `Ssp{staleness: 0}` with a full barrier;

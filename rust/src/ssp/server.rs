@@ -65,6 +65,13 @@ pub struct Server {
     /// against. Zero deltas advance the version vector (protocol FIFO)
     /// but cannot change θ, so they leave the revision alone.
     layer_revs: Vec<u64>,
+    /// Membership flags (`ShardedServer` keeps the same flags inside
+    /// its atomic clock table): an evicted worker's history is frozen,
+    /// not rewritten — it just stops bounding the barrier and the read
+    /// guarantee.
+    live: Vec<bool>,
+    /// Membership epoch: +1 per evict/admit transition.
+    epoch: u64,
     bytes_received: u64,
     reads: u64,
     copy_totals: FetchStats,
@@ -78,6 +85,8 @@ impl Server {
             clocks: ClockTable::new(workers),
             policy,
             layer_revs: vec![0; layers],
+            live: vec![true; workers],
+            epoch: 0,
             bytes_received: 0,
             reads: 0,
             copy_totals: FetchStats::default(),
@@ -116,24 +125,80 @@ impl Server {
         self.table.apply(msg);
     }
 
+    /// Min committed clock over the live set (frozen global min with
+    /// the degenerate empty live set) — what the staleness barrier
+    /// compares against under elastic membership.
+    fn live_min(&self) -> u64 {
+        (0..self.clocks.workers())
+            .filter(|&q| self.live[q])
+            .map(|q| self.clocks.clock(q))
+            .min()
+            .unwrap_or_else(|| self.clocks.min())
+    }
+
     /// Must worker `p` block before *starting* its next clock?
     pub fn must_wait(&self, worker: usize) -> bool {
-        self.clocks.must_wait(worker, self.policy)
+        match self.policy.staleness() {
+            None => false,
+            Some(s) => self.clocks.clock(worker) > self.live_min() + s,
+        }
     }
 
     /// Is the master state sufficient for worker `p` (about to compute
     /// clock `c = clocks[p]`) to read? Guarantee: every update with
     /// timestamp ≤ c−s−1 must have been applied — i.e. applied counts
-    /// ≥ c−s for every (layer, worker). Async has no guarantee.
+    /// ≥ c−s for every live (layer, worker). Async has no guarantee;
+    /// evicted workers are exempt (their in-flight updates may never
+    /// arrive).
     pub fn read_ready(&self, worker: usize) -> bool {
         let c = self.clocks.clock(worker);
         match self.policy.staleness() {
             None => true,
             Some(s) => {
                 let through = c.saturating_sub(s);
-                self.table.versions().all_applied_through(through)
+                (0..self.n_layers()).all(|l| {
+                    (0..self.clocks.workers()).all(|q| {
+                        !self.live[q]
+                            || self.table.versions().applied(l, q) >= through
+                    })
+                })
             }
         }
+    }
+
+    /// Current membership epoch (0 at construction).
+    pub fn membership_epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn is_live(&self, worker: usize) -> bool {
+        self.live[worker]
+    }
+
+    /// Evict `worker` — the reference semantics `ShardedServer` is
+    /// pinned against: history frozen, barrier and read guarantee
+    /// released, pending window contributions dropped from future ε
+    /// stats. Idempotent; returns the epoch after the call.
+    pub fn evict_worker(&mut self, worker: usize) -> u64 {
+        if self.live[worker] {
+            self.live[worker] = false;
+            self.epoch += 1;
+        }
+        self.epoch
+    }
+
+    /// Re-admit `worker` at the live min clock, fast-forwarding its
+    /// clock and version entries first (zero-delta move: θ and the gate
+    /// revisions untouched). Idempotent; returns the epoch after.
+    pub fn admit_worker(&mut self, worker: usize) -> u64 {
+        if !self.live[worker] {
+            let target = self.live_min().max(self.clocks.clock(worker));
+            self.clocks.fast_forward(worker, target);
+            self.table.fast_forward(worker, target);
+            self.live[worker] = true;
+            self.epoch += 1;
+        }
+        self.epoch
     }
 
     /// Serve a read for worker `p`: snapshot + per-layer applied counts of
@@ -153,7 +218,14 @@ impl Server {
                     continue;
                 }
                 let applied = self.table.versions().applied(l, q);
-                let committed = self.clocks.clock(q);
+                // an evicted worker's committed-but-never-applied
+                // window contributions are dropped (clamp to what
+                // actually arrived); its applied history keeps counting
+                let committed = if self.live[q] {
+                    self.clocks.clock(q)
+                } else {
+                    self.clocks.clock(q).min(applied)
+                };
                 let guaranteed = through.min(committed);
                 stats.guaranteed += guaranteed;
                 let extra_applied = applied.saturating_sub(guaranteed);
@@ -199,7 +271,13 @@ impl Server {
                     continue;
                 }
                 let applied = self.table.versions().applied(l, q);
-                let committed = self.clocks.clock(q);
+                // evicted: drop never-applied window contributions
+                // (see `fetch`)
+                let committed = if self.live[q] {
+                    self.clocks.clock(q)
+                } else {
+                    self.clocks.clock(q).min(applied)
+                };
                 let guaranteed = through.min(committed);
                 stats.guaranteed += guaranteed;
                 let extra_applied = applied.saturating_sub(guaranteed);
@@ -333,6 +411,22 @@ impl ParamServer for Server {
 
     fn reads(&self) -> u64 {
         Server::reads(self)
+    }
+
+    fn membership_epoch(&self) -> u64 {
+        Server::membership_epoch(self)
+    }
+
+    fn is_live(&self, worker: usize) -> bool {
+        Server::is_live(self, worker)
+    }
+
+    fn evict_worker(&mut self, worker: usize) -> u64 {
+        Server::evict_worker(self, worker)
+    }
+
+    fn admit_worker(&mut self, worker: usize) -> u64 {
+        Server::admit_worker(self, worker)
     }
 }
 

@@ -36,7 +36,7 @@
 //! boundary for a future multi-process transport: one shard maps to one
 //! independently-consistent network endpoint.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, RwLock};
 
 use crate::nn::{GradSet, LayerParams, ParamSet};
@@ -45,9 +45,17 @@ use super::{FetchStats, ParamServer, Policy, ReadStats, UpdateMsg, WorkerPort};
 
 /// Lock-free committed-clock table: `clocks[p] = c` means worker `p` has
 /// committed `c` clocks (same contract as `ClockTable`, atomically).
+///
+/// Elastic membership lives here too, because the min-clock is what
+/// membership actually *means* to the protocol: `live[p] == false`
+/// freezes worker `p`'s committed count in the table (history is never
+/// rewritten) but removes it from the min the staleness barrier
+/// compares against, so survivors stop waiting for a peer that will
+/// never commit again.
 #[derive(Debug)]
 pub struct AtomicClockTable {
     clocks: Vec<AtomicU64>,
+    live: Vec<AtomicBool>,
 }
 
 impl AtomicClockTable {
@@ -55,6 +63,7 @@ impl AtomicClockTable {
         assert!(workers > 0);
         AtomicClockTable {
             clocks: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            live: (0..workers).map(|_| AtomicBool::new(true)).collect(),
         }
     }
 
@@ -71,12 +80,67 @@ impl AtomicClockTable {
         self.clocks[p].fetch_add(1, Ordering::AcqRel) + 1
     }
 
-    pub fn min(&self) -> u64 {
+    /// Membership flag of worker `p` (lock-free).
+    pub fn is_live(&self, p: usize) -> bool {
+        self.live[p].load(Ordering::Acquire)
+    }
+
+    /// Flip `p`'s membership flag; returns false if it already held
+    /// `to` (the CAS makes concurrent evict/admit races single-winner,
+    /// so the epoch counter moves exactly once per transition).
+    fn transition_live(&self, p: usize, to: bool) -> bool {
+        self.live[p]
+            .compare_exchange(!to, to, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+    }
+
+    /// Jump `p`'s committed count (admit fast-forward only — clocks are
+    /// otherwise strictly advanced one commit at a time).
+    fn set_clock(&self, p: usize, c: u64) {
+        self.clocks[p].store(c, Ordering::SeqCst);
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live
+            .iter()
+            .filter(|l| l.load(Ordering::Acquire))
+            .count()
+    }
+
+    /// Live set as a bitmask (bit `p` set ⇔ worker `p` live). The wire
+    /// protocol ships this in one u64; the worker-count ceiling is
+    /// enforced where the mask crosses the process boundary.
+    pub fn live_mask(&self) -> u64 {
+        self.live
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.load(Ordering::Acquire))
+            .fold(0u64, |m, (p, _)| m | (1u64 << (p & 63)))
+    }
+
+    /// Min committed clock over the live set only; `None` if every
+    /// worker has been evicted.
+    pub fn live_min(&self) -> Option<u64> {
         self.clocks
             .iter()
-            .map(|c| c.load(Ordering::Acquire))
+            .zip(&self.live)
+            .filter(|(_, l)| l.load(Ordering::Acquire))
+            .map(|(c, _)| c.load(Ordering::Acquire))
             .min()
-            .unwrap()
+    }
+
+    /// The staleness barrier's min clock: over live workers (evicted
+    /// clocks are frozen history, not a bound). With the degenerate
+    /// empty live set it falls back to the frozen global min so the
+    /// predicates stay total.
+    pub fn min(&self) -> u64 {
+        self.live_min().unwrap_or_else(|| {
+            self.clocks
+                .iter()
+                .map(|c| c.load(Ordering::Acquire))
+                .min()
+                .unwrap()
+        })
     }
 
     pub fn max(&self) -> u64 {
@@ -156,6 +220,11 @@ pub struct ShardedServer {
     clocks: AtomicClockTable,
     policy: Policy,
     workers: usize,
+    /// Membership epoch: bumped once per successful evict/admit
+    /// transition. Workers re-derive their data shard from
+    /// (epoch, live set), so observing a bump on a gated read is the
+    /// rebalance trigger.
+    epoch: AtomicU64,
     bytes_received: AtomicU64,
     reads: AtomicU64,
     applied: AtomicU64,
@@ -182,6 +251,7 @@ impl ShardedServer {
             clocks: AtomicClockTable::new(workers),
             policy,
             workers,
+            epoch: AtomicU64::new(0),
             bytes_received: AtomicU64::new(0),
             reads: AtomicU64::new(0),
             applied: AtomicU64::new(0),
@@ -223,9 +293,14 @@ impl ShardedServer {
             shards,
             clocks: AtomicClockTable {
                 clocks: state.clocks.into_iter().map(AtomicU64::new).collect(),
+                live: (0..workers).map(|_| AtomicBool::new(true)).collect(),
             },
             policy: state.policy,
             workers,
+            // membership is lease-derived runtime state, not protocol
+            // state: a restarted server starts all-live at epoch 0 and
+            // re-learns evictions from expiring leases
+            epoch: AtomicU64::new(0),
             bytes_received: AtomicU64::new(0),
             reads: AtomicU64::new(0),
             applied: AtomicU64::new(0),
@@ -285,6 +360,78 @@ impl ShardedServer {
         let c = self.clocks.advance(worker);
         self.bump();
         c
+    }
+
+    /// Current membership epoch (0 at construction; +1 per evict/admit).
+    pub fn membership_epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Membership flag of `worker`.
+    pub fn is_live(&self, worker: usize) -> bool {
+        self.clocks.is_live(worker)
+    }
+
+    /// Live set as a bitmask (bit `p` set ⇔ worker `p` live).
+    pub fn live_mask(&self) -> u64 {
+        self.clocks.live_mask()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.clocks.live_count()
+    }
+
+    /// Evict `worker` from the membership: its committed history stays
+    /// applied (and counted), but it stops bounding the staleness
+    /// barrier, its unapplied version entries stop gating `read_ready`,
+    /// and its committed-but-never-applied window contributions drop
+    /// out of the ε totals. Parked barrier waiters are pulsed so they
+    /// re-check against the shrunken live set. Idempotent; returns the
+    /// membership epoch after the call (bumped iff the worker was
+    /// live). Late in-flight updates from an evicted worker are still
+    /// accepted — FIFO bookkeeping stays intact, the bits simply count
+    /// as best-effort extra until (unless) the worker re-admits.
+    pub fn evict_worker(&self, worker: usize) -> u64 {
+        assert!(worker < self.workers, "evict: worker out of range");
+        if !self.clocks.transition_live(worker, false) {
+            return self.membership_epoch();
+        }
+        let e = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        self.bump();
+        e
+    }
+
+    /// Re-admit an evicted `worker` at the current live min clock. Its
+    /// clock and every per-layer version entry fast-forward to that
+    /// floor *before* the live flag flips — the same move as a
+    /// zero-delta update (versions advance, θ and the gate revision
+    /// untouched), so the FIFO assert and every other worker's read
+    /// guarantee stay sound and the rejoiner never drags the min
+    /// backwards. Idempotent; returns the epoch after the call.
+    pub fn admit_worker(&self, worker: usize) -> u64 {
+        assert!(worker < self.workers, "admit: worker out of range");
+        if self.clocks.is_live(worker) {
+            return self.membership_epoch();
+        }
+        let target = self
+            .clocks
+            .live_min()
+            .unwrap_or_else(|| self.clocks.clock(worker));
+        if target > self.clocks.clock(worker) {
+            self.clocks.set_clock(worker, target);
+            for shard in &self.shards {
+                // under the shard write lock so the store cannot race
+                // an in-flight apply_delta's FIFO check on this entry
+                let _guard = shard.params.write().unwrap();
+                shard.versions[worker].store(target, Ordering::SeqCst);
+            }
+        }
+        if !self.clocks.transition_live(worker, true) {
+            return self.membership_epoch();
+        }
+        let e = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        self.bump();
+        e
     }
 
     /// A (possibly delayed) update message reaches its layer's shard.
@@ -364,7 +511,10 @@ impl ShardedServer {
     }
 
     /// Guaranteed-visibility check (Eq. 5): every update with timestamp
-    /// ≤ c−s−1 applied, per (layer, worker). Lock-free.
+    /// ≤ c−s−1 applied, per (layer, worker). Lock-free. Evicted workers
+    /// are exempt — their in-flight updates may never arrive, so gating
+    /// on them would deadlock every survivor; whatever did arrive is
+    /// already folded into θ.
     pub fn read_ready(&self, worker: usize) -> bool {
         let c = self.clocks.clock(worker);
         match self.policy.staleness() {
@@ -372,10 +522,10 @@ impl ShardedServer {
             Some(s) => {
                 let through = c.saturating_sub(s);
                 self.shards.iter().all(|shard| {
-                    shard
-                        .versions
-                        .iter()
-                        .all(|v| v.load(Ordering::Acquire) >= through)
+                    shard.versions.iter().enumerate().all(|(q, v)| {
+                        !self.clocks.is_live(q)
+                            || v.load(Ordering::Acquire) >= through
+                    })
                 })
             }
         }
@@ -448,10 +598,10 @@ impl ShardedServer {
             Some(s) => {
                 let through = c.saturating_sub(s);
                 self.shards[layers].iter().all(|shard| {
-                    shard
-                        .versions
-                        .iter()
-                        .all(|v| v.load(Ordering::Acquire) >= through)
+                    shard.versions.iter().enumerate().all(|(q, v)| {
+                        !self.clocks.is_live(q)
+                            || v.load(Ordering::Acquire) >= through
+                    })
                 })
             }
         }
@@ -523,9 +673,11 @@ impl ShardedServer {
         let through = c.saturating_sub(s); // c − s
         // committed clocks hoisted once so the ε statistics of this read
         // are computed against a single clock-table view even while
-        // other workers keep committing
+        // other workers keep committing (membership snapshotted with it)
         let committed: Vec<u64> =
             (0..self.workers).map(|q| self.clocks.clock(q)).collect();
+        let live: Vec<bool> =
+            (0..self.workers).map(|q| self.clocks.is_live(q)).collect();
         let mut stats = ReadStats::default();
         let mut own = Vec::with_capacity(self.shards.len());
         let mut layers = Vec::with_capacity(self.shards.len());
@@ -540,7 +692,15 @@ impl ShardedServer {
                     own.push(applied);
                     continue;
                 }
-                let committed = committed[q];
+                // an evicted worker's committed-but-never-applied
+                // window contributions are dropped (clamp to what
+                // actually arrived); its applied history keeps
+                // counting as guaranteed/included
+                let committed = if live[q] {
+                    committed[q]
+                } else {
+                    committed[q].min(applied)
+                };
                 let guaranteed = through.min(committed);
                 stats.guaranteed += guaranteed;
                 let extra_applied = applied.saturating_sub(guaranteed);
@@ -567,6 +727,7 @@ impl ShardedServer {
         worker: usize,
         through: u64,
         committed: &[u64],
+        live: &[bool],
         own: &mut Vec<u64>,
         stats: &mut ReadStats,
     ) {
@@ -576,7 +737,13 @@ impl ShardedServer {
                 own.push(applied);
                 continue;
             }
-            let committed_q = committed[q];
+            // evicted: drop never-applied window contributions (see
+            // `fetch`); applied history keeps counting
+            let committed_q = if live[q] {
+                committed[q]
+            } else {
+                committed[q].min(applied)
+            };
             let guaranteed = through.min(committed_q);
             stats.guaranteed += guaranteed;
             let extra_applied = applied.saturating_sub(guaranteed);
@@ -616,6 +783,8 @@ impl ShardedServer {
         let through = c.saturating_sub(s); // c − s
         let committed: Vec<u64> =
             (0..self.workers).map(|q| self.clocks.clock(q)).collect();
+        let live: Vec<bool> =
+            (0..self.workers).map(|q| self.clocks.is_live(q)).collect();
         let mut stats = ReadStats::default();
         let mut fs = FetchStats::default();
         own.clear();
@@ -625,7 +794,7 @@ impl ShardedServer {
             let rev_pre = shard.rev.load(Ordering::SeqCst);
             if rev_pre == last_seen[l] {
                 Self::layer_read_stats(
-                    shard, worker, through, &committed, own, &mut stats,
+                    shard, worker, through, &committed, &live, own, &mut stats,
                 );
                 if shard.rev.load(Ordering::SeqCst) == rev_pre {
                     fs.layers_skipped += 1;
@@ -643,7 +812,7 @@ impl ShardedServer {
             fs.layers_copied += 1;
             fs.bytes_copied += params.n_bytes() as u64;
             Self::layer_read_stats(
-                shard, worker, through, &committed, own, &mut stats,
+                shard, worker, through, &committed, &live, own, &mut stats,
             );
             drop(params);
         }
@@ -752,6 +921,8 @@ impl ShardedServer {
         let through = c.saturating_sub(s);
         let committed: Vec<u64> =
             (0..self.workers).map(|q| self.clocks.clock(q)).collect();
+        let live: Vec<bool> =
+            (0..self.workers).map(|q| self.clocks.is_live(q)).collect();
         let mut stats = ReadStats::default();
         own.clear();
         for (i, l) in layers.enumerate() {
@@ -761,7 +932,7 @@ impl ShardedServer {
             let rev_pre = shard.rev.load(Ordering::SeqCst);
             if rev_pre == last_seen[i] {
                 Self::layer_read_stats(
-                    shard, worker, through, &committed, own, &mut stats,
+                    shard, worker, through, &committed, &live, own, &mut stats,
                 );
                 if shard.rev.load(Ordering::SeqCst) == rev_pre {
                     sink(l, None);
@@ -775,7 +946,7 @@ impl ShardedServer {
             let params = shard.params.read().unwrap();
             let rev = shard.rev.load(Ordering::SeqCst);
             Self::layer_read_stats(
-                shard, worker, through, &committed, own, &mut stats,
+                shard, worker, through, &committed, &live, own, &mut stats,
             );
             sink(l, Some((rev, &params)));
             drop(params);
@@ -892,6 +1063,26 @@ impl ParamServer for ShardedServer {
     fn reads(&self) -> u64 {
         ShardedServer::reads(self)
     }
+
+    fn membership_epoch(&self) -> u64 {
+        ShardedServer::membership_epoch(self)
+    }
+
+    fn is_live(&self, worker: usize) -> bool {
+        ShardedServer::is_live(self, worker)
+    }
+
+    fn live_mask(&self) -> u64 {
+        ShardedServer::live_mask(self)
+    }
+
+    fn evict_worker(&mut self, worker: usize) -> u64 {
+        ShardedServer::evict_worker(self, worker)
+    }
+
+    fn admit_worker(&mut self, worker: usize) -> u64 {
+        ShardedServer::admit_worker(self, worker)
+    }
 }
 
 /// The shared-memory backing of the threaded runner: every worker
@@ -932,6 +1123,13 @@ impl WorkerPort for &ShardedServer {
 
     fn master_snapshot(&mut self) -> ParamSet {
         ShardedServer::snapshot(*self)
+    }
+
+    fn membership(&mut self) -> (u64, u64) {
+        (
+            ShardedServer::membership_epoch(*self),
+            ShardedServer::live_mask(*self),
+        )
     }
 }
 

@@ -42,6 +42,18 @@ impl VersionVector {
         *self.versions[layer].iter().min().unwrap()
     }
 
+    /// Admit fast-forward: jump `worker`'s applied count on every layer
+    /// to at least `clock` — the zero-delta move (versions advance, θ
+    /// untouched) the elastic re-admission path uses so the rejoiner's
+    /// FIFO bookkeeping restarts at its fast-forwarded clock.
+    pub fn fast_forward(&mut self, worker: usize, clock: u64) {
+        for layer in &mut self.versions {
+            if layer[worker] < clock {
+                layer[worker] = clock;
+            }
+        }
+    }
+
     /// True iff every worker's updates with timestamp < `through` have
     /// been applied for every layer (the guaranteed-visibility check for
     /// a read needing timestamps ≤ through − 1).
@@ -87,6 +99,12 @@ impl ParamTable {
 
     pub fn applied_count(&self) -> u64 {
         self.applied_count
+    }
+
+    /// Admit fast-forward of `worker`'s version entries (see
+    /// `VersionVector::fast_forward`).
+    pub fn fast_forward(&mut self, worker: usize, clock: u64) {
+        self.versions.fast_forward(worker, clock);
     }
 
     /// Apply one layer-update (θ ← θ + u, associative & commutative).

@@ -15,7 +15,10 @@
 //! doesn't fix it, and that is drawn from a seeded [`Pcg64`].
 //!
 //! Supported faults ([`ChaosAction`]): drop the connection cold
-//! (`Kill`), hold a frame back (`Delay`), forward a frame twice and
+//! (`Kill`), hold a frame back (`Delay`), freeze the relay in *both*
+//! directions while the sockets stay open (`Pause` — the GC-pause /
+//! network-partition shape that lease expiry must catch without a
+//! disconnect to tip it off), forward a frame twice and
 //! then kill (`DuplicateThenKill` — exercising the server's FIFO
 //! pre-check as the duplicate filter), and write only a prefix of a
 //! frame's bytes before killing (`TornWriteThenKill` — the mid-frame
@@ -44,6 +47,14 @@ pub enum ChaosAction {
     Kill,
     /// Hold the frame for the duration, then forward it intact.
     Delay(Duration),
+    /// Suspend relaying in **both** directions for the duration, then
+    /// resume with every frame intact — no socket is killed and no
+    /// byte is lost. Unlike `Delay` (one held frame, replies still
+    /// flowing), a paused connection goes silent end-to-end: requests
+    /// queue, replies stall, heartbeats stop arriving. This is the
+    /// stalled-process fault that only a lease — not a TCP error —
+    /// can detect.
+    Pause(Duration),
     /// Forward the frame twice, then drop the connection. Aimed at
     /// UPDATE: the server's FIFO pre-check rejects the duplicate with
     /// an ERR, proving at-most-once application.
@@ -84,6 +95,9 @@ struct Shared {
     /// Relay thread handles, joined at proxy drop.
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
     rng: Mutex<Pcg64>,
+    /// While set and in the future, both relay directions hold their
+    /// next forward until this instant ([`ChaosAction::Pause`]).
+    pause_until: Mutex<Option<std::time::Instant>>,
 }
 
 impl Shared {
@@ -99,6 +113,26 @@ impl Shared {
             return Some(ev.action);
         }
         None
+    }
+
+    /// Begin (or extend) a relay-wide pause ending at `now + d`.
+    fn pause_for(&self, d: Duration) {
+        let until = std::time::Instant::now() + d;
+        let mut p = self.pause_until.lock().unwrap();
+        *p = Some(p.map_or(until, |t| t.max(until)));
+    }
+
+    /// Sleep out any active pause before forwarding. Relay threads call
+    /// this in front of every write, so a single scripted `Pause`
+    /// freezes the whole proxy — both directions, every connection.
+    fn pause_gate(&self) {
+        let until = *self.pause_until.lock().unwrap();
+        if let Some(t) = until {
+            let now = std::time::Instant::now();
+            if now < t {
+                std::thread::sleep(t - now);
+            }
+        }
     }
 }
 
@@ -145,6 +179,7 @@ impl ChaosProxy {
             conns: Mutex::new(Vec::new()),
             threads: Mutex::new(Vec::new()),
             rng: Mutex::new(Pcg64::new(seed)),
+            pause_until: Mutex::new(None),
         });
         let shared2 = Arc::clone(&shared);
         let accept = std::thread::spawn(move || {
@@ -190,11 +225,12 @@ impl ChaosProxy {
                     }
                 }
                 let sh_a = Arc::clone(&shared2);
+                let sh_b = Arc::clone(&shared2);
                 let a = std::thread::spawn(move || {
                     relay_c2s(client, server, &sh_a);
                 });
                 let b = std::thread::spawn(move || {
-                    relay_s2c(s2, c2);
+                    relay_s2c(s2, c2, &sh_b);
                 });
                 let mut threads = shared2.threads.lock().unwrap();
                 threads.push(a);
@@ -267,12 +303,20 @@ fn relay_c2s(mut client: TcpStream, mut server: TcpStream, shared: &Shared) {
         let bytes = wire::frame(frame.op, &frame.payload);
         match shared.on_frame(frame.op) {
             None => {
+                shared.pause_gate();
                 if server.write_all(&bytes).is_err() {
                     break;
                 }
             }
             Some(ChaosAction::Delay(d)) => {
                 std::thread::sleep(d);
+                if server.write_all(&bytes).is_err() {
+                    break;
+                }
+            }
+            Some(ChaosAction::Pause(d)) => {
+                shared.pause_for(d);
+                shared.pause_gate();
                 if server.write_all(&bytes).is_err() {
                     break;
                 }
@@ -307,13 +351,15 @@ fn relay_c2s(mut client: TcpStream, mut server: TcpStream, shared: &Shared) {
 
 /// Server→client relay: a raw byte copy (faults are injected on the
 /// request path only — replies either arrive intact or the connection
-/// is already dead).
-fn relay_s2c(mut server: TcpStream, mut client: TcpStream) {
+/// is already dead), except that an active [`ChaosAction::Pause`]
+/// holds replies too, so a paused client really hears nothing.
+fn relay_s2c(mut server: TcpStream, mut client: TcpStream, shared: &Shared) {
     let mut buf = [0u8; 4096];
     loop {
         match server.read(&mut buf) {
             Ok(0) | Err(_) => break,
             Ok(n) => {
+                shared.pause_gate();
                 if client.write_all(&buf[..n]).is_err() {
                     break;
                 }
@@ -326,9 +372,10 @@ fn relay_s2c(mut server: TcpStream, mut client: TcpStream) {
 
 /// Parse a fault script: events separated by `;` or `,`, each
 /// `action[:arg]@opname:n` — e.g. `kill@update:7`, `delay:50@fetch:2`
-/// (ms), `dup@update:5`, `torn@fetch:1`, `torn:9@update:3` (keep 9
+/// (ms), `pause:400@heartbeat:3` (freeze both directions 400 ms),
+/// `dup@update:5`, `torn@fetch:1`, `torn:9@update:3` (keep 9
 /// bytes). Opnames: hello, clock, commit, must_wait, read_ready, wait,
-/// update, fetch, snapshot, applied, heartbeat.
+/// update, fetch, snapshot, applied, heartbeat, admit, leave, epoch.
 pub fn parse_script(s: &str) -> Result<Vec<ChaosEvent>, String> {
     let mut events = Vec::new();
     for part in s.split(|c| c == ';' || c == ',') {
@@ -362,6 +409,12 @@ pub fn parse_script(s: &str) -> Result<Vec<ChaosEvent>, String> {
                 })?;
                 ChaosAction::Delay(Duration::from_millis(ms))
             }
+            ("pause", Some(ms)) => {
+                let ms: u64 = ms.parse().map_err(|_| {
+                    format!("chaos event `{part}`: bad pause ms")
+                })?;
+                ChaosAction::Pause(Duration::from_millis(ms))
+            }
             ("dup", None) => ChaosAction::DuplicateThenKill,
             ("torn", None) => ChaosAction::TornWriteThenKill { keep: None },
             ("torn", Some(k)) => {
@@ -378,7 +431,7 @@ pub fn parse_script(s: &str) -> Result<Vec<ChaosEvent>, String> {
             _ => {
                 return Err(format!(
                     "chaos event `{part}`: unknown action `{action_s}` \
-                     (kill, delay:<ms>, dup, torn[:bytes])"
+                     (kill, delay:<ms>, pause:<ms>, dup, torn[:bytes])"
                 ))
             }
         };
@@ -404,6 +457,9 @@ fn opcode(name: &str) -> Result<u8, String> {
         "snapshot" => op::SNAPSHOT,
         "applied" => op::APPLIED,
         "heartbeat" => op::HEARTBEAT,
+        "admit" => op::ADMIT,
+        "leave" => op::LEAVE,
+        "epoch" => op::EPOCH,
         _ => return Err(format!("unknown opcode name `{name}`")),
     })
 }
@@ -417,7 +473,7 @@ mod tests {
     fn script_grammar_round_trips() {
         let evs = parse_script(
             "kill@update:7; delay:50@fetch:2, dup@update:9; \
-             torn@commit:1; torn:9@update:3",
+             torn@commit:1; torn:9@update:3; pause:400@heartbeat:3",
         )
         .unwrap();
         assert_eq!(
@@ -444,6 +500,11 @@ mod tests {
                     nth: 3,
                     action: ChaosAction::TornWriteThenKill { keep: Some(9) },
                 },
+                ChaosEvent {
+                    op: op::HEARTBEAT,
+                    nth: 3,
+                    action: ChaosAction::Pause(Duration::from_millis(400)),
+                },
             ]
         );
     }
@@ -456,6 +517,7 @@ mod tests {
         assert!(parse_script("kill@nosuch:1").is_err(), "unknown opcode");
         assert!(parse_script("explode@update:1").is_err(), "unknown action");
         assert!(parse_script("delay@update:1").is_err(), "delay needs ms");
+        assert!(parse_script("pause@update:1").is_err(), "pause needs ms");
         assert!(parse_script("torn:0@update:1").is_err(), "empty prefix");
         assert!(parse_script("update:3").is_err(), "missing @");
     }
@@ -474,6 +536,7 @@ mod tests {
             conns: Mutex::new(Vec::new()),
             threads: Mutex::new(Vec::new()),
             rng: Mutex::new(Pcg64::new(7)),
+            pause_until: Mutex::new(None),
         };
         // commit #1 passes while the update event is still pending
         assert_eq!(shared.on_frame(op::COMMIT), None);

@@ -240,9 +240,21 @@ struct Meta {
     /// group's shards (see module docs): COMMIT broadcasts, READ_READY
     /// / WAIT fan out, APPLIED routes to the owner.
     exclusive: bool,
+    /// The endpoints evict lease-expired workers instead of failing
+    /// parked waiters, and accept ADMIT/LEAVE (HELLO_OK `elastic`).
+    elastic: bool,
     /// Version-gate delta reads (config `transport.gated`). Off: every
     /// gated read sends an always-miss sentinel, shipping every layer.
     gated: bool,
+}
+
+/// All-live bitmask over `workers` workers (bit p ⇔ worker p).
+fn full_mask(workers: usize) -> u64 {
+    if workers >= 64 {
+        !0u64
+    } else {
+        (1u64 << workers) - 1
+    }
 }
 
 /// One expected-but-unread acknowledgement on a pipelined connection,
@@ -348,6 +360,17 @@ struct ClientIo {
     /// Completed reconnect-and-resync cycles (`RemoteClient::
     /// reconnects`).
     recovered: u64,
+    /// Highest membership epoch observed anywhere: handshakes, the
+    /// epoch piggybacked on every FETCH_OK, EPOCH answers, and
+    /// LEAVE/ADMIT replies. Monotone — epochs only grow within one
+    /// server lifetime.
+    epoch_seen: u64,
+    /// Epoch at which `mask` was last fetched. `membership()`
+    /// round-trips only while `epoch_seen > mask_epoch` — i.e. only
+    /// when a piggybacked epoch proves the cached live set is stale.
+    mask_epoch: u64,
+    /// Live-set bitmask as of `mask_epoch` (starts all-live).
+    mask: u64,
 }
 
 struct Inner {
@@ -981,6 +1004,10 @@ impl ClientIo {
             let f = self.recv(g)?;
             expect_op(&f, op::FETCH_OK)?;
             let mut r = wire::Reader::new(&f.payload);
+            let epoch = r.u64()?;
+            if epoch > self.epoch_seen {
+                self.epoch_seen = epoch;
+            }
             stats.guaranteed += r.u64()?;
             stats.window_included += r.u64()?;
             stats.window_missed += r.u64()?;
@@ -1046,6 +1073,64 @@ impl ClientIo {
             r.done()?;
         }
         Ok(fs)
+    }
+
+    /// EPOCH round trip: the endpoint's membership epoch + live mask
+    /// (group 0 — in exclusive mode every process converges on the
+    /// same answer because each observes the same heartbeat silence,
+    /// and group 0 sweeps its lease table before answering).
+    fn epoch_rpc(&mut self) -> Result<(u64, u64), TransportError> {
+        self.settle()?;
+        let f = self.rpc(0, &wire::frame(op::EPOCH, &[]))?;
+        expect_op(&f, op::EPOCH_OK)?;
+        let mut r = wire::Reader::new(&f.payload);
+        let e = r.u64()?;
+        let m = r.u64()?;
+        r.done()?;
+        if e > self.epoch_seen {
+            self.epoch_seen = e;
+        }
+        if e >= self.mask_epoch {
+            self.mask_epoch = e;
+            self.mask = m;
+        }
+        Ok((e, m))
+    }
+
+    /// The cheap membership observation backing `WorkerPort::
+    /// membership`: answer `(epoch, live mask)` from cache, and
+    /// round-trip for a fresh mask only when an epoch piggybacked on a
+    /// gated read (or a LEAVE/ADMIT reply) proved the cache stale.
+    fn membership(&mut self) -> Result<(u64, u64), TransportError> {
+        if self.epoch_seen > self.mask_epoch {
+            self.epoch_rpc()?;
+        }
+        Ok((self.mask_epoch, self.mask))
+    }
+
+    /// Broadcast a membership change (LEAVE or ADMIT) — to every
+    /// endpoint in exclusive mode, mirroring the COMMIT broadcast that
+    /// keeps the per-process clock tables in lockstep. Both opcodes
+    /// are idempotent per endpoint, so a supervised retry after a
+    /// reconnect simply re-broadcasts. Returns the highest epoch any
+    /// endpoint reported.
+    fn member_change(
+        &mut self,
+        meta: &Meta,
+        opcode: u8,
+        worker: usize,
+    ) -> Result<u64, TransportError> {
+        self.settle()?;
+        let bytes = wire::frame(opcode, &(worker as u32).to_le_bytes());
+        let mut epoch = 0u64;
+        for g in self.commit_targets(meta) {
+            let f = self.rpc(g, &bytes)?;
+            epoch = epoch.max(u64_reply(&f)?);
+        }
+        if epoch > self.epoch_seen {
+            self.epoch_seen = epoch;
+        }
+        Ok(epoch)
     }
 
     // ---------------- connection supervision ----------------
@@ -1120,6 +1205,11 @@ impl ClientIo {
             let addr = self.conns[g].addr;
             let (mut conn, hello) = handshake(&addr, &faults)?;
             validate_hello(meta, g, &hello)?;
+            // the epoch may legitimately have moved while we were gone
+            // (e.g. our own lease lapsed and we were evicted)
+            if hello.epoch > self.epoch_seen {
+                self.epoch_seen = hello.epoch;
+            }
             if self.window.is_some() {
                 let stream = conn.stream.try_clone().map_err(|e| {
                     TransportError::io(format!("clone stream (group {g}): {e}"))
@@ -1282,6 +1372,8 @@ struct Hello {
     policy: Policy,
     init_digest: u64,
     exclusive: bool,
+    elastic: bool,
+    epoch: u64,
     shapes: Vec<(usize, usize, usize)>,
 }
 
@@ -1337,6 +1429,8 @@ fn handshake(
     let policy = policy_decode(tag, staleness).map_err(TransportError::protocol)?;
     let init_digest = r.u64()?;
     let exclusive = r.u8()? != 0;
+    let elastic = r.u8()? != 0;
+    let epoch = r.u64()?;
     let mut shapes = Vec::with_capacity(n_layers);
     for _ in 0..n_layers {
         let rows = r.u32()? as usize;
@@ -1361,6 +1455,8 @@ fn handshake(
             policy,
             init_digest,
             exclusive,
+            elastic,
+            epoch,
             shapes,
         },
     ))
@@ -1381,6 +1477,7 @@ fn validate_hello(meta: &Meta, g: usize, h: &Hello) -> Result<(), TransportError
         || h.policy != meta.policy
         || h.init_digest != meta.init_digest
         || h.exclusive != meta.exclusive
+        || h.elastic != meta.elastic
         || h.shapes != meta.shapes
     {
         return Err(TransportError::protocol(format!(
@@ -1581,6 +1678,8 @@ impl RemoteClient {
             (first.workers, first.n_layers, first.groups, first.policy);
         let init_digest = first.init_digest;
         let exclusive = first.exclusive;
+        let elastic = first.elastic;
+        let epoch_seen = pairs.iter().map(|(_, h)| h.epoch).max().unwrap_or(0);
         let shapes = first.shapes.clone();
         if pairs.len() != groups {
             return Err(format!(
@@ -1606,6 +1705,13 @@ impl RemoteClient {
                 return Err(
                     "endpoints mix exclusive (multi-process) and shared \
                      serving modes"
+                        .into(),
+                );
+            }
+            if h.elastic != elastic {
+                return Err(
+                    "endpoints mix elastic and fixed-membership serving \
+                     modes"
                         .into(),
                 );
             }
@@ -1654,6 +1760,7 @@ impl RemoteClient {
                 layer_group,
                 init_digest,
                 exclusive,
+                elastic,
                 gated: true,
             },
             inner: Mutex::new(Inner {
@@ -1666,6 +1773,9 @@ impl RemoteClient {
                     replay: (0..groups).map(|_| VecDeque::new()).collect(),
                     rev_floor: vec![0u64; n_layers],
                     recovered: 0,
+                    epoch_seen,
+                    mask_epoch: 0,
+                    mask: full_mask(workers),
                 },
                 mirror,
                 mirror_seen: vec![u64::MAX; n_layers],
@@ -1830,6 +1940,31 @@ impl RemoteClient {
     /// Every endpoint is its own server process (see module docs).
     pub fn exclusive(&self) -> bool {
         self.meta.exclusive
+    }
+
+    /// The endpoints evict lease-expired workers and accept
+    /// ADMIT/LEAVE (negotiated at the handshake).
+    pub fn elastic(&self) -> bool {
+        self.meta.elastic
+    }
+
+    /// Graceful departure: broadcast LEAVE for `worker` to every
+    /// endpoint whose clock table it bounds. Typed-error sibling of
+    /// [`ParamServer::evict_worker`]; returns the membership epoch.
+    pub fn try_leave(&self, worker: usize) -> Result<u64, TransportError> {
+        let meta = &self.meta;
+        self.lock().io.supervised(meta, |io, _resume| {
+            io.member_change(meta, op::LEAVE, worker)
+        })
+    }
+
+    /// Re-admission: broadcast ADMIT for `worker`. Typed-error sibling
+    /// of [`ParamServer::admit_worker`]; returns the membership epoch.
+    pub fn try_admit(&self, worker: usize) -> Result<u64, TransportError> {
+        let meta = &self.meta;
+        self.lock().io.supervised(meta, |io, _resume| {
+            io.member_change(meta, op::ADMIT, worker)
+        })
     }
 
     /// Client-side transport accounting (frames/bytes both directions).
@@ -2127,6 +2262,49 @@ impl ParamServer for RemoteClient {
     fn reads(&self) -> u64 {
         self.lock().reads
     }
+
+    fn membership_epoch(&self) -> u64 {
+        self.lock().io.epoch_seen
+    }
+
+    fn is_live(&self, worker: usize) -> bool {
+        if worker >= 64 {
+            return true; // the elastic mask covers ≤ 64 workers
+        }
+        ParamServer::live_mask(self) & (1u64 << worker) != 0
+    }
+
+    fn live_mask(&self) -> u64 {
+        let meta = &self.meta;
+        if !meta.elastic {
+            return full_mask(meta.workers);
+        }
+        self.lock()
+            .io
+            .supervised(meta, |io, _resume| io.epoch_rpc())
+            .map(|(_, m)| m)
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"))
+    }
+
+    fn evict_worker(&mut self, worker: usize) -> u64 {
+        let meta = &self.meta;
+        self.lock()
+            .io
+            .supervised(meta, |io, _resume| {
+                io.member_change(meta, op::LEAVE, worker)
+            })
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"))
+    }
+
+    fn admit_worker(&mut self, worker: usize) -> u64 {
+        let meta = &self.meta;
+        self.lock()
+            .io
+            .supervised(meta, |io, _resume| {
+                io.member_change(meta, op::ADMIT, worker)
+            })
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"))
+    }
 }
 
 /// The per-worker connection set as a threaded-runner port: the same
@@ -2166,6 +2344,17 @@ impl WorkerPort for RemoteClient {
 
     fn master_snapshot(&mut self) -> ParamSet {
         ParamServer::snapshot(self)
+    }
+
+    fn membership(&mut self) -> (u64, u64) {
+        if !self.meta.elastic {
+            return (0, !0u64); // fixed membership, per the trait docs
+        }
+        let meta = &self.meta;
+        self.lock()
+            .io
+            .supervised(meta, |io, _resume| io.membership())
+            .unwrap_or_else(|e| panic!("ssp transport: {e}"))
     }
 }
 

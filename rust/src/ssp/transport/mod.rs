@@ -106,6 +106,68 @@ pub fn serve_local(
     client
 }
 
+/// [`loopback`] with elastic membership on ([`ServiceOptions::elastic`]):
+/// the endpoints accept ADMIT/LEAVE, answer EPOCH, and evict
+/// lease-expired workers instead of failing their barrier waiters.
+pub fn loopback_elastic(
+    init: ParamSet,
+    workers: usize,
+    policy: Policy,
+    groups: usize,
+) -> RemoteClient {
+    let server = Arc::new(ShardedServer::new(init, workers, policy));
+    let svc = ShardService::bind_with(
+        server,
+        "127.0.0.1:0",
+        groups,
+        ServiceOptions { elastic: true, ..ServiceOptions::default() },
+    )
+    .expect("bind elastic shard service");
+    let mut client =
+        RemoteClient::connect(svc.addrs()).expect("connect elastic client");
+    client.attach_service(svc);
+    client
+}
+
+/// [`serve_split`] with elastic membership on: every per-group process
+/// evicts and admits independently off the same LEAVE/ADMIT broadcast
+/// (and the same heartbeat silence), so the private membership views
+/// stay in lockstep the same way the private clock tables do.
+pub fn loopback_split_elastic(
+    init: ParamSet,
+    workers: usize,
+    policy: Policy,
+    groups: usize,
+    window: Option<usize>,
+) -> RemoteClient {
+    let n_groups = group_ranges(init.n_layers(), groups).len();
+    let mut services = Vec::with_capacity(n_groups);
+    let mut addrs = Vec::with_capacity(n_groups);
+    for g in 0..n_groups {
+        let server =
+            Arc::new(ShardedServer::new(init.clone(), workers, policy));
+        let svc = ShardService::bind_group_with(
+            server,
+            "127.0.0.1:0",
+            groups,
+            g,
+            ServiceOptions { elastic: true, ..ServiceOptions::default() },
+        )
+        .expect("bind exclusive elastic shard service");
+        addrs.extend_from_slice(svc.addrs());
+        services.push(svc);
+    }
+    let mut client =
+        RemoteClient::connect(&addrs).expect("connect split elastic client");
+    if let Some(w) = window {
+        client = client.with_pipeline(w).expect("enable pipeline");
+    }
+    for svc in services {
+        client.attach_service(svc);
+    }
+    client
+}
+
 /// [`serve_local`] plus the server construction — signature-compatible
 /// with the `make_server` constructors the property suite and
 /// `run_experiment_with` take, so a remote backing is one closure away:

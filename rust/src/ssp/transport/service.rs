@@ -81,6 +81,14 @@ pub struct ServiceOptions {
     /// validate the config-derived **init** digest on every handshake —
     /// the restart path passes the original digest here.
     pub init_digest: Option<u64>,
+    /// Elastic membership (`[transport] elastic`). When true, a lapsed
+    /// worker lease **evicts** the worker from the membership
+    /// (`ShardedServer::evict_worker`) instead of failing parked
+    /// barrier waiters with an ERR: survivors resume behind the
+    /// shrunken live set and learn the new epoch from their next gated
+    /// read. Also unlocks the ADMIT/LEAVE opcodes. False preserves the
+    /// fail-fast lease semantics bit for bit.
+    pub elastic: bool,
 }
 
 impl Default for ServiceOptions {
@@ -88,6 +96,7 @@ impl Default for ServiceOptions {
         ServiceOptions {
             wake_timeout: std::time::Duration::from_millis(500),
             init_digest: None,
+            elastic: false,
         }
     }
 }
@@ -126,6 +135,29 @@ impl LeaseTable {
             )
         })
     }
+
+    /// Atomically take `w`'s lapsed deadline: true for exactly one
+    /// caller per expiry — the elastic eviction's single-winner gate,
+    /// so concurrent connection threads racing on the same dead worker
+    /// evict (and log) it once.
+    fn claim(&self, w: usize) -> bool {
+        let mut d =
+            self.deadlines[w].lock().unwrap_or_else(|e| e.into_inner());
+        match *d {
+            Some(t) if t < std::time::Instant::now() => {
+                *d = None;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Forget `w`'s lease entirely (the admission path: a rejoiner is
+    /// pre-lease again until its first HEARTBEAT re-arms liveness, so
+    /// a stale deadline can't re-evict it before it ever beats).
+    fn clear(&self, w: usize) {
+        *self.deadlines[w].lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
 }
 
 /// What a connection needs to know about its endpoint.
@@ -147,6 +179,9 @@ struct EndpointInfo {
     /// process (a worker is alive or dead for the whole service, not
     /// per shard group).
     leases: Arc<LeaseTable>,
+    /// Elastic membership: lapsed leases evict instead of erroring,
+    /// and ADMIT/LEAVE are accepted (see [`ServiceOptions::elastic`]).
+    elastic: bool,
 }
 
 /// A running shard service: `groups` listener threads plus one thread
@@ -193,6 +228,14 @@ impl ShardService {
         let init_digest = opts
             .init_digest
             .unwrap_or_else(|| super::param_digest(&server.snapshot()));
+        let elastic = opts.elastic;
+        if elastic && server.workers() > 64 {
+            return Err(format!(
+                "elastic membership supports at most 64 workers (the \
+                 wire live mask is one u64), got {}",
+                server.workers()
+            ));
+        }
         let leases = Arc::new(LeaseTable::new(server.workers()));
         let mut svc = ShardService::empty(opts);
         for (g, range) in ranges.iter().enumerate() {
@@ -209,6 +252,7 @@ impl ShardService {
                 init_digest,
                 exclusive: false,
                 leases: Arc::clone(&leases),
+                elastic,
             };
             svc.listen(Arc::clone(&server), host, bind_port, info)?;
         }
@@ -262,6 +306,13 @@ impl ShardService {
         let init_digest = opts
             .init_digest
             .unwrap_or_else(|| super::param_digest(&server.snapshot()));
+        if opts.elastic && server.workers() > 64 {
+            return Err(format!(
+                "elastic membership supports at most 64 workers (the \
+                 wire live mask is one u64), got {}",
+                server.workers()
+            ));
+        }
         let info = EndpointInfo {
             group,
             groups: ranges.len(),
@@ -269,6 +320,7 @@ impl ShardService {
             init_digest,
             exclusive: true,
             leases: Arc::new(LeaseTable::new(server.workers())),
+            elastic: opts.elastic,
         };
         let mut svc = ShardService::empty(opts);
         svc.listen(server, host, port, info)?;
@@ -494,6 +546,25 @@ fn check_worker(server: &ShardedServer, w: usize) -> Result<(), String> {
     Ok(())
 }
 
+/// Elastic endpoints: evict every worker whose granted lease has
+/// lapsed. `LeaseTable::claim` is the single-winner gate, so however
+/// many connection threads observe the same dead worker, exactly one
+/// evicts it (one epoch bump, one log line). Non-elastic endpoints
+/// never call this — their lapsed leases fail parked waiters instead.
+fn evict_expired(server: &ShardedServer, info: &EndpointInfo) {
+    debug_assert!(info.elastic);
+    while let Some(q) = info.leases.expired() {
+        if info.leases.claim(q) {
+            let epoch = server.evict_worker(q);
+            crate::warn_!(
+                "worker {q} lease expired: evicted from membership \
+                 (epoch {epoch}, live {:#b})",
+                server.live_mask()
+            );
+        }
+    }
+}
+
 fn handle(
     server: &ShardedServer,
     info: &EndpointInfo,
@@ -526,6 +597,8 @@ fn handle(
             wire::put_u64(out, staleness);
             wire::put_u64(out, info.init_digest);
             wire::put_u8(out, u8::from(info.exclusive));
+            wire::put_u8(out, u8::from(info.elastic));
+            wire::put_u64(out, server.membership_epoch());
             for l in 0..server.n_layers() {
                 let (rows, cols, blen) = server.layer_shape(l);
                 wire::put_u32(out, rows as u32);
@@ -589,9 +662,14 @@ fn handle(
                 if stop.load(Ordering::Acquire) {
                     return Err("server shutting down".into());
                 }
-                // a dead peer's commit never arrives: fail the barrier
-                // wait (typed ERR) instead of parking forever
-                if let Some(q) = info.leases.expired() {
+                // a dead peer's commit never arrives. Elastic: evict it
+                // — the live min recomputes over the survivors and this
+                // wait resolves on its own next slice. Fail-fast: fail
+                // the barrier wait (typed ERR) instead of parking
+                // forever.
+                if info.elastic {
+                    evict_expired(server, info);
+                } else if let Some(q) = info.leases.expired() {
                     return Err(format!(
                         "worker {q} lease expired: releasing worker \
                          {w}'s barrier wait (peer presumed dead)"
@@ -611,6 +689,63 @@ fn handle(
             info.leases
                 .renew(w, std::time::Duration::from_millis(lease_ms));
             reply_ok(out);
+        }
+        op::ADMIT => {
+            let w = r.u32()? as usize;
+            r.done()?;
+            check_worker(server, w)?;
+            if !info.elastic {
+                return Err(format!(
+                    "ADMIT refused: endpoint (group {}) is not elastic",
+                    info.group
+                ));
+            }
+            // a lapsed deadline from the worker's previous life must
+            // not re-evict it before its first new HEARTBEAT — the
+            // rejoiner restarts pre-lease
+            info.leases.clear(w);
+            let was_live = server.is_live(w);
+            let epoch = server.admit_worker(w);
+            if !was_live {
+                crate::warn_!(
+                    "worker {w} admitted to membership (epoch {epoch}, \
+                     live {:#b})",
+                    server.live_mask()
+                );
+            }
+            reply_u64(out, epoch);
+        }
+        op::LEAVE => {
+            let w = r.u32()? as usize;
+            r.done()?;
+            check_worker(server, w)?;
+            if !info.elastic {
+                return Err(format!(
+                    "LEAVE refused: endpoint (group {}) is not elastic",
+                    info.group
+                ));
+            }
+            info.leases.clear(w);
+            let was_live = server.is_live(w);
+            let epoch = server.evict_worker(w);
+            if was_live {
+                crate::warn_!(
+                    "worker {w} left membership (epoch {epoch}, live \
+                     {:#b})",
+                    server.live_mask()
+                );
+            }
+            reply_u64(out, epoch);
+        }
+        op::EPOCH => {
+            r.done()?;
+            if info.elastic {
+                evict_expired(server, info);
+            }
+            let mark = wire::begin_frame(out, op::EPOCH_OK);
+            wire::put_u64(out, server.membership_epoch());
+            wire::put_u64(out, server.live_mask());
+            wire::end_frame(out, mark);
         }
         op::APPLIED => {
             let layer = r.u32()? as usize;
@@ -666,6 +801,13 @@ fn handle(
                 *s = r.u64()?;
             }
             r.done()?;
+            // sweep lapsed leases first so the piggybacked epoch (and
+            // the ε accounting of this very read) already reflect the
+            // eviction — a fetching survivor learns of a death from the
+            // read it was making anyway
+            if info.elastic {
+                evict_expired(server, info);
+            }
             let mut own = Vec::with_capacity(n);
             let stats = server.fetch_group_gated(
                 w,
@@ -682,6 +824,7 @@ fn handle(
                 },
             );
             let mark = wire::begin_frame(out, op::FETCH_OK);
+            wire::put_u64(out, server.membership_epoch());
             wire::put_u64(out, stats.guaranteed);
             wire::put_u64(out, stats.window_included);
             wire::put_u64(out, stats.window_missed);

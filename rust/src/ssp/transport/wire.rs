@@ -30,8 +30,11 @@ use crate::tensor::Matrix;
 /// *only* its group's shards, with its own clock table kept in sync by
 /// client-side COMMIT broadcast). Version 3 added the HEARTBEAT
 /// opcode (worker liveness leases: an expired lease releases the dead
-/// worker's barrier waiters instead of hanging them forever).
-pub const WIRE_VERSION: u32 = 3;
+/// worker's barrier waiters instead of hanging them forever). Version 4
+/// adds elastic membership: ADMIT/LEAVE/EPOCH opcodes, a membership
+/// epoch in HELLO_OK, and the current epoch prepended to FETCH_OK so
+/// every gated read doubles as a membership observation.
+pub const WIRE_VERSION: u32 = 4;
 
 /// Upper bound on a single frame — a corrupt length prefix fails fast
 /// instead of asking the decoder to buffer gigabytes.
@@ -71,13 +74,33 @@ pub mod op {
     /// forever. Workers that never heartbeat never hold a lease and are
     /// never declared dead — the pre-lease flows are unchanged.
     pub const HEARTBEAT: u8 = 11;
+    /// `{ worker:u32 }` → U64: membership epoch after the admission.
+    /// Re-admits an evicted worker (elastic endpoints only): its clock
+    /// and version entries fast-forward to the live min so it neither
+    /// stalls the barrier nor trips FIFO bookkeeping. Also renews the
+    /// worker's lease, so a rejoiner is live the instant it's admitted.
+    /// Idempotent — admitting a live worker returns the current epoch.
+    pub const ADMIT: u8 = 12;
+    /// `{ worker:u32 }` → U64: membership epoch after the eviction.
+    /// Graceful departure (elastic endpoints only): the worker's
+    /// applied history stays in θ and the ε totals, but it stops
+    /// bounding the barrier and gating reads. Idempotent.
+    pub const LEAVE: u8 = 13;
+    /// `{}` → `{ epoch:u64, live_mask:u64 }` (EPOCH_OK): the current
+    /// membership epoch and live set (bit p ⇔ worker p live).
+    pub const EPOCH: u8 = 14;
 
     /// Empty acknowledgement.
     pub const OK: u8 = 100;
     /// `{ version:u32, workers:u32, n_layers:u32, groups:u32,
     ///    group:u32, group_start:u32, group_len:u32,
     ///    policy_tag:u8, staleness:u64, init_digest:u64, exclusive:u8,
+    ///    elastic:u8, epoch:u64,
     ///    (rows:u32, cols:u32, blen:u32) × n_layers }`.
+    /// `elastic` is 1 when the endpoint evicts lease-expired workers
+    /// instead of failing waiters, and `epoch` is its membership epoch
+    /// at handshake time (0 unless a prior connection already changed
+    /// the membership).
     /// `init_digest` is `transport::param_digest` of the served master
     /// at bind time — the client's seed-mismatch tripwire. `exclusive`
     /// is 1 when this endpoint's process hosts *only* its group's
@@ -91,14 +114,20 @@ pub mod op {
     pub const U64: u8 = 102;
     /// `{ value:u8 }` (0 or 1).
     pub const BOOL: u8 = 103;
-    /// `{ guaranteed:u64, window_included:u64, window_missed:u64,
+    /// `{ epoch:u64,
+    ///    guaranteed:u64, window_included:u64, window_missed:u64,
     ///    own:u64 × group_len,
     ///    (copied:u8, [rev:u64, layer-params]) × group_len }`.
     /// A layer's params ride the wire only when `copied == 1` — the
-    /// revision gate's skip is a skip of actual bytes.
+    /// revision gate's skip is a skip of actual bytes. `epoch` is the
+    /// endpoint's membership epoch at read time: survivors learn about
+    /// evictions from the read they were already making, no extra
+    /// round trip.
     pub const FETCH_OK: u8 = 104;
     /// `{ (copied:u8, [rev:u64, layer-params]) × group_len }`.
     pub const SNAP_OK: u8 = 105;
+    /// `{ epoch:u64, live_mask:u64 }` — answer to EPOCH.
+    pub const EPOCH_OK: u8 = 107;
     /// `{ utf-8 message }` — protocol-level failure; the connection
     /// stays usable (the request had no effect).
     pub const ERR: u8 = 106;

@@ -420,6 +420,355 @@ fn chaos_faulted_client_is_bitwise_equivalent_to_reference() {
     }
 }
 
+/// Elastic membership under one consistency policy: drive a legal
+/// random schedule, kill one worker a third of the way in (its
+/// undelivered updates are lost with it), keep going on the survivors,
+/// then re-admit it two thirds in — and the implementation under test
+/// must stay bitwise-indistinguishable from the single-lock oracle at
+/// every read, with the staleness bound holding over the *live* set
+/// throughout.
+fn eviction_schedule<A: ParamServer, B: ParamServer>(
+    make_a: fn(ParamSet, usize, Policy) -> A,
+    make_b: fn(ParamSet, usize, Policy) -> B,
+    policy: Policy,
+    seed: u64,
+    steps: usize,
+) {
+    let mut rng = Pcg64::new(seed ^ 0xE1A5);
+    let d = dims();
+    let workers = 3 + (seed as usize % 3);
+    let victim = seed as usize % workers;
+    let init = ParamSet::glorot(&d, &mut rng);
+    let mut oracle = make_a(init.clone(), workers, policy);
+    let mut subject = make_b(init.clone(), workers, policy);
+
+    let mut pending: Vec<UpdateMsg> = Vec::new();
+    let mut committed = vec![0u64; workers];
+    let mut live = vec![true; workers];
+    let evict_at = steps / 3;
+    let admit_at = 2 * steps / 3;
+
+    for step in 0..steps {
+        if step == evict_at {
+            // the death: whatever the victim had in flight is lost
+            pending.retain(|m| m.from != victim);
+            let ea = ParamServer::evict_worker(&mut oracle, victim);
+            let eb = ParamServer::evict_worker(&mut subject, victim);
+            assert_eq!(ea, 1, "first transition is epoch 1 (seed {seed})");
+            assert_eq!(ea, eb, "eviction epochs diverged (seed {seed})");
+            live[victim] = false;
+        }
+        if step == admit_at {
+            // quiesce before the rejoin: admission fast-forwards the
+            // victim's version rows, so every in-flight update sent
+            // before the admission must land first (the sim driver
+            // enforces the same drain by dropping them outright)
+            for m in pending.drain(..) {
+                ParamServer::apply_arrival(&mut oracle, &m);
+                ParamServer::apply_arrival(&mut subject, &m);
+            }
+            let ea = ParamServer::admit_worker(&mut oracle, victim);
+            let eb = ParamServer::admit_worker(&mut subject, victim);
+            assert_eq!(ea, 2, "rejoin is epoch 2 (seed {seed})");
+            assert_eq!(ea, eb, "admission epochs diverged (seed {seed})");
+            live[victim] = true;
+            // the rejoiner resumes at its fast-forwarded clock
+            committed[victim] = oracle.clock(victim);
+            assert_eq!(
+                committed[victim],
+                subject.clock(victim),
+                "fast-forwarded clocks diverged (seed {seed})"
+            );
+        }
+
+        for p in (0..workers).filter(|&p| live[p]) {
+            assert_eq!(
+                ParamServer::must_wait(&oracle, p),
+                ParamServer::must_wait(&subject, p),
+                "must_wait diverged (seed {seed})"
+            );
+            assert_eq!(
+                ParamServer::read_ready(&oracle, p),
+                ParamServer::read_ready(&subject, p),
+                "read_ready diverged (seed {seed})"
+            );
+        }
+        let candidates: Vec<usize> = (0..workers)
+            .filter(|&p| live[p] && !ParamServer::must_wait(&oracle, p))
+            .collect();
+        assert!(
+            !candidates.is_empty(),
+            "live workers deadlocked post-eviction (seed {seed})"
+        );
+        let p = candidates[rng.below(candidates.len())];
+
+        let deliver = rng.below(pending.len() + 1);
+        for m in pending.drain(..deliver) {
+            ParamServer::apply_arrival(&mut oracle, &m);
+            ParamServer::apply_arrival(&mut subject, &m);
+        }
+        for l in 0..d.len() - 1 {
+            let delta = rand_delta(&d, l, &mut rng);
+            pending.push(UpdateMsg::new(p, committed[p], l, delta));
+        }
+        committed[p] += 1;
+        ParamServer::commit(&mut oracle, p);
+        ParamServer::commit(&mut subject, p);
+
+        // P1 over the live set: the dead worker's frozen clock neither
+        // bounds nor is bounded
+        let lmin = (0..workers)
+            .filter(|&q| live[q])
+            .map(|q| oracle.clock(q))
+            .min()
+            .unwrap();
+        let lmax = (0..workers)
+            .filter(|&q| live[q])
+            .map(|q| oracle.clock(q))
+            .max()
+            .unwrap();
+        let bound = match policy {
+            Policy::Bsp => 1,
+            Policy::Ssp { staleness } => staleness + 1,
+            Policy::Async => u64::MAX,
+        };
+        assert!(
+            lmax - lmin <= bound,
+            "live-set P1 violated: spread {} > {bound} (seed {seed})",
+            lmax - lmin
+        );
+
+        let reader = candidates[rng.below(candidates.len())];
+        if ParamServer::read_ready(&oracle, reader) {
+            let (m_a, own_a, st_a) = ParamServer::fetch(&mut oracle, reader);
+            let (m_b, own_b, st_b) = ParamServer::fetch(&mut subject, reader);
+            assert_eq!(m_a, m_b, "master bits diverged (seed {seed})");
+            assert_eq!(own_a, own_b, "own versions diverged (seed {seed})");
+            assert_eq!(st_a, st_b, "eps stats diverged (seed {seed})");
+            let rate = st_a.epsilon_rate();
+            assert!(
+                (0.0..=1.0).contains(&rate),
+                "P5 rate {rate} across membership change (seed {seed})"
+            );
+        }
+    }
+    for m in pending.drain(..) {
+        ParamServer::apply_arrival(&mut oracle, &m);
+        ParamServer::apply_arrival(&mut subject, &m);
+    }
+    assert_eq!(
+        ParamServer::snapshot(&oracle),
+        ParamServer::snapshot(&subject),
+        "final master diverged (seed {seed})"
+    );
+}
+
+/// Every staleness policy the suite covers, with a mid-run death and a
+/// rejoin, on the sharded implementation.
+#[test]
+fn eviction_and_rejoin_match_reference_under_every_policy_sharded() {
+    for (i, policy) in [
+        Policy::Bsp,
+        Policy::Ssp { staleness: 0 },
+        Policy::Ssp { staleness: 1 },
+        Policy::Ssp { staleness: 3 },
+        Policy::Async,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        for seed in 0..8u64 {
+            eviction_schedule(
+                make_reference,
+                make_sharded,
+                policy,
+                seed * 31 + i as u64,
+                90,
+            );
+        }
+    }
+}
+
+/// The same membership schedules over the wire: LEAVE/ADMIT against
+/// elastic loopback endpoints (shared tier).
+fn make_remote_elastic(
+    init: ParamSet,
+    workers: usize,
+    policy: Policy,
+) -> RemoteClient {
+    transport::loopback_elastic(init, workers, policy, 2)
+}
+
+/// ... and against the elastic *split* tier: one private server per
+/// group, pipelined commits, membership changes broadcast like COMMITs.
+fn make_remote_split_elastic(
+    init: ParamSet,
+    workers: usize,
+    policy: Policy,
+) -> RemoteClient {
+    transport::loopback_split_elastic(init, workers, policy, 2, Some(4))
+}
+
+#[test]
+fn eviction_and_rejoin_match_reference_under_every_policy_remote() {
+    for (i, policy) in [
+        Policy::Bsp,
+        Policy::Ssp { staleness: 0 },
+        Policy::Ssp { staleness: 1 },
+        Policy::Ssp { staleness: 3 },
+        Policy::Async,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        // one socket stack per trial: fewer seeds, shorter schedules
+        for seed in 0..2u64 {
+            eviction_schedule(
+                make_reference,
+                make_remote_elastic,
+                policy,
+                seed * 31 + i as u64,
+                45,
+            );
+        }
+    }
+}
+
+#[test]
+fn eviction_and_rejoin_match_reference_under_every_policy_remote_split() {
+    for (i, policy) in [
+        Policy::Bsp,
+        Policy::Ssp { staleness: 0 },
+        Policy::Ssp { staleness: 1 },
+        Policy::Ssp { staleness: 3 },
+        Policy::Async,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        for seed in 0..2u64 {
+            eviction_schedule(
+                make_reference,
+                make_remote_split_elastic,
+                policy,
+                seed * 31 + i as u64,
+                40,
+            );
+        }
+    }
+}
+
+/// Lease-expiry ε accounting (regression): an evicted worker's
+/// *applied* history keeps counting in the ε totals, while its
+/// committed-but-never-applied window contributions are dropped —
+/// exactly once, not once per read. The post-eviction `ReadStats` must
+/// equal a never-faulted oracle in which the victim only ever
+/// committed what actually arrived.
+fn epsilon_stats_after_eviction<S: ParamServer>(
+    make: fn(ParamSet, usize, Policy) -> S,
+) -> (sspdnn::ssp::ReadStats, ParamSet) {
+    let d = dims();
+    let policy = Policy::Ssp { staleness: 8 };
+    let flat = |c: u64, p: usize, l: usize| {
+        let v = (c as f32 + 1.0) * 0.01 + p as f32 * 0.001 + l as f32 * 1e-4;
+        UpdateMsg::new(
+            p,
+            c,
+            l,
+            LayerParams {
+                w: Matrix::from_fn(d[l], d[l + 1], |_, _| v),
+                b: vec![v; d[l + 1]],
+            },
+        )
+    };
+    let mut server = make(ParamSet::zeros(&d), 3, policy);
+    // workers 0 and 1: three clocks each, everything applied
+    for c in 0..3u64 {
+        for p in [0usize, 1] {
+            for l in 0..d.len() - 1 {
+                server.apply_arrival(&flat(c, p, l));
+            }
+            server.commit(p);
+        }
+    }
+    // worker 2: commits five clocks, but only the first two clocks'
+    // updates ever arrive — three clocks' worth die on the wire with it
+    for c in 0..5u64 {
+        if c < 2 {
+            for l in 0..d.len() - 1 {
+                server.apply_arrival(&flat(c, 2, l));
+            }
+        }
+        server.commit(2);
+    }
+    let before = ParamServer::fetch(&mut server, 0).2;
+    assert!(
+        before.window_missed >= 3 * (d.len() - 1) as u64,
+        "pre-eviction stats must count the in-flight window as missed"
+    );
+    assert_eq!(ParamServer::evict_worker(&mut server, 2), 1);
+    let first = ParamServer::fetch(&mut server, 0);
+    let second = ParamServer::fetch(&mut server, 0);
+    assert_eq!(
+        first.2, second.2,
+        "the drop must happen exactly once, not per read"
+    );
+    assert_eq!(first.1, second.1);
+    (first.2, ParamServer::snapshot(&server))
+}
+
+#[test]
+fn eviction_drops_pending_window_contributions_exactly_once() {
+    let d = dims();
+    let flat = |c: u64, p: usize, l: usize| {
+        let v = (c as f32 + 1.0) * 0.01 + p as f32 * 0.001 + l as f32 * 1e-4;
+        UpdateMsg::new(
+            p,
+            c,
+            l,
+            LayerParams {
+                w: Matrix::from_fn(d[l], d[l + 1], |_, _| v),
+                b: vec![v; d[l + 1]],
+            },
+        )
+    };
+    // the never-faulted oracle: worker 2 only ever committed the two
+    // clocks that actually arrived
+    let mut oracle =
+        make_reference(ParamSet::zeros(&d), 3, Policy::Ssp { staleness: 8 });
+    for c in 0..3u64 {
+        for p in [0usize, 1] {
+            for l in 0..d.len() - 1 {
+                oracle.apply_arrival(&flat(c, p, l));
+            }
+            oracle.commit(p);
+        }
+    }
+    for c in 0..2u64 {
+        for l in 0..d.len() - 1 {
+            oracle.apply_arrival(&flat(c, 2, l));
+        }
+        oracle.commit(2);
+    }
+    let (want, master_oracle) = {
+        let (m, _, st) = ParamServer::fetch(&mut oracle, 0);
+        (st, m)
+    };
+
+    let (st_ref, m_ref) = epsilon_stats_after_eviction(make_reference);
+    let (st_sh, m_sh) = epsilon_stats_after_eviction(make_sharded);
+    assert_eq!(
+        st_ref, want,
+        "evicted worker's ε totals != never-faulted oracle (reference)"
+    );
+    assert_eq!(
+        st_sh, want,
+        "evicted worker's ε totals != never-faulted oracle (sharded)"
+    );
+    assert_eq!(m_ref, master_oracle, "applied history must stay in theta");
+    assert_eq!(m_sh, master_oracle);
+}
+
 fn p3_guaranteed_visibility<S: ParamServer>(
     make: fn(ParamSet, usize, Policy) -> S,
 ) {

@@ -506,6 +506,8 @@ fn client_reassembles_one_byte_server_writes() {
         wire::put_u64(&mut out, 0); // staleness
         wire::put_u64(&mut out, 0); // init digest (check_run not used)
         wire::put_u8(&mut out, 0); // shared endpoint
+        wire::put_u8(&mut out, 0); // not elastic
+        wire::put_u64(&mut out, 0); // membership epoch
         wire::put_u32(&mut out, 1); // rows
         wire::put_u32(&mut out, 1); // cols
         wire::put_u32(&mut out, 1); // blen

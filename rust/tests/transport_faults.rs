@@ -231,6 +231,141 @@ fn expired_lease_releases_parked_barrier_waiters() {
     drop(svc);
 }
 
+/// Elastic counterpart of the lease acceptance test: the same silence
+/// that *fails* a barrier wait on a fixed-membership tier merely
+/// *shrinks* the membership on an elastic one. A chaos `pause` freezes
+/// the dead worker's relay — the stalled-process fault: sockets stay
+/// open, no TCP error, heartbeats stop arriving — until its lease
+/// lapses. The survivor's parked BSP barrier wait must then be
+/// RELEASED with an OK (epoch 1, victim out of the live set), the run
+/// must keep going, and the victim must be able to re-ADMIT (epoch 2).
+#[test]
+fn paused_heartbeat_evicts_worker_and_releases_barrier_elastic() {
+    let init = ParamSet::zeros(&dims());
+    let server = Arc::new(ShardedServer::new(init, 2, Policy::Bsp));
+    let svc = ShardService::bind_with(
+        Arc::clone(&server),
+        "127.0.0.1:0",
+        1,
+        ServiceOptions { elastic: true, ..ServiceOptions::default() },
+    )
+    .expect("bind elastic service");
+
+    // worker 1's endpoint sits behind the pause proxy: its second
+    // HEARTBEAT freezes the relay for 500ms, far past the 80ms lease
+    let script =
+        transport::chaos::parse_script("pause:500@heartbeat:2").unwrap();
+    let proxy =
+        ChaosProxy::spawn(svc.addrs()[0], script, 3).expect("spawn proxy");
+    let dead = RemoteClient::connect_with(&[proxy.addr()], supervised())
+        .expect("connect dead worker");
+    dead.heartbeat(1, Duration::from_millis(80)).expect("first beat");
+
+    // the survivor connects directly (its own liveness is not at stake)
+    // and ships a full clock — its own updates must land for Eq. 5's
+    // read guarantee, the dead peer's never will
+    let mut alive =
+        RemoteClient::connect(&svc.addrs().to_vec()).expect("connect");
+    alive.apply_arrival(&msg(0, 0, 0, 0.1));
+    alive.apply_arrival(&msg(0, 0, 1, 0.1));
+    ParamServer::commit(&mut alive, 0);
+
+    // the renewal hits the pause and arrives only after the freeze —
+    // by which time the lease has lapsed and the survivor's parked
+    // wait has evicted the silent worker
+    let beat = std::thread::spawn(move || {
+        dead.heartbeat(1, Duration::from_millis(80)).expect("late beat");
+        dead
+    });
+    let t0 = Instant::now();
+    alive
+        .try_wait_until_ready(0)
+        .expect("elastic tier must release the wait with OK, not ERR");
+    let waited = t0.elapsed();
+    assert!(
+        waited < Duration::from_secs(5),
+        "released by the eviction, not an io timeout ({waited:?})"
+    );
+    assert_eq!(server.membership_epoch(), 1, "eviction bumped the epoch");
+    assert!(!server.is_live(1), "the silent worker left the live set");
+    assert_eq!(server.live_mask(), 0b01);
+    // the survivor keeps training: barrier now spans only the live set
+    alive.apply_arrival(&msg(0, 1, 0, 0.1));
+    alive.apply_arrival(&msg(0, 1, 1, 0.1));
+    ParamServer::commit(&mut alive, 0);
+    alive.try_wait_until_ready(0).expect("live set of one never waits");
+
+    // the dead worker comes back: re-admission fast-forwards it to the
+    // live min and bumps the epoch again
+    let dead = beat.join().unwrap();
+    assert_eq!(proxy.events_fired(), 1, "the scripted pause fired");
+    let epoch = dead.try_admit(1).expect("re-admission");
+    assert_eq!(epoch, 2);
+    assert!(server.is_live(1));
+    assert_eq!(
+        server.clock(1),
+        2,
+        "rejoiner fast-forwarded to the live min clock"
+    );
+    drop(alive);
+    drop(proxy);
+    drop(svc);
+}
+
+/// Rejoin-replay determinism over the wire: the same membership
+/// schedule (leave at clock 3, rejoin at the live min, same update
+/// streams) must produce **bitwise-identical** final weights on every
+/// run — the property that makes convergence-vs-eviction sweeps
+/// reproducible experiments rather than anecdotes.
+#[test]
+fn membership_schedule_replays_bitwise_over_elastic_transport() {
+    fn elastic_run() -> (ParamSet, u64, u64) {
+        let d = dims();
+        let init = ParamSet::zeros(&d);
+        let mut client = transport::loopback_elastic(
+            init,
+            2,
+            Policy::Ssp { staleness: 2 },
+            2,
+        );
+        assert!(client.elastic(), "handshake must negotiate elastic");
+        let send = |cl: &mut RemoteClient, p: usize, c: u64| {
+            for l in 0..dims().len() - 1 {
+                let v = (c as f32 + 1.0) * 0.01
+                    + p as f32 * 0.001
+                    + l as f32 * 1e-4;
+                cl.apply_arrival(&msg(p, c, l, v));
+            }
+            ParamServer::commit(cl, p);
+        };
+        for c in 0..3 {
+            send(&mut client, 0, c);
+            send(&mut client, 1, c);
+        }
+        assert_eq!(client.try_leave(1).expect("leave"), 1);
+        // the survivor runs alone: the dead peer no longer bounds it
+        for c in 3..6 {
+            send(&mut client, 0, c);
+        }
+        assert_eq!(client.try_admit(1).expect("rejoin"), 2);
+        let resume = client.clock(1);
+        for c in 6..8 {
+            send(&mut client, 0, c);
+        }
+        for c in resume..resume + 2 {
+            send(&mut client, 1, c);
+        }
+        let (epoch, mask) = sspdnn::ssp::WorkerPort::membership(&mut client);
+        assert_eq!((epoch, mask), (2, 0b11), "both live again at epoch 2");
+        (ParamServer::snapshot(&client), resume, epoch)
+    }
+    let a = elastic_run();
+    let b = elastic_run();
+    assert_eq!(a.1, b.1, "rejoin clocks diverged across replays");
+    assert_eq!(a.2, b.2, "epochs diverged across replays");
+    assert_eq!(a.0, b.0, "final weights diverged across replays");
+}
+
 /// Warm restart: quiesce, dump `ServerState`, kill the whole tier,
 /// restart a *new* service from the dump on a new port (advertising
 /// the original init digest), and point the same supervised client at
