@@ -19,6 +19,11 @@
 //! * **elastic_eviction** — commit throughput with 3 live workers vs
 //!   the 2 survivors after one is evicted via LEAVE, plus the wall
 //!   cost of the LEAVE round itself (PR 9's rebalance-cost column).
+//! * **codec_matrix** — bytes-per-clock across the negotiated payload
+//!   codecs {off, bf16, f16, topk} at cold / hot / one-layer fetch
+//!   plus per-clock commit bytes and commits/second. Asserts the
+//!   compression acceptance criterion: every lossy codec strictly
+//!   reduces the cold-fetch, dirty-layer-fetch, and commit bytes.
 //!
 //! Scale via SSPDNN_BENCH_SCALE ∈ {quick, default, full} as usual.
 
@@ -209,6 +214,116 @@ fn bench_gated_fetch(init: &ParamSet, groups: usize) -> FetchBytes {
     }
 }
 
+struct CodecRow {
+    name: String,
+    cold_bytes: u64,
+    hot_bytes: u64,
+    one_layer_bytes: u64,
+    commit_bytes_per_clock: f64,
+    commits_per_s: f64,
+}
+
+/// Bytes-per-clock across the negotiated payload codecs: the same
+/// gated cold / hot / one-dirty-layer fetches as `bench_gated_fetch`,
+/// plus the dense-delta commit hot path, once per codec. The raw row
+/// (`off`) is the baseline every lossy codec must strictly beat on
+/// cold fetch, dirty-layer fetch, and commit bytes — the hot fetch is
+/// headers-only in every codec, so it is reported but not compared.
+fn bench_codecs(init: &ParamSet) -> Vec<CodecRow> {
+    use sspdnn::ssp::transport::Codec;
+
+    let n_layers = init.n_layers();
+    let clocks = (commit_clocks() / 4).max(8);
+    let codecs = [
+        Codec::Off,
+        Codec::Bf16,
+        Codec::F16,
+        // 0.1% of entries per commit: deep into the regime where the
+        // index overhead is worth paying
+        Codec::TopK { frac_ppm: 1_000 },
+    ];
+    let mut rows = Vec::new();
+    for codec in codecs {
+        let mut client =
+            transport::loopback_codec(init.clone(), 1, Policy::Async, 1, codec);
+        let mut buf = init.clone();
+        let mut seen = vec![u64::MAX; n_layers];
+        let mut own = Vec::new();
+        let mut fetch_bytes = |client: &mut RemoteClient,
+                               buf: &mut ParamSet,
+                               seen: &mut [u64],
+                               own: &mut Vec<u64>| {
+            let before = client.wire_stats().fetch_bytes_received;
+            client.fetch_into(0, buf, seen, own);
+            client.wire_stats().fetch_bytes_received - before
+        };
+        let cold_bytes = fetch_bytes(&mut client, &mut buf, &mut seen, &mut own);
+        let hot_bytes = fetch_bytes(&mut client, &mut buf, &mut seen, &mut own);
+        let mut delta: GradSet = init.zeros_like();
+        delta.layers[0].w.fill(1e-4);
+        WorkerPort::commit_clock(&mut client, 0);
+        WorkerPort::apply_commit(&mut client, 0, 0, &delta);
+        let one_layer_bytes =
+            fetch_bytes(&mut client, &mut buf, &mut seen, &mut own);
+
+        // the commit hot path: dense deltas on every layer
+        for l in &mut delta.layers {
+            l.w.fill(1e-4);
+            l.b.fill(1e-4);
+        }
+        let sent_before = client.wire_stats().update_bytes_sent;
+        let start = Instant::now();
+        for clock in 1..=clocks {
+            WorkerPort::commit_clock(&mut client, 0);
+            WorkerPort::apply_commit(&mut client, 0, clock, &delta);
+        }
+        let dt = start.elapsed().as_secs_f64();
+        let sent = client.wire_stats().update_bytes_sent - sent_before;
+        let commit_bytes_per_clock = sent as f64 / clocks as f64;
+        let commits_per_s = clocks as f64 / dt;
+        eprintln!(
+            "  [bench] codec {codec}: cold {cold_bytes} B | hot {hot_bytes} B \
+             | one-layer {one_layer_bytes} B | commit \
+             {commit_bytes_per_clock:.0} B/clock at {commits_per_s:.0} clocks/s"
+        );
+        rows.push(CodecRow {
+            name: codec.to_string(),
+            cold_bytes,
+            hot_bytes,
+            one_layer_bytes,
+            commit_bytes_per_clock,
+            commits_per_s,
+        });
+    }
+    // the compression acceptance assertion: every lossy codec strictly
+    // reduces the bytes that actually move on the hot paths
+    let off = &rows[0];
+    for row in &rows[1..] {
+        assert!(
+            row.cold_bytes < off.cold_bytes,
+            "codec {} must shrink the cold fetch: {} >= {}",
+            row.name,
+            row.cold_bytes,
+            off.cold_bytes
+        );
+        assert!(
+            row.one_layer_bytes < off.one_layer_bytes,
+            "codec {} must shrink the dirty-layer fetch: {} >= {}",
+            row.name,
+            row.one_layer_bytes,
+            off.one_layer_bytes
+        );
+        assert!(
+            row.commit_bytes_per_clock < off.commit_bytes_per_clock,
+            "codec {} must shrink commit bytes/clock: {:.0} >= {:.0}",
+            row.name,
+            row.commit_bytes_per_clock,
+            off.commit_bytes_per_clock
+        );
+    }
+    rows
+}
+
 fn main() {
     let dims = bench_dims();
     let mut rng = Pcg64::new(42);
@@ -311,6 +426,7 @@ fn main() {
     );
     let fetch_1 = bench_gated_fetch(&init, 1);
     let fetch_n = bench_gated_fetch(&init, n_layers);
+    let codec_rows = bench_codecs(&init);
     let eviction = bench_eviction(&init);
 
     let fetch_json = |f: &FetchBytes| {
@@ -358,6 +474,30 @@ fn main() {
             ),
             ("gated_fetch_1_endpoint", fetch_json(&fetch_1)),
             ("gated_fetch_per_layer_endpoints", fetch_json(&fetch_n)),
+            (
+                "codec_matrix",
+                Json::Arr(
+                    codec_rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("codec", Json::str(r.name.clone())),
+                                ("cold_bytes", Json::num(r.cold_bytes as f64)),
+                                ("hot_bytes", Json::num(r.hot_bytes as f64)),
+                                (
+                                    "one_layer_bytes",
+                                    Json::num(r.one_layer_bytes as f64),
+                                ),
+                                (
+                                    "commit_bytes_per_clock",
+                                    Json::num(r.commit_bytes_per_clock),
+                                ),
+                                ("commits_per_s", Json::num(r.commits_per_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "elastic_eviction",
                 Json::obj(vec![

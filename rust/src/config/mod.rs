@@ -640,6 +640,12 @@ pub struct TransportConfig {
     /// semantics exactly. Requires `lease_ms > 0` to ever trigger from
     /// silence (a LEAVE still works without leases).
     pub elastic: bool,
+    /// Negotiated payload codec (`off | bf16 | f16 | topk:<frac>`).
+    /// `off` keeps every payload raw f32 — bitwise wire v4. The lossy
+    /// codecs quantize layer payloads (with client-side error feedback
+    /// on the commit path) to cut bytes per clock; see
+    /// `ssp::transport::Codec`.
+    pub codec: String,
 }
 
 impl Default for TransportConfig {
@@ -659,6 +665,7 @@ impl Default for TransportConfig {
             heartbeat_ms: 2500,
             wake_timeout_ms: 500,
             elastic: false,
+            codec: "off".into(),
         }
     }
 }
@@ -753,6 +760,7 @@ impl TransportConfig {
                     self.wake_timeout_ms = *n as u64
                 }
                 ("elastic", Bool(b)) => self.elastic = *b,
+                ("codec", Str(s)) => self.codec = s.clone(),
                 (k, _) => {
                     return Err(format!("unknown config key [transport] {k}"))
                 }
@@ -775,7 +783,8 @@ impl TransportConfig {
              pipeline = {}\nwindow = {}\ngroup_addrs = [{addrs}]\n\
              connect_timeout_ms = {}\nio_timeout_ms = {}\n\
              max_retries = {}\nbackoff_base_ms = {}\nlease_ms = {}\n\
-             heartbeat_ms = {}\nwake_timeout_ms = {}\nelastic = {}\n",
+             heartbeat_ms = {}\nwake_timeout_ms = {}\nelastic = {}\n\
+             codec = \"{}\"\n",
             self.addr,
             self.shard_groups,
             self.gated,
@@ -789,6 +798,7 @@ impl TransportConfig {
             self.heartbeat_ms,
             self.wake_timeout_ms,
             self.elastic,
+            self.codec,
         )
     }
 
@@ -831,7 +841,15 @@ impl TransportConfig {
         if self.wake_timeout_ms == 0 {
             return Err("transport.wake_timeout_ms must be >= 1".into());
         }
+        self.parsed_codec()?;
         Ok(())
+    }
+
+    /// The `codec` string parsed into a transport [`Codec`] — grammar
+    /// errors surface at config validation, not mid-connect.
+    pub fn parsed_codec(&self) -> Result<crate::ssp::transport::Codec, String> {
+        crate::ssp::transport::Codec::parse(&self.codec)
+            .map_err(|e| format!("transport.codec: {e}"))
     }
 
     /// The client-side connection supervisor knobs, single-sourced from
@@ -1091,6 +1109,7 @@ mod tests {
                 heartbeat_ms: 1000,
                 wake_timeout_ms: 250,
                 elastic: true,
+                codec: "topk:0.01".into(),
             },
             TransportConfig {
                 addr: "localhost:0".into(),
@@ -1159,6 +1178,25 @@ mod tests {
         )
         .unwrap();
         assert!(TransportConfig::default().apply_toml(&badaddr).is_err());
+        // codec grammar errors surface at validation
+        for doc in [
+            "[transport]\ncodec = \"int8\"\n",
+            "[transport]\ncodec = \"topk:0\"\n",
+            "[transport]\ncodec = \"topk:1.5\"\n",
+        ] {
+            let d = parse_toml(doc).unwrap();
+            assert!(
+                TransportConfig::default().apply_toml(&d).is_err(),
+                "bad codec accepted: {doc}"
+            );
+        }
+        let good = parse_toml("[transport]\ncodec = \"bf16\"\n").unwrap();
+        let mut t = TransportConfig::default();
+        t.apply_toml(&good).unwrap();
+        assert_eq!(
+            t.parsed_codec().unwrap(),
+            crate::ssp::transport::Codec::Bf16
+        );
         // the port + g convention re-brackets IPv6 hosts
         let v6 = TransportConfig {
             addr: "[::1]:7070".into(),

@@ -108,6 +108,16 @@ FLAGS (transport; also settable via the [transport] TOML table):
                               (disable the pipelined commit path)
   --window N                  train: max in-flight unacked frames per
                               connection when pipelining (default 32)
+  --codec <off|bf16|f16|topk:F>
+                              train: negotiated payload codec (wire v5).
+                              off = raw f32 payloads, bitwise wire v4
+                              (default). bf16/f16 quantize layer
+                              payloads to 2 bytes/entry; topk:F ships
+                              the F fraction (0 < F <= 1) of largest
+                              delta entries as exact (index, value)
+                              pairs. Lossy commit paths carry
+                              per-layer error-feedback residuals, so
+                              the rounding error never biases θ
   --retries N                 train: reconnect budget per supervised op
                               (overrides [transport] max_retries; 0 =
                               fail fast, no supervision)
@@ -321,6 +331,9 @@ fn transport_config(
     if args.get_bool("elastic") {
         tcfg.elastic = true;
     }
+    if let Some(c) = args.get("codec") {
+        tcfg.codec = c.to_string();
+    }
     tcfg.validate()?;
     Ok(tcfg)
 }
@@ -354,6 +367,10 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 RemoteClient::connect_hosts_with(&tcfg.group_addrs, faults)?
             };
             let client = client.with_gate(tcfg.gated);
+            // negotiate the payload codec before pipelining: the
+            // renegotiation HELLO must not race a writer thread
+            let codec = tcfg.parsed_codec()?;
+            let client = client.with_codec(codec)?;
             let client = if tcfg.pipeline {
                 client.with_pipeline(tcfg.window)?
             } else {
@@ -371,10 +388,11 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             };
             println!(
                 "remote parameter server: {addr} ({} {} endpoints, gate {}, \
-                 commits {}, retries {}, lease {})",
+                 codec {}, commits {}, retries {}, lease {})",
                 client.groups(),
                 if client.exclusive() { "exclusive" } else { "shared" },
                 if tcfg.gated { "on" } else { "off" },
+                client.codec(),
                 if client.pipelined() {
                     format!("pipelined (window {})", tcfg.window)
                 } else {

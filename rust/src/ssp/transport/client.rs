@@ -81,6 +81,7 @@ use crate::nn::{GradSet, LayerParams, ParamSet};
 use crate::ssp::{FetchStats, ParamServer, Policy, ReadStats, UpdateMsg, WorkerPort};
 use crate::tensor::Matrix;
 
+use super::codec::{self, Codec};
 use super::service::{policy_decode, ShardService};
 use super::wire::{self, op, Frame, FrameDecoder, WireError};
 
@@ -94,6 +95,23 @@ pub struct WireStats {
     pub frames_received: u64,
     pub bytes_sent: u64,
     pub bytes_received: u64,
+    /// UPDATE frame bytes, counted once per frame at encode time — a
+    /// supervised replay of the same bytes is not double-counted, so
+    /// this measures the commit path's logical wire cost per clock.
+    pub update_bytes_sent: u64,
+    /// FETCH_OK frame bytes (length prefix + opcode included) received
+    /// on the gated fetch path — the hot-read wire cost per clock.
+    pub fetch_bytes_received: u64,
+    /// SNAP_OK frame bytes (length prefix + opcode included) received
+    /// on the gated snapshot path.
+    pub snapshot_bytes_received: u64,
+    /// Layer payload bytes by codec format tag ([`codec::fmt`]), both
+    /// directions: UPDATE layer bodies as encoded, FETCH/SNAPSHOT
+    /// layer bodies as decoded. `codec=off` traffic all lands on
+    /// `fmt::RAW`; a top-k frame that fell back to dense lands on
+    /// `fmt::BF16` — the array attributes bytes to the format actually
+    /// on the wire, not the requested codec.
+    pub payload_bytes: [u64; 4],
 }
 
 /// What went wrong, typed: protocol-level rejections the server
@@ -246,6 +264,10 @@ struct Meta {
     /// Version-gate delta reads (config `transport.gated`). Off: every
     /// gated read sends an always-miss sentinel, shipping every layer.
     gated: bool,
+    /// Negotiated payload codec ([`RemoteClient::with_codec`]); every
+    /// connection re-negotiates it at the handshake on reconnect.
+    /// `Off` keeps every payload bitwise-identical to wire v4.
+    codec: Codec,
 }
 
 /// All-live bitmask over `workers` workers (bit p ⇔ worker p).
@@ -375,6 +397,12 @@ struct ClientIo {
 
 struct Inner {
     io: ClientIo,
+    /// Per-(worker, layer) error-feedback residuals for the lossy
+    /// codecs' commit path (untouched while `Meta::codec` is `Off`).
+    /// Kept outside `ClientIo` so encoding — which consumes residual —
+    /// happens exactly once per delta, before the supervised closure
+    /// that may retry the send.
+    ef: codec::ErrorFeedback,
     /// Client-side master mirror backing the allocating `fetch` /
     /// `snapshot` paths; refreshed through the same wire gate.
     mirror: ParamSet,
@@ -765,18 +793,21 @@ impl ClientIo {
         })
     }
 
-    /// Ship one per-layer additive update to its owning endpoint —
-    /// synchronously, or into the pipeline's in-flight window. On a
+    /// Ship one pre-encoded UPDATE frame to its owning endpoint —
+    /// synchronously, or into the pipeline's in-flight window. The
+    /// caller encodes ([`encode_update_frame`]) so the error-feedback
+    /// residual advances exactly once per delta; this function only
+    /// moves bytes, and may therefore run under supervised retry. On a
     /// resumed attempt (post-reconnect) the server's version vector is
     /// consulted first, so an update that landed before the fault is
     /// never double-applied.
-    fn update(
+    fn update_frame(
         &mut self,
         meta: &Meta,
         from: usize,
         clock: u64,
         layer: usize,
-        delta: &LayerParams,
+        frame: &[u8],
         resume: bool,
     ) -> Result<(), TransportError> {
         if resume {
@@ -792,13 +823,6 @@ impl ClientIo {
             }
         }
         let g = meta.layer_group[layer];
-        let mut tx = Vec::with_capacity(21 + delta.n_bytes() + 12);
-        let mark = wire::begin_frame(&mut tx, op::UPDATE);
-        wire::put_u32(&mut tx, from as u32);
-        wire::put_u64(&mut tx, clock);
-        wire::put_u32(&mut tx, layer as u32);
-        wire::put_layer(&mut tx, delta);
-        wire::end_frame(&mut tx, mark);
         if self.window.is_some() {
             return self.enqueue(
                 g,
@@ -806,47 +830,41 @@ impl ClientIo {
                     from: from as u32,
                     clock,
                     layer: layer as u32,
-                    frame: tx,
+                    frame: frame.to_vec(),
                 },
             );
         }
-        let f = self.rpc(g, &tx)?;
+        let f = self.rpc(g, frame)?;
         expect_op(&f, op::OK)
     }
 
-    /// Whole-clock commit of per-layer updates. Synchronous mode:
-    /// every layer's UPDATE frame is written to its owning endpoint
-    /// before any acknowledgement is read (per-connection ordering
-    /// preserves the per-layer FIFO), so an L-layer commit costs ~1
-    /// round trip per *group*. Pipelined mode: the frames enter the
-    /// send FIFOs and the call returns — the acks drain at the next
-    /// blocking read on each connection (or when the window fills),
-    /// overlapping the worker's next minibatch with the network.
-    fn commit_updates(
+    /// Whole-clock commit of pre-encoded per-layer UPDATE frames
+    /// (`frames[l]` is layer `l`'s frame). Synchronous mode: every
+    /// layer's frame is written to its owning endpoint before any
+    /// acknowledgement is read (per-connection ordering preserves the
+    /// per-layer FIFO), so an L-layer commit costs ~1 round trip per
+    /// *group*. Pipelined mode: the frames enter the send FIFOs and
+    /// the call returns — the acks drain at the next blocking read on
+    /// each connection (or when the window fills), overlapping the
+    /// worker's next minibatch with the network.
+    fn commit_frames(
         &mut self,
         meta: &Meta,
         worker: usize,
         clock: u64,
-        delta: &crate::nn::GradSet,
+        frames: &[Vec<u8>],
         resume: bool,
     ) -> Result<(), TransportError> {
         if resume {
             // recovery path: per-layer query-and-skip, one at a time —
             // rare enough that clarity beats batching
-            for (layer, lp) in delta.layers.iter().enumerate() {
-                self.update(meta, worker, clock, layer, lp, true)?;
+            for (layer, frame) in frames.iter().enumerate() {
+                self.update_frame(meta, worker, clock, layer, frame, true)?;
             }
             return Ok(());
         }
-        for (layer, lp) in delta.layers.iter().enumerate() {
+        for (layer, frame) in frames.iter().enumerate() {
             let g = meta.layer_group[layer];
-            let mut tx = Vec::with_capacity(21 + lp.n_bytes() + 12);
-            let mark = wire::begin_frame(&mut tx, op::UPDATE);
-            wire::put_u32(&mut tx, worker as u32);
-            wire::put_u64(&mut tx, clock);
-            wire::put_u32(&mut tx, layer as u32);
-            wire::put_layer(&mut tx, lp);
-            wire::end_frame(&mut tx, mark);
             if self.window.is_some() {
                 self.enqueue(
                     g,
@@ -854,11 +872,11 @@ impl ClientIo {
                         from: worker as u32,
                         clock,
                         layer: layer as u32,
-                        frame: tx,
+                        frame: frame.clone(),
                     },
                 )?;
             } else {
-                self.send(g, &tx)?;
+                self.send(g, frame)?;
             }
         }
         if self.window.is_some() {
@@ -1003,6 +1021,7 @@ impl ClientIo {
             self.drain(g)?;
             let f = self.recv(g)?;
             expect_op(&f, op::FETCH_OK)?;
+            self.wire.fetch_bytes_received += f.payload.len() as u64 + 5;
             let mut r = wire::Reader::new(&f.payload);
             let epoch = r.u64()?;
             if epoch > self.epoch_seen {
@@ -1017,7 +1036,15 @@ impl ClientIo {
             for l in range.clone() {
                 if r.u8()? == 1 {
                     let rev = r.u64()?;
-                    r.layer_into(&mut buf.layers[l])?;
+                    let before = r.remaining();
+                    let tag = if meta.codec.is_off() {
+                        r.layer_into(&mut buf.layers[l])?;
+                        codec::fmt::RAW
+                    } else {
+                        codec::read_layer_coded_into(&mut r, &mut buf.layers[l])?
+                    };
+                    self.wire.payload_bytes[tag as usize] +=
+                        (before - r.remaining()) as u64;
                     last_seen[l] = rev;
                     if rev > self.rev_floor[l] {
                         self.rev_floor[l] = rev;
@@ -1055,11 +1082,20 @@ impl ClientIo {
             self.drain(g)?;
             let f = self.recv(g)?;
             expect_op(&f, op::SNAP_OK)?;
+            self.wire.snapshot_bytes_received += f.payload.len() as u64 + 5;
             let mut r = wire::Reader::new(&f.payload);
             for l in range.clone() {
                 if r.u8()? == 1 {
                     let rev = r.u64()?;
-                    r.layer_into(&mut buf.layers[l])?;
+                    let before = r.remaining();
+                    let tag = if meta.codec.is_off() {
+                        r.layer_into(&mut buf.layers[l])?;
+                        codec::fmt::RAW
+                    } else {
+                        codec::read_layer_coded_into(&mut r, &mut buf.layers[l])?
+                    };
+                    self.wire.payload_bytes[tag as usize] +=
+                        (before - r.remaining()) as u64;
                     last_seen[l] = rev;
                     if rev > self.rev_floor[l] {
                         self.rev_floor[l] = rev;
@@ -1203,7 +1239,7 @@ impl ClientIo {
         let faults = self.faults;
         for g in 0..self.conns.len() {
             let addr = self.conns[g].addr;
-            let (mut conn, hello) = handshake(&addr, &faults)?;
+            let (mut conn, hello) = handshake(&addr, &faults, meta.codec)?;
             validate_hello(meta, g, &hello)?;
             // the epoch may legitimately have moved while we were gone
             // (e.g. our own lease lapsed and we were evicted)
@@ -1248,7 +1284,17 @@ impl ClientIo {
             if r.u8()? == 1 {
                 let (rows, cols, blen) = meta.shapes[l];
                 let rev = r.u64()?;
-                let _ = r.layer(rows, cols, blen)?; // payload discarded
+                // payload discarded — but decoded, under whatever
+                // codec the fresh connection just re-negotiated
+                if meta.codec.is_off() {
+                    let _ = r.layer(rows, cols, blen)?;
+                } else {
+                    let mut scratch = LayerParams {
+                        w: Matrix::zeros(rows, cols),
+                        b: vec![0.0; blen],
+                    };
+                    codec::read_layer_coded_into(&mut r, &mut scratch)?;
+                }
                 if rev < self.rev_floor[l] {
                     return Err(TransportError::protocol(format!(
                         "layer {l} revision went backwards across the \
@@ -1344,6 +1390,40 @@ impl ClientIo {
     }
 }
 
+/// Build one UPDATE frame: routing header plus the layer delta under
+/// `cdc` — the v4 raw layout for [`Codec::Off`], error-fed
+/// quantization otherwise. Encoding happens exactly once per
+/// (worker, clock, layer); the supervised retry/replay paths resend
+/// the returned bytes, so the error-feedback residual advance is
+/// exactly-once by construction. Byte accounting (`update_bytes_sent`,
+/// `payload_bytes`) is attributed here, at encode time.
+fn encode_update_frame(
+    stats: &mut WireStats,
+    ef: &mut codec::ErrorFeedback,
+    cdc: Codec,
+    from: usize,
+    clock: u64,
+    layer: usize,
+    delta: &LayerParams,
+) -> Vec<u8> {
+    let mut tx = Vec::with_capacity(21 + delta.n_bytes() + 12);
+    let mark = wire::begin_frame(&mut tx, op::UPDATE);
+    wire::put_u32(&mut tx, from as u32);
+    wire::put_u64(&mut tx, clock);
+    wire::put_u32(&mut tx, layer as u32);
+    let before = tx.len();
+    let tag = if cdc.is_off() {
+        wire::put_layer(&mut tx, delta);
+        codec::fmt::RAW
+    } else {
+        ef.encode_delta(from, layer, delta, cdc, &mut tx)
+    };
+    stats.payload_bytes[tag as usize] += (tx.len() - before) as u64;
+    wire::end_frame(&mut tx, mark);
+    stats.update_bytes_sent += tx.len() as u64;
+    tx
+}
+
 fn u64_reply(f: &Frame) -> Result<u64, TransportError> {
     expect_op(f, op::U64)?;
     let mut r = wire::Reader::new(&f.payload);
@@ -1374,43 +1454,28 @@ struct Hello {
     exclusive: bool,
     elastic: bool,
     epoch: u64,
+    /// Codec set the endpoint advertises (bit = wire tag).
+    codec_mask: u8,
+    /// The codec the endpoint accepted — must echo the request.
+    codec: Codec,
     shapes: Vec<(usize, usize, usize)>,
 }
 
-fn handshake(
-    addr: &SocketAddr,
-    faults: &FaultPolicy,
-) -> Result<(Conn, Hello), TransportError> {
-    let stream = TcpStream::connect_timeout(addr, faults.connect_timeout)
-        .map_err(|e| TransportError::io(format!("connect {addr}: {e}")))?;
-    stream
-        .set_nodelay(true)
-        .map_err(|e| TransportError::io(format!("nodelay: {e}")))?;
-    stream
-        .set_read_timeout(faults.io_timeout)
-        .map_err(|e| TransportError::io(format!("read timeout: {e}")))?;
-    let mut conn = Conn {
-        addr: *addr,
-        stream,
-        dec: FrameDecoder::default(),
-        writer: None,
-        pending: VecDeque::new(),
-    };
-    let hello = wire::frame(op::HELLO, &wire::WIRE_VERSION.to_le_bytes());
-    std::io::Write::write_all(&mut conn.stream, &hello)
-        .map_err(|e| TransportError::io(format!("hello: {e}")))?;
-    let mut bytes_in = 0u64;
-    let f = wire::read_frame(&mut conn.stream, &mut conn.dec, &mut bytes_in)
-        .map_err(|e| TransportError::io(e.to_string()))?
-        .ok_or_else(|| TransportError::io("server closed during handshake"))?;
-    if f.op == op::ERR {
-        return Err(TransportError::protocol(format!(
-            "handshake rejected: {}",
-            String::from_utf8_lossy(&f.payload)
-        )));
-    }
-    expect_op(&f, op::HELLO_OK)?;
-    let mut r = wire::Reader::new(&f.payload);
+/// The wire-v5 HELLO frame: protocol version plus the requested
+/// payload codec (`tag:u8, arg:u32`; see [`Codec::wire_code`]).
+fn hello_frame(codec_req: Codec) -> Vec<u8> {
+    let (tag, arg) = codec_req.wire_code();
+    let mut payload = Vec::with_capacity(9);
+    wire::put_u32(&mut payload, wire::WIRE_VERSION);
+    wire::put_u8(&mut payload, tag);
+    wire::put_u32(&mut payload, arg);
+    wire::frame(op::HELLO, &payload)
+}
+
+/// Decode a HELLO_OK payload (shared by the connect-time handshake and
+/// [`RemoteClient::with_codec`]'s renegotiation round).
+fn parse_hello(payload: &[u8]) -> Result<Hello, TransportError> {
+    let mut r = wire::Reader::new(payload);
     let version = r.u32()?;
     if version != wire::WIRE_VERSION {
         return Err(TransportError::protocol(format!(
@@ -1431,6 +1496,10 @@ fn handshake(
     let exclusive = r.u8()? != 0;
     let elastic = r.u8()? != 0;
     let epoch = r.u64()?;
+    let codec_mask = r.u8()?;
+    let ctag = r.u8()?;
+    let carg = r.u32()?;
+    let codec = Codec::from_wire(ctag, carg).map_err(TransportError::protocol)?;
     let mut shapes = Vec::with_capacity(n_layers);
     for _ in 0..n_layers {
         let rows = r.u32()? as usize;
@@ -1444,22 +1513,80 @@ fn handshake(
             "inconsistent handshake geometry",
         ));
     }
-    Ok((
-        conn,
-        Hello {
-            workers,
-            n_layers,
-            groups,
-            group,
-            range: start..start + len,
-            policy,
-            init_digest,
-            exclusive,
-            elastic,
-            epoch,
-            shapes,
-        },
-    ))
+    Ok(Hello {
+        workers,
+        n_layers,
+        groups,
+        group,
+        range: start..start + len,
+        policy,
+        init_digest,
+        exclusive,
+        elastic,
+        epoch,
+        codec_mask,
+        codec,
+        shapes,
+    })
+}
+
+/// The server must have advertised and echoed exactly the codec this
+/// client requested — both sides agree before any layer bytes flow.
+fn check_codec_echo(h: &Hello, requested: Codec) -> Result<(), TransportError> {
+    let (tag, _) = requested.wire_code();
+    if h.codec_mask & (1u8 << tag) == 0 {
+        return Err(TransportError::protocol(format!(
+            "server does not support codec {requested} \
+             (advertised mask {:#06b})",
+            h.codec_mask
+        )));
+    }
+    if h.codec != requested {
+        return Err(TransportError::protocol(format!(
+            "server echoed codec {}, requested {requested}",
+            h.codec
+        )));
+    }
+    Ok(())
+}
+
+fn handshake(
+    addr: &SocketAddr,
+    faults: &FaultPolicy,
+    codec_req: Codec,
+) -> Result<(Conn, Hello), TransportError> {
+    let stream = TcpStream::connect_timeout(addr, faults.connect_timeout)
+        .map_err(|e| TransportError::io(format!("connect {addr}: {e}")))?;
+    stream
+        .set_nodelay(true)
+        .map_err(|e| TransportError::io(format!("nodelay: {e}")))?;
+    stream
+        .set_read_timeout(faults.io_timeout)
+        .map_err(|e| TransportError::io(format!("read timeout: {e}")))?;
+    let mut conn = Conn {
+        addr: *addr,
+        stream,
+        dec: FrameDecoder::default(),
+        writer: None,
+        pending: VecDeque::new(),
+    };
+    let hello = hello_frame(codec_req);
+    std::io::Write::write_all(&mut conn.stream, &hello)
+        .map_err(|e| TransportError::io(format!("hello: {e}")))?;
+    let mut bytes_in = 0u64;
+    let f = wire::read_frame(&mut conn.stream, &mut conn.dec, &mut bytes_in)
+        .map_err(|e| TransportError::io(e.to_string()))?
+        .ok_or_else(|| TransportError::io("server closed during handshake"))?;
+    if f.op == op::ERR {
+        return Err(TransportError::protocol(format!(
+            "handshake rejected: {}",
+            String::from_utf8_lossy(&f.payload)
+        )));
+    }
+    expect_op(&f, op::HELLO_OK)?;
+    let h = parse_hello(&f.payload)?;
+    check_codec_echo(&h, codec_req)?;
+    Ok((conn, h))
 }
 
 /// A reconnected endpoint must still be the same logical server: every
@@ -1478,6 +1605,7 @@ fn validate_hello(meta: &Meta, g: usize, h: &Hello) -> Result<(), TransportError
         || h.init_digest != meta.init_digest
         || h.exclusive != meta.exclusive
         || h.elastic != meta.elastic
+        || h.codec != meta.codec
         || h.shapes != meta.shapes
     {
         return Err(TransportError::protocol(format!(
@@ -1517,7 +1645,11 @@ impl LeaseKeeper {
             while !stop2.load(Ordering::Relaxed) {
                 for (i, addr) in addrs.iter().enumerate() {
                     if conns[i].is_none() {
-                        conns[i] = handshake(addr, &faults).ok().map(|(c, _)| c);
+                        // HELLO + HEARTBEAT only — the raw-payload
+                        // codec is all these connections ever need
+                        conns[i] = handshake(addr, &faults, Codec::Off)
+                            .ok()
+                            .map(|(c, _)| c);
                     }
                     if let Some(conn) = &mut conns[i] {
                         if heartbeat_all(conn, workers, lease_ms).is_err() {
@@ -1611,7 +1743,9 @@ impl RemoteClient {
         }
         let mut pairs = Vec::with_capacity(addrs.len());
         for addr in addrs {
-            pairs.push(handshake(addr, &faults).map_err(String::from)?);
+            pairs.push(
+                handshake(addr, &faults, Codec::Off).map_err(String::from)?,
+            );
         }
         Self::assemble(pairs, faults)
     }
@@ -1649,7 +1783,8 @@ impl RemoteClient {
     ) -> Result<RemoteClient, String> {
         let (host, port) = super::service::split_addr(addr)?;
         let first: SocketAddr = resolve(host, port)?;
-        let (conn, hello) = handshake(&first, &faults).map_err(String::from)?;
+        let (conn, hello) =
+            handshake(&first, &faults, Codec::Off).map_err(String::from)?;
         let groups = hello.groups;
         if hello.group != 0 {
             return Err(format!(
@@ -1663,7 +1798,8 @@ impl RemoteClient {
                 .checked_add(g as u16)
                 .ok_or_else(|| format!("group {g} port overflows u16"))?;
             pairs.push(
-                handshake(&resolve(host, p)?, &faults).map_err(String::from)?,
+                handshake(&resolve(host, p)?, &faults, Codec::Off)
+                    .map_err(String::from)?,
             );
         }
         Self::assemble(pairs, faults)
@@ -1762,8 +1898,10 @@ impl RemoteClient {
                 exclusive,
                 elastic,
                 gated: true,
+                codec: Codec::Off,
             },
             inner: Mutex::new(Inner {
+                ef: codec::ErrorFeedback::new(workers, n_layers),
                 io: ClientIo {
                     conns,
                     wire: WireStats::default(),
@@ -1874,6 +2012,52 @@ impl RemoteClient {
     pub fn with_gate(mut self, gated: bool) -> RemoteClient {
         self.meta.gated = gated;
         self
+    }
+
+    /// Negotiate a payload codec on every connection (wire v5,
+    /// config `transport.codec` / `--codec`): each endpoint gets a
+    /// fresh HELLO requesting `codec` and must advertise + echo it.
+    /// Call *before* [`RemoteClient::with_pipeline`] — renegotiation
+    /// must not race a writer thread — and before any layer traffic
+    /// that should ride the codec. [`Codec::Off`] (the default) keeps
+    /// every payload bitwise-identical to wire v4; the lossy codecs
+    /// error-feed the commit path (see the [`codec`] module docs) and
+    /// quantize FETCH/SNAPSHOT emission densely.
+    pub fn with_codec(mut self, cdc: Codec) -> Result<RemoteClient, String> {
+        if cdc == self.meta.codec {
+            return Ok(self);
+        }
+        let inner = self
+            .inner
+            .get_mut()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        if inner.io.window.is_some() {
+            return Err(
+                "negotiate the codec before enabling the pipeline".into()
+            );
+        }
+        let hello = hello_frame(cdc);
+        for g in 0..inner.io.conns.len() {
+            let f = inner.io.rpc(g, &hello).map_err(String::from)?;
+            if f.op != op::HELLO_OK {
+                return Err(format!(
+                    "codec renegotiation (group {g}): unexpected reply \
+                     opcode {}",
+                    f.op
+                ));
+            }
+            let h = parse_hello(&f.payload).map_err(String::from)?;
+            check_codec_echo(&h, cdc)
+                .map_err(|e| format!("group {g}: {}", e.msg))?;
+        }
+        self.meta.codec = cdc;
+        Ok(self)
+    }
+
+    /// The negotiated payload codec ([`Codec::Off`] unless
+    /// [`RemoteClient::with_codec`] changed it).
+    pub fn codec(&self) -> Codec {
+        self.meta.codec
     }
 
     /// Switch commits to the pipelined path: every connection gets a
@@ -1991,8 +2175,22 @@ impl RemoteClient {
         msg: &UpdateMsg,
     ) -> Result<(), TransportError> {
         let meta = &self.meta;
-        self.lock().io.supervised(meta, |io, resume| {
-            io.update(meta, msg.from, msg.clock, msg.layer, &msg.delta, resume)
+        let mut inner = self.lock();
+        let Inner { io, ef, .. } = &mut *inner;
+        // encode exactly once, *outside* the supervised closure: a
+        // retried attempt replays these bytes, so the error-feedback
+        // residual is consumed by exactly one emitted frame
+        let frame = encode_update_frame(
+            &mut io.wire,
+            ef,
+            meta.codec,
+            msg.from,
+            msg.clock,
+            msg.layer,
+            &msg.delta,
+        );
+        io.supervised(meta, |io, resume| {
+            io.update_frame(meta, msg.from, msg.clock, msg.layer, &frame, resume)
         })
     }
 
@@ -2007,8 +2205,29 @@ impl RemoteClient {
     ) -> Result<(), TransportError> {
         assert_eq!(delta.layers.len(), self.meta.n_layers, "commit layers");
         let meta = &self.meta;
-        self.lock().io.supervised(meta, |io, resume| {
-            io.commit_updates(meta, worker, clock, delta, resume)
+        let mut inner = self.lock();
+        let Inner { io, ef, .. } = &mut *inner;
+        // encode the whole clock up front (exactly-once error
+        // feedback; see `try_apply_arrival`), then move bytes under
+        // supervision
+        let frames: Vec<Vec<u8>> = delta
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(layer, lp)| {
+                encode_update_frame(
+                    &mut io.wire,
+                    ef,
+                    meta.codec,
+                    worker,
+                    clock,
+                    layer,
+                    lp,
+                )
+            })
+            .collect();
+        io.supervised(meta, |io, resume| {
+            io.commit_frames(meta, worker, clock, &frames, resume)
         })
     }
 

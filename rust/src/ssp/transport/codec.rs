@@ -1,0 +1,715 @@
+//! Negotiated wire payload codecs (wire v5): bf16/f16 quantized layer
+//! payloads and top-k sparse delta payloads, with client-side
+//! error-feedback accumulators on the commit path.
+//!
+//! Per Keuper & Pfreundt (1609.06870) communication volume is *the*
+//! scalability ceiling for distributed DNN training; the codecs here
+//! engineer that budget the way Das et al. (1602.06709) do for sync
+//! SGD. `codec=off` (the default) keeps every payload raw f32 LE,
+//! bitwise-identical to wire v4 — the bitwise-oracle suites run there.
+//!
+//! ## Negotiation
+//!
+//! The client *requests* a codec in HELLO (`codec:u8, codec_arg:u32`);
+//! the server *advertises* its supported set as a bitmask in HELLO_OK
+//! and echoes the accepted codec. An unknown tag is rejected with ERR
+//! at the handshake, and the client verifies the echo matches its
+//! request — both sides always agree on the connection's codec before
+//! any layer bytes flow. The codec is per-connection state: a
+//! reconnect re-negotiates the same codec from `Meta`.
+//!
+//! ## Coded layer payload
+//!
+//! On a `codec=off` connection a layer is exactly the v4 layout
+//! (`wire::put_layer`, no prefix byte). On a coded connection every
+//! layer payload carries a one-byte format tag so the *emitter* can
+//! choose per frame:
+//!
+//! ```text
+//! coded-layer := fmt:u8 | rows:u32 | cols:u32 | blen:u32 | body
+//! fmt = 0 raw   body = f32 × (rows·cols + blen)       (LE bits)
+//! fmt = 1 bf16  body = u16 × (rows·cols + blen)       (bf16 bits)
+//! fmt = 2 f16   body = u16 × (rows·cols + blen)       (IEEE binary16)
+//! fmt = 3 topk  body = count:u32 | (idx:u32, val:f32) × count
+//! ```
+//!
+//! Top-k indexes the flattened `w‖b` vector; indices are strictly
+//! ascending (decode rejects duplicates and disorder), values are
+//! exact f32 copies. Entries not listed are zero — top-k is only ever
+//! a *delta* encoding (UPDATE); parameter emission (FETCH/SNAPSHOT)
+//! under the top-k codec uses dense bf16, because the server keeps no
+//! per-subscriber residual state and a dropped parameter entry —
+//! unlike a dropped delta entry — would never be corrected.
+//!
+//! ## Error feedback
+//!
+//! Quantizing deltas without memory makes the rounding error a bias
+//! that accumulates in θ clock after clock. [`ErrorFeedback`] keeps a
+//! per-(worker, layer) residual `r` and emits `q(r + δ)`, carrying
+//! `r ← (r + δ) − widen(q(r + δ))` into the next clock. For bf16/f16
+//! round-to-nearest the subtraction is exact (Sterbenz: the quantized
+//! value is within a factor 2 of the accumulator), and for top-k the
+//! emitted entries are exact copies (residual exactly 0 there) — so
+//! per layer per clock, `emitted + residual == r + δ` bitwise, the
+//! invariant the tests pin for every in-range accumulator (which
+//! gradient-scale deltas always are). Quantizers clamp finite overflow
+//! to the format's max finite value (never ±inf) so a clipped delta
+//! leaves a finite, correcting residual; in that clamped regime the
+//! emitted value is no longer within a factor 2 of the accumulator,
+//! so the carried remainder is rounded rather than exact — the
+//! residual keeps shrinking clock over clock until the clamp value
+//! drops below the accumulator's f32 ulp (a regime only a diverged
+//! run reaches), it just isn't a bitwise reconstruction there.
+
+use crate::nn::LayerParams;
+use crate::tensor::Matrix;
+use crate::util::half::{
+    bf16_to_f32, f16_to_f32, f32_to_bf16_finite, f32_to_f16_finite,
+};
+
+use super::wire::{self, Reader, WireError};
+
+/// Coded-layer payload format tags (the `fmt` byte).
+pub mod fmt {
+    pub const RAW: u8 = 0;
+    pub const BF16: u8 = 1;
+    pub const F16: u8 = 2;
+    pub const TOPK: u8 = 3;
+}
+
+/// Bitmask of codecs a server advertises in HELLO_OK (bit = wire tag).
+/// Every endpoint in this crate supports the full set.
+pub const SUPPORTED_MASK: u8 = 0b1111;
+
+/// A negotiated payload codec. `Off` is the wire-v4 bitwise oracle;
+/// the rest trade precision for bytes, with error feedback keeping the
+/// quantization error out of θ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Raw f32 LE payloads, bitwise-identical to wire v4. Default.
+    Off,
+    /// Dense bfloat16 payloads: 2 bytes/entry, f32's range.
+    Bf16,
+    /// Dense IEEE binary16 payloads: 2 bytes/entry, 8× finer mantissa
+    /// than bf16 but range capped at ±65504 (clamped, error-fed).
+    F16,
+    /// Top-k sparse deltas: keep the `frac` largest-magnitude entries
+    /// per layer (at least 1), exact f32 values + u32 indices. Falls
+    /// back to dense bf16 per frame when 8k + 4 ≥ 2n, so dense layers
+    /// never pay index overhead. `frac` is in parts-per-million so
+    /// negotiation and `Eq` are exact.
+    TopK { frac_ppm: u32 },
+}
+
+impl Codec {
+    /// Parse the `--codec` / `[transport] codec` grammar:
+    /// `off | bf16 | f16 | topk:<frac>` with `0 < frac <= 1`.
+    pub fn parse(s: &str) -> Result<Codec, String> {
+        match s {
+            "off" => Ok(Codec::Off),
+            "bf16" => Ok(Codec::Bf16),
+            "f16" => Ok(Codec::F16),
+            _ => {
+                let frac = s
+                    .strip_prefix("topk:")
+                    .ok_or_else(|| format!(
+                        "bad codec {s:?} (off|bf16|f16|topk:<frac>)"
+                    ))?
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad topk fraction in {s:?}"))?;
+                if !(frac > 0.0 && frac <= 1.0) {
+                    return Err(format!(
+                        "topk fraction must be in (0, 1], got {frac}"
+                    ));
+                }
+                Ok(Codec::TopK {
+                    frac_ppm: (frac * 1e6).round().max(1.0) as u32,
+                })
+            }
+        }
+    }
+
+    /// The HELLO wire encoding: `(tag, arg)`. `arg` is the top-k
+    /// fraction in ppm, 0 for the argument-free codecs.
+    pub fn wire_code(self) -> (u8, u32) {
+        match self {
+            Codec::Off => (fmt::RAW, 0),
+            Codec::Bf16 => (fmt::BF16, 0),
+            Codec::F16 => (fmt::F16, 0),
+            Codec::TopK { frac_ppm } => (fmt::TOPK, frac_ppm),
+        }
+    }
+
+    /// Decode a HELLO's requested codec; unknown tags and bad top-k
+    /// arguments fail the handshake.
+    pub fn from_wire(tag: u8, arg: u32) -> Result<Codec, String> {
+        match tag {
+            fmt::RAW => Ok(Codec::Off),
+            fmt::BF16 => Ok(Codec::Bf16),
+            fmt::F16 => Ok(Codec::F16),
+            fmt::TOPK => {
+                if arg == 0 || arg > 1_000_000 {
+                    return Err(format!(
+                        "topk fraction {arg} ppm out of (0, 1e6]"
+                    ));
+                }
+                Ok(Codec::TopK { frac_ppm: arg })
+            }
+            t => Err(format!("unknown codec tag {t}")),
+        }
+    }
+
+    pub fn is_off(self) -> bool {
+        self == Codec::Off
+    }
+}
+
+impl std::fmt::Display for Codec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Codec::Off => write!(f, "off"),
+            Codec::Bf16 => write!(f, "bf16"),
+            Codec::F16 => write!(f, "f16"),
+            Codec::TopK { frac_ppm } => {
+                write!(f, "topk:{}", *frac_ppm as f64 / 1e6)
+            }
+        }
+    }
+}
+
+fn put_header(out: &mut Vec<u8>, tag: u8, lp: &LayerParams) {
+    wire::put_u8(out, tag);
+    wire::put_u32(out, lp.w.rows() as u32);
+    wire::put_u32(out, lp.w.cols() as u32);
+    wire::put_u32(out, lp.b.len() as u32);
+}
+
+fn put_dense_u16(
+    out: &mut Vec<u8>,
+    lp: &LayerParams,
+    narrow: impl Fn(f32) -> u16,
+) {
+    out.reserve((lp.w.data().len() + lp.b.len()) * 2);
+    for &x in lp.w.data().iter().chain(lp.b.iter()) {
+        out.extend_from_slice(&narrow(x).to_le_bytes());
+    }
+}
+
+/// Serialize one layer's *parameters* under `codec` — the server's
+/// FETCH/SNAPSHOT emission. Dense quantization only (see module docs
+/// for why top-k never rides a parameter read); returns the format tag
+/// chosen. Must not be called with `Codec::Off` (raw emission keeps
+/// the v4 `wire::put_layer` layout with no format byte).
+pub(super) fn put_layer_quantized(
+    out: &mut Vec<u8>,
+    lp: &LayerParams,
+    codec: Codec,
+) -> u8 {
+    debug_assert!(!codec.is_off());
+    let tag = match codec {
+        Codec::F16 => fmt::F16,
+        _ => fmt::BF16,
+    };
+    put_header(out, tag, lp);
+    match tag {
+        fmt::F16 => put_dense_u16(out, lp, f32_to_f16_finite),
+        _ => put_dense_u16(out, lp, f32_to_bf16_finite),
+    }
+    tag
+}
+
+/// Decode one coded layer (format byte + shape + body) into the
+/// caller's buffer, widening to f32; returns the format tag found (the
+/// client's per-codec byte accounting keys on it). Top-k zeroes the
+/// buffer first — unlisted entries are zero by definition. Shape
+/// mismatches, unknown format tags, out-of-range or non-ascending
+/// top-k indices are wire errors.
+pub(super) fn read_layer_coded_into(
+    r: &mut Reader<'_>,
+    lp: &mut LayerParams,
+) -> Result<u8, WireError> {
+    let tag = r.u8()?;
+    if tag == fmt::RAW {
+        r.layer_into(lp)?;
+        return Ok(fmt::RAW);
+    }
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let blen = r.u32()? as usize;
+    if rows != lp.w.rows() || cols != lp.w.cols() || blen != lp.b.len() {
+        return Err(WireError(format!(
+            "coded layer shape mismatch: wire {rows}x{cols}+{blen}, \
+             buffer {}x{}+{}",
+            lp.w.rows(),
+            lp.w.cols(),
+            lp.b.len()
+        )));
+    }
+    let wlen = rows * cols;
+    let n = wlen + blen;
+    match tag {
+        fmt::BF16 | fmt::F16 => {
+            let widen = if tag == fmt::F16 { f16_to_f32 } else { bf16_to_f32 };
+            let bytes = r.bytes(n * 2)?;
+            let mut chunks = bytes.chunks_exact(2);
+            for d in lp.w.data_mut().iter_mut().chain(lp.b.iter_mut()) {
+                let c = chunks.next().expect("sized above");
+                *d = widen(u16::from_le_bytes([c[0], c[1]]));
+            }
+            Ok(tag)
+        }
+        fmt::TOPK => {
+            let count = r.u32()? as usize;
+            if count > n {
+                return Err(WireError(format!(
+                    "topk count {count} > layer size {n}"
+                )));
+            }
+            lp.w.data_mut().fill(0.0);
+            lp.b.fill(0.0);
+            let mut prev: Option<u32> = None;
+            for _ in 0..count {
+                let idx = r.u32()?;
+                let mut v = [0.0f32];
+                r.f32s_into(&mut v)?;
+                if let Some(p) = prev {
+                    if idx <= p {
+                        return Err(WireError(format!(
+                            "topk indices not strictly ascending: \
+                             {idx} after {p}"
+                        )));
+                    }
+                }
+                if idx as usize >= n {
+                    return Err(WireError(format!(
+                        "topk index {idx} >= layer size {n}"
+                    )));
+                }
+                prev = Some(idx);
+                let i = idx as usize;
+                if i < wlen {
+                    lp.w.data_mut()[i] = v[0];
+                } else {
+                    lp.b[i - wlen] = v[0];
+                }
+            }
+            Ok(fmt::TOPK)
+        }
+        t => Err(WireError(format!("unknown coded-layer format {t}"))),
+    }
+}
+
+/// Decode a coded layer, allocating, against an expected shape (the
+/// service's UPDATE ingest path — decode-and-widen).
+pub(super) fn read_layer_coded(
+    r: &mut Reader<'_>,
+    rows: usize,
+    cols: usize,
+    blen: usize,
+) -> Result<LayerParams, WireError> {
+    let mut lp = LayerParams {
+        w: Matrix::zeros(rows, cols),
+        b: vec![0.0; blen],
+    };
+    read_layer_coded_into(r, &mut lp)?;
+    Ok(lp)
+}
+
+/// Client-side error-feedback state: one residual vector per
+/// (worker, layer), plus the top-k selection scratch. All storage is
+/// lazily sized on first use and reused thereafter — allocation-free
+/// at steady state, per the PR 2/4 discipline.
+pub(super) struct ErrorFeedback {
+    /// `residuals[worker][layer]` = flattened `w‖b` residual.
+    residuals: Vec<Vec<Vec<f32>>>,
+    /// Accumulator scratch (`r + δ`) for the top-k path.
+    acc: Vec<f32>,
+    /// Index scratch for the top-k selection.
+    idx: Vec<u32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(workers: usize, n_layers: usize) -> ErrorFeedback {
+        ErrorFeedback {
+            residuals: vec![vec![Vec::new(); n_layers]; workers],
+            acc: Vec::new(),
+            idx: Vec::new(),
+        }
+    }
+
+    /// Serialize one layer's *delta* under `codec` with error feedback,
+    /// appending the coded layer to `out`; returns the format tag the
+    /// size heuristic chose. Must not be called with `Codec::Off`.
+    pub fn encode_delta(
+        &mut self,
+        worker: usize,
+        layer: usize,
+        lp: &LayerParams,
+        codec: Codec,
+        out: &mut Vec<u8>,
+    ) -> u8 {
+        debug_assert!(!codec.is_off());
+        let n = lp.w.data().len() + lp.b.len();
+        let r = &mut self.residuals[worker][layer];
+        if r.len() != n {
+            r.resize(n, 0.0);
+        }
+        match codec {
+            Codec::Bf16 => {
+                dense_ef(out, lp, r, f32_to_bf16_finite, bf16_to_f32, fmt::BF16)
+            }
+            Codec::F16 => {
+                dense_ef(out, lp, r, f32_to_f16_finite, f16_to_f32, fmt::F16)
+            }
+            Codec::TopK { frac_ppm } => {
+                let k = ((n as u64 * frac_ppm as u64).div_ceil(1_000_000)
+                    as usize)
+                    .max(1)
+                    .min(n);
+                // index pairs cost 8k + a count word; dense bf16 costs
+                // 2n — when sparsity can't win, don't pay for indices
+                if 8 * k + 4 >= 2 * n {
+                    return dense_ef(
+                        out,
+                        lp,
+                        r,
+                        f32_to_bf16_finite,
+                        bf16_to_f32,
+                        fmt::BF16,
+                    );
+                }
+                self.acc.clear();
+                self.acc.extend(
+                    lp.w.data()
+                        .iter()
+                        .chain(lp.b.iter())
+                        .zip(r.iter())
+                        .map(|(&d, &res)| res + d),
+                );
+                self.idx.clear();
+                self.idx.extend(0..n as u32);
+                let acc = &self.acc;
+                // k largest by |accumulator|, ties broken by index so
+                // the selected *set* is a pure function of the values
+                let ord = |&a: &u32, &b: &u32| {
+                    acc[b as usize]
+                        .abs()
+                        .total_cmp(&acc[a as usize].abs())
+                        .then(a.cmp(&b))
+                };
+                self.idx.select_nth_unstable_by(k - 1, ord);
+                let sel = &mut self.idx[..k];
+                sel.sort_unstable();
+                put_header(out, fmt::TOPK, lp);
+                wire::put_u32(out, k as u32);
+                out.reserve(8 * k);
+                for &i in sel.iter() {
+                    wire::put_u32(out, i);
+                    out.extend_from_slice(
+                        &acc[i as usize].to_le_bytes(),
+                    );
+                }
+                // emitted entries are exact copies: residual 0 there,
+                // the full accumulator everywhere else
+                r.copy_from_slice(acc);
+                for &i in sel.iter() {
+                    r[i as usize] = 0.0;
+                }
+                fmt::TOPK
+            }
+            Codec::Off => unreachable!("raw path never error-feeds"),
+        }
+    }
+
+    /// Residual snapshot for a (worker, layer) — test/introspection
+    /// hook for the error-feedback invariant.
+    #[cfg(test)]
+    pub fn residual(&self, worker: usize, layer: usize) -> &[f32] {
+        &self.residuals[worker][layer]
+    }
+}
+
+/// Dense quantize-with-feedback: emit `q(r + δ)` per entry, keep the
+/// (Sterbenz-exact) remainder in `r`. Non-finite accumulators emit as
+/// themselves and clear the residual — inf/NaN are carried once, not
+/// compounded.
+fn dense_ef(
+    out: &mut Vec<u8>,
+    lp: &LayerParams,
+    r: &mut [f32],
+    narrow: impl Fn(f32) -> u16,
+    widen: impl Fn(u16) -> f32,
+    tag: u8,
+) -> u8 {
+    put_header(out, tag, lp);
+    out.reserve(r.len() * 2);
+    for (&d, res) in lp.w.data().iter().chain(lp.b.iter()).zip(r.iter_mut()) {
+        let acc = *res + d;
+        let h = narrow(acc);
+        out.extend_from_slice(&h.to_le_bytes());
+        *res = if acc.is_finite() { acc - widen(h) } else { 0.0 };
+    }
+    tag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn layer(rows: usize, cols: usize, blen: usize, seed: u64) -> LayerParams {
+        let mut rng = Pcg64::new(seed);
+        LayerParams {
+            w: Matrix::from_fn(rows, cols, |_, _| {
+                rng.normal_f32(0.0, 1.0)
+            }),
+            b: (0..blen).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        }
+    }
+
+    fn zeros_like(lp: &LayerParams) -> LayerParams {
+        LayerParams {
+            w: Matrix::zeros(lp.w.rows(), lp.w.cols()),
+            b: vec![0.0; lp.b.len()],
+        }
+    }
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        for s in ["off", "bf16", "f16", "topk:0.1", "topk:0.005"] {
+            let c = Codec::parse(s).unwrap();
+            assert_eq!(c.to_string(), s);
+            let (tag, arg) = c.wire_code();
+            assert_eq!(Codec::from_wire(tag, arg).unwrap(), c);
+        }
+        assert!(Codec::parse("topk:0").is_err());
+        assert!(Codec::parse("topk:1.5").is_err());
+        assert!(Codec::parse("int8").is_err());
+        assert!(Codec::from_wire(9, 0).is_err());
+        assert!(Codec::from_wire(fmt::TOPK, 0).is_err());
+    }
+
+    /// bf16/f16 dense payloads widen exactly: decode(encode(x)) equals
+    /// the direct rounding of x, entry for entry, and a second
+    /// encode of the decoded values is the identity (widen-exact).
+    #[test]
+    fn dense_round_trip_is_widen_exact() {
+        let lp = layer(7, 5, 5, 11);
+        for codec in [Codec::Bf16, Codec::F16] {
+            let mut out = Vec::new();
+            let tag = put_layer_quantized(&mut out, &lp, codec);
+            let mut got = zeros_like(&lp);
+            let mut r = Reader::new(&out);
+            read_layer_coded_into(&mut r, &mut got).unwrap();
+            r.done().unwrap();
+            let narrow: fn(f32) -> u16 = match codec {
+                Codec::F16 => f32_to_f16_finite,
+                _ => f32_to_bf16_finite,
+            };
+            for (x, y) in lp
+                .w
+                .data()
+                .iter()
+                .chain(lp.b.iter())
+                .zip(got.w.data().iter().chain(got.b.iter()))
+            {
+                let widen = if tag == fmt::F16 { f16_to_f32 } else { bf16_to_f32 };
+                assert_eq!(*y, widen(narrow(*x)));
+                // widen-exact: re-quantizing the widened value is free
+                assert_eq!(narrow(*y), narrow(*x));
+            }
+        }
+    }
+
+    /// Top-k payloads have strictly ascending, duplicate-free indices;
+    /// decode enforces it.
+    #[test]
+    fn topk_indices_ascending_and_deduped() {
+        let lp = layer(10, 10, 10, 23);
+        let mut ef = ErrorFeedback::new(1, 1);
+        let mut out = Vec::new();
+        let tag = ef.encode_delta(
+            0,
+            0,
+            &lp,
+            Codec::TopK { frac_ppm: 100_000 },
+            &mut out,
+        );
+        assert_eq!(tag, fmt::TOPK);
+        let mut r = Reader::new(&out);
+        assert_eq!(r.u8().unwrap(), fmt::TOPK);
+        for _ in 0..3 {
+            r.u32().unwrap(); // shape
+        }
+        let count = r.u32().unwrap();
+        assert_eq!(count, 11, "ceil(110 · 0.1)");
+        let mut prev = None;
+        for _ in 0..count {
+            let idx = r.u32().unwrap();
+            let mut v = [0.0f32];
+            r.f32s_into(&mut v).unwrap();
+            if let Some(p) = prev {
+                assert!(idx > p, "ascending, deduped: {idx} after {p}");
+            }
+            prev = Some(idx);
+        }
+        r.done().unwrap();
+
+        // decode path rejects disorder: swap two index words
+        let mut torn = out.clone();
+        let base = 1 + 12 + 4;
+        let (i, j) = (base, base + 8);
+        for b in 0..4 {
+            torn.swap(i + b, j + b);
+        }
+        let mut got = zeros_like(&lp);
+        assert!(
+            read_layer_coded_into(&mut Reader::new(&torn), &mut got).is_err()
+        );
+    }
+
+    /// The size heuristic: a tiny layer (or a huge fraction) makes
+    /// index pairs cost more than dense bf16 — the frame falls back.
+    #[test]
+    fn topk_falls_back_to_dense_when_indices_cost_more() {
+        let lp = layer(2, 2, 1, 5);
+        let mut ef = ErrorFeedback::new(1, 1);
+        let mut out = Vec::new();
+        let tag = ef.encode_delta(
+            0,
+            0,
+            &lp,
+            Codec::TopK { frac_ppm: 900_000 },
+            &mut out,
+        );
+        assert_eq!(tag, fmt::BF16, "8k+4 >= 2n must choose dense");
+    }
+
+    /// Empty and 0-dim layers encode and decode under every codec.
+    #[test]
+    fn empty_layers_round_trip() {
+        let empty = LayerParams {
+            w: Matrix::zeros(0, 0),
+            b: Vec::new(),
+        };
+        let mut ef = ErrorFeedback::new(1, 1);
+        for codec in
+            [Codec::Bf16, Codec::F16, Codec::TopK { frac_ppm: 500_000 }]
+        {
+            let mut out = Vec::new();
+            put_layer_quantized(&mut out, &empty, codec);
+            let mut got = empty.clone();
+            let mut r = Reader::new(&out);
+            read_layer_coded_into(&mut r, &mut got).unwrap();
+            r.done().unwrap();
+            assert_eq!(got, empty);
+
+            let mut out = Vec::new();
+            ef.encode_delta(0, 0, &empty, codec, &mut out);
+            let mut r = Reader::new(&out);
+            read_layer_coded_into(&mut r, &mut got).unwrap();
+            r.done().unwrap();
+            assert_eq!(got, empty);
+        }
+    }
+
+    /// The error-feedback invariant, per layer per clock: the widened
+    /// emitted delta plus the new residual equals the accumulator
+    /// (old residual + exact delta) **bitwise**, for every codec — no
+    /// quantization error ever leaks out of the feedback loop.
+    #[test]
+    fn error_feedback_invariant_bitwise() {
+        let codecs = [
+            Codec::Bf16,
+            Codec::F16,
+            Codec::TopK { frac_ppm: 200_000 },
+        ];
+        for codec in codecs {
+            let mut ef = ErrorFeedback::new(1, 1);
+            let mut prev_residual = vec![0.0f32; 6 * 4 + 4];
+            for clock in 0..8u64 {
+                let delta = layer(6, 4, 4, 100 + clock);
+                let mut out = Vec::new();
+                ef.encode_delta(0, 0, &delta, codec, &mut out);
+                let mut emitted = zeros_like(&delta);
+                read_layer_coded_into(&mut Reader::new(&out), &mut emitted)
+                    .unwrap();
+                let res = ef.residual(0, 0);
+                for (i, (&d, &r_old)) in delta
+                    .w
+                    .data()
+                    .iter()
+                    .chain(delta.b.iter())
+                    .zip(prev_residual.iter())
+                    .enumerate()
+                {
+                    let acc = r_old + d;
+                    let e = if i < delta.w.data().len() {
+                        emitted.w.data()[i]
+                    } else {
+                        emitted.b[i - delta.w.data().len()]
+                    };
+                    assert_eq!(
+                        (e + res[i]).to_bits(),
+                        acc.to_bits(),
+                        "{codec:?} clock {clock} entry {i}: \
+                         emitted {e} + residual {} != acc {acc}",
+                        res[i]
+                    );
+                }
+                prev_residual.copy_from_slice(ef.residual(0, 0));
+            }
+        }
+    }
+
+    /// Coded layers inside frames survive torn reads: a FETCH_OK-style
+    /// frame holding coded payloads is fed to `FrameDecoder` in every
+    /// chunking the RNG produces, and each trial decodes identically.
+    #[test]
+    fn coded_frames_survive_torn_reads() {
+        let lp = layer(5, 3, 3, 77);
+        let mut payload = Vec::new();
+        put_layer_quantized(&mut payload, &lp, Codec::Bf16);
+        let mut ef = ErrorFeedback::new(1, 1);
+        ef.encode_delta(0, 0, &lp, Codec::TopK { frac_ppm: 100_000 }, &mut payload);
+        let frame = wire::frame(wire::op::FETCH_OK, &payload);
+
+        let mut rng = Pcg64::new(13);
+        for _ in 0..50 {
+            let mut dec = wire::FrameDecoder::default();
+            let mut fed = 0;
+            let mut got = None;
+            while fed < frame.len() {
+                let n = (rng.below(7) + 1).min(frame.len() - fed);
+                dec.feed(&frame[fed..fed + n]);
+                fed += n;
+                if let Some(f) = dec.next_frame().unwrap() {
+                    got = Some(f);
+                }
+            }
+            let f = got.expect("whole frame fed");
+            assert_eq!(f.payload, payload, "torn reassembly changed bytes");
+            let mut r = Reader::new(&f.payload);
+            let mut dense = zeros_like(&lp);
+            let mut sparse = zeros_like(&lp);
+            read_layer_coded_into(&mut r, &mut dense).unwrap();
+            read_layer_coded_into(&mut r, &mut sparse).unwrap();
+            r.done().unwrap();
+        }
+    }
+
+    /// Raw passthrough: a `fmt=0` coded layer is `put_layer` behind a
+    /// tag byte and decodes bitwise.
+    #[test]
+    fn raw_fmt_passthrough_bitwise() {
+        let lp = layer(4, 6, 6, 3);
+        let mut out = Vec::new();
+        wire::put_u8(&mut out, fmt::RAW);
+        wire::put_layer(&mut out, &lp);
+        let mut got = zeros_like(&lp);
+        let mut r = Reader::new(&out);
+        read_layer_coded_into(&mut r, &mut got).unwrap();
+        r.done().unwrap();
+        assert_eq!(got, lp);
+    }
+}

@@ -47,6 +47,7 @@
 
 pub mod chaos;
 mod client;
+pub mod codec;
 mod service;
 pub mod wire;
 
@@ -60,6 +61,7 @@ pub use chaos::{ChaosAction, ChaosEvent, ChaosProxy};
 pub use client::{
     FaultPolicy, RemoteClient, TransportError, TransportErrorKind, WireStats,
 };
+pub use codec::Codec;
 pub use service::{group_ranges, split_addr, ServiceOptions, ShardService};
 
 /// Order-sensitive FNV-1a digest over every parameter's f32 bit
@@ -179,6 +181,22 @@ pub fn loopback(
     groups: usize,
 ) -> RemoteClient {
     serve_local(Arc::new(ShardedServer::new(init, workers, policy)), groups)
+}
+
+/// [`loopback`] with a negotiated payload codec: the client re-HELLOs
+/// every endpoint requesting `codec` before any layer bytes flow —
+/// the convergence-equivalence and byte-accounting tests' harness.
+/// `Codec::Off` is exactly [`loopback`].
+pub fn loopback_codec(
+    init: ParamSet,
+    workers: usize,
+    policy: Policy,
+    groups: usize,
+    codec: Codec,
+) -> RemoteClient {
+    loopback(init, workers, policy, groups)
+        .with_codec(codec)
+        .expect("negotiate payload codec")
 }
 
 /// Multi-process harness in one process: `groups` *independent*

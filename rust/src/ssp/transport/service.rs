@@ -26,6 +26,7 @@ use std::thread::JoinHandle;
 
 use crate::ssp::{Policy, ShardedServer, UpdateMsg};
 
+use super::codec::{self, Codec};
 use super::wire::{self, op, Frame, FrameDecoder, Reader};
 
 /// Contiguous layer partition: `groups` blocks as equal as possible,
@@ -514,6 +515,9 @@ fn serve_conn(
     let mut out: Vec<u8> = Vec::new();
     let mut scratch: Vec<u8> = Vec::new();
     let mut bytes_in = 0u64;
+    // per-connection negotiated payload codec — raw f32 until a HELLO
+    // requests otherwise (re-negotiable by a later HELLO)
+    let mut conn_codec = Codec::Off;
     loop {
         let frame = match wire::read_frame(&mut stream, &mut dec, &mut bytes_in) {
             Ok(Some(f)) => f,
@@ -525,9 +529,15 @@ fn serve_conn(
         };
         out.clear();
         scratch.clear();
-        if let Err(msg) =
-            handle(server, info, stop, &frame, &mut out, &mut scratch)
-        {
+        if let Err(msg) = handle(
+            server,
+            info,
+            stop,
+            &frame,
+            &mut out,
+            &mut scratch,
+            &mut conn_codec,
+        ) {
             out.clear();
             let mark = wire::begin_frame(&mut out, op::ERR);
             out.extend_from_slice(msg.as_bytes());
@@ -572,17 +582,33 @@ fn handle(
     f: &Frame,
     out: &mut Vec<u8>,
     scratch: &mut Vec<u8>,
+    conn_codec: &mut Codec,
 ) -> Result<(), String> {
     let mut r = Reader::new(&f.payload);
     match f.op {
         op::HELLO => {
             let ver = r.u32()?;
+            let codec_tag = r.u8()?;
+            let codec_arg = r.u32()?;
             r.done()?;
             if ver != wire::WIRE_VERSION {
                 return Err(format!(
                     "wire version {ver} != {}",
                     wire::WIRE_VERSION
                 ));
+            }
+            // negotiation: validate the requested codec *before*
+            // adopting it — an unknown tag leaves the connection on
+            // its previous codec and answers ERR
+            let requested = Codec::from_wire(codec_tag, codec_arg)?;
+            if requested != *conn_codec {
+                *conn_codec = requested;
+                if !requested.is_off() {
+                    crate::warn_!(
+                        "negotiated codec {requested} (group {})",
+                        info.group
+                    );
+                }
             }
             let mark = wire::begin_frame(out, op::HELLO_OK);
             wire::put_u32(out, wire::WIRE_VERSION);
@@ -599,6 +625,12 @@ fn handle(
             wire::put_u8(out, u8::from(info.exclusive));
             wire::put_u8(out, u8::from(info.elastic));
             wire::put_u64(out, server.membership_epoch());
+            // advertise the supported codec set and echo the accepted
+            // request — the client verifies the echo
+            wire::put_u8(out, codec::SUPPORTED_MASK);
+            let (tag, arg) = conn_codec.wire_code();
+            wire::put_u8(out, tag);
+            wire::put_u32(out, arg);
             for l in 0..server.n_layers() {
                 let (rows, cols, blen) = server.layer_shape(l);
                 wire::put_u32(out, rows as u32);
@@ -778,7 +810,13 @@ fn handle(
                 ));
             }
             let (rows, cols, blen) = server.layer_shape(layer);
-            let delta = r.layer(rows, cols, blen)?;
+            // decode-and-widen: a coded connection ships quantized
+            // (or sparse) deltas; the shard always applies f32
+            let delta = if conn_codec.is_off() {
+                r.layer(rows, cols, blen)?
+            } else {
+                codec::read_layer_coded(&mut r, rows, cols, blen)?
+            };
             r.done()?;
             // FIFO pre-check so a buggy client gets an ERR reply
             // instead of panicking (and lock-poisoning) the shard
@@ -809,6 +847,7 @@ fn handle(
                 evict_expired(server, info);
             }
             let mut own = Vec::with_capacity(n);
+            let cdc = *conn_codec;
             let stats = server.fetch_group_gated(
                 w,
                 info.range.clone(),
@@ -819,7 +858,14 @@ fn handle(
                     Some((rev, lp)) => {
                         wire::put_u8(scratch, 1);
                         wire::put_u64(scratch, rev);
-                        wire::put_layer(scratch, lp);
+                        if cdc.is_off() {
+                            wire::put_layer(scratch, lp);
+                        } else {
+                            // version-gated emission: quantization is
+                            // deterministic, so a gate skip still
+                            // means "you hold this revision's image"
+                            codec::put_layer_quantized(scratch, lp, cdc);
+                        }
                     }
                 },
             );
@@ -842,6 +888,7 @@ fn handle(
                 *s = r.u64()?;
             }
             r.done()?;
+            let cdc = *conn_codec;
             server.snapshot_group_gated(
                 info.range.clone(),
                 &last_seen,
@@ -850,7 +897,11 @@ fn handle(
                     Some((rev, lp)) => {
                         wire::put_u8(scratch, 1);
                         wire::put_u64(scratch, rev);
-                        wire::put_layer(scratch, lp);
+                        if cdc.is_off() {
+                            wire::put_layer(scratch, lp);
+                        } else {
+                            codec::put_layer_quantized(scratch, lp, cdc);
+                        }
                     }
                 },
             );

@@ -33,8 +33,14 @@ use crate::tensor::Matrix;
 /// worker's barrier waiters instead of hanging them forever). Version 4
 /// adds elastic membership: ADMIT/LEAVE/EPOCH opcodes, a membership
 /// epoch in HELLO_OK, and the current epoch prepended to FETCH_OK so
-/// every gated read doubles as a membership observation.
-pub const WIRE_VERSION: u32 = 4;
+/// every gated read doubles as a membership observation. Version 5
+/// adds negotiated payload codecs: HELLO carries the client's
+/// requested codec (`codec:u8, codec_arg:u32`), HELLO_OK advertises
+/// the server's supported set and echoes the accepted codec, and on a
+/// coded connection every layer payload is a *coded layer* (format
+/// byte + bf16/f16/top-k body — see `transport::codec`). `codec=off`
+/// payloads remain byte-identical to wire v4.
+pub const WIRE_VERSION: u32 = 5;
 
 /// Upper bound on a single frame — a corrupt length prefix fails fast
 /// instead of asking the decoder to buffer gigabytes.
@@ -42,7 +48,10 @@ pub const MAX_FRAME: usize = 1 << 30;
 
 /// Opcodes. Requests are < 100, responses >= 100.
 pub mod op {
-    /// `{ version:u32 }` → HELLO_OK. First frame on every connection.
+    /// `{ version:u32, codec:u8, codec_arg:u32 }` → HELLO_OK. First
+    /// frame on every connection; may be re-sent to re-negotiate the
+    /// connection's payload codec (`codec` is a `transport::codec`
+    /// wire tag, `codec_arg` the top-k fraction in ppm, else 0).
     pub const HELLO: u8 = 1;
     /// `{ worker:u32 }` → U64: committed clock count.
     pub const CLOCK: u8 = 2;
@@ -96,7 +105,12 @@ pub mod op {
     ///    group:u32, group_start:u32, group_len:u32,
     ///    policy_tag:u8, staleness:u64, init_digest:u64, exclusive:u8,
     ///    elastic:u8, epoch:u64,
+    ///    codec_mask:u8, codec:u8, codec_arg:u32,
     ///    (rows:u32, cols:u32, blen:u32) × n_layers }`.
+    /// `codec_mask` advertises the server's supported codecs (bit =
+    /// wire tag); `codec`/`codec_arg` echo the accepted request — the
+    /// client rejects a mismatch, so both ends always agree before
+    /// any layer payload flows.
     /// `elastic` is 1 when the endpoint evicts lease-expired workers
     /// instead of failing waiters, and `epoch` is its membership epoch
     /// at handshake time (0 unless a prior connection already changed
@@ -119,7 +133,10 @@ pub mod op {
     ///    own:u64 × group_len,
     ///    (copied:u8, [rev:u64, layer-params]) × group_len }`.
     /// A layer's params ride the wire only when `copied == 1` — the
-    /// revision gate's skip is a skip of actual bytes. `epoch` is the
+    /// revision gate's skip is a skip of actual bytes. On a coded
+    /// connection `layer-params` is a *coded layer* (format byte +
+    /// quantized body, `transport::codec`) instead of the raw v4
+    /// layout. `epoch` is the
     /// endpoint's membership epoch at read time: survivors learn about
     /// evictions from the read they were already making, no extra
     /// round trip.
@@ -324,6 +341,12 @@ impl<'a> Reader<'a> {
 
     pub fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
+    }
+
+    /// Borrow the next `n` raw payload bytes (bounds-checked) — the
+    /// codec module's bulk decode path.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        self.take(n)
     }
 
     pub fn u32(&mut self) -> Result<u32, WireError> {

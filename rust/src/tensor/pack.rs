@@ -63,25 +63,10 @@ pub(crate) const NC: usize = 256;
 pub(crate) const SPARSE_MIN_ZERO_NUM: usize = 1;
 pub(crate) const SPARSE_MIN_ZERO_DEN: usize = 4;
 
-/// Round an f32 to bfloat16 storage bits, round-to-nearest-even:
-/// add `0x7FFF + (lsb of the kept half)` and truncate. NaNs keep their
-/// sign/payload top bits with the quiet bit forced (never collapse to
-/// inf); overflow saturates to ±inf through the same carry.
-#[inline]
-pub(crate) fn f32_to_bf16(x: f32) -> u16 {
-    let bits = x.to_bits();
-    if x.is_nan() {
-        return ((bits >> 16) as u16) | 0x0040;
-    }
-    let round = ((bits >> 16) & 1) + 0x7FFF;
-    ((bits.wrapping_add(round)) >> 16) as u16
-}
-
-/// Widen bfloat16 storage bits back to f32 — exact (bf16 ⊂ f32).
-#[inline]
-pub(crate) fn bf16_to_f32(h: u16) -> f32 {
-    f32::from_bits((h as u32) << 16)
-}
+// bf16 bit math is single-sourced in `util::half` (the wire codecs in
+// `ssp::transport::codec` round with the same functions); re-exported
+// here so the pack/microkernel paths keep their historical import site.
+pub(crate) use crate::util::half::{bf16_to_f32, f32_to_bf16};
 
 /// Strided read-only view of a matrix operand: element `(i, p)` is
 /// `data[i * rs + p * cs]`. A plain row-major matrix is `(cols, 1)`;
@@ -477,30 +462,8 @@ mod tests {
         assert_eq!(buf.b.bf16().as_ptr() as usize % 64, 0);
     }
 
-    #[test]
-    fn bf16_round_to_nearest_even() {
-        // exact bf16 values pass through
-        assert_eq!(f32_to_bf16(1.0), 0x3F80);
-        assert_eq!(f32_to_bf16(-2.0), 0xC000);
-        assert_eq!(f32_to_bf16(0.0), 0x0000);
-        assert_eq!(f32_to_bf16(-0.0), 0x8000);
-        // tie, kept half even → truncate
-        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
-        // tie, kept half odd → round up to even
-        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
-        // just above the tie → up; just below → down
-        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
-        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_7FFF)), 0x3F80);
-        // carry propagates across the exponent boundary: ~0.99999994 → 1.0
-        assert_eq!(f32_to_bf16(f32::from_bits(0x3F7F_FFFF)), 0x3F80);
-        // overflow saturates to inf through the same carry
-        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
-        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
-        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xFF80);
-        // NaN stays NaN (quiet bit forced, sign kept)
-        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
-        assert!(bf16_to_f32(f32_to_bf16(f32::from_bits(0xFF80_0001))).is_nan());
-    }
+    // (the 12 hand-verified RNE bit vectors moved to `util::half` with
+    // the conversion functions; the pack-path coverage stays here)
 
     #[test]
     fn bf16_pack_rounds_values() {

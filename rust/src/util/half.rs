@@ -1,0 +1,320 @@
+//! Half-precision storage bit math, single-sourced for every consumer:
+//! the GEMM pack buffers (`tensor::pack`, bf16 storage / f32 compute)
+//! and the transport's negotiated wire codecs (`ssp::transport::codec`,
+//! bf16/f16 quantized layer payloads).
+//!
+//! Two 16-bit formats:
+//!
+//! - **bfloat16** — f32's top 16 bits (8-bit exponent, 7-bit mantissa).
+//!   Same dynamic range as f32, widening is a shift: exact and branch
+//!   free, which is why the GEMM microkernels widen it inline.
+//! - **IEEE binary16 (f16)** — 5-bit exponent, 10-bit mantissa. 3 more
+//!   mantissa bits than bf16 (8× finer relative precision) at the cost
+//!   of range: max finite 65504, subnormals below 2⁻¹⁴.
+//!
+//! Both narrowing conversions are round-to-nearest-even; both widening
+//! conversions are exact (each format is a subset of f32). The `_finite`
+//! variants clamp finite overflow to the format's largest finite value
+//! instead of ±inf — the wire codecs use them so a clipped delta leaves
+//! a finite residual for error feedback rather than poisoning the
+//! accumulator with inf.
+
+/// Round an f32 to bfloat16 storage bits, round-to-nearest-even:
+/// add `0x7FFF + (lsb of the kept half)` and truncate. NaNs keep their
+/// sign/payload top bits with the quiet bit forced (never collapse to
+/// inf); overflow saturates to ±inf through the same carry.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// Widen bfloat16 storage bits back to f32 — exact (bf16 ⊂ f32).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Largest finite bf16, as storage bits (≈ 3.3895e38).
+pub const BF16_MAX_BITS: u16 = 0x7F7F;
+/// Largest finite f16, as storage bits (65504.0).
+pub const F16_MAX_BITS: u16 = 0x7BFF;
+
+/// [`f32_to_bf16`] with finite inputs clamped to ±max-finite instead of
+/// overflowing to ±inf. Infinite inputs still map to ±inf, NaN to NaN.
+#[inline]
+pub fn f32_to_bf16_finite(x: f32) -> u16 {
+    let h = f32_to_bf16(x);
+    if x.is_finite() && h & 0x7FFF == 0x7F80 {
+        return h & 0x8000 | BF16_MAX_BITS;
+    }
+    h
+}
+
+/// Round an f32 to IEEE binary16 storage bits, round-to-nearest-even.
+/// Subnormal f16 results are rounded correctly (the carry out of a
+/// subnormal mantissa lands on the smallest normal by construction);
+/// overflow saturates to ±inf; NaNs keep their top payload bits with
+/// the quiet bit forced.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        if man == 0 {
+            return sign | 0x7C00; // ±inf
+        }
+        return sign | 0x7E00 | ((man >> 13) as u16 & 0x01FF); // quiet NaN
+    }
+    let e = exp - 127 + 15; // rebias toward f16's 5-bit exponent
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow before rounding can help
+    }
+    if e <= 0 {
+        // subnormal (or zero) result: shift the full 24-bit significand
+        // (implicit bit restored) into the 10-bit subnormal position
+        if e < -10 {
+            return sign; // below half the smallest subnormal: ±0
+        }
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let halfway = 1u32 << (shift - 1);
+        let rest = man & ((1u32 << shift) - 1);
+        let mut h = (man >> shift) as u16;
+        if rest > halfway || (rest == halfway && h & 1 == 1) {
+            h += 1; // a carry here is the smallest normal — still right
+        }
+        return sign | h;
+    }
+    // normal result: round the 23-bit mantissa to 10 bits; a mantissa
+    // carry overflows into the exponent field arithmetically, which is
+    // exactly the IEEE successor (including the step onto ±inf)
+    let mut h = ((e as u32) << 10) | (man >> 13);
+    let rest = man & 0x1FFF;
+    if rest > 0x1000 || (rest == 0x1000 && h & 1 == 1) {
+        h += 1;
+    }
+    if h >= 0x7C00 {
+        return sign | 0x7C00;
+    }
+    sign | h as u16
+}
+
+/// [`f32_to_f16`] with finite inputs clamped to ±65504 instead of
+/// overflowing to ±inf. Infinite inputs still map to ±inf, NaN to NaN.
+#[inline]
+pub fn f32_to_f16_finite(x: f32) -> u16 {
+    let h = f32_to_f16(x);
+    if x.is_finite() && h & 0x7FFF == 0x7C00 {
+        return h & 0x8000 | F16_MAX_BITS;
+    }
+    h
+}
+
+/// Widen IEEE binary16 storage bits back to f32 — exact (f16 ⊂ f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let man = (h & 0x03FF) as u32;
+    match exp {
+        0 => {
+            if man == 0 {
+                return f32::from_bits(sign); // ±0
+            }
+            // subnormal: man · 2⁻²⁴, exact in f32 (both factors are)
+            let v = man as f32 * f32::from_bits(0x3380_0000);
+            f32::from_bits(v.to_bits() | sign)
+        }
+        0x1F => f32::from_bits(sign | 0x7F80_0000 | (man << 13)),
+        e => f32::from_bits(sign | ((e as u32 + 112) << 23) | (man << 13)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// The 12 hand-verified bf16 bit vectors (moved here from
+    /// `tensor/pack.rs` when the bit math was single-sourced): exact
+    /// values, both tie directions, carry across the exponent, overflow
+    /// to inf, and NaN quieting.
+    #[test]
+    fn bf16_round_to_nearest_even() {
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        assert_eq!(f32_to_bf16(-2.0), 0xC000);
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        // tie: halfway between 0x3F80 and 0x3F81 rounds to even (0x3F80)
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // tie the other way: halfway above odd 0x3F81 rounds up to 0x3F82
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // just over halfway always rounds up
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_7FFF)), 0x3F80);
+        // carry propagates through the exponent
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F7F_FFFF)), 0x3F80);
+        // overflow saturates to inf
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xFF80);
+        // NaN stays NaN (quiet bit forced, sign kept)
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert!(bf16_to_f32(f32_to_bf16(f32::from_bits(0xFF80_0001))).is_nan());
+    }
+
+    /// Hand-verified f16 bit vectors mirroring the bf16 set: exact
+    /// values, both tie directions, mantissa carry, the subnormal range
+    /// (down to the 2⁻²⁵ round-to-zero boundary), overflow, and NaN.
+    #[test]
+    fn f16_round_to_nearest_even() {
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF);
+        // tie: 1 + 2⁻¹¹ is halfway between 0x3C00 and 0x3C01 → even
+        assert_eq!(f32_to_f16(f32::from_bits(0x3F80_1000)), 0x3C00);
+        // tie above odd 0x3C01 rounds up to 0x3C02
+        assert_eq!(f32_to_f16(f32::from_bits(0x3F80_3000)), 0x3C02);
+        assert_eq!(f32_to_f16(f32::from_bits(0x3F80_1001)), 0x3C01);
+        assert_eq!(f32_to_f16(f32::from_bits(0x3F80_0FFF)), 0x3C00);
+        // mantissa carry across the exponent: 1.99999988… → 2.0
+        assert_eq!(f32_to_f16(f32::from_bits(0x3FFF_FFFF)), 0x4000);
+        // subnormals: smallest (2⁻²⁴), its tie at 2⁻²⁵ (→ even = 0),
+        // just above the tie, and the normal/subnormal boundary
+        assert_eq!(f32_to_f16(f32::from_bits(0x3380_0000)), 0x0001);
+        assert_eq!(f32_to_f16(f32::from_bits(0x3300_0000)), 0x0000);
+        assert_eq!(f32_to_f16(f32::from_bits(0x3300_0001)), 0x0001);
+        assert_eq!(f32_to_f16(f32::from_bits(0x3880_0000)), 0x0400); // 2⁻¹⁴
+        assert_eq!(f32_to_f16(f32::from_bits(0x3800_0000)), 0x0200); // 2⁻¹⁵
+        // 65520 is halfway between 65504 and the overflow step → inf
+        assert_eq!(f32_to_f16(65520.0), 0x7C00);
+        assert_eq!(f32_to_f16(65519.996), 0x7BFF);
+        assert_eq!(f32_to_f16(f32::MAX), 0x7C00);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xFC00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert!(f16_to_f32(f32_to_f16(f32::from_bits(0xFF80_0001))).is_nan());
+    }
+
+    #[test]
+    fn finite_variants_clamp_overflow_only() {
+        assert_eq!(f32_to_bf16_finite(f32::MAX), BF16_MAX_BITS);
+        assert_eq!(f32_to_bf16_finite(-f32::MAX), 0x8000 | BF16_MAX_BITS);
+        assert_eq!(f32_to_bf16_finite(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16_finite(1.0), 0x3F80);
+        assert_eq!(f32_to_f16_finite(1.0e9), F16_MAX_BITS);
+        assert_eq!(f32_to_f16_finite(-1.0e9), 0x8000 | F16_MAX_BITS);
+        assert_eq!(f32_to_f16_finite(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f32_to_f16_finite(65504.0), F16_MAX_BITS);
+        assert!(f16_to_f32(f32_to_f16_finite(f32::NAN)).is_nan());
+    }
+
+    /// Widening then narrowing is the identity on every non-NaN storage
+    /// pattern — the "widen-exact" half of the codec round-trip pin.
+    #[test]
+    fn widen_then_narrow_is_identity() {
+        for h in 0..=u16::MAX {
+            if h & 0x7F80 == 0x7F80 && h & 0x007F != 0 {
+                assert!(bf16_to_f32(h).is_nan());
+            } else {
+                assert_eq!(f32_to_bf16(bf16_to_f32(h)), h, "bf16 {h:#06x}");
+            }
+            if h & 0x7C00 == 0x7C00 && h & 0x03FF != 0 {
+                assert!(f16_to_f32(h).is_nan());
+            } else {
+                assert_eq!(f32_to_f16(f16_to_f32(h)), h, "f16 {h:#06x}");
+            }
+        }
+    }
+
+    /// The nearest bf16 at or below `|x|` and its successor, compared in
+    /// f64 with the overflow step treated as 2¹²⁸ (IEEE round-to-nearest
+    /// overflows to inf only past max-finite + ½ulp).
+    fn bf16_ref(x: f32) -> u16 {
+        if x.is_infinite() {
+            return if x < 0.0 { 0xFF80 } else { 0x7F80 };
+        }
+        let bits = x.to_bits();
+        let lo = (bits >> 16) as u16; // truncation toward zero magnitude
+        let hi = lo.wrapping_add(1);
+        let vl = bf16_to_f32(lo) as f64;
+        let vh = if bf16_to_f32(hi).is_infinite() {
+            2f64.powi(128) * if x < 0.0 { -1.0 } else { 1.0 }
+        } else {
+            bf16_to_f32(hi) as f64
+        };
+        let (dl, dh) = ((x as f64 - vl).abs(), (vh - x as f64).abs());
+        if dl < dh || (dl == dh && lo & 1 == 0) {
+            lo
+        } else {
+            hi
+        }
+    }
+
+    /// f16 reference: binary search the magnitude-ordered storage space
+    /// for the floor value, then the same nearest/tie-to-even selection
+    /// (overflow step = 65536, the unbounded successor of 65504).
+    fn f16_ref(x: f32) -> u16 {
+        let sign = if x.is_sign_negative() { 0x8000 } else { 0 };
+        if x.is_infinite() {
+            return sign | 0x7C00;
+        }
+        let ax = x.abs() as f64;
+        let (mut lo, mut hi) = (0u16, 0x7C00u16);
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if (f16_to_f32(mid) as f64) <= ax {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let floor = if (f16_to_f32(hi) as f64) <= ax { hi } else { lo };
+        let succ = floor + 1;
+        let vl = f16_to_f32(floor) as f64;
+        let vh = if succ >= 0x7C00 { 65536.0 } else { f16_to_f32(succ) as f64 };
+        let (dl, dh) = ((ax - vl).abs(), (vh - ax).abs());
+        let h = if dl < dh || (dl == dh && floor & 1 == 0) {
+            floor
+        } else {
+            succ.min(0x7C00)
+        };
+        sign | h
+    }
+
+    /// The 20k-sample RNE property test: uniformly random f32 bit
+    /// patterns (NaNs skipped) must round exactly as the oracle that
+    /// picks the nearer of the two neighbouring representables, ties to
+    /// even — covering normals, subnormals, huge and tiny magnitudes.
+    #[test]
+    fn rne_matches_oracle_on_20k_samples() {
+        let mut rng = Pcg64::new(0xB16B00B5);
+        let mut n = 0;
+        while n < 20_000 {
+            let x = f32::from_bits(rng.next_u64() as u32);
+            if x.is_nan() {
+                continue;
+            }
+            n += 1;
+            assert_eq!(
+                f32_to_bf16(x),
+                bf16_ref(x),
+                "bf16 mismatch at {x:e} ({:#010x})",
+                x.to_bits()
+            );
+            assert_eq!(
+                f32_to_f16(x),
+                f16_ref(x),
+                "f16 mismatch at {x:e} ({:#010x})",
+                x.to_bits()
+            );
+        }
+    }
+}

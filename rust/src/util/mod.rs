@@ -5,6 +5,7 @@
 //! (`rand`, `serde`, `log`) are reimplemented here at the scale this
 //! project needs.
 
+pub mod half;
 pub mod json;
 pub mod log;
 pub mod rng;

@@ -492,6 +492,9 @@ fn client_reassembles_one_byte_server_writes() {
             .unwrap()
             .expect("client opens with HELLO");
         assert_eq!(hello.op, op::HELLO);
+        // v5 HELLO: version:u32 | codec:u8 | codec_arg:u32
+        assert_eq!(hello.payload.len(), 9, "v5 HELLO carries a codec request");
+        assert_eq!(hello.payload[4], 0, "default codec request is off");
         // HELLO_OK for a 1-worker, 1-layer, 1-group shared async server
         let mut out = Vec::new();
         let mark = wire::begin_frame(&mut out, op::HELLO_OK);
@@ -508,6 +511,9 @@ fn client_reassembles_one_byte_server_writes() {
         wire::put_u8(&mut out, 0); // shared endpoint
         wire::put_u8(&mut out, 0); // not elastic
         wire::put_u64(&mut out, 0); // membership epoch
+        wire::put_u8(&mut out, 0b1111); // codec support mask
+        wire::put_u8(&mut out, 0); // echoed codec: off
+        wire::put_u32(&mut out, 0); // codec arg
         wire::put_u32(&mut out, 1); // rows
         wire::put_u32(&mut out, 1); // cols
         wire::put_u32(&mut out, 1); // blen
@@ -529,4 +535,140 @@ fn client_reassembles_one_byte_server_writes() {
     assert_eq!(client.clock(0), 7, "reply reassembled from 1-byte chunks");
     drop(client);
     server.join().unwrap();
+}
+
+/// The wire-compression byte assertion: with a lossy codec negotiated,
+/// a gated fetch that carries exactly one changed layer must move
+/// *strictly fewer bytes* than the same fetch under the raw codec —
+/// and the per-format payload accounting must attribute the coded
+/// bytes to the negotiated format, not to RAW.
+#[test]
+fn coded_hot_fetch_ships_fewer_bytes_than_gated_raw() {
+    use sspdnn::ssp::transport::Codec;
+
+    let init = {
+        let mut rng = sspdnn::util::Pcg64::new(11);
+        ParamSet::glorot(&dims(), &mut rng)
+    };
+    // the same single-layer hot fetch under each codec: the gate keeps
+    // the unchanged layer off the wire in every run, so the byte delta
+    // is purely coded-vs-raw payload of the layer that moved
+    let hot_fetch = |codec: Codec| {
+        let mut client =
+            transport::loopback_codec(init.clone(), 1, Policy::Async, 2, codec);
+        let mut buf = init.clone();
+        let mut seen = vec![0u64; 2];
+        let mut own = Vec::new();
+        client.apply_arrival(&msg(0, 0, 0, 0.125));
+        let before = client.wire_stats();
+        let (_, fs) = client.fetch_into(0, &mut buf, &mut seen, &mut own);
+        let after = client.wire_stats();
+        assert_eq!(fs.layers_copied, 1, "exactly the hot layer ships");
+        assert_eq!(fs.layers_skipped, 1);
+        (after.fetch_bytes_received - before.fetch_bytes_received, after)
+    };
+
+    let (raw_bytes, raw_stats) = hot_fetch(Codec::Off);
+    assert!(raw_stats.payload_bytes[0] > 0, "raw fetch accounts as RAW");
+    for codec in [Codec::Bf16, Codec::F16] {
+        let (coded_bytes, stats) = hot_fetch(codec);
+        assert!(
+            coded_bytes < raw_bytes,
+            "{codec}: coded hot fetch must be strictly smaller than raw \
+             ({coded_bytes} >= {raw_bytes})"
+        );
+        let fmt_tag = match codec {
+            Codec::Bf16 => 1,
+            _ => 2,
+        };
+        assert!(
+            stats.payload_bytes[fmt_tag] > 0,
+            "{codec}: coded bytes must be attributed to the coded format"
+        );
+        assert_eq!(
+            stats.payload_bytes[0], 0,
+            "{codec}: nothing should be accounted RAW on a coded connection"
+        );
+    }
+}
+
+/// Under a lossy codec the gated fetch and the snapshot expose the
+/// *same* quantized view, so the gate's keep-old-bits premise stays
+/// sound: dense quantization is a deterministic function of the server
+/// bits, and an unchanged revision implies unchanged quantized bits.
+#[test]
+fn coded_gated_fetch_agrees_with_coded_snapshot() {
+    use sspdnn::ssp::transport::Codec;
+
+    for codec in [Codec::Bf16, Codec::F16, Codec::TopK { frac_ppm: 250_000 }] {
+        let init = {
+            let mut rng = sspdnn::util::Pcg64::new(23);
+            ParamSet::glorot(&dims(), &mut rng)
+        };
+        let mut client =
+            transport::loopback_codec(init.clone(), 1, Policy::Async, 2, codec);
+        let mut buf = init.clone();
+        let mut seen = vec![u64::MAX; 2];
+        let mut own = Vec::new();
+        client.apply_arrival(&msg(0, 0, 0, 0.3));
+        client.apply_arrival(&msg(0, 0, 1, -0.7));
+        let (_, fs) = client.fetch_into(0, &mut buf, &mut seen, &mut own);
+        assert_eq!(fs.layers_copied, 2);
+        assert_eq!(
+            buf,
+            ParamServer::snapshot(&client),
+            "{codec}: gated view disagrees with snapshot"
+        );
+        // the hot re-fetch skips everything and the view stays aligned
+        let (_, fs) = client.fetch_into(0, &mut buf, &mut seen, &mut own);
+        assert_eq!(fs.layers_skipped, 2, "{codec}");
+        assert_eq!(buf, ParamServer::snapshot(&client), "{codec}");
+    }
+}
+
+/// The convergence-equivalence gate: `codec=off` must stay *bitwise* on
+/// the raw-transport bits, and every lossy codec must land the fixed-
+/// seed simulated figure run inside a tolerance band of the raw run's
+/// final objective. Error feedback is what keeps the lossy runs inside
+/// the band — dropped precision re-enters as carried residual.
+#[test]
+fn lossy_codecs_converge_within_tolerance_of_raw() {
+    use sspdnn::ssp::transport::Codec;
+
+    let cfg = tiny_cfg();
+    let ds = build_dataset(&cfg);
+    let run = |codec: Codec| {
+        run_experiment_with(
+            &cfg,
+            fast_opts(),
+            &ds,
+            move |init, workers, policy| {
+                transport::loopback_codec(init, workers, policy, 2, codec)
+            },
+        )
+    };
+
+    let base = run_experiment_with(&cfg, fast_opts(), &ds, ShardedServer::new);
+    let raw = run(Codec::Off);
+    assert_eq!(
+        base.final_params, raw.final_params,
+        "codec=off must stay bitwise on the raw-transport bits"
+    );
+    assert_eq!(base.final_objective, raw.final_objective);
+
+    for codec in [Codec::Bf16, Codec::F16, Codec::TopK { frac_ppm: 500_000 }] {
+        let lossy = run(codec);
+        let rel = (lossy.final_objective - raw.final_objective).abs()
+            / raw.final_objective.abs().max(1e-12);
+        assert!(
+            rel <= 0.25,
+            "{codec}: final objective {} drifted {rel:.4} (> 25%) from raw {}",
+            lossy.final_objective,
+            raw.final_objective
+        );
+        assert!(
+            lossy.final_objective.is_finite(),
+            "{codec}: objective must stay finite"
+        );
+    }
 }
